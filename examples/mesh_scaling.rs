@@ -1,0 +1,40 @@
+//! Mesh scaling (paper §7.5.1): the same workload on a 4×4 and an 8×8
+//! memory-cube network — AIMM adapts with no prior training on the new
+//! hardware because the per-MC state aggregation is mesh-size-invariant
+//! (DESIGN.md §5).
+//!
+//!     cargo run --release --example mesh_scaling [BENCH]
+
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::run_single;
+use aimm::workloads::Benchmark;
+
+fn main() -> anyhow::Result<()> {
+    let bench = std::env::args()
+        .nth(1)
+        .and_then(|n| Benchmark::from_name(&n))
+        .unwrap_or(Benchmark::Rbm);
+    let scale = 0.25;
+    for (cols, rows) in [(4usize, 4usize), (8, 8)] {
+        let mut cfg = SystemConfig::default();
+        cfg.mesh_cols = cols;
+        cfg.mesh_rows = rows;
+
+        cfg.mapping = MappingScheme::Baseline;
+        let base = run_single(&cfg, bench, scale, 1)?;
+        cfg.mapping = MappingScheme::Aimm;
+        let aimm = run_single(&cfg, bench, scale, 3)?;
+        println!(
+            "{}x{} mesh, {}: B={} cycles, AIMM={} cycles (norm {:.2}), hops B={:.2} AIMM={:.2}",
+            cols,
+            rows,
+            bench.name(),
+            base.last().cycles,
+            aimm.last().cycles,
+            aimm.last().cycles as f64 / base.last().cycles as f64,
+            base.last().avg_hops,
+            aimm.last().avg_hops,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Multi-program scenario (paper §7.5.2): run a diverse application mix
+//! concurrently under BNMP, BNMP+HOARD, BNMP+AIMM and BNMP+HOARD+AIMM,
+//! reproducing the Fig 12 comparison on one combination.
+//!
+//!     cargo run --release --example multi_program [A,B,C]
+
+use aimm::config::{MappingScheme, SystemConfig, Technique};
+use aimm::coordinator::run_multi;
+use aimm::workloads::Benchmark;
+
+fn main() -> anyhow::Result<()> {
+    let combo: Vec<Benchmark> = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "SC,SPMV,KM".to_string())
+        .split(',')
+        .map(|n| Benchmark::from_name(n.trim()).expect("unknown benchmark"))
+        .collect();
+    let scale = 0.12;
+    let runs = 3;
+    let names: Vec<&str> = combo.iter().map(|b| b.name()).collect();
+    println!("multi-program combo: {}\n", names.join("-"));
+
+    let mut results = Vec::new();
+    for (label, hoard, mapping) in [
+        ("BNMP", false, MappingScheme::Baseline),
+        ("BNMP+HOARD", true, MappingScheme::Baseline),
+        ("BNMP+AIMM", false, MappingScheme::Aimm),
+        ("BNMP+HOARD+AIMM", true, MappingScheme::Aimm),
+    ] {
+        let mut cfg = SystemConfig::default();
+        cfg.technique = Technique::Bnmp;
+        cfg.hoard = hoard;
+        cfg.mapping = mapping;
+        let s = run_multi(&cfg, &combo, scale, runs)?;
+        println!(
+            "{label:>16}: cycles={:>8} opc={:.4} hops={:.2}",
+            s.last().cycles,
+            s.last().opc(),
+            s.last().avg_hops
+        );
+        results.push((label, s.last().cycles));
+    }
+    let base = results[0].1 as f64;
+    println!();
+    for (label, cycles) in results {
+        println!("{label:>16}: normalized {:.2}", cycles as f64 / base);
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Oracle probe: hand-coded policies over the real state vector measure
+//! the headroom available to the learned agent.
+use aimm::agent::AimmAgent;
+use aimm::config::{AgentConfig, MappingScheme, SystemConfig};
+use aimm::coordinator::System;
+use aimm::runtime::{QFunction, TrainBatch, NUM_ACTIONS};
+use aimm::workloads::{generate, Benchmark};
+
+struct FixedQ(usize);
+impl QFunction for FixedQ {
+    fn q_values(&mut self, _s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]> {
+        let mut q = [0.0; NUM_ACTIONS];
+        q[self.0] = 1.0;
+        Ok(q)
+    }
+    fn train_batch(&mut self, _b: &TrainBatch) -> anyhow::Result<f32> { Ok(0.0) }
+    fn sync_target(&mut self) {}
+    fn backend(&self) -> &'static str { "fixed" }
+}
+
+/// Migrate-once-when-far: near-data remap iff the page has never been
+/// migrated (s[34] == 0) and its recent hop history is high; else default.
+struct OracleQ;
+impl QFunction for OracleQ {
+    fn q_values(&mut self, s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]> {
+        let mut q = [0.0; NUM_ACTIONS];
+        let migs = s[34];
+        let h = &s[35..39]; // hop history, /16-normalized
+        let mean = (h[0] + h[1] + h[2] + h[3]) / 4.0;
+        let spread = h.iter().cloned().fold(0.0f32, f32::max)
+            - h.iter().cloned().fold(1.0f32, f32::min);
+        // Far from compute, stably so, and not already migrated.
+        if migs == 0.0 && mean > 1.4 / 16.0 && spread < 1.1 / 16.0 {
+            q[1] = 1.0; // near-data
+        } else {
+            q[0] = 1.0; // default
+        }
+        Ok(q)
+    }
+    fn train_batch(&mut self, _b: &TrainBatch) -> anyhow::Result<f32> { Ok(0.0) }
+    fn sync_target(&mut self) {}
+    fn backend(&self) -> &'static str { "oracle" }
+}
+
+fn run_policy(bench: Benchmark, qf: Box<dyn QFunction>, runs: usize) -> (u64, f64) {
+    let mut cfg = SystemConfig::default();
+    cfg.mapping = MappingScheme::Aimm;
+    let mut acfg = AgentConfig::default();
+    acfg.eps_start = 0.0;
+    acfg.eps_end = 0.0;
+    cfg.agent = acfg.clone();
+    let trace = generate(bench, 1, 1.0, cfg.seed);
+    let mut agent = Some(AimmAgent::new(qf, acfg, 42));
+    let (mut cycles, mut migrated) = (0, 0.0);
+    for _ in 0..runs {
+        let mut sys = System::new(cfg.clone(), trace.ops.clone(), agent.take());
+        let st = sys.run().unwrap();
+        agent = sys.take_agent();
+        cycles = st.cycles;
+        migrated = st.fraction_pages_migrated;
+    }
+    (cycles, migrated)
+}
+
+fn main() {
+    let bench_name = std::env::args().nth(1).unwrap_or("SPMV".into());
+    let bench = Benchmark::from_name(&bench_name).unwrap();
+    let (base, _) = run_policy(bench, Box::new(FixedQ(0)), 1);
+    let (oracle, frac) = run_policy(bench, Box::new(OracleQ), 1);
+    println!(
+        "{bench_name}: default={base} oracle(migrate-once-when-far)={oracle} ({:+.1}%) migrated={frac:.2}",
+        (oracle as f64 / base as f64 - 1.0) * 100.0
+    );
+}

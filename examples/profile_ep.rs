@@ -1,0 +1,11 @@
+use aimm::config::SystemConfig;
+use aimm::coordinator::System;
+use aimm::workloads::{generate, Benchmark};
+fn main() {
+    let cfg = SystemConfig::default();
+    let trace = generate(Benchmark::Spmv, 1, 0.12, cfg.seed);
+    for _ in 0..20 {
+        let mut sys = System::new(cfg.clone(), trace.ops.clone(), None);
+        sys.run().unwrap();
+    }
+}

@@ -1,0 +1,21 @@
+use aimm::runtime::{artifacts_dir, PjrtQNet, QFunction, TrainBatch, BATCH, STATE_DIM};
+use std::time::Instant;
+fn main() {
+    let dir = artifacts_dir().expect("artifacts");
+    let mut q = PjrtQNet::load(&dir, 1e-3, 0.95).unwrap();
+    let s = vec![0.3f32; STATE_DIM];
+    for _ in 0..20 { q.q_values(&s).unwrap(); }
+    let t0 = Instant::now();
+    let n = 500;
+    for _ in 0..n { q.q_values(&s).unwrap(); }
+    println!("infer: {:?}/call", t0.elapsed() / n);
+    let batch = TrainBatch {
+        s: vec![0.1; BATCH * STATE_DIM], a: vec![1; BATCH], r: vec![0.5; BATCH],
+        s2: vec![0.2; BATCH * STATE_DIM], done: vec![0.0; BATCH],
+    };
+    for _ in 0..5 { q.train_batch(&batch).unwrap(); }
+    let t0 = Instant::now();
+    let n = 100;
+    for _ in 0..n { q.train_batch(&batch).unwrap(); }
+    println!("train: {:?}/step", t0.elapsed() / n);
+}

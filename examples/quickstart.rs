@@ -1,0 +1,81 @@
+//! Quickstart: the end-to-end driver (DESIGN.md §7).
+//!
+//! Runs the SPMV kernel on the 4×4-mesh NMP system three ways — BNMP
+//! baseline, BNMP+TOM, BNMP+AIMM (5 repeated runs, DQN persisting across
+//! runs per §6.1) — and reports execution time, OPC, hop count and the
+//! OPC timeline. With `make artifacts` built, the AIMM agent's dueling
+//! Q-network runs through PJRT from the AOT-compiled JAX/Pallas HLO;
+//! without artifacts it falls back to the pure-rust linear Q (and says so).
+//!
+//!     cargo run --release --example quickstart [BENCH] [scale]
+
+use aimm::bench::resample;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::{run_single, EpisodeSummary};
+use aimm::runtime::artifacts_dir;
+use aimm::workloads::Benchmark;
+
+fn report(label: &str, s: &EpisodeSummary) {
+    let last = s.last();
+    println!(
+        "{label:>10}: cycles={:>8} opc={:.4} hops={:.2} util={:.3} migrated={:.2}",
+        last.cycles,
+        last.opc(),
+        last.avg_hops,
+        last.compute_utilization,
+        last.fraction_pages_migrated
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = std::env::args()
+        .nth(1)
+        .and_then(|n| Benchmark::from_name(&n))
+        .unwrap_or(Benchmark::Spmv);
+    let scale: f64 =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+
+    match artifacts_dir() {
+        Some(d) => println!("artifacts: {} (PJRT dueling DQN)", d.display()),
+        None => println!("artifacts: NOT FOUND — falling back to linear-Q mock"),
+    }
+    println!("benchmark {} at scale {scale}\n", bench.name());
+
+    let mut cfg = SystemConfig::default();
+
+    cfg.mapping = MappingScheme::Baseline;
+    let base = run_single(&cfg, bench, scale, 1)?;
+    report("BNMP (B)", &base);
+
+    cfg.mapping = MappingScheme::Tom;
+    let tom = run_single(&cfg, bench, scale, 1)?;
+    report("BNMP+TOM", &tom);
+
+    cfg.mapping = MappingScheme::Aimm;
+    let aimm = run_single(&cfg, bench, scale, 5)?;
+    report("BNMP+AIMM", &aimm);
+
+    let b = base.last().cycles as f64;
+    println!(
+        "\nnormalized exec time: B=1.00  TOM={:.2}  AIMM={:.2}",
+        tom.last().cycles as f64 / b,
+        aimm.last().cycles as f64 / b
+    );
+
+    // Learning curve across runs (Fig 9's signal).
+    println!("\nAIMM learning across runs (cycles per run):");
+    for (i, r) in aimm.runs.iter().enumerate() {
+        println!("  run {i}: {:>8} cycles, {:>5} invocations, loss {:.3}",
+            r.cycles, r.agent_invocations, r.agent_avg_loss);
+    }
+    let series: Vec<f32> =
+        aimm.runs.iter().flat_map(|r| r.opc_timeline.iter().copied()).collect();
+    println!("\nOPC timeline (resampled to 24 points):");
+    let pts = resample(&series, 24);
+    let maxv = pts.iter().cloned().fold(0.001f32, f32::max);
+    for (i, v) in pts.iter().enumerate() {
+        let bar = "#".repeat(((v / maxv) * 40.0) as usize);
+        println!("  t{i:02} {v:.3} {bar}");
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Q-network training demo + diagnostic probe: runs one trace through the
+//! full stack and dumps per-component counters (MC, mesh, cubes) plus the
+//! agent's per-action reward attribution — the view used to debug the
+//! learning loop during development.
+//!
+//!     cargo run --release --example train_qnet [--aimm] [--hoard]
+
+use aimm::agent::AimmAgent;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::System;
+use aimm::runtime::best_qfunction;
+use aimm::workloads::{generate, Benchmark};
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    let aimm_mode = std::env::args().any(|a| a == "--aimm");
+    cfg.mapping = if aimm_mode { MappingScheme::Aimm } else { MappingScheme::Baseline };
+    cfg.hoard = std::env::args().any(|a| a == "--hoard");
+    let bench = Benchmark::Spmv;
+    let trace = generate(bench, 1, 0.25, cfg.seed);
+    let mut agent = aimm_mode.then(|| {
+        AimmAgent::new(best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed), cfg.agent.clone(), 42)
+    });
+    if let Some(a) = agent.as_ref() {
+        println!("agent backend: {}", a.backend());
+    }
+    let mut last_sys = None;
+    for run in 0..(if aimm_mode { 3 } else { 1 }) {
+        let mut sys = System::new(cfg.clone(), trace.ops.clone(), agent.take());
+        let st = sys.run().unwrap();
+        agent = sys.take_agent();
+        println!("run {run}: cycles={} opc={:.3}", st.cycles, st.opc());
+        if let Some(a) = agent.as_ref() {
+            println!("  per-action (count, avg reward):");
+            for i in 0..8 {
+                let n = a.stats.action_counts[i];
+                if n > 0 {
+                    println!(
+                        "    a{i}: n={n} avg_r={:+.3}",
+                        a.stats.action_reward_sum[i] / n as f64
+                    );
+                }
+            }
+        }
+        last_sys = Some(sys);
+    }
+    let sys = last_sys.unwrap();
+    println!(
+        "mesh: injected={} delivered={} avg_lat={:.1} qwait/fwd={:.1}",
+        sys.mesh.stats.injected,
+        sys.mesh.stats.delivered,
+        sys.mesh.stats.avg_latency(),
+        sys.mesh.stats.total_queue_wait as f64 / sys.mesh.stats.forwards.max(1) as f64
+    );
+    for mc in &sys.mcs {
+        println!(
+            "mc{}: dispatched={} completed={} tlb_hit={:.2} avg_op_lat={:.1}",
+            mc.id,
+            mc.stats.ops_dispatched,
+            mc.stats.ops_completed,
+            mc.tlb.hit_rate(),
+            if mc.stats.ops_completed > 0 {
+                mc.stats.total_op_latency as f64 / mc.stats.ops_completed as f64
+            } else {
+                0.0
+            }
+        );
+    }
+}

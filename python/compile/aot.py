@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the L2 jax entry points to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  qnet_infer.hlo.txt   (theta, s[1,S])                  -> (q[1,A],)
+  qnet_train.hlo.txt   (theta, ttheta, m, v, hyper, b…) -> (theta', m', v', loss)
+  theta_init.bin       He-initialised flat params, f32 little-endian
+  manifest.json        dims + layout consumed by rust/src/runtime
+
+Run as ``python -m compile.aot`` from the python/ directory (the Makefile
+does this). Python never runs again after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_infer() -> str:
+    return to_hlo_text(jax.jit(model.infer).lower(*model.infer_spec()))
+
+
+def lower_train() -> str:
+    # theta/m/v are donated: the step is pure in-place parameter churn.
+    return to_hlo_text(
+        jax.jit(model.train, donate_argnums=(0, 2, 3)).lower(*model.train_spec())
+    )
+
+
+def manifest() -> dict:
+    return {
+        "state_dim": model.STATE_DIM,
+        "num_actions": model.NUM_ACTIONS,
+        "hidden": model.HIDDEN,
+        "batch": model.BATCH,
+        "param_size": model.PARAM_SIZE,
+        "adam": {"b1": model.ADAM_B1, "b2": model.ADAM_B2, "eps": model.ADAM_EPS},
+        "params": [
+            {"name": n, "shape": list(s), "start": st, "end": en}
+            for n, s, st, en in model.param_offsets()
+        ],
+        "artifacts": {
+            "infer": "qnet_infer.hlo.txt",
+            "train": "qnet_train.hlo.txt",
+            "theta_init": "theta_init.bin",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    # kept for Makefile compatibility; --out <file> writes the infer HLO there too
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    infer_txt = lower_infer()
+    with open(os.path.join(args.out_dir, "qnet_infer.hlo.txt"), "w") as f:
+        f.write(infer_txt)
+    print(f"qnet_infer.hlo.txt: {len(infer_txt)} chars")
+
+    train_txt = lower_train()
+    with open(os.path.join(args.out_dir, "qnet_train.hlo.txt"), "w") as f:
+        f.write(train_txt)
+    print(f"qnet_train.hlo.txt: {len(train_txt)} chars")
+
+    theta0 = np.asarray(model.init_params(args.seed), dtype=np.float32)
+    theta0.tofile(os.path.join(args.out_dir, "theta_init.bin"))
+    print(f"theta_init.bin: {theta0.size} f32 ({theta0.nbytes} bytes)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print("manifest.json written")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(infer_txt)
+
+
+if __name__ == "__main__":
+    main()

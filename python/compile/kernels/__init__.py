@@ -1,0 +1,3 @@
+"""L1 Pallas kernels for the AIMM dueling-DQN hot path + jnp oracle."""
+
+from . import dense, ref  # noqa: F401

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: tiled matmul and fused dense (matmul + bias + ReLU).
+
+TPU mapping (see DESIGN.md §3 Hardware-Adaptation): the dueling-DQN hot
+spot is the dense trunk. We tile the GEMM into VMEM-resident blocks via
+BlockSpec — (bm, bk) x (bk, bn) panels with an f32 accumulator revisited
+across the k grid dimension — the canonical MXU-feeding schedule. On this
+image Pallas MUST run with interpret=True (the CPU PJRT plugin cannot
+execute Mosaic custom-calls); real-TPU performance is estimated in
+DESIGN.md §8 from the VMEM footprint these tile choices imply.
+
+Autodiff: pallas_call has no automatic VJP, so ``dense`` carries a
+custom_vjp whose backward pass is ALSO expressed with the Pallas matmul
+kernel (dx = g @ W^T, dW = x^T @ g, db = sum g, ReLU mask from the saved
+activation). This keeps the whole train-step HLO on the kernel path.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# interpret=True is mandatory on CPU PJRT — see module docstring.
+INTERPRET = True
+
+# Upper bounds for tile sizes; actual tiles are the largest divisors of the
+# problem dims not exceeding these, so any shape is supported exactly
+# (no out-of-bounds blocks, whose read contents Pallas leaves undefined).
+MAX_BM = 32
+MAX_BN = 128
+MAX_BK = 128
+
+
+def _pick_tile(dim: int, max_tile: int) -> int:
+    """Largest divisor of ``dim`` that is <= max_tile (>= 1)."""
+    t = min(dim, max_tile)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; k is the innermost grid dim, accumulated
+    in-place in the revisited output block (f32)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Tiled Pallas matmul: x[M,K] @ w[K,N] -> [M,N] (f32 accumulate)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+    bm = _pick_tile(m, MAX_BM)
+    bn = _pick_tile(n, MAX_BN)
+    bk = _pick_tile(k, MAX_BK)
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool, k_steps: int):
+    """Fused dense tile: accumulate panels, then add bias (+ ReLU) on the
+    final k step so the epilogue runs exactly once per output tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...][None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y
+
+
+def _dense_fwd_impl(x, w, b, relu):
+    m, k = x.shape
+    _, n = w.shape
+    bm = _pick_tile(m, MAX_BM)
+    bn = _pick_tile(n, MAX_BN)
+    bk = _pick_tile(k, MAX_BK)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    out = pl.pallas_call(
+        partial(_dense_kernel, relu=relu, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, relu: bool = False):
+    """Fused dense layer x @ w + b (+ ReLU), differentiable.
+
+    Shapes: x[M,K], w[K,N], b[N] -> [M,N].
+    """
+    return _dense_fwd_impl(x, w, b, relu)
+
+
+def _dense_vjp_fwd(x, w, b, relu):
+    y = _dense_fwd_impl(x, w, b, relu)
+    return y, (x, w, y)
+
+
+def _dense_vjp_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        # ReLU mask from the saved activation (y == 0 exactly where clipped).
+        g = g * (y > 0).astype(g.dtype)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)

@@ -1,0 +1,29 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has its semantics defined HERE, in
+plain jax.numpy. pytest (python/tests/test_kernel.py) asserts the Pallas
+implementations match these to float tolerance across a hypothesis sweep
+of shapes and dtypes. The oracle is also what the L2 model falls back to
+when a shape cannot be tiled (it never happens for the shipped network,
+but keeps the library safe for downstream users).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matrix product, f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool = False) -> jnp.ndarray:
+    """Fused dense layer: x @ w + b, optional ReLU."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def dueling_combine(v: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Dueling head combine: Q = V + A - mean(A)."""
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)

@@ -1,0 +1,167 @@
+"""L2: AIMM dueling deep-Q network in JAX, built on the L1 Pallas kernels.
+
+The network matches the paper (§4.3, Fig 4-3): a small stack of fully
+connected layers with a dueling head —
+
+    s[*, STATE_DIM] -> 128 ReLU -> 128 ReLU -> { V: 1, A: NUM_ACTIONS }
+    Q(s, a) = V(s) + A(s, a) - mean_a A(s, a)
+
+All parameters (and Adam moments) travel as ONE flat f32 vector so the
+rust coordinator can hold them as opaque buffers and thread them through
+the AOT-compiled train step. The layout is fixed by PARAM_SPECS below and
+mirrored in rust/src/runtime/params.rs.
+
+Two entry points are lowered by aot.py:
+
+  infer(theta, s[1, STATE_DIM])                       -> (q[1, NUM_ACTIONS],)
+  train(theta, target_theta, m, v, hyper[3],
+        s[B,S], a[B] i32, r[B], s2[B,S], done[B])     -> (theta', m', v', loss[1])
+
+where hyper = [adam_step_t, learning_rate, gamma]. The train step is
+standard DQN with a target network: y = r + gamma * (1-done) * max_a'
+Q(s'; theta-), squared loss on the taken action, Adam update on theta.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense as K
+from .kernels import ref as R
+
+# ---------------------------------------------------------------------------
+# Architecture constants — mirrored in rust/src/agent/state.rs and
+# rust/src/runtime/params.rs. Changing any of these requires `make artifacts`.
+# ---------------------------------------------------------------------------
+STATE_DIM = 64
+NUM_ACTIONS = 8
+HIDDEN = 128
+BATCH = 32
+
+# (name, shape) in flat-vector order.
+PARAM_SPECS = (
+    ("w1", (STATE_DIM, HIDDEN)),
+    ("b1", (HIDDEN,)),
+    ("w2", (HIDDEN, HIDDEN)),
+    ("b2", (HIDDEN,)),
+    ("wv", (HIDDEN, 1)),
+    ("bv", (1,)),
+    ("wa", (HIDDEN, NUM_ACTIONS)),
+    ("ba", (NUM_ACTIONS,)),
+)
+
+PARAM_SIZE = sum(int(jnp.prod(jnp.array(s))) for _, s in PARAM_SPECS)
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def param_offsets():
+    """[(name, shape, start, end)] in flat-layout order."""
+    out, off = [], 0
+    for name, shape in PARAM_SPECS:
+        n = 1
+        for d in shape:
+            n *= d
+        out.append((name, shape, off, off + n))
+        off += n
+    return out
+
+
+def unflatten(theta: jnp.ndarray) -> dict:
+    """Flat f32[PARAM_SIZE] -> dict of named weight arrays."""
+    return {
+        name: jax.lax.dynamic_slice(theta, (start,), (end - start,)).reshape(shape)
+        for name, shape, start, end in param_offsets()
+    }
+
+
+def flatten(params: dict) -> jnp.ndarray:
+    """Dict of named weight arrays -> flat f32[PARAM_SIZE]."""
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in PARAM_SPECS])
+
+
+def init_params(seed: int = 0) -> jnp.ndarray:
+    """He-initialised flat parameter vector (f32[PARAM_SIZE])."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(
+                2.0 / fan_in
+            )
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return flatten(params)
+
+
+def forward(theta: jnp.ndarray, s: jnp.ndarray, *, use_pallas: bool = True) -> jnp.ndarray:
+    """Dueling-network forward pass: s[B, STATE_DIM] -> Q[B, NUM_ACTIONS]."""
+    p = unflatten(theta)
+    d = K.dense if use_pallas else R.dense
+    h1 = d(s, p["w1"], p["b1"], True)
+    h2 = d(h1, p["w2"], p["b2"], True)
+    v = d(h2, p["wv"], p["bv"], False)
+    a = d(h2, p["wa"], p["ba"], False)
+    return R.dueling_combine(v, a)
+
+
+def infer(theta: jnp.ndarray, s: jnp.ndarray):
+    """AOT entry point: greedy Q-values for one state."""
+    return (forward(theta, s),)
+
+
+def _loss_fn(theta, target_theta, gamma, s, a, r, s2, done):
+    q = forward(theta, s)  # [B, A]
+    qa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]  # [B]
+    q2 = forward(target_theta, s2)  # [B, A]
+    y = r + gamma * (1.0 - done) * jnp.max(q2, axis=1)
+    y = jax.lax.stop_gradient(y)
+    return jnp.mean(jnp.square(y - qa))
+
+
+def train(theta, target_theta, m, v, hyper, s, a, r, s2, done):
+    """AOT entry point: one DQN + Adam training step.
+
+    hyper = f32[3] = [adam_step_t (1-based after this step), lr, gamma].
+    Returns (theta', m', v', loss[1]).
+    """
+    t, lr, gamma = hyper[0], hyper[1], hyper[2]
+    loss, grads = jax.value_and_grad(_loss_fn)(
+        theta, target_theta, gamma, s, a, r, s2, done
+    )
+    m_new = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v_new = ADAM_B2 * v + (1.0 - ADAM_B2) * jnp.square(grads)
+    m_hat = m_new / (1.0 - jnp.power(ADAM_B1, t))
+    v_hat = v_new / (1.0 - jnp.power(ADAM_B2, t))
+    theta_new = theta - lr * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+    return theta_new, m_new, v_new, loss.reshape(1)
+
+
+def infer_spec():
+    """ShapeDtypeStructs for the infer entry point."""
+    return (
+        jax.ShapeDtypeStruct((PARAM_SIZE,), jnp.float32),
+        jax.ShapeDtypeStruct((1, STATE_DIM), jnp.float32),
+    )
+
+
+def train_spec():
+    """ShapeDtypeStructs for the train entry point."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((PARAM_SIZE,), f32),  # theta
+        jax.ShapeDtypeStruct((PARAM_SIZE,), f32),  # target theta
+        jax.ShapeDtypeStruct((PARAM_SIZE,), f32),  # adam m
+        jax.ShapeDtypeStruct((PARAM_SIZE,), f32),  # adam v
+        jax.ShapeDtypeStruct((3,), f32),  # hyper [t, lr, gamma]
+        jax.ShapeDtypeStruct((BATCH, STATE_DIM), f32),  # s
+        jax.ShapeDtypeStruct((BATCH,), jnp.int32),  # a
+        jax.ShapeDtypeStruct((BATCH,), f32),  # r
+        jax.ShapeDtypeStruct((BATCH, STATE_DIM), f32),  # s2
+        jax.ShapeDtypeStruct((BATCH,), f32),  # done
+    )

@@ -1,0 +1,60 @@
+"""AOT pipeline contract: the lowered HLO text and the manifest must match
+what rust/src/runtime expects (shapes, artifact names, parameter layout).
+"""
+
+import json
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def infer_hlo():
+    return aot.lower_infer()
+
+
+@pytest.fixture(scope="module")
+def train_hlo():
+    return aot.lower_train()
+
+
+def test_infer_hlo_text_structure(infer_hlo):
+    assert infer_hlo.startswith("HloModule"), "must be HLO text, not a proto"
+    # Parameter shapes appear in the entry computation signature.
+    assert f"f32[{model.PARAM_SIZE}]" in infer_hlo
+    assert f"f32[1,{model.STATE_DIM}]" in infer_hlo
+    assert f"f32[1,{model.NUM_ACTIONS}]" in infer_hlo
+
+
+def test_train_hlo_text_structure(train_hlo):
+    assert train_hlo.startswith("HloModule")
+    assert f"f32[{model.BATCH},{model.STATE_DIM}]" in train_hlo
+    assert f"s32[{model.BATCH}]" in train_hlo
+    # hyper vector [t, lr, gamma]
+    assert "f32[3]" in train_hlo
+
+
+def test_manifest_contract():
+    m = aot.manifest()
+    assert m["state_dim"] == model.STATE_DIM
+    assert m["num_actions"] == model.NUM_ACTIONS
+    assert m["param_size"] == model.PARAM_SIZE
+    spans = sorted((p["start"], p["end"]) for p in m["params"])
+    # Contiguous, non-overlapping, covering [0, PARAM_SIZE).
+    assert spans[0][0] == 0
+    for (s0, e0), (s1, _) in zip(spans, spans[1:]):
+        assert e0 == s1
+    assert spans[-1][1] == model.PARAM_SIZE
+    # JSON-serialisable (the rust side parses it with a minimal parser —
+    # keep it plain).
+    text = json.dumps(m)
+    assert "NaN" not in text
+
+
+def test_theta_init_size():
+    import numpy as np
+
+    theta = np.asarray(model.init_params(0), dtype=np.float32)
+    assert theta.nbytes == model.PARAM_SIZE * 4
+    assert np.isfinite(theta).all()

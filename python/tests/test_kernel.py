@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compute layer: the dueling
+DQN the rust coordinator executes is built from these kernels. Hypothesis
+sweeps shapes/dtypes; fixed cases pin the shipped network's shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed shapes: the exact layer shapes of the shipped dueling network.
+# ---------------------------------------------------------------------------
+NETWORK_SHAPES = [
+    (1, 64, 128),   # infer trunk layer 1
+    (1, 128, 128),  # infer trunk layer 2
+    (1, 128, 1),    # value head
+    (1, 128, 8),    # advantage head
+    (32, 64, 128),  # train batch trunk layer 1
+    (32, 128, 128),
+    (32, 128, 1),
+    (32, 128, 8),
+]
+
+
+@pytest.mark.parametrize("m,k,n", NETWORK_SHAPES)
+def test_matmul_network_shapes(m, k, n):
+    x, w = rand(1, m, k), rand(2, k, n)
+    np.testing.assert_allclose(K.matmul(x, w), R.matmul(x, w), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", NETWORK_SHAPES)
+@pytest.mark.parametrize("relu", [False, True])
+def test_dense_network_shapes(m, k, n, relu):
+    x, w, b = rand(3, m, k), rand(4, k, n), rand(5, n)
+    np.testing.assert_allclose(
+        K.dense(x, w, b, relu), R.dense(x, w, b, relu), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dense_relu_clips_negatives():
+    x = jnp.array([[1.0, -1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = K.dense(x, w, b, True)
+    assert float(out[0, 1]) == 0.0
+    assert float(out[0, 0]) == 1.0
+
+
+def test_tile_picker_divides():
+    for dim in [1, 2, 3, 7, 8, 30, 32, 64, 100, 128, 200, 333]:
+        for mx in [1, 8, 32, 128]:
+            t = K._pick_tile(dim, mx)
+            assert dim % t == 0
+            assert 1 <= t <= min(dim, mx)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: arbitrary shapes, including awkward primes.
+# ---------------------------------------------------------------------------
+dims = st.integers(min_value=1, max_value=96)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    np.testing.assert_allclose(K.matmul(x, w), R.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, relu=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_dense_matches_ref(m, k, n, relu, seed):
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        K.dense(x, w, b, relu), R.dense(x, w, b, relu), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_gradients_match_ref(m, k, n, relu, seed):
+    """The custom VJP (Pallas backward) must match jnp autodiff."""
+    kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+
+    def loss_k(x, w, b):
+        return jnp.sum(jnp.square(K.dense(x, w, b, relu)))
+
+    def loss_r(x, w, b):
+        return jnp.sum(jnp.square(R.dense(x, w, b, relu)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, r_ in zip(gk, gr):
+        np.testing.assert_allclose(a, r_, rtol=1e-3, atol=1e-3)
+
+
+def test_dueling_combine_zero_mean_advantage():
+    v = rand(7, 4, 1)
+    a = rand(8, 4, 8)
+    q = R.dueling_combine(v, a)
+    # Q - V must have zero mean over actions.
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(q - v, axis=-1)), np.zeros(4), atol=1e-5
+    )

@@ -1,0 +1,120 @@
+"""L2 correctness: the dueling DQN model — shapes, flat-parameter layout,
+training-step semantics (loss falls, Adam state updates, target network
+held fixed inside the step).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return M.init_params(0)
+
+
+def test_param_size_consistent(theta):
+    assert theta.shape == (M.PARAM_SIZE,)
+    offs = M.param_offsets()
+    assert offs[-1][3] == M.PARAM_SIZE
+    # Offsets are contiguous and ordered.
+    pos = 0
+    for _, shape, start, end in offs:
+        assert start == pos
+        n = int(np.prod(shape))
+        assert end - start == n
+        pos = end
+
+
+def test_flatten_unflatten_roundtrip(theta):
+    params = M.unflatten(theta)
+    again = M.flatten(params)
+    np.testing.assert_array_equal(np.asarray(theta), np.asarray(again))
+    assert params["w1"].shape == (M.STATE_DIM, M.HIDDEN)
+    assert params["wa"].shape == (M.HIDDEN, M.NUM_ACTIONS)
+
+
+def test_forward_shapes(theta):
+    s1 = jnp.zeros((1, M.STATE_DIM), jnp.float32)
+    sB = jnp.zeros((M.BATCH, M.STATE_DIM), jnp.float32)
+    assert M.forward(theta, s1).shape == (1, M.NUM_ACTIONS)
+    assert M.forward(theta, sB).shape == (M.BATCH, M.NUM_ACTIONS)
+
+
+def test_forward_pallas_matches_ref(theta):
+    s = jax.random.normal(jax.random.PRNGKey(3), (M.BATCH, M.STATE_DIM), jnp.float32)
+    q_pallas = M.forward(theta, s, use_pallas=True)
+    q_ref = M.forward(theta, s, use_pallas=False)
+    np.testing.assert_allclose(q_pallas, q_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_infer_entry_point(theta):
+    s = jnp.ones((1, M.STATE_DIM), jnp.float32) * 0.5
+    (q,) = M.infer(theta, s)
+    assert q.shape == (1, M.NUM_ACTIONS)
+    assert bool(jnp.all(jnp.isfinite(q)))
+
+
+def _fixed_batch(seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    s = jax.random.uniform(ks[0], (M.BATCH, M.STATE_DIM), jnp.float32)
+    a = jax.random.randint(ks[1], (M.BATCH,), 0, M.NUM_ACTIONS, jnp.int32)
+    r = jax.random.uniform(ks[2], (M.BATCH,), jnp.float32)
+    s2 = jax.random.uniform(ks[3], (M.BATCH, M.STATE_DIM), jnp.float32)
+    done = jnp.ones((M.BATCH,), jnp.float32)  # terminal → supervised-ish
+    return s, a, r, s2, done
+
+
+def test_train_step_reduces_loss(theta):
+    tt = theta
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    batch = _fixed_batch()
+    train = jax.jit(M.train)
+    t = 0.0
+    losses = []
+    th = theta
+    for _ in range(25):
+        hyper = jnp.array([t + 1.0, 1e-3, 0.95], jnp.float32)
+        th, m, v, loss = train(th, tt, m, v, hyper, *batch)
+        losses.append(float(loss[0]))
+        t += 1.0
+    assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+    assert all(np.isfinite(losses))
+
+
+def test_train_updates_adam_state(theta):
+    m0 = jnp.zeros_like(theta)
+    v0 = jnp.zeros_like(theta)
+    hyper = jnp.array([1.0, 1e-3, 0.95], jnp.float32)
+    th, m1, v1, _ = M.train(theta, theta, m0, v0, hyper, *_fixed_batch())
+    assert not np.allclose(np.asarray(m1), 0.0)
+    assert not np.allclose(np.asarray(v1), 0.0)
+    assert not np.array_equal(np.asarray(th), np.asarray(theta))
+    # v (second moment) is non-negative.
+    assert float(jnp.min(v1)) >= 0.0
+
+
+def test_target_network_decouples(theta):
+    """Changing target params changes the TD target, not the Q(s,a) leg."""
+    m0 = jnp.zeros_like(theta)
+    v0 = jnp.zeros_like(theta)
+    hyper = jnp.array([1.0, 1e-3, 0.95], jnp.float32)
+    s, a, r, s2, _ = _fixed_batch()
+    done = jnp.zeros((M.BATCH,), jnp.float32)  # non-terminal → target matters
+    other_target = M.init_params(99)
+    _, _, _, loss_a = M.train(theta, theta, m0, v0, hyper, s, a, r, s2, done)
+    _, _, _, loss_b = M.train(theta, other_target, m0, v0, hyper, s, a, r, s2, done)
+    assert not np.isclose(float(loss_a[0]), float(loss_b[0]))
+
+
+def test_init_deterministic():
+    a = M.init_params(7)
+    b = M.init_params(7)
+    c = M.init_params(8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 10 (migration statistics).
+use aimm::bench::fig10;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig10(0.12, 2).expect("fig10").render());
+    println!("fig10 regenerated in {:?}", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 11 (8×8 mesh scaling).
+use aimm::bench::fig11;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig11(0.12, 2).expect("fig11").render());
+    println!("fig11 regenerated in {:?}", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 12 (multi-program workloads with HOARD/AIMM).
+use aimm::bench::fig12;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig12(0.06, 2).expect("fig12").render());
+    println!("fig12 regenerated in {:?}", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 13 (page-cache / NMP-table size sensitivity).
+use aimm::bench::fig13;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig13(0.12, 2).expect("fig13").render());
+    println!("fig13 regenerated in {:?}", t0.elapsed());
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Fig 14 (dynamic energy) and the §7.7 area table.
+use aimm::bench::{area_table, fig14};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig14(0.12, 2).expect("fig14").render());
+    println!("{}", area_table().render());
+    println!("fig14 regenerated in {:?}", t0.elapsed());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 5a/5b/5c (workload analysis) and time it.
+use aimm::bench::{bench_fn, fig5a, fig5b, fig5c};
+
+fn main() {
+    let scale = 0.25;
+    println!("{}", fig5a(scale, 7).render());
+    println!("{}", fig5b(scale, 7).render());
+    println!("{}", fig5c(scale, 7).render());
+    let r = bench_fn("fig5 full analysis", 1, 5, || {
+        let _ = (fig5a(scale, 7), fig5b(scale, 7), fig5c(scale, 7));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig 6 (normalized execution time across the full
+//! {BNMP,LDB,PEI} × {B,TOM,AIMM} × 9-benchmark grid) at bench scale.
+use aimm::bench::fig6;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = fig6(0.12, 2).expect("fig6");
+    println!("{}", table.render());
+    println!("fig6 grid regenerated in {:?}", t0.elapsed());
+}

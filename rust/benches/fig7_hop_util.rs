@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 7 (avg hop count + computation utilization).
+use aimm::bench::fig7;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig7(0.12, 2).expect("fig7").render());
+    println!("fig7 regenerated in {:?}", t0.elapsed());
+}

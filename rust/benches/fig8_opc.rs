@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 8 (normalized OPC).
+use aimm::bench::fig8;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig8(0.12, 2).expect("fig8").render());
+    println!("fig8 regenerated in {:?}", t0.elapsed());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 9 (OPC timeline / learning convergence).
+use aimm::bench::fig9;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("{}", fig9(0.12, 3, 16).expect("fig9").render());
+    println!("fig9 regenerated in {:?}", t0.elapsed());
+}

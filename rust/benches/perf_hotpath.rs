@@ -1,0 +1,64 @@
+//! Bench: L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf) — the
+//! end-to-end episode runner plus the component-level hot loops.
+use aimm::bench::bench_fn;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::System;
+use aimm::noc::packet::{NodeId, Packet, Payload};
+use aimm::noc::Mesh;
+use aimm::cube::PhysAddr;
+use aimm::workloads::{generate, Benchmark};
+
+fn main() {
+    // End-to-end episode (baseline, no PJRT) — the master hot loop.
+    let cfg = SystemConfig::default();
+    let trace = generate(Benchmark::Spmv, 1, 0.12, cfg.seed);
+    let r = bench_fn("episode SPMV scale=0.12 (baseline)", 1, 5, || {
+        let mut sys = System::new(cfg.clone(), trace.ops.clone(), None);
+        sys.run().unwrap();
+    });
+    println!("{}", r.report());
+    {
+        let mut sys = System::new(cfg.clone(), trace.ops.clone(), None);
+        let stats = sys.run().unwrap();
+        let per_cycle = r.median.as_nanos() as f64 / stats.cycles as f64;
+        println!("  -> {} sim cycles, {:.1} ns/cycle", stats.cycles, per_cycle);
+    }
+
+    // TOM variant (adds the remap machinery to the loop).
+    let mut tom_cfg = cfg.clone();
+    tom_cfg.mapping = MappingScheme::Tom;
+    let r = bench_fn("episode SPMV scale=0.12 (TOM)", 1, 5, || {
+        let mut sys = System::new(tom_cfg.clone(), trace.ops.clone(), None);
+        sys.run().unwrap();
+    });
+    println!("{}", r.report());
+
+    // NoC saturation microbench: all-to-all packet storm.
+    let r = bench_fn("mesh tick under storm (1000 cycles)", 1, 10, || {
+        let mut mesh = Mesh::new(&cfg);
+        let mut next = 0u64;
+        for now in 0..1000u64 {
+            for src in 0..16 {
+                next += 1;
+                let pk = Packet::new(
+                    next,
+                    NodeId::Cube(src),
+                    NodeId::Cube((src * 7 + (now as usize)) % 16),
+                    Payload::SourceReq { token: next, addr: PhysAddr::new(0, 0), reply_to: src },
+                    now,
+                );
+                let _ = mesh.inject(pk);
+            }
+            mesh.tick(now);
+        }
+    });
+    println!("{}", r.report());
+
+    // Workload generation (build-time path, still worth tracking).
+    let r = bench_fn("generate all 9 traces scale=0.25", 1, 5, || {
+        for b in Benchmark::ALL {
+            let _ = generate(b, 1, 0.25, 7);
+        }
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,152 @@
+//! The eight-action space (paper §4.2): six data/computation remapping
+//! actions plus two invocation-interval adjustments.
+
+use crate::config::CubeId;
+use crate::noc::Mesh;
+use crate::sim::Rng;
+
+/// Agent actions, in artifact index order (mirrors the Q-head outputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// (i) No change in the mapping.
+    Default = 0,
+    /// (ii) Remap the page to a random neighbour of the compute cube.
+    NearData = 1,
+    /// (iii) Remap the page to the compute cube's diagonal opposite.
+    FarData = 2,
+    /// (iv) Remap the computation to a neighbour of the compute cube.
+    NearCompute = 3,
+    /// (v) Remap the computation to the compute cube's diagonal opposite.
+    FarCompute = 4,
+    /// (vi) Remap the computation to the first source's host cube.
+    SourceCompute = 5,
+    /// (vii) Increase the agent invocation interval.
+    IncreaseInterval = 6,
+    /// (viii) Decrease the agent invocation interval.
+    DecreaseInterval = 7,
+}
+
+pub const NUM_ACTIONS: usize = 8;
+
+impl Action {
+    pub const ALL: [Action; NUM_ACTIONS] = [
+        Action::Default,
+        Action::NearData,
+        Action::FarData,
+        Action::NearCompute,
+        Action::FarCompute,
+        Action::SourceCompute,
+        Action::IncreaseInterval,
+        Action::DecreaseInterval,
+    ];
+
+    pub fn from_index(i: usize) -> Action {
+        Self::ALL[i]
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Action::Default => "default",
+            Action::NearData => "near-data",
+            Action::FarData => "far-data",
+            Action::NearCompute => "near-compute",
+            Action::FarCompute => "far-compute",
+            Action::SourceCompute => "source-compute",
+            Action::IncreaseInterval => "interval++",
+            Action::DecreaseInterval => "interval--",
+        }
+    }
+
+    pub fn is_data_remap(self) -> bool {
+        matches!(self, Action::NearData | Action::FarData)
+    }
+
+    pub fn is_compute_remap(self) -> bool {
+        matches!(self, Action::NearCompute | Action::FarCompute | Action::SourceCompute)
+    }
+
+    pub fn is_interval(self) -> bool {
+        matches!(self, Action::IncreaseInterval | Action::DecreaseInterval)
+    }
+
+    /// Resolve the target cube of a remapping action. `compute_cube` is
+    /// the page's current compute location, `src1_cube` the host of the
+    /// first source of its recent ops.
+    pub fn target_cube(
+        self,
+        mesh: &Mesh,
+        compute_cube: CubeId,
+        src1_cube: CubeId,
+        rng: &mut Rng,
+    ) -> Option<CubeId> {
+        match self {
+            Action::NearData | Action::NearCompute => {
+                let n = mesh.neighbors(compute_cube);
+                Some(*rng.choice(&n))
+            }
+            Action::FarData | Action::FarCompute => Some(mesh.diagonal_opposite(compute_cube)),
+            Action::SourceCompute => Some(src1_cube),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn index_roundtrip() {
+        for (i, a) in Action::ALL.iter().enumerate() {
+            assert_eq!(a.index(), i);
+            assert_eq!(Action::from_index(i), *a);
+        }
+    }
+
+    #[test]
+    fn classification_partition() {
+        for a in Action::ALL {
+            let kinds =
+                [a.is_data_remap(), a.is_compute_remap(), a.is_interval(), a == Action::Default];
+            assert_eq!(kinds.iter().filter(|&&k| k).count(), 1, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn near_targets_are_neighbors() {
+        let mesh = Mesh::new(&SystemConfig::default());
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let t = Action::NearData.target_cube(&mesh, 5, 0, &mut rng).unwrap();
+            assert!(mesh.neighbors(5).contains(&t));
+        }
+    }
+
+    #[test]
+    fn far_target_is_diagonal() {
+        let mesh = Mesh::new(&SystemConfig::default());
+        let mut rng = Rng::new(1);
+        assert_eq!(Action::FarCompute.target_cube(&mesh, 0, 0, &mut rng), Some(15));
+        assert_eq!(Action::FarData.target_cube(&mesh, 5, 0, &mut rng), Some(10));
+    }
+
+    #[test]
+    fn source_compute_targets_src1() {
+        let mesh = Mesh::new(&SystemConfig::default());
+        let mut rng = Rng::new(1);
+        assert_eq!(Action::SourceCompute.target_cube(&mesh, 3, 11, &mut rng), Some(11));
+    }
+
+    #[test]
+    fn interval_actions_have_no_target() {
+        let mesh = Mesh::new(&SystemConfig::default());
+        let mut rng = Rng::new(1);
+        assert_eq!(Action::IncreaseInterval.target_cube(&mesh, 3, 1, &mut rng), None);
+        assert_eq!(Action::Default.target_cube(&mesh, 3, 1, &mut rng), None);
+    }
+}

@@ -1,0 +1,325 @@
+//! The AIMM control loop (paper Fig 4): periodically pull state from the
+//! MCs, compute the reward for the previous action from the OPC delta,
+//! store the transition, ε-greedily pick the next action, and train the
+//! dueling Q-network from replay.
+
+use crate::config::AgentConfig;
+use crate::runtime::QFunction;
+use crate::sim::{Cycle, History, Rng};
+
+use super::actions::Action;
+use super::replay::{ReplayBuffer, Transition};
+use super::state::StateVec;
+
+/// What the system should do after an invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    pub action: Action,
+    /// Interval (cycles) until the next invocation.
+    pub next_interval: u64,
+}
+
+/// Agent bookkeeping surfaced in RunStats.
+#[derive(Debug, Clone, Default)]
+pub struct AgentStats {
+    pub invocations: u64,
+    pub train_steps: u64,
+    pub loss_sum: f64,
+    pub cumulative_reward: f64,
+    pub action_counts: [u64; 8],
+    /// Summed reward attributed to each action (diagnostics).
+    pub action_reward_sum: [f64; 8],
+    /// Energy events (§7.7): weight-matrix / replay / state-buffer.
+    pub weight_accesses: u64,
+    pub replay_accesses: u64,
+    pub state_buf_accesses: u64,
+}
+
+/// The agent.
+pub struct AimmAgent {
+    qf: Box<dyn QFunction>,
+    pub replay: ReplayBuffer,
+    cfg: AgentConfig,
+    rng: Rng,
+    eps: f32,
+    interval_idx: usize,
+    pending: Option<(StateVec, Action)>,
+    prev_opc: Option<f64>,
+    invocations_since_train: u32,
+    trains_since_sync: u32,
+    /// Recent global actions (for the state histogram).
+    pub action_history: History,
+    pub stats: AgentStats,
+}
+
+impl AimmAgent {
+    pub fn new(qf: Box<dyn QFunction>, cfg: AgentConfig, seed: u64) -> Self {
+        let eps = cfg.eps_start;
+        let interval_idx = cfg.initial_interval.min(cfg.intervals.len() - 1);
+        Self {
+            qf,
+            replay: ReplayBuffer::new(cfg.replay_capacity),
+            cfg,
+            rng: Rng::new(seed),
+            eps,
+            interval_idx,
+            pending: None,
+            prev_opc: None,
+            invocations_since_train: 0,
+            trains_since_sync: 0,
+            action_history: History::new(16),
+            stats: AgentStats::default(),
+        }
+    }
+
+    pub fn backend(&self) -> &'static str {
+        self.qf.backend()
+    }
+
+    pub fn current_interval(&self) -> u64 {
+        self.cfg.intervals[self.interval_idx]
+    }
+
+    /// Interval index normalised to [0, 1] for the state vector.
+    pub fn interval_norm(&self) -> f32 {
+        if self.cfg.intervals.len() <= 1 {
+            0.0
+        } else {
+            self.interval_idx as f32 / (self.cfg.intervals.len() - 1) as f32
+        }
+    }
+
+    /// Action histogram over the recent global history (state input).
+    pub fn action_histogram(&self) -> [f32; 8] {
+        let mut h = [0.0f32; 8];
+        let n = self.action_history.len().max(1) as f32;
+        for a in self.action_history.iter() {
+            h[(a as usize).min(7)] += 1.0 / n;
+        }
+        h
+    }
+
+    pub fn epsilon(&self) -> f32 {
+        self.eps
+    }
+
+    /// Reward from the OPC delta (paper §4.2: ±1 on improvement /
+    /// degradation, 0 otherwise, with a small deadband).
+    fn reward(&self, opc_now: f64) -> f32 {
+        let Some(prev) = self.prev_opc else { return 0.0 };
+        let band = self.cfg.reward_deadband * prev.max(1e-9);
+        if opc_now > prev + band {
+            1.0
+        } else if opc_now < prev - band {
+            -1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// One agent invocation. `state` is the freshly assembled state,
+    /// `opc_now` the OPC observed over the elapsed interval.
+    pub fn invoke(&mut self, state: StateVec, opc_now: f64, _now: Cycle) -> anyhow::Result<Decision> {
+        self.stats.invocations += 1;
+        self.stats.state_buf_accesses += 1;
+
+        // Close out the previous (s, a) with its observed reward.
+        let r = self.reward(opc_now);
+        if let Some((s_prev, a_prev)) = self.pending.take() {
+            self.stats.cumulative_reward += r as f64;
+            self.stats.action_reward_sum[a_prev.index()] += r as f64;
+            self.replay.push(Transition {
+                s: s_prev,
+                a: a_prev.index() as u8,
+                r,
+                s2: state,
+                done: false,
+            });
+            self.stats.replay_accesses += 1;
+        }
+
+        // Train on schedule.
+        self.invocations_since_train += 1;
+        if self.invocations_since_train >= self.cfg.train_every && self.replay.has_batch() {
+            self.invocations_since_train = 0;
+            if let Some(batch) = self.replay.sample(&mut self.rng) {
+                let loss = self.qf.train_batch(&batch)?;
+                self.stats.train_steps += 1;
+                self.stats.loss_sum += loss as f64;
+                self.stats.weight_accesses += crate::runtime::BATCH as u64;
+                self.stats.replay_accesses += crate::runtime::BATCH as u64;
+                self.trains_since_sync += 1;
+                if self.trains_since_sync >= self.cfg.target_sync {
+                    self.trains_since_sync = 0;
+                    self.qf.sync_target();
+                }
+            }
+        }
+
+        // ε-greedy action selection.
+        let action = if self.rng.f32() < self.eps {
+            Action::from_index(self.rng.index(8))
+        } else {
+            self.stats.weight_accesses += 1;
+            let q = self.qf.q_values(&state)?;
+            let mut best = 0;
+            for i in 1..q.len() {
+                if q[i] > q[best] {
+                    best = i;
+                }
+            }
+            Action::from_index(best)
+        };
+        self.eps = (self.eps * self.cfg.eps_decay).max(self.cfg.eps_end);
+        self.stats.action_counts[action.index()] += 1;
+        self.action_history.push(action.index() as f32);
+
+        // Interval adjustment actions apply immediately (§4.2).
+        match action {
+            Action::IncreaseInterval => {
+                self.interval_idx = (self.interval_idx + 1).min(self.cfg.intervals.len() - 1);
+            }
+            Action::DecreaseInterval => {
+                self.interval_idx = self.interval_idx.saturating_sub(1);
+            }
+            _ => {}
+        }
+
+        self.pending = Some((state, action));
+        self.prev_opc = Some(opc_now);
+        Ok(Decision { action, next_interval: self.current_interval() })
+    }
+
+    /// Close the episode: final transition is terminal. The DNN model is
+    /// deliberately retained (the paper re-runs episodes "where each time
+    /// simulation states are cleared except the DNN model", §6.1).
+    pub fn finish_episode(&mut self, final_state: StateVec, opc_now: f64) {
+        let r = self.reward(opc_now);
+        if let Some((s_prev, a_prev)) = self.pending.take() {
+            self.stats.cumulative_reward += r as f64;
+            self.replay.push(Transition {
+                s: s_prev,
+                a: a_prev.index() as u8,
+                r,
+                s2: final_state,
+                done: true,
+            });
+            self.stats.replay_accesses += 1;
+        }
+        self.prev_opc = None;
+    }
+
+    /// Reset per-episode control state (keeps the learned network,
+    /// replay memory and ε schedule — continual learning).
+    pub fn start_episode(&mut self) {
+        self.pending = None;
+        self.prev_opc = None;
+        self.interval_idx = self.cfg.initial_interval.min(self.cfg.intervals.len() - 1);
+    }
+
+    pub fn avg_loss(&self) -> f64 {
+        if self.stats.train_steps == 0 {
+            0.0
+        } else {
+            self.stats.loss_sum / self.stats.train_steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AgentConfig;
+    use crate::runtime::{LinearQ, STATE_DIM};
+
+    fn agent(cfg: AgentConfig) -> AimmAgent {
+        AimmAgent::new(Box::new(LinearQ::new(0.01, 0.95, 7)), cfg, 42)
+    }
+
+    fn s(v: f32) -> StateVec {
+        let mut out = [0.0; STATE_DIM];
+        out[0] = v;
+        out
+    }
+
+    #[test]
+    fn interval_actions_move_index() {
+        let mut cfg = AgentConfig::default();
+        cfg.eps_start = 0.0;
+        cfg.eps_end = 0.0;
+        let mut a = agent(cfg.clone());
+        let start = a.current_interval();
+        // Force interval actions directly.
+        a.interval_idx = 0;
+        assert_eq!(a.current_interval(), cfg.intervals[0]);
+        a.interval_idx = cfg.intervals.len() - 1;
+        assert_eq!(a.current_interval(), *cfg.intervals.last().unwrap());
+        assert!(start > 0);
+    }
+
+    #[test]
+    fn transitions_accumulate_and_training_happens() {
+        let mut cfg = AgentConfig::default();
+        cfg.train_every = 1;
+        let mut a = agent(cfg);
+        for i in 0..100 {
+            let opc = 0.1 + (i % 5) as f64 * 0.05;
+            a.invoke(s(i as f32 / 100.0), opc, i as u64 * 100).unwrap();
+        }
+        assert_eq!(a.stats.invocations, 100);
+        assert_eq!(a.replay.len(), 99); // first invocation has no prior (s, a)
+        assert!(a.stats.train_steps > 0);
+    }
+
+    #[test]
+    fn rewards_reflect_opc_delta() {
+        let cfg = AgentConfig::default();
+        let mut a = agent(cfg);
+        a.invoke(s(0.0), 0.5, 0).unwrap();
+        assert_eq!(a.reward(0.6), 1.0);
+        assert_eq!(a.reward(0.4), -1.0);
+        assert_eq!(a.reward(0.5005), 0.0); // inside deadband
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let mut cfg = AgentConfig::default();
+        cfg.eps_decay = 0.5;
+        cfg.eps_end = 0.1;
+        let mut a = agent(cfg);
+        for i in 0..20 {
+            a.invoke(s(0.0), 0.1, i).unwrap();
+        }
+        assert!((a.epsilon() - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn finish_episode_marks_terminal() {
+        let cfg = AgentConfig::default();
+        let mut a = agent(cfg);
+        a.invoke(s(0.1), 0.2, 0).unwrap();
+        a.finish_episode(s(0.2), 0.3);
+        assert_eq!(a.replay.len(), 1);
+        // Internal control state cleared; model retained.
+        a.start_episode();
+        assert!(a.pending.is_none());
+        assert_eq!(a.replay.len(), 1);
+    }
+
+    #[test]
+    fn greedy_exploits_learned_values() {
+        let mut cfg = AgentConfig::default();
+        cfg.eps_start = 0.0;
+        cfg.eps_end = 0.0;
+        cfg.train_every = 1;
+        let mut a = agent(cfg);
+        // Feed a cycle where OPC always improves: every action gets +1;
+        // after training the greedy action must be a valid index and
+        // stats must track it.
+        for i in 0..200 {
+            a.invoke(s(0.5), i as f64, i).unwrap();
+        }
+        let total: u64 = a.stats.action_counts.iter().sum();
+        assert_eq!(total, 200);
+    }
+}

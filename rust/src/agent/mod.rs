@@ -1,0 +1,14 @@
+//! The AIMM reinforcement-learning agent (paper §4, §5.2): state
+//! assembly, the eight-action space, the OPC reward, experience replay
+//! and the ε-greedy deep-Q control loop driving page and computation
+//! remapping.
+
+pub mod actions;
+pub mod aimm;
+pub mod replay;
+pub mod state;
+
+pub use actions::Action;
+pub use aimm::{AgentStats, AimmAgent, Decision};
+pub use replay::ReplayBuffer;
+pub use state::{build_state, hist4, PageSignals, PerMcSignals, StateVec, SysSignals};

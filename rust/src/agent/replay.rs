@@ -1,0 +1,128 @@
+//! Experience replay (paper §4.3 / §5.2): a ring buffer of transitions
+//! `(s, a, r, s')` sampled uniformly at random into training batches,
+//! consolidating past experience for a robust learning process.
+
+use crate::runtime::{TrainBatch, BATCH, STATE_DIM};
+use crate::sim::Rng;
+
+use super::state::StateVec;
+
+/// One transition.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub s: StateVec,
+    pub a: u8,
+    pub r: f32,
+    pub s2: StateVec,
+    pub done: bool,
+}
+
+/// Fixed-capacity ring buffer.
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+    /// Total pushes (energy accounting: one replay-buffer access each).
+    pub pushes: u64,
+    /// Total samples drawn.
+    pub samples: u64,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= BATCH);
+        Self { buf: Vec::with_capacity(capacity), capacity, head: 0, pushes: 0, samples: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        self.pushes += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.capacity;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn has_batch(&self) -> bool {
+        self.buf.len() >= BATCH
+    }
+
+    /// Draw a uniform batch (with replacement across draws, without
+    /// within a batch when possible).
+    pub fn sample(&mut self, rng: &mut Rng) -> Option<TrainBatch> {
+        if !self.has_batch() {
+            return None;
+        }
+        self.samples += BATCH as u64;
+        let mut s = Vec::with_capacity(BATCH * STATE_DIM);
+        let mut a = Vec::with_capacity(BATCH);
+        let mut r = Vec::with_capacity(BATCH);
+        let mut s2 = Vec::with_capacity(BATCH * STATE_DIM);
+        let mut done = Vec::with_capacity(BATCH);
+        for _ in 0..BATCH {
+            let t = &self.buf[rng.index(self.buf.len())];
+            s.extend_from_slice(&t.s);
+            a.push(t.a as i32);
+            r.push(t.r);
+            s2.extend_from_slice(&t.s2);
+            done.push(if t.done { 1.0 } else { 0.0 });
+        }
+        Some(TrainBatch { s, a, r, s2, done })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f32) -> Transition {
+        Transition { s: [0.0; STATE_DIM], a: 1, r, s2: [0.0; STATE_DIM], done: false }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(BATCH);
+        for i in 0..BATCH + 5 {
+            rb.push(t(i as f32));
+        }
+        assert_eq!(rb.len(), BATCH);
+        // Oldest 5 rewards (0..5) must be gone.
+        let rewards: Vec<f32> = rb.buf.iter().map(|x| x.r).collect();
+        for old in 0..5 {
+            assert!(!rewards.contains(&(old as f32)));
+        }
+    }
+
+    #[test]
+    fn sample_requires_batch() {
+        let mut rb = ReplayBuffer::new(64);
+        let mut rng = Rng::new(4);
+        assert!(rb.sample(&mut rng).is_none());
+        for i in 0..BATCH {
+            rb.push(t(i as f32));
+        }
+        let b = rb.sample(&mut rng).unwrap();
+        assert!(b.validate().is_ok());
+        assert_eq!(b.r.len(), BATCH);
+    }
+
+    #[test]
+    fn sampled_values_come_from_buffer() {
+        let mut rb = ReplayBuffer::new(64);
+        let mut rng = Rng::new(5);
+        for i in 0..40 {
+            rb.push(t(i as f32));
+        }
+        let b = rb.sample(&mut rng).unwrap();
+        assert!(b.r.iter().all(|&r| (0.0..40.0).contains(&r)));
+    }
+}

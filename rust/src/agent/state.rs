@@ -1,0 +1,160 @@
+//! Agent state representation (paper §4.2, Fig 3): system information
+//! (per-MC NMP-table occupancy / row-buffer hit rate / queue occupancy,
+//! global action history) concatenated with the selected page's
+//! information (access rate, migrations per access, hop / latency /
+//! migration-latency / action histories).
+//!
+//! The layout is pinned to `STATE_DIM = 64` and mirrored by
+//! python/compile/model.py; DESIGN.md §5 documents every slot. Per-MC
+//! statistics aggregate over each MC's nearest cubes so one artifact
+//! serves both 4×4 and 8×8 meshes.
+
+use crate::runtime::STATE_DIM;
+
+/// A fully-assembled state vector.
+pub type StateVec = [f32; STATE_DIM];
+
+/// Normalisation scales for unbounded signals.
+const LAT_SCALE: f32 = 1.0 / 512.0;
+const MIG_LAT_SCALE: f32 = 1.0 / 4096.0;
+const HOP_SCALE: f32 = 1.0 / 16.0;
+
+/// Aggregated signals from one MC's system counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PerMcSignals {
+    pub occ_mean: f32,
+    pub occ_max: f32,
+    pub row_hit_mean: f32,
+    pub row_hit_min: f32,
+    pub queue_occ: f32,
+}
+
+/// System-wide signals.
+#[derive(Debug, Clone, Default)]
+pub struct SysSignals {
+    pub per_mc: Vec<PerMcSignals>,
+    /// Histogram of the last 16 global actions (8 bins, normalised).
+    pub action_histogram: [f32; 8],
+    /// Current invocation-interval index / (num intervals − 1).
+    pub interval_norm: f32,
+    /// OPC over the last agent interval (already ~[0, 1]).
+    pub recent_opc: f32,
+    /// Mesh-wide aggregates.
+    pub cube_occ_mean: f32,
+    pub cube_occ_max: f32,
+    pub cube_row_hit_mean: f32,
+}
+
+/// Per-page signals for the selected (highly accessed) page.
+#[derive(Debug, Clone, Default)]
+pub struct PageSignals {
+    pub access_rate: f32,
+    pub migrations_per_access: f32,
+    /// Zero-padded, oldest-first histories of length 4.
+    pub hop_hist: [f32; 4],
+    pub lat_hist: [f32; 4],
+    pub mig_lat_hist: [f32; 4],
+    pub action_hist: [f32; 4],
+    /// Host cube and current compute cube, / num_cubes.
+    pub page_cube_norm: f32,
+    pub compute_cube_norm: f32,
+}
+
+fn clamp01(x: f32) -> f32 {
+    x.clamp(0.0, 1.0)
+}
+
+/// Assemble the 64-wide state vector. Layout (DESIGN.md §5):
+/// `[0..20)` per-MC (4×5), `[20..28)` action histogram, `[28..33)`
+/// globals, `[33..53)` page info, `[53..64)` reserved zeros.
+pub fn build_state(sys: &SysSignals, page: &PageSignals) -> StateVec {
+    let mut s = [0.0f32; STATE_DIM];
+    let mut i = 0;
+    for mc in 0..4 {
+        let m = sys.per_mc.get(mc).copied().unwrap_or_default();
+        s[i] = clamp01(m.occ_mean);
+        s[i + 1] = clamp01(m.occ_max);
+        s[i + 2] = clamp01(m.row_hit_mean);
+        s[i + 3] = clamp01(m.row_hit_min);
+        s[i + 4] = clamp01(m.queue_occ);
+        i += 5;
+    }
+    debug_assert_eq!(i, 20);
+    for (j, v) in sys.action_histogram.iter().enumerate() {
+        s[20 + j] = clamp01(*v);
+    }
+    s[28] = clamp01(sys.interval_norm);
+    s[29] = clamp01(sys.recent_opc);
+    s[30] = clamp01(sys.cube_occ_mean);
+    s[31] = clamp01(sys.cube_occ_max);
+    s[32] = clamp01(sys.cube_row_hit_mean);
+
+    s[33] = clamp01(page.access_rate);
+    s[34] = clamp01(page.migrations_per_access);
+    for j in 0..4 {
+        s[35 + j] = clamp01(page.hop_hist[j] * HOP_SCALE);
+        s[39 + j] = clamp01(page.lat_hist[j] * LAT_SCALE);
+        s[43 + j] = clamp01(page.mig_lat_hist[j] * MIG_LAT_SCALE);
+        s[47 + j] = clamp01(page.action_hist[j] / 8.0);
+    }
+    s[51] = clamp01(page.page_cube_norm);
+    s[52] = clamp01(page.compute_cube_norm);
+    // [53..64) reserved.
+    s
+}
+
+/// Copy a `History::padded()` vector into a fixed `[f32; 4]`.
+pub fn hist4(padded: &[f32]) -> [f32; 4] {
+    let mut out = [0.0; 4];
+    let n = padded.len().min(4);
+    out[4 - n..].copy_from_slice(&padded[padded.len() - n..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_slots() {
+        let mut sys = SysSignals::default();
+        sys.per_mc = vec![
+            PerMcSignals { occ_mean: 0.5, occ_max: 0.9, row_hit_mean: 0.7, row_hit_min: 0.2, queue_occ: 0.1 };
+            4
+        ];
+        sys.action_histogram[3] = 0.25;
+        sys.recent_opc = 0.4;
+        let mut page = PageSignals::default();
+        page.access_rate = 0.33;
+        page.hop_hist = [0.0, 0.0, 4.0, 8.0];
+        let s = build_state(&sys, &page);
+        assert_eq!(s[0], 0.5);
+        assert_eq!(s[1], 0.9);
+        assert_eq!(s[23], 0.25);
+        assert_eq!(s[29], 0.4);
+        assert_eq!(s[33], 0.33);
+        assert!((s[37] - 0.25).abs() < 1e-6); // 4 hops / 16
+        assert!((s[38] - 0.5).abs() < 1e-6); // 8 hops / 16
+        assert!(s[53..].iter().all(|&v| v == 0.0), "reserved slots stay zero");
+    }
+
+    #[test]
+    fn everything_clamped() {
+        let mut sys = SysSignals::default();
+        sys.per_mc = vec![
+            PerMcSignals { occ_mean: 7.0, occ_max: -3.0, row_hit_mean: 2.0, row_hit_min: 0.5, queue_occ: 1.5 };
+            4
+        ];
+        let mut page = PageSignals::default();
+        page.lat_hist = [1e9; 4];
+        let s = build_state(&sys, &page);
+        assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn hist4_pads_front() {
+        assert_eq!(hist4(&[1.0, 2.0]), [0.0, 0.0, 1.0, 2.0]);
+        assert_eq!(hist4(&[1.0, 2.0, 3.0, 4.0]), [1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(hist4(&[]), [0.0; 4]);
+    }
+}

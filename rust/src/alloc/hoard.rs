@@ -1,0 +1,208 @@
+//! NMP-aware HOARD page-frame allocator (paper §6.3).
+//!
+//! The original HOARD gives each thread a private heap refilled in bulk
+//! ("superblocks") from a global pool, so one thread's objects end up
+//! physically adjacent. The paper adapts the heuristic per *program*:
+//! each process hoards superblocks of frames from a small set of home
+//! cubes, co-locating its pages and preventing cross-process interleaving.
+//!
+//! Model: a superblock is a budget of `SUPERBLOCK` frames charged against
+//! one cube. A process allocates from its current superblock; when that
+//! runs dry it grabs a new superblock, preferring its home cubes (chosen
+//! at first touch, spread across processes), then neighbouring spill
+//! cubes. Freed frames return to the process hoard and are reused before
+//! any new superblock is requested; hoards exceeding the release
+//! threshold return whole superblocks' worth of budget to the global pool.
+
+use std::collections::HashMap;
+
+use crate::config::{CubeId, Pid, VPage};
+
+use super::Placement;
+
+/// Frames per superblock (4 KiB × 64 = 256 KiB chunks).
+pub const SUPERBLOCK: usize = 64;
+/// Hoard release threshold, in superblocks of freed frames.
+pub const RELEASE_THRESHOLD: usize = 2;
+
+#[derive(Debug)]
+struct ProcessHeap {
+    /// Home cubes, in preference order.
+    homes: Vec<CubeId>,
+    /// Remaining frames in the active superblock, and its cube.
+    active: Option<(CubeId, usize)>,
+    /// Freed-frame credit per cube (reused before new superblocks).
+    hoarded: HashMap<CubeId, usize>,
+}
+
+/// The allocator: global state is just the per-process heaps plus a
+/// round-robin cursor for assigning home cubes to new processes.
+#[derive(Debug, Default)]
+pub struct HoardAllocator {
+    heaps: HashMap<Pid, ProcessHeap>,
+    next_home: usize,
+    /// Frames handed back to the global pool (statistic).
+    pub released: u64,
+}
+
+impl HoardAllocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Home cubes for a new process: a contiguous quadrant-ish run of
+    /// cubes starting at the round-robin cursor.
+    fn assign_homes(&mut self, n_cubes: usize) -> Vec<CubeId> {
+        let homes_per_proc = (n_cubes / 4).max(1);
+        let start = self.next_home;
+        self.next_home = (self.next_home + homes_per_proc) % n_cubes;
+        (0..homes_per_proc).map(|i| (start + i) % n_cubes).collect()
+    }
+
+    fn heap(&mut self, pid: Pid, n_cubes: usize) -> &mut ProcessHeap {
+        if !self.heaps.contains_key(&pid) {
+            let homes = self.assign_homes(n_cubes);
+            self.heaps.insert(
+                pid,
+                ProcessHeap { homes, active: None, hoarded: HashMap::new() },
+            );
+        }
+        self.heaps.get_mut(&pid).unwrap()
+    }
+
+    /// Cube preference order for a heap: homes first, then everything
+    /// else by index (spill).
+    fn preference(heap: &ProcessHeap, n_cubes: usize) -> Vec<CubeId> {
+        let mut order = heap.homes.clone();
+        for c in 0..n_cubes {
+            if !order.contains(&c) {
+                order.push(c);
+            }
+        }
+        order
+    }
+}
+
+impl Placement for HoardAllocator {
+    fn place(&mut self, pid: Pid, _vpage: VPage, free_frames: &[usize]) -> CubeId {
+        let n_cubes = free_frames.len();
+        let heap = self.heap(pid, n_cubes);
+
+        // 1. Reuse hoarded (freed) frames: strongest locality.
+        if let Some((&cube, _)) = heap
+            .hoarded
+            .iter()
+            .filter(|(_, &n)| n > 0)
+            .max_by_key(|(_, &n)| n)
+        {
+            *heap.hoarded.get_mut(&cube).unwrap() -= 1;
+            return cube;
+        }
+
+        // 2. Active superblock.
+        if let Some((cube, left)) = heap.active {
+            if left > 0 && free_frames[cube] > 0 {
+                heap.active = Some((cube, left - 1));
+                return cube;
+            }
+        }
+
+        // 3. New superblock from the most-preferred cube with space.
+        let order = Self::preference(heap, n_cubes);
+        for cube in order {
+            if free_frames[cube] > 0 {
+                heap.active = Some((cube, SUPERBLOCK - 1));
+                return cube;
+            }
+        }
+        0 // exhausted everywhere; MMU will report the failure
+    }
+
+    fn note_free(&mut self, pid: Pid, cube: CubeId) {
+        if let Some(heap) = self.heaps.get_mut(&pid) {
+            let entry = heap.hoarded.entry(cube).or_insert(0);
+            *entry += 1;
+            // Release whole superblocks back to the global pool once the
+            // hoard exceeds the threshold.
+            if *entry > RELEASE_THRESHOLD * SUPERBLOCK {
+                *entry -= SUPERBLOCK;
+                self.released += SUPERBLOCK as u64;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "hoard"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn free16() -> Vec<usize> {
+        vec![1000; 16]
+    }
+
+    #[test]
+    fn process_pages_colocate() {
+        let mut h = HoardAllocator::new();
+        let free = free16();
+        let cubes: Vec<CubeId> = (0..SUPERBLOCK as u64).map(|v| h.place(1, v, &free)).collect();
+        // One superblock's worth of pages all land in one cube.
+        assert!(cubes.iter().all(|&c| c == cubes[0]), "{cubes:?}");
+    }
+
+    #[test]
+    fn processes_get_disjoint_homes() {
+        let mut h = HoardAllocator::new();
+        let free = free16();
+        let c1 = h.place(1, 0, &free);
+        let c2 = h.place(2, 0, &free);
+        let c3 = h.place(3, 0, &free);
+        let c4 = h.place(4, 0, &free);
+        let mut all = vec![c1, c2, c3, c4];
+        all.dedup();
+        assert_eq!(all.len(), 4, "four processes share no first home: {all:?}");
+    }
+
+    #[test]
+    fn spills_when_homes_full() {
+        let mut h = HoardAllocator::new();
+        let mut free = free16();
+        let home = h.place(1, 0, &free);
+        // Exhaust the home quadrant.
+        for c in 0..16 {
+            if c == home || (c / 4 == home / 4) {
+                free[c] = 0;
+            }
+        }
+        free[home] = 0;
+        let spill = h.place(1, 1, &free);
+        assert_ne!(spill, home);
+        assert!(free[spill] > 0);
+    }
+
+    #[test]
+    fn freed_frames_reused_first() {
+        let mut h = HoardAllocator::new();
+        let free = free16();
+        let first = h.place(1, 0, &free);
+        h.note_free(1, 9);
+        // Hoarded frame in cube 9 is reused before the active superblock.
+        assert_eq!(h.place(1, 1, &free), 9);
+        // Then allocation returns to the superblock.
+        assert_eq!(h.place(1, 2, &free), first);
+    }
+
+    #[test]
+    fn hoard_releases_excess() {
+        let mut h = HoardAllocator::new();
+        let free = free16();
+        h.place(1, 0, &free);
+        for _ in 0..(RELEASE_THRESHOLD * SUPERBLOCK + 1) {
+            h.note_free(1, 3);
+        }
+        assert_eq!(h.released, SUPERBLOCK as u64);
+    }
+}

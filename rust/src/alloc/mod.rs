@@ -1,0 +1,79 @@
+//! Page-frame placement policies, including the NMP-aware HOARD allocator
+//! (paper §6.3).
+//!
+//! A [`Placement`] policy answers one question for the paging system: *in
+//! which cube should this process's new page live?* The MMU then takes a
+//! frame from that cube's pool.
+//!
+//! * [`StripePlacement`] — the default OS behaviour in the baseline
+//!   multi-program setup: frames interleave round-robin across all cubes,
+//!   so processes' data intermingle ("shared and contended", §7.5.2).
+//! * [`HoardAllocator`] — the adapted HOARD: per-process hoards of
+//!   superblocks keep each program's pages co-located in its home cubes,
+//!   "contributing to the physical proximity of data that is expected to
+//!   be accessed together".
+
+pub mod hoard;
+
+pub use hoard::HoardAllocator;
+
+use crate::config::{CubeId, Pid, VPage};
+
+/// Chooses a host cube for a freshly-touched page.
+pub trait Placement {
+    /// Pick the cube for (pid, vpage). `free_frames[cube]` lets policies
+    /// avoid exhausted cubes.
+    fn place(&mut self, pid: Pid, vpage: VPage, free_frames: &[usize]) -> CubeId;
+
+    /// Note a page leaving a cube (migration away or process exit).
+    fn note_free(&mut self, _pid: Pid, _cube: CubeId) {}
+
+    fn name(&self) -> &'static str;
+}
+
+/// Round-robin interleaving across cubes (baseline OS default mapping —
+/// footnote 1 of the paper: "default data mapping ... decided by the OS").
+#[derive(Debug, Default)]
+pub struct StripePlacement {
+    next: usize,
+}
+
+impl Placement for StripePlacement {
+    fn place(&mut self, _pid: Pid, _vpage: VPage, free_frames: &[usize]) -> CubeId {
+        let n = free_frames.len();
+        for i in 0..n {
+            let cube = (self.next + i) % n;
+            if free_frames[cube] > 0 {
+                self.next = (cube + 1) % n;
+                return cube;
+            }
+        }
+        // All full: caller's map_page will surface the error.
+        self.next % n
+    }
+
+    fn name(&self) -> &'static str {
+        "stripe"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripe_round_robins() {
+        let mut p = StripePlacement::default();
+        let free = vec![10; 4];
+        let cubes: Vec<CubeId> = (0..8).map(|v| p.place(1, v, &free)).collect();
+        assert_eq!(cubes, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stripe_skips_full_cubes() {
+        let mut p = StripePlacement::default();
+        let free = vec![0, 5, 0, 5];
+        let cubes: Vec<CubeId> = (0..4).map(|v| p.place(1, v, &free)).collect();
+        assert_eq!(cubes, vec![1, 3, 1, 3]);
+    }
+}

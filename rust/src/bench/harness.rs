@@ -1,0 +1,140 @@
+//! Micro-benchmark harness: warmup + repeated measurement with median /
+//! mean / stddev reporting, and a plain-text table renderer for the
+//! paper-shaped outputs.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  median {:>12?}  mean {:>12?} ± {:?}  [{:?} .. {:?}]",
+            self.name, self.iters, self.median, self.mean, self.stddev, self.min, self.max
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup calls.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median,
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// A paper-shaped results table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let mut x = 0u64;
+        let r = bench_fn("noop-ish", 2, 5, || {
+            x = x.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["bench", "value"]);
+        t.row(vec!["MAC".into(), "1.00".into()]);
+        t.row(vec!["SPMV".into(), "0.50".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("MAC"));
+        assert!(s.lines().count() >= 5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained measurement harness (the offline crate universe has no
+//! criterion) plus the paper-figure table generators shared by the CLI
+//! (`aimm table --fig N`) and the `cargo bench` targets.
+
+pub mod figures;
+pub mod harness;
+
+pub use figures::*;
+pub use harness::{bench_fn, BenchResult, Table};

@@ -1,0 +1,564 @@
+//! System configuration — the paper's Table 1 hardware parameters plus the
+//! agent hyperparameters, with a small TOML-subset parser so deployments
+//! can ship config files without any external dependency.
+//!
+//! Shared primitive types (`CubeId`, `VAddr`, …) also live here so the
+//! substrate modules do not depend on one another for basic vocabulary.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+/// Index of a memory cube in the mesh (row-major: `y * cols + x`).
+pub type CubeId = usize;
+/// Index of a memory controller (4, one per CMP corner — Table 1).
+pub type McId = usize;
+/// Process id for multi-program workloads.
+pub type Pid = u32;
+/// Virtual byte address within a process address space.
+pub type VAddr = u64;
+/// Virtual page number (`vaddr >> PAGE_SHIFT`).
+pub type VPage = u64;
+
+/// 4 KiB pages, as in a conventional 4-level paging system.
+pub const PAGE_SHIFT: u32 = 12;
+pub const PAGE_SIZE: u64 = 1 << PAGE_SHIFT;
+
+/// NMP offloading technique under evaluation (paper §6.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Technique {
+    /// Basic NMP following Active-Routing scheduling: compute at the cube
+    /// hosting the destination operand.
+    Bnmp,
+    /// Load-balancing NMP: compute at the first source's cube, write the
+    /// result back to the destination cube (and the CPU).
+    Ldb,
+    /// PIM-Enabled Instructions: exploit the CPU cache; on an operand
+    /// cache hit, offload with one source to the other source's cube.
+    Pei,
+}
+
+impl Technique {
+    pub const ALL: [Technique; 3] = [Technique::Bnmp, Technique::Ldb, Technique::Pei];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Technique::Bnmp => "BNMP",
+            Technique::Ldb => "LDB",
+            Technique::Pei => "PEI",
+        }
+    }
+}
+
+impl fmt::Display for Technique {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Remapping scheme layered on top of a technique (paper §6.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MappingScheme {
+    /// "B" in the figures: the technique alone, no remapping support.
+    Baseline,
+    /// Transparent Offloading and Mapping: epoch-profiled physical-address
+    /// remapping for best data co-location.
+    Tom,
+    /// The paper's contribution: RL-driven page + computation remapping.
+    Aimm,
+}
+
+impl MappingScheme {
+    pub const ALL: [MappingScheme; 3] =
+        [MappingScheme::Baseline, MappingScheme::Tom, MappingScheme::Aimm];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MappingScheme::Baseline => "B",
+            MappingScheme::Tom => "TOM",
+            MappingScheme::Aimm => "AIMM",
+        }
+    }
+}
+
+impl fmt::Display for MappingScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// DRAM / interconnect timing in memory-network cycles.
+#[derive(Debug, Clone)]
+pub struct TimingConfig {
+    /// Row-buffer hit access latency (tCL).
+    pub row_hit: u64,
+    /// Row-buffer miss latency (tRP + tRCD + tCL).
+    pub row_miss: u64,
+    /// Router pipeline depth per hop (Table 1: 3-stage router).
+    pub router_pipeline: u64,
+    /// Link width in bits (Table 1: 128-bit links).
+    pub link_bits: u64,
+    /// ALU latency of one NMP operation on the cube's base die.
+    pub nmp_compute: u64,
+    /// Page-table walk penalty on a TLB miss (4 sequential accesses).
+    pub pt_walk: u64,
+}
+
+impl Default for TimingConfig {
+    fn default() -> Self {
+        Self {
+            row_hit: 14,
+            row_miss: 42,
+            router_pipeline: 3,
+            link_bits: 128,
+            nmp_compute: 4,
+            pt_walk: 120,
+        }
+    }
+}
+
+/// RL agent hyperparameters (paper §4.2/§4.3; network dims must match the
+/// AOT artifacts — see python/compile/model.py).
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    /// Discrete agent invocation intervals in cycles (§4.2).
+    pub intervals: Vec<u64>,
+    /// Index into `intervals` at episode start.
+    pub initial_interval: usize,
+    /// Discount factor γ.
+    pub gamma: f32,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// ε-greedy start / end / per-invocation decay.
+    pub eps_start: f32,
+    pub eps_end: f32,
+    pub eps_decay: f32,
+    /// Replay buffer capacity and training batch size.
+    pub replay_capacity: usize,
+    pub batch_size: usize,
+    /// Train every N agent invocations once the buffer holds a batch.
+    pub train_every: u32,
+    /// Copy θ → θ⁻ every N training steps.
+    pub target_sync: u32,
+    /// Reward deadband: |ΔOPC| below this fraction → 0 reward.
+    pub reward_deadband: f64,
+}
+
+impl Default for AgentConfig {
+    fn default() -> Self {
+        Self {
+            intervals: vec![100, 125, 167, 250],
+            initial_interval: 1,
+            gamma: 0.95,
+            lr: 5e-4,
+            eps_start: 0.4,
+            eps_end: 0.02,
+            eps_decay: 0.95,
+            replay_capacity: 8192,
+            batch_size: 32,
+            train_every: 1,
+            target_sync: 64,
+            reward_deadband: 0.03,
+        }
+    }
+}
+
+/// Full system configuration (paper Table 1 defaults).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Mesh dimensions (Table 1: 4×4; §7.5.1 scales to 8×8).
+    pub mesh_cols: usize,
+    pub mesh_rows: usize,
+    /// Memory cube internals (Table 1: 1 GB, 32 vaults, 8 banks/vault).
+    pub vaults_per_cube: usize,
+    pub banks_per_vault: usize,
+    /// Frames each cube can host (1 GB / 4 KiB = 262144; scaled down for
+    /// simulation traces, which touch far fewer pages).
+    pub frames_per_cube: usize,
+    /// NMP-op table entries per cube (Table 1: 512).
+    pub nmp_table_entries: usize,
+    /// Page-info cache entries per MC (Table 1 lists 128; §7.6's
+    /// sensitivity study empirically settles on 256 — our default).
+    pub page_info_entries: usize,
+    /// MC request queue capacity.
+    pub mc_queue_cap: usize,
+    /// Migration queue entries (Table 1: 128).
+    pub migration_queue_cap: usize,
+    /// Router input VC count (Table 1-adjacent: 5 VCs; we model 2 traffic
+    /// classes with this much aggregate buffering per port).
+    pub vcs: usize,
+    /// Per-port, per-class router buffer capacity in packets.
+    pub router_buf_cap: usize,
+    /// Maximum outstanding NMP ops in the memory system. NMP offloads
+    /// retire from core MSHRs at ACK-of-dispatch (PEI-style), so the
+    /// in-memory concurrency far exceeds 16×16 MSHRs; this calibrates the
+    /// system to the loaded operating point the paper's Fig 13 implies
+    /// (NMP tables under real pressure).
+    pub max_outstanding: usize,
+    /// Ops the CPU side can issue per cycle across all MCs.
+    pub issue_width: usize,
+    /// Shared CPU last-level capacity modeled for PEI, in 64 B lines
+    /// (16 cores × 32 KiB = 512 KiB → 8192 lines).
+    pub cpu_cache_lines: usize,
+    pub technique: Technique,
+    pub mapping: MappingScheme,
+    /// Use the NMP-aware HOARD frame allocator (multi-program baseline).
+    pub hoard: bool,
+    pub timing: TimingConfig,
+    pub agent: AgentConfig,
+    /// Master seed; all subsystem RNG streams derive from it.
+    pub seed: u64,
+    /// Sample the OPC timeline every this many cycles.
+    pub opc_sample_period: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            mesh_cols: 4,
+            mesh_rows: 4,
+            vaults_per_cube: 32,
+            banks_per_vault: 8,
+            frames_per_cube: 262_144,
+            nmp_table_entries: 512,
+            page_info_entries: 256,
+            mc_queue_cap: 64,
+            migration_queue_cap: 128,
+            vcs: 5,
+            router_buf_cap: 8,
+            max_outstanding: 1024,
+            issue_width: 8,
+            cpu_cache_lines: 8192,
+            technique: Technique::Bnmp,
+            mapping: MappingScheme::Baseline,
+            hoard: false,
+            timing: TimingConfig::default(),
+            agent: AgentConfig::default(),
+            seed: 0xA133,
+            opc_sample_period: 512,
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn num_cubes(&self) -> usize {
+        self.mesh_cols * self.mesh_rows
+    }
+
+    /// 4 MCs at the CMP corners, attached to the mesh corner cubes.
+    pub fn num_mcs(&self) -> usize {
+        4
+    }
+
+    /// The corner cube each MC attaches to.
+    pub fn mc_attach_cube(&self, mc: McId) -> CubeId {
+        let (c, r) = (self.mesh_cols, self.mesh_rows);
+        match mc {
+            0 => 0,
+            1 => c - 1,
+            2 => (r - 1) * c,
+            3 => r * c - 1,
+            _ => panic!("mc index out of range: {mc}"),
+        }
+    }
+
+    /// Cubes "nearest" to an MC: its attach quadrant of the mesh. Each MC
+    /// aggregates occupancy/row-hit counters over these (paper §5.1).
+    pub fn mc_nearest_cubes(&self, mc: McId) -> Vec<CubeId> {
+        let (c, r) = (self.mesh_cols, self.mesh_rows);
+        let (hx, hy) = ((c + 1) / 2, (r + 1) / 2);
+        let (x0, y0) = match mc {
+            0 => (0, 0),
+            1 => (c - hx, 0),
+            2 => (0, r - hy),
+            3 => (c - hx, r - hy),
+            _ => panic!("mc index out of range: {mc}"),
+        };
+        let mut cubes = Vec::with_capacity(hx * hy);
+        for y in y0..y0 + hy {
+            for x in x0..x0 + hx {
+                cubes.push(y * c + x);
+            }
+        }
+        cubes
+    }
+
+    /// The MC whose quadrant contains `cube` (used to route ACKs).
+    pub fn cube_home_mc(&self, cube: CubeId) -> McId {
+        let (c, r) = (self.mesh_cols, self.mesh_rows);
+        let (x, y) = (cube % c, cube / c);
+        let right = x >= c / 2;
+        let bottom = y >= r / 2;
+        match (right, bottom) {
+            (false, false) => 0,
+            (true, false) => 1,
+            (false, true) => 2,
+            (true, true) => 3,
+        }
+    }
+
+    /// Render as a TOML-subset document (round-trips through `parse`).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        let kv = |s: &mut String, k: &str, v: String| {
+            s.push_str(k);
+            s.push_str(" = ");
+            s.push_str(&v);
+            s.push('\n');
+        };
+        kv(&mut s, "mesh_cols", self.mesh_cols.to_string());
+        kv(&mut s, "mesh_rows", self.mesh_rows.to_string());
+        kv(&mut s, "vaults_per_cube", self.vaults_per_cube.to_string());
+        kv(&mut s, "banks_per_vault", self.banks_per_vault.to_string());
+        kv(&mut s, "frames_per_cube", self.frames_per_cube.to_string());
+        kv(&mut s, "nmp_table_entries", self.nmp_table_entries.to_string());
+        kv(&mut s, "page_info_entries", self.page_info_entries.to_string());
+        kv(&mut s, "mc_queue_cap", self.mc_queue_cap.to_string());
+        kv(&mut s, "migration_queue_cap", self.migration_queue_cap.to_string());
+        kv(&mut s, "vcs", self.vcs.to_string());
+        kv(&mut s, "router_buf_cap", self.router_buf_cap.to_string());
+        kv(&mut s, "max_outstanding", self.max_outstanding.to_string());
+        kv(&mut s, "issue_width", self.issue_width.to_string());
+        kv(&mut s, "cpu_cache_lines", self.cpu_cache_lines.to_string());
+        kv(&mut s, "technique", format!("\"{}\"", self.technique.name()));
+        kv(&mut s, "mapping", format!("\"{}\"", self.mapping.name()));
+        kv(&mut s, "hoard", self.hoard.to_string());
+        kv(&mut s, "seed", self.seed.to_string());
+        kv(&mut s, "gamma", self.agent.gamma.to_string());
+        kv(&mut s, "lr", self.agent.lr.to_string());
+        s
+    }
+
+    /// Parse a TOML-subset document: `key = value` lines, `#` comments,
+    /// string / integer / float / bool values. Unknown keys error.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut cfg = SystemConfig::default();
+        let kvs = parse_kv(text)?;
+        for (k, v) in kvs {
+            match k.as_str() {
+                "mesh_cols" => cfg.mesh_cols = v.as_usize()?,
+                "mesh_rows" => cfg.mesh_rows = v.as_usize()?,
+                "vaults_per_cube" => cfg.vaults_per_cube = v.as_usize()?,
+                "banks_per_vault" => cfg.banks_per_vault = v.as_usize()?,
+                "frames_per_cube" => cfg.frames_per_cube = v.as_usize()?,
+                "nmp_table_entries" => cfg.nmp_table_entries = v.as_usize()?,
+                "page_info_entries" => cfg.page_info_entries = v.as_usize()?,
+                "mc_queue_cap" => cfg.mc_queue_cap = v.as_usize()?,
+                "migration_queue_cap" => cfg.migration_queue_cap = v.as_usize()?,
+                "vcs" => cfg.vcs = v.as_usize()?,
+                "router_buf_cap" => cfg.router_buf_cap = v.as_usize()?,
+                "max_outstanding" => cfg.max_outstanding = v.as_usize()?,
+                "issue_width" => cfg.issue_width = v.as_usize()?,
+                "cpu_cache_lines" => cfg.cpu_cache_lines = v.as_usize()?,
+                "seed" => cfg.seed = v.as_u64()?,
+                "hoard" => cfg.hoard = v.as_bool()?,
+                "gamma" => cfg.agent.gamma = v.as_f64()? as f32,
+                "lr" => cfg.agent.lr = v.as_f64()? as f32,
+                "technique" => {
+                    cfg.technique = match v.as_str()?.to_ascii_uppercase().as_str() {
+                        "BNMP" => Technique::Bnmp,
+                        "LDB" => Technique::Ldb,
+                        "PEI" => Technique::Pei,
+                        other => anyhow::bail!("unknown technique {other:?}"),
+                    }
+                }
+                "mapping" => {
+                    cfg.mapping = match v.as_str()?.to_ascii_uppercase().as_str() {
+                        "B" | "BASELINE" => MappingScheme::Baseline,
+                        "TOM" => MappingScheme::Tom,
+                        "AIMM" => MappingScheme::Aimm,
+                        other => anyhow::bail!("unknown mapping {other:?}"),
+                    }
+                }
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.mesh_cols >= 2 && self.mesh_rows >= 2, "mesh must be at least 2x2");
+        anyhow::ensure!(self.vaults_per_cube.is_power_of_two(), "vaults must be a power of two");
+        anyhow::ensure!(self.banks_per_vault.is_power_of_two(), "banks must be a power of two");
+        anyhow::ensure!(self.nmp_table_entries > 0, "nmp table must be non-empty");
+        anyhow::ensure!(self.page_info_entries > 0, "page info cache must be non-empty");
+        anyhow::ensure!(!self.agent.intervals.is_empty(), "agent needs at least one interval");
+        Ok(())
+    }
+}
+
+/// One parsed scalar value from the TOML subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    fn as_usize(&self) -> anyhow::Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => anyhow::bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    fn as_u64(&self) -> anyhow::Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => anyhow::bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    fn as_f64(&self) -> anyhow::Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => anyhow::bail!("expected number, got {other:?}"),
+        }
+    }
+
+    fn as_bool(&self) -> anyhow::Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => anyhow::bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    fn as_str(&self) -> anyhow::Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => anyhow::bail!("expected string, got {other:?}"),
+        }
+    }
+}
+
+/// Parse `key = value` lines (TOML subset: comments, strings, ints,
+/// floats, bools). Section headers are rejected — the config is flat.
+pub fn parse_kv(text: &str) -> anyhow::Result<HashMap<String, TomlValue>> {
+    let mut out = HashMap::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // Don't strip '#' inside quoted strings.
+            Some(pos) if !raw[..pos].contains('"') || raw[..pos].matches('"').count() % 2 == 0 => {
+                &raw[..pos]
+            }
+            _ => raw,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        anyhow::ensure!(
+            !line.starts_with('['),
+            "line {}: sections are not supported in this TOML subset",
+            lineno + 1
+        );
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = k.trim().to_string();
+        let vs = v.trim();
+        let value = if let Some(stripped) = vs.strip_prefix('"') {
+            let inner = stripped
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated string", lineno + 1))?;
+            TomlValue::Str(inner.to_string())
+        } else if vs == "true" {
+            TomlValue::Bool(true)
+        } else if vs == "false" {
+            TomlValue::Bool(false)
+        } else if let Ok(i) = vs.parse::<i64>() {
+            TomlValue::Int(i)
+        } else if let Ok(f) = vs.parse::<f64>() {
+            TomlValue::Float(f)
+        } else {
+            anyhow::bail!("line {}: cannot parse value {vs:?}", lineno + 1);
+        };
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SystemConfig::default();
+        assert_eq!(c.num_cubes(), 16);
+        assert_eq!(c.vaults_per_cube, 32);
+        assert_eq!(c.banks_per_vault, 8);
+        assert_eq!(c.nmp_table_entries, 512);
+        assert_eq!(c.page_info_entries, 256);
+        assert_eq!(c.migration_queue_cap, 128);
+        assert_eq!(c.num_mcs(), 4);
+    }
+
+    #[test]
+    fn mc_attach_corners_4x4() {
+        let c = SystemConfig::default();
+        assert_eq!(c.mc_attach_cube(0), 0);
+        assert_eq!(c.mc_attach_cube(1), 3);
+        assert_eq!(c.mc_attach_cube(2), 12);
+        assert_eq!(c.mc_attach_cube(3), 15);
+    }
+
+    #[test]
+    fn nearest_cubes_partition_mesh() {
+        let c = SystemConfig::default();
+        let mut all: Vec<CubeId> = (0..4).flat_map(|m| c.mc_nearest_cubes(m)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn home_mc_consistent_with_quadrants() {
+        let c = SystemConfig::default();
+        for mc in 0..4 {
+            for cube in c.mc_nearest_cubes(mc) {
+                assert_eq!(c.cube_home_mc(cube), mc, "cube {cube}");
+            }
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut c = SystemConfig::default();
+        c.mesh_cols = 8;
+        c.mesh_rows = 8;
+        c.technique = Technique::Pei;
+        c.mapping = MappingScheme::Aimm;
+        c.hoard = true;
+        let parsed = SystemConfig::parse(&c.to_toml()).unwrap();
+        assert_eq!(parsed.mesh_cols, 8);
+        assert_eq!(parsed.technique, Technique::Pei);
+        assert_eq!(parsed.mapping, MappingScheme::Aimm);
+        assert!(parsed.hoard);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_key() {
+        assert!(SystemConfig::parse("bogus = 3").is_err());
+    }
+
+    #[test]
+    fn parse_comments_and_blanks() {
+        let cfg = SystemConfig::parse("# comment\n\nmesh_cols = 8 # inline\nmesh_rows = 8\n").unwrap();
+        assert_eq!(cfg.mesh_cols, 8);
+    }
+
+    #[test]
+    fn validate_rejects_tiny_mesh() {
+        let mut c = SystemConfig::default();
+        c.mesh_rows = 1;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! The coordinator: wires the substrates into a running NMP system and
+//! orchestrates the paper's episode protocol (§6.1 — 5 repeated runs for
+//! single-program workloads, 10 for multi-program, clearing simulation
+//! state but retaining the DNN between runs).
+
+pub mod runner;
+pub mod system;
+
+pub use runner::{run_multi, run_single, run_stream, EpisodeSummary};
+pub use system::System;

@@ -1,0 +1,143 @@
+//! Episode orchestration per the paper's protocol (§6.1): each
+//! single-program episode runs 5 times, multi-program 10 times; every run
+//! rebuilds the simulator from scratch but the agent's DNN (and replay
+//! memory) persists — the continual-learning premise.
+
+use crate::agent::AimmAgent;
+use crate::config::{MappingScheme, SystemConfig};
+use crate::metrics::RunStats;
+use crate::nmp::NmpOp;
+use crate::runtime::best_qfunction;
+use crate::workloads::{generate, interleave, Benchmark};
+
+use super::system::System;
+
+/// Repeated-run counts from §6.1.
+pub const SINGLE_RUNS: usize = 5;
+pub const MULTI_RUNS: usize = 10;
+
+/// Summary across an episode's repeated runs.
+#[derive(Debug, Clone)]
+pub struct EpisodeSummary {
+    pub name: String,
+    pub runs: Vec<RunStats>,
+}
+
+impl EpisodeSummary {
+    /// The steady-state run (last one — after learning converges).
+    pub fn last(&self) -> &RunStats {
+        self.runs.last().expect("at least one run")
+    }
+
+    /// First run (cold agent).
+    pub fn first(&self) -> &RunStats {
+        self.runs.first().expect("at least one run")
+    }
+
+    pub fn mean_cycles(&self) -> f64 {
+        self.runs.iter().map(|r| r.cycles as f64).sum::<f64>() / self.runs.len() as f64
+    }
+
+    pub fn mean_opc(&self) -> f64 {
+        self.runs.iter().map(|r| r.opc()).sum::<f64>() / self.runs.len() as f64
+    }
+}
+
+fn fresh_agent(cfg: &SystemConfig) -> AimmAgent {
+    AimmAgent::new(
+        best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed),
+        cfg.agent.clone(),
+        cfg.seed ^ 0xA6E7,
+    )
+}
+
+/// Run one op stream `runs` times with the configured mapping scheme,
+/// carrying the agent across runs when AIMM is active.
+pub fn run_stream(
+    cfg: &SystemConfig,
+    ops: &[NmpOp],
+    runs: usize,
+    name: &str,
+) -> anyhow::Result<EpisodeSummary> {
+    let mut agent =
+        (cfg.mapping == MappingScheme::Aimm).then(|| fresh_agent(cfg));
+    let mut stats = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let mut sys = System::new(cfg.clone(), ops.to_vec(), agent.take());
+        stats.push(sys.run()?);
+        agent = sys.take_agent();
+    }
+    Ok(EpisodeSummary { name: name.to_string(), runs: stats })
+}
+
+/// Single-program episode (§6.1: 5 runs, scale = paper's "medium").
+pub fn run_single(
+    cfg: &SystemConfig,
+    bench: Benchmark,
+    scale: f64,
+    runs: usize,
+) -> anyhow::Result<EpisodeSummary> {
+    let trace = generate(bench, 1, scale, cfg.seed);
+    run_stream(cfg, &trace.ops, runs, bench.name())
+}
+
+/// Multi-program episode (§7.5.2).
+pub fn run_multi(
+    cfg: &SystemConfig,
+    benches: &[Benchmark],
+    scale: f64,
+    runs: usize,
+) -> anyhow::Result<EpisodeSummary> {
+    let traces = benches
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| generate(b, i as u32 + 1, scale, cfg.seed + i as u64))
+        .collect();
+    let (ops, _) = interleave(traces, cfg.seed ^ 0x3117);
+    let name = benches.iter().map(|b| b.name()).collect::<Vec<_>>().join("-");
+    run_stream(cfg, &ops, runs, &name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Technique;
+
+    fn cfg(mapping: MappingScheme) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.mapping = mapping;
+        c.technique = Technique::Bnmp;
+        c
+    }
+
+    #[test]
+    fn single_episode_runs_repeatedly() {
+        let s = run_single(&cfg(MappingScheme::Baseline), Benchmark::Mac, 0.05, 2).unwrap();
+        assert_eq!(s.runs.len(), 2);
+        assert_eq!(s.name, "MAC");
+        // Deterministic baseline: identical runs.
+        assert_eq!(s.runs[0].cycles, s.runs[1].cycles);
+    }
+
+    #[test]
+    fn aimm_agent_persists_across_runs() {
+        let s = run_single(&cfg(MappingScheme::Aimm), Benchmark::Spmv, 0.05, 2).unwrap();
+        assert_eq!(s.runs.len(), 2);
+        // Agent invocations happen in both runs.
+        assert!(s.runs[0].agent_invocations > 0);
+        assert!(s.runs[1].agent_invocations > 0);
+    }
+
+    #[test]
+    fn multi_episode_composes() {
+        let s = run_multi(
+            &cfg(MappingScheme::Baseline),
+            &[Benchmark::Mac, Benchmark::Rd],
+            0.05,
+            1,
+        )
+        .unwrap();
+        assert_eq!(s.name, "MAC-RD");
+        assert!(s.last().ops_completed > 0);
+    }
+}

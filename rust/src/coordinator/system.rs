@@ -1,0 +1,666 @@
+//! The simulated NMP system: CPU-side op feed → MCs → mesh → cubes, with
+//! the migration system, TOM remapper and the AIMM agent plugged in per
+//! the configuration. One `tick` = one memory-network cycle.
+
+use std::collections::HashSet;
+
+use crate::agent::{build_state, hist4, Action, AimmAgent, PageSignals, PerMcSignals, SysSignals};
+use crate::alloc::{HoardAllocator, Placement, StripePlacement};
+use crate::config::{MappingScheme, Pid, SystemConfig, VPage};
+use crate::cube::Cube;
+use crate::mapping::{ComputeRemapTable, TomMapper, TomEvent};
+use crate::mc::{IssueDeps, Mc};
+use crate::metrics::{EnergyCounts, EnergyModel, RunStats};
+use crate::migration::{MigRequest, MigrationSystem};
+use crate::mmu::Mmu;
+use crate::nmp::{CpuCache, NmpOp};
+use crate::noc::packet::{Packet, Payload};
+use crate::noc::Mesh;
+use crate::sim::{Cycle, Rng};
+
+/// How often cubes report occupancy / row-hit to their MC (§5.1
+/// "communicated to a cube's nearest memory controller periodically").
+const CUBE_REPORT_PERIOD: u64 = 64;
+
+/// Hard guard against livelocked configurations.
+const MAX_CYCLES_PER_OP: u64 = 600;
+const MAX_CYCLES_FLOOR: u64 = 2_000_000;
+
+/// The assembled system.
+pub struct System {
+    pub cfg: SystemConfig,
+    pub mesh: Mesh,
+    pub cubes: Vec<Cube>,
+    pub mcs: Vec<Mc>,
+    pub mmu: Mmu,
+    placement: Box<dyn Placement>,
+    tom: Option<TomMapper>,
+    pub remap_table: ComputeRemapTable,
+    cpu_cache: CpuCache,
+    pub migration: MigrationSystem,
+    pub agent: Option<AimmAgent>,
+    rng: Rng,
+
+    // Trace feed.
+    ops: Vec<NmpOp>,
+    next_op: usize,
+    issued: u64,
+    completed: u64,
+
+    // Agent scheduling.
+    now: Cycle,
+    next_agent_at: Cycle,
+    ops_at_last_invoke: u64,
+    /// Which MC provides the page info next (round-robin, §5.1).
+    page_mc_rr: usize,
+
+    // Migration bookkeeping (Fig 10).
+    migrated_pages: HashSet<(Pid, VPage)>,
+    accesses_on_migrated: u64,
+    page_accesses_total: u64,
+    migrations_total: u64,
+    /// Pages ever written (destination operands) — these migrate in
+    /// blocking mode; read-only pages go non-blocking (§5.3).
+    rw_pages: HashSet<(Pid, VPage)>,
+
+    /// Reused delivery scratch buffer (allocation-free hot loop).
+    scratch: Vec<Packet>,
+    // Timeline.
+    opc_timeline: Vec<f32>,
+    ops_at_last_sample: u64,
+    next_sample_at: Cycle,
+}
+
+impl System {
+    /// Build a system for `ops` (single- or multi-program stream). Pids
+    /// appearing in the stream get address spaces.
+    pub fn new(cfg: SystemConfig, ops: Vec<NmpOp>, agent: Option<AimmAgent>) -> Self {
+        let mut mmu = Mmu::new(&cfg);
+        let mut pids: Vec<Pid> = ops.iter().map(|o| o.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        for pid in &pids {
+            mmu.create_process(*pid);
+        }
+        let placement: Box<dyn Placement> = if cfg.hoard {
+            Box::new(HoardAllocator::new())
+        } else {
+            Box::new(StripePlacement::default())
+        };
+        let tom = (cfg.mapping == MappingScheme::Tom).then(|| TomMapper::new(cfg.num_cubes()));
+        let mesh = Mesh::new(&cfg);
+        let cubes = (0..cfg.num_cubes()).map(|i| Cube::new(i, &cfg)).collect();
+        let mcs = (0..cfg.num_mcs()).map(|i| Mc::new(i, &cfg)).collect();
+        let mut agent = agent;
+        if let Some(a) = agent.as_mut() {
+            a.start_episode();
+        }
+        let next_agent_at = agent.as_ref().map(|a| a.current_interval()).unwrap_or(u64::MAX);
+        Self {
+            migration: MigrationSystem::new(&cfg),
+            remap_table: ComputeRemapTable::new(4096),
+            cpu_cache: CpuCache::new(cfg.cpu_cache_lines),
+            rng: Rng::new(cfg.seed ^ 0x5157),
+            mesh,
+            cubes,
+            mcs,
+            mmu,
+            placement,
+            tom,
+            agent,
+            ops,
+            next_op: 0,
+            issued: 0,
+            completed: 0,
+            now: 0,
+            next_agent_at,
+            ops_at_last_invoke: 0,
+            page_mc_rr: 0,
+            migrated_pages: HashSet::new(),
+            accesses_on_migrated: 0,
+            page_accesses_total: 0,
+            migrations_total: 0,
+            rw_pages: HashSet::new(),
+            scratch: Vec::new(),
+            opc_timeline: Vec::new(),
+            ops_at_last_sample: 0,
+            next_sample_at: cfg.opc_sample_period,
+            cfg,
+        }
+    }
+
+    pub fn now(&self) -> Cycle {
+        self.now
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Reclaim the agent (to carry the DNN into the next run, §6.1).
+    pub fn take_agent(&mut self) -> Option<AimmAgent> {
+        self.agent.take()
+    }
+
+    fn outstanding(&self) -> u64 {
+        self.issued - self.completed
+    }
+
+    /// Feed ops from the trace into MC queues (CPU issue).
+    fn feed(&mut self) {
+        let mut budget = self.cfg.issue_width;
+        while budget > 0
+            && self.next_op < self.ops.len()
+            && self.outstanding() < self.cfg.max_outstanding as u64
+        {
+            let op = self.ops[self.next_op];
+            // Cores issue through their nearest MC; with ops spread over
+            // the 16 cores this is round-robin across the 4 MCs (and keeps
+            // MC load independent of where data lives).
+            let mc_id = self.next_op % self.cfg.num_mcs();
+            match self.mcs[mc_id].enqueue(op) {
+                Ok(()) => {
+                    self.next_op += 1;
+                    self.issued += 1;
+                    budget -= 1;
+                    // Track writability + migrated-page access stats.
+                    self.rw_pages.insert((op.pid, op.dest_vpage()));
+                    let (pages, n) = op.vpages_arr();
+                    for &p in &pages[..n] {
+                        self.page_accesses_total += 1;
+                        if self.migrated_pages.contains(&(op.pid, p)) {
+                            self.accesses_on_migrated += 1;
+                        }
+                    }
+                }
+                Err(_) => break, // backpressure: stop feeding this cycle
+            }
+        }
+    }
+
+    fn inject_or_retain(mesh: &mut Mesh, out: &mut std::collections::VecDeque<Packet>) {
+        while let Some(pk) = out.pop_front() {
+            if let Err(pk) = mesh.inject(pk) {
+                out.push_front(pk);
+                break;
+            }
+        }
+    }
+
+    /// One cycle.
+    pub fn tick(&mut self) -> anyhow::Result<()> {
+        let now = self.now;
+
+        // 1. CPU feed.
+        self.feed();
+
+        // 2. MC issue + drain their outgoing packets.
+        for i in 0..self.mcs.len() {
+            let mut deps = IssueDeps {
+                mmu: &mut self.mmu,
+                placement: self.placement.as_mut(),
+                tom: self.tom.as_mut(),
+                cpu_cache: &mut self.cpu_cache,
+                remap: &mut self.remap_table,
+                migration: &self.migration,
+                mesh: &self.mesh,
+                technique: self.cfg.technique,
+            };
+            self.mcs[i].tick_issue(now, &mut deps)?;
+            Self::inject_or_retain(&mut self.mesh, &mut self.mcs[i].out);
+        }
+
+        // 3. Migration system.
+        self.migration.tick(now, &mut self.mmu);
+        Self::inject_or_retain(&mut self.mesh, &mut self.migration.out);
+
+        // 4. Fabric.
+        self.mesh.tick(now);
+
+        // 5. Deliveries → cubes and MCs (scratch swap: no allocation).
+        for c in 0..self.cubes.len() {
+            if self.mesh.delivered_cube[c].is_empty() {
+                continue;
+            }
+            std::mem::swap(&mut self.scratch, &mut self.mesh.delivered_cube[c]);
+            for pk in self.scratch.drain(..) {
+                self.cubes[c].receive(pk, now);
+            }
+        }
+        for m in 0..self.mcs.len() {
+            let delivered = std::mem::take(&mut self.mesh.delivered_mc[m]);
+            for pk in delivered {
+                match pk.payload {
+                    Payload::MigChunkAck { token, .. } => {
+                        self.migration.receive_ack(token, now, &mut self.mmu);
+                    }
+                    _ => {
+                        if self.mcs[m].receive(pk, now).is_some() {
+                            self.completed += 1;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 6. Cubes compute/memory + drain outgoing.
+        for c in 0..self.cubes.len() {
+            self.cubes[c].tick(now);
+            Self::inject_or_retain(&mut self.mesh, &mut self.cubes[c].out);
+        }
+
+        // 7. Completed migrations: OS bookkeeping + stats.
+        let completed_migs = std::mem::take(&mut self.migration.completed);
+        for cm in completed_migs {
+            self.migrations_total += 1;
+            self.migrated_pages.insert((cm.pid, cm.vpage));
+            for mc in &mut self.mcs {
+                mc.tlb.invalidate(cm.pid, cm.vpage);
+                if mc.page_cache.get(&(cm.pid, cm.vpage)).is_some() {
+                    mc.page_cache.on_migration((cm.pid, cm.vpage), cm.latency);
+                }
+            }
+        }
+
+        // 8. Periodic cube → MC reports.
+        if now % CUBE_REPORT_PERIOD == 0 {
+            for cube in &self.cubes {
+                let occ = cube.table.occupancy() as f64;
+                let rhr = cube.row_hit_rate();
+                let mc = self.cfg.cube_home_mc(cube.id);
+                self.mcs[mc].counters.report(cube.id, occ, rhr);
+            }
+        }
+
+        // 9. TOM phase machine → bulk re-layouts.
+        if let Some(tom) = self.tom.as_mut() {
+            if let Some(TomEvent::Apply(_)) = tom.tick(now) {
+                let pids = self.mmu.pids();
+                for pid in pids {
+                    for (vpage, loc) in self.mmu.mappings(pid) {
+                        let target = self.tom.as_ref().unwrap().target_cube(pid, vpage);
+                        if target != loc.cube {
+                            self.mmu.force_remap(pid, vpage, target);
+                            for mc in &mut self.mcs {
+                                mc.tlb.invalidate(pid, vpage);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // 10. AIMM agent invocation (while work remains — the agent has
+        // nothing to steer once the trace has drained).
+        if self.agent.is_some()
+            && now >= self.next_agent_at
+            && self.completed < self.ops.len() as u64
+        {
+            self.invoke_agent()?;
+        }
+
+        // 11. OPC timeline sampling.
+        if now >= self.next_sample_at {
+            let delta = self.completed - self.ops_at_last_sample;
+            self.opc_timeline.push(delta as f32 / self.cfg.opc_sample_period as f32);
+            self.ops_at_last_sample = self.completed;
+            self.next_sample_at = now + self.cfg.opc_sample_period;
+        }
+
+        self.now += 1;
+        Ok(())
+    }
+
+    /// Assemble the state, invoke the agent and apply its action (§5.3).
+    fn invoke_agent(&mut self) -> anyhow::Result<()> {
+        // Pick the page: MCs take turns providing their hottest entry.
+        let num_mcs = self.mcs.len();
+        let mut chosen: Option<(usize, (Pid, VPage))> = None;
+        for i in 0..num_mcs {
+            let mc = (self.page_mc_rr + i) % num_mcs;
+            if let Some(key) = self.mcs[mc].page_cache.select_candidate() {
+                chosen = Some((mc, key));
+                break;
+            }
+        }
+        self.page_mc_rr = (self.page_mc_rr + 1) % num_mcs;
+
+        let interval = self.agent.as_ref().unwrap().current_interval();
+        let elapsed_ops = self.completed - self.ops_at_last_invoke;
+        let opc = elapsed_ops as f64 / interval.max(1) as f64;
+        self.ops_at_last_invoke = self.completed;
+
+        let state = self.assemble_state(chosen.map(|(m, k)| (m, k)), opc as f32);
+        let decision = {
+            let agent = self.agent.as_mut().unwrap();
+            agent.invoke(state, opc, self.now)?
+        };
+        self.next_agent_at = self.now + decision.next_interval;
+
+        let Some((mc_idx, key)) = chosen else { return Ok(()) };
+        let (pid, vpage) = key;
+        // Current compute location of the page's ops: the remap table's
+        // suggestion, else where its most recent op actually computed.
+        let page_cube = self.mmu.translate(pid, vpage).map(|l| l.cube).unwrap_or(0);
+        let info_cubes = self.mcs[mc_idx]
+            .page_cache
+            .get(&key)
+            .map(|e| (e.last_src1_cube, e.last_compute_cube));
+        let (src1_cube, last_cc) = info_cubes.unwrap_or((page_cube, page_cube));
+        let compute_cube = self.remap_table.lookup(pid, vpage).unwrap_or(last_cc);
+
+        match decision.action {
+            Action::Default | Action::IncreaseInterval | Action::DecreaseInterval => {}
+            Action::NearData | Action::FarData => {
+                if let Some(target) =
+                    decision.action.target_cube(&self.mesh, compute_cube, src1_cube, &mut self.rng)
+                {
+                    if target != page_cube {
+                        let blocking = self.rw_pages.contains(&key);
+                        self.migration.request(MigRequest {
+                            pid,
+                            vpage,
+                            to_cube: target,
+                            blocking,
+                        });
+                    }
+                }
+                self.mcs[mc_idx].page_cache.on_action(key, decision.action.index() as u8);
+            }
+            Action::NearCompute | Action::FarCompute | Action::SourceCompute => {
+                if let Some(target) =
+                    decision.action.target_cube(&self.mesh, compute_cube, src1_cube, &mut self.rng)
+                {
+                    self.remap_table.insert(pid, vpage, target);
+                }
+                self.mcs[mc_idx].page_cache.on_action(key, decision.action.index() as u8);
+            }
+        }
+        Ok(())
+    }
+
+    fn assemble_state(&mut self, page: Option<(usize, (Pid, VPage))>, opc: f32) -> [f32; 64] {
+        let per_mc: Vec<PerMcSignals> = self
+            .mcs
+            .iter()
+            .map(|mc| PerMcSignals {
+                occ_mean: mc.counters.occ_mean(),
+                occ_max: mc.counters.occ_max(),
+                row_hit_mean: mc.counters.row_hit_mean(),
+                row_hit_min: mc.counters.row_hit_min(),
+                queue_occ: mc.queue.occupancy(),
+            })
+            .collect();
+        let n = self.cubes.len() as f32;
+        let cube_occ_mean = self.cubes.iter().map(|c| c.table.occupancy()).sum::<f32>() / n;
+        let cube_occ_max =
+            self.cubes.iter().map(|c| c.table.occupancy()).fold(0.0f32, f32::max);
+        let cube_rh_mean =
+            (self.cubes.iter().map(|c| c.row_hit_rate()).sum::<f64>() / n as f64) as f32;
+        let agent = self.agent.as_ref().unwrap();
+        let sys = SysSignals {
+            per_mc,
+            action_histogram: agent.action_histogram(),
+            interval_norm: agent.interval_norm(),
+            recent_opc: opc,
+            cube_occ_mean,
+            cube_occ_max,
+            cube_row_hit_mean: cube_rh_mean,
+        };
+        let page_sig = match page {
+            Some((mc_idx, key)) => {
+                let mc = &self.mcs[mc_idx];
+                let info = mc.page_cache.get(&key);
+                let page_cube = self.mmu.translate(key.0, key.1).map(|l| l.cube).unwrap_or(0);
+                let compute_cube = self
+                    .remap_table
+                    .lookup(key.0, key.1)
+                    .unwrap_or_else(|| {
+                        self.mcs[mc_idx]
+                            .page_cache
+                            .get(&key)
+                            .map(|e| e.last_compute_cube)
+                            .unwrap_or(page_cube)
+                    });
+                match info {
+                    Some(e) => PageSignals {
+                        access_rate: mc.page_cache.access_rate(&key),
+                        migrations_per_access: e.migrations_per_access(),
+                        hop_hist: hist4(&e.hop_hist.padded()),
+                        lat_hist: hist4(&e.lat_hist.padded()),
+                        mig_lat_hist: hist4(&e.mig_lat_hist.padded()),
+                        action_hist: hist4(&e.action_hist.padded()),
+                        page_cube_norm: page_cube as f32 / n,
+                        compute_cube_norm: compute_cube as f32 / n,
+                    },
+                    None => PageSignals::default(),
+                }
+            }
+            None => PageSignals::default(),
+        };
+        build_state(&sys, &page_sig)
+    }
+
+    /// Everything drained?
+    pub fn is_done(&self) -> bool {
+        self.next_op >= self.ops.len()
+            && self.outstanding() == 0
+            && self.mesh.is_idle()
+            && self.migration.is_idle()
+            && self.cubes.iter().all(|c| c.is_idle())
+            && self.mcs.iter().all(|m| m.is_idle())
+    }
+
+    /// Run to completion; returns the collected statistics.
+    pub fn run(&mut self) -> anyhow::Result<RunStats> {
+        let max_cycles =
+            MAX_CYCLES_FLOOR.max(self.ops.len() as u64 * MAX_CYCLES_PER_OP);
+        while !self.is_done() {
+            self.tick()?;
+            anyhow::ensure!(
+                self.now < max_cycles,
+                "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
+                self.completed,
+                self.ops.len()
+            );
+        }
+        // Terminal agent transition.
+        if self.agent.is_some() {
+            let interval = self.agent.as_ref().unwrap().current_interval();
+            let elapsed_ops = self.completed - self.ops_at_last_invoke;
+            let opc = elapsed_ops as f64 / interval.max(1) as f64;
+            let state = self.assemble_state(None, opc as f32);
+            self.agent.as_mut().unwrap().finish_episode(state, opc);
+        }
+        Ok(self.stats())
+    }
+
+    /// Collect statistics for the run so far.
+    pub fn stats(&self) -> RunStats {
+        let cycles = self.now;
+        let n_cubes = self.cubes.len() as f64;
+        let busy: Vec<f64> = self.cubes.iter().map(|c| c.stats.compute_busy as f64).collect();
+        let busy_sum: f64 = busy.iter().sum();
+        let busy_sq: f64 = busy.iter().map(|b| b * b).sum();
+        // Jain's fairness index as the compute-distribution measure.
+        let compute_balance =
+            if busy_sq > 0.0 { busy_sum * busy_sum / (n_cubes * busy_sq) } else { 0.0 };
+        let compute_utilization = if cycles > 0 {
+            busy_sum / (cycles as f64 * n_cubes)
+        } else {
+            0.0
+        };
+        let (acc, hits) = self.cubes.iter().fold((0u64, 0u64), |(a, h), c| {
+            let ca: u64 = c.vaults.iter().map(|v| v.accesses()).sum();
+            let ch: u64 = c.vaults.iter().map(|v| v.row_hits()).sum();
+            (a + ca, h + ch)
+        });
+        let distinct_pages: HashSet<(Pid, VPage)> = self
+            .ops
+            .iter()
+            .flat_map(|o| o.vpages().into_iter().map(move |p| (o.pid, p)))
+            .collect();
+
+        let mut energy_counts = EnergyCounts::default();
+        for mc in &self.mcs {
+            energy_counts.page_info_accesses += mc.page_cache.touches;
+        }
+        for cube in &self.cubes {
+            energy_counts.nmp_buffer_accesses += cube.stats.nmp_table_touches;
+            energy_counts.memory_bits += cube.stats.mem_accesses * 512;
+        }
+        energy_counts.mig_queue_accesses = self.migration.stats.queue_touches;
+        energy_counts.mdma_accesses = self.migration.stats.mdma_touches;
+        energy_counts.bit_hops = self.mesh.stats.bit_hops;
+        let (mut inv, mut trains, mut loss, mut cum_r) = (0, 0, 0.0, 0.0);
+        if let Some(a) = self.agent.as_ref() {
+            energy_counts.weight_accesses = a.stats.weight_accesses;
+            energy_counts.replay_accesses = a.stats.replay_accesses;
+            energy_counts.state_buf_accesses = a.stats.state_buf_accesses;
+            inv = a.stats.invocations;
+            trains = a.stats.train_steps;
+            loss = a.avg_loss();
+            cum_r = a.stats.cumulative_reward;
+        }
+
+        RunStats {
+            cycles,
+            ops_completed: self.completed,
+            opc_timeline: self.opc_timeline.clone(),
+            avg_hops: self.mesh.stats.avg_hops(),
+            avg_packet_latency: self.mesh.stats.avg_latency(),
+            compute_utilization,
+            compute_balance,
+            fraction_pages_migrated: if distinct_pages.is_empty() {
+                0.0
+            } else {
+                self.migrated_pages.len() as f64 / distinct_pages.len() as f64
+            },
+            fraction_accesses_on_migrated: if self.page_accesses_total == 0 {
+                0.0
+            } else {
+                self.accesses_on_migrated as f64 / self.page_accesses_total as f64
+            },
+            pages_migrated: self.migrated_pages.len() as u64,
+            migrations: self.migrations_total,
+            row_hit_rate: if acc == 0 { 0.0 } else { hits as f64 / acc as f64 },
+            agent_invocations: inv,
+            agent_train_steps: trains,
+            agent_avg_loss: loss,
+            agent_cumulative_reward: cum_r,
+            energy: EnergyModel::default().breakdown(&energy_counts),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Technique;
+    use crate::nmp::OpKind;
+    use crate::runtime::LinearQ;
+    use crate::workloads::{generate, Benchmark};
+
+    fn small_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.frames_per_cube = 4096;
+        cfg
+    }
+
+    fn simple_ops(n: u64) -> Vec<NmpOp> {
+        (0..n)
+            .map(|i| NmpOp {
+                pid: 1,
+                kind: OpKind::Add,
+                dest: (i % 8) << 12 | (i * 64) & 0xfff,
+                src1: ((i % 8) + 16) << 12,
+                src2: Some(((i % 4) + 32) << 12),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn baseline_run_completes_all_ops() {
+        let mut sys = System::new(small_cfg(), simple_ops(200), None);
+        let stats = sys.run().unwrap();
+        assert_eq!(stats.ops_completed, 200);
+        assert!(stats.cycles > 0);
+        assert!(stats.opc() > 0.0);
+        assert!(stats.avg_hops > 0.0);
+    }
+
+    #[test]
+    fn all_techniques_complete() {
+        for technique in Technique::ALL {
+            let mut cfg = small_cfg();
+            cfg.technique = technique;
+            let mut sys = System::new(cfg, simple_ops(150), None);
+            let stats = sys.run().unwrap();
+            assert_eq!(stats.ops_completed, 150, "{technique}");
+        }
+    }
+
+    #[test]
+    fn tom_run_completes() {
+        let mut cfg = small_cfg();
+        cfg.mapping = MappingScheme::Tom;
+        let mut sys = System::new(cfg, simple_ops(300), None);
+        let stats = sys.run().unwrap();
+        assert_eq!(stats.ops_completed, 300);
+    }
+
+    #[test]
+    fn aimm_run_with_mock_agent() {
+        let mut cfg = small_cfg();
+        cfg.mapping = MappingScheme::Aimm;
+        let agent = AimmAgent::new(
+            Box::new(LinearQ::new(1e-2, 0.95, 5)),
+            cfg.agent.clone(),
+            11,
+        );
+        let trace = generate(Benchmark::Spmv, 1, 0.1, 3);
+        let mut sys = System::new(cfg, trace.ops, Some(agent));
+        let stats = sys.run().unwrap();
+        assert!(stats.ops_completed > 0);
+        assert!(stats.agent_invocations > 0, "agent must be invoked");
+        // The agent survives for the next run.
+        assert!(sys.take_agent().is_some());
+    }
+
+    #[test]
+    fn workload_trace_completes_on_bnmp() {
+        let trace = generate(Benchmark::Mac, 1, 0.1, 3);
+        let n = trace.len() as u64;
+        let mut sys = System::new(small_cfg(), trace.ops, None);
+        let stats = sys.run().unwrap();
+        assert_eq!(stats.ops_completed, n);
+        assert!(stats.row_hit_rate > 0.0 && stats.row_hit_rate < 1.0);
+        assert!(stats.compute_utilization > 0.0);
+        assert!(stats.energy.total_nj() > 0.0);
+    }
+
+    #[test]
+    fn multi_program_stream_completes() {
+        use crate::workloads::interleave;
+        let (ops, _) = interleave(
+            vec![
+                generate(Benchmark::Mac, 0, 0.05, 1),
+                generate(Benchmark::Rd, 0, 0.05, 2),
+            ],
+            9,
+        );
+        let n = ops.len() as u64;
+        let mut cfg = small_cfg();
+        cfg.hoard = true;
+        let mut sys = System::new(cfg, ops, None);
+        let stats = sys.run().unwrap();
+        assert_eq!(stats.ops_completed, n);
+    }
+
+    #[test]
+    fn opc_timeline_sampled() {
+        let mut sys = System::new(small_cfg(), simple_ops(400), None);
+        let stats = sys.run().unwrap();
+        assert!(!stats.opc_timeline.is_empty());
+    }
+}

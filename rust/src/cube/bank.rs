@@ -1,0 +1,120 @@
+//! DRAM bank and vault-controller timing model.
+//!
+//! Open-page policy: a bank keeps its last row latched in the row buffer;
+//! hits cost `row_hit` cycles, conflicts/misses cost `row_miss`. The
+//! per-cube *average row buffer hit rate* these banks report is one of the
+//! system-state inputs to the AIMM agent (§5.1).
+
+use crate::sim::{BoundedQueue, Cycle};
+
+/// What a memory access does. Reads and writes share timing in this model
+/// (write-through row buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemAccessKind {
+    Read,
+    Write,
+}
+
+/// One 64-byte-granularity access queued at a vault controller.
+#[derive(Debug, Clone)]
+pub struct MemAccess<T> {
+    pub offset: u64,
+    pub kind: MemAccessKind,
+    /// Caller-defined completion tag (protocol continuation).
+    pub tag: T,
+}
+
+/// One DRAM bank: open row + busy window + hit statistics.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    open_row: Option<u64>,
+    busy_until: Cycle,
+    pub accesses: u64,
+    pub row_hits: u64,
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self { open_row: None, busy_until: 0, accesses: 0, row_hits: 0 }
+    }
+}
+
+impl Bank {
+    pub fn is_free(&self, now: Cycle) -> bool {
+        self.busy_until <= now
+    }
+
+    /// Start an access to `row`; returns its latency.
+    pub fn access(&mut self, row: u64, now: Cycle, row_hit: u64, row_miss: u64) -> u64 {
+        debug_assert!(self.is_free(now));
+        self.accesses += 1;
+        let lat = if self.open_row == Some(row) {
+            self.row_hits += 1;
+            row_hit
+        } else {
+            self.open_row = Some(row);
+            row_miss
+        };
+        self.busy_until = now + lat;
+        lat
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// A vault: its controller queue plus its banks. One access may be issued
+/// per vault per cycle (TSV bandwidth), targeting a free bank.
+#[derive(Debug)]
+pub struct Vault<T> {
+    pub queue: BoundedQueue<MemAccess<T>>,
+    pub banks: Vec<Bank>,
+}
+
+impl<T> Vault<T> {
+    pub fn new(banks: usize, queue_cap: usize) -> Self {
+        Self {
+            queue: BoundedQueue::new(queue_cap),
+            banks: (0..banks).map(|_| Bank::default()).collect(),
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.banks.iter().map(|b| b.accesses).sum()
+    }
+
+    pub fn row_hits(&self) -> u64 {
+        self.banks.iter().map(|b| b.row_hits).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_access_misses_then_hits() {
+        let mut b = Bank::default();
+        assert_eq!(b.access(7, 0, 14, 42), 42);
+        assert!(!b.is_free(10));
+        assert!(b.is_free(42));
+        assert_eq!(b.access(7, 42, 14, 42), 14);
+        assert_eq!(b.access(9, 60, 14, 42), 42);
+        assert!((b.hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vault_aggregates() {
+        let mut v: Vault<()> = Vault::new(4, 8);
+        v.banks[0].access(1, 0, 14, 42);
+        v.banks[1].access(1, 0, 14, 42);
+        v.banks[1].access(1, 100, 14, 42);
+        assert_eq!(v.accesses(), 3);
+        assert_eq!(v.row_hits(), 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! 3D-stacked memory cube: 32 vaults × 8 banks with open-page row-buffer
+//! timing, a crossbar from the base-die logic to the vaults, the NMP-op
+//! table and the near-memory compute unit (Table 1, §6.2).
+
+pub mod bank;
+pub mod cube;
+pub mod nmp_table;
+
+pub use bank::{Bank, MemAccess, MemAccessKind, Vault};
+pub use cube::{AccessTag, Cube, CubeStats};
+pub use nmp_table::{EntryState, NmpEntry, NmpTable};
+
+use crate::config::CubeId;
+
+/// A physical address: host cube plus byte offset inside that cube.
+///
+/// The paper's two-step mapping (Fig 1) ends here: the paging system picks
+/// the cube (frame), and the in-cube DRAM mapping decodes the offset into
+/// vault / bank / row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PhysAddr {
+    pub cube: CubeId,
+    pub offset: u64,
+}
+
+impl PhysAddr {
+    pub fn new(cube: CubeId, offset: u64) -> Self {
+        Self { cube, offset }
+    }
+}
+
+/// In-cube DRAM address mapping: byte offset → (vault, bank, row).
+///
+/// Low-order interleaving below the row: 64 B blocks stripe across vaults
+/// then banks, which spreads sequential pages over all vaults for
+/// memory-level parallelism (the classic physical-to-DRAM mapping the
+/// paper's §2 references).
+#[derive(Debug, Clone)]
+pub struct DramMap {
+    pub vaults: usize,
+    pub banks: usize,
+    /// Row size in bytes (per bank).
+    pub row_bytes: u64,
+}
+
+impl DramMap {
+    pub fn new(vaults: usize, banks: usize) -> Self {
+        Self { vaults, banks, row_bytes: 2048 }
+    }
+
+    /// Decode an in-cube offset.
+    pub fn decode(&self, offset: u64) -> (usize, usize, u64) {
+        let block = offset >> 6; // 64 B blocks
+        let vault = (block as usize) & (self.vaults - 1);
+        let bank = ((block as usize) >> self.vaults.trailing_zeros()) & (self.banks - 1);
+        let within = block >> (self.vaults.trailing_zeros() + self.banks.trailing_zeros());
+        let row = within / (self.row_bytes / 64);
+        (vault, bank, row)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_strides_vaults_first() {
+        let m = DramMap::new(32, 8);
+        let (v0, b0, _) = m.decode(0);
+        let (v1, b1, _) = m.decode(64);
+        assert_eq!((v0, b0), (0, 0));
+        assert_eq!((v1, b1), (1, 0));
+        let (v32, b32, _) = m.decode(64 * 32);
+        assert_eq!((v32, b32), (0, 1));
+    }
+
+    #[test]
+    fn decode_in_range() {
+        let m = DramMap::new(32, 8);
+        for i in 0..10_000u64 {
+            let (v, b, _) = m.decode(i * 64 + (i % 64));
+            assert!(v < 32);
+            assert!(b < 8);
+        }
+    }
+
+    #[test]
+    fn same_row_for_adjacent_blocks_same_bank() {
+        let m = DramMap::new(32, 8);
+        // Two offsets mapping to same (vault,bank) and adjacent 64B blocks
+        // within a row must share the row.
+        let a = m.decode(0);
+        let b = m.decode(64 * 32 * 8); // next block on (vault 0, bank 0)
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2, "2 KiB row holds 32 blocks per bank");
+    }
+}

@@ -1,0 +1,160 @@
+//! The NMP-op table: per-cube bookkeeping of outstanding near-memory
+//! operations (Table 1: 512 entries). Occupancy is reported to the nearest
+//! MC and is part of the agent's system state (§5.1); a full table denies
+//! new dispatches, which throttles the memory-network flow (§7.6).
+
+use crate::config::{McId, VPage};
+use crate::cube::PhysAddr;
+use crate::noc::packet::OpToken;
+use crate::sim::Cycle;
+
+/// Lifecycle of an NMP-op table entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryState {
+    /// Waiting for operand fetches (local reads and/or remote SourceResps).
+    WaitingSources,
+    /// In the compute queue / ALU.
+    Computing,
+    /// Destination write issued locally, waiting for bank completion.
+    WritingDest,
+    /// Remote destination write issued, waiting for WriteAck.
+    WaitingWriteAck,
+}
+
+/// One outstanding NMP operation at its computation cube.
+#[derive(Debug, Clone)]
+pub struct NmpEntry {
+    pub token: OpToken,
+    pub dest: PhysAddr,
+    pub dest_vpage: VPage,
+    pub issuing_mc: McId,
+    pub pending_sources: u8,
+    pub state: EntryState,
+    pub created: Cycle,
+}
+
+/// Fixed-capacity table of outstanding ops.
+#[derive(Debug)]
+pub struct NmpTable {
+    entries: Vec<NmpEntry>,
+    capacity: usize,
+    /// Cumulative occupancy integral for average-occupancy reporting.
+    occ_acc: u64,
+    observations: u64,
+    pub denied: u64,
+    pub allocated_total: u64,
+}
+
+impl NmpTable {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            entries: Vec::with_capacity(capacity.min(1024)),
+            capacity,
+            occ_acc: 0,
+            observations: 0,
+            denied: 0,
+            allocated_total: 0,
+        }
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.entries.len() < self.capacity
+    }
+
+    pub fn allocate(&mut self, entry: NmpEntry) -> Result<(), NmpEntry> {
+        if !self.has_space() {
+            self.denied += 1;
+            return Err(entry);
+        }
+        self.allocated_total += 1;
+        self.entries.push(entry);
+        Ok(())
+    }
+
+    pub fn get_mut(&mut self, token: OpToken) -> Option<&mut NmpEntry> {
+        self.entries.iter_mut().find(|e| e.token == token)
+    }
+
+    pub fn remove(&mut self, token: OpToken) -> Option<NmpEntry> {
+        let pos = self.entries.iter().position(|e| e.token == token)?;
+        Some(self.entries.swap_remove(pos))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fractional occupancy in [0, 1].
+    pub fn occupancy(&self) -> f32 {
+        self.entries.len() as f32 / self.capacity as f32
+    }
+
+    /// Record one per-cycle occupancy observation.
+    pub fn observe(&mut self) {
+        self.occ_acc += self.entries.len() as u64;
+        self.observations += 1;
+    }
+
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.observations == 0 {
+            0.0
+        } else {
+            self.occ_acc as f64 / (self.observations as f64 * self.capacity as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(token: OpToken) -> NmpEntry {
+        NmpEntry {
+            token,
+            dest: PhysAddr::new(0, 0),
+            dest_vpage: 0,
+            issuing_mc: 0,
+            pending_sources: 2,
+            state: EntryState::WaitingSources,
+            created: 0,
+        }
+    }
+
+    #[test]
+    fn allocate_until_full_then_deny() {
+        let mut t = NmpTable::new(2);
+        t.allocate(entry(1)).unwrap();
+        t.allocate(entry(2)).unwrap();
+        assert!(t.allocate(entry(3)).is_err());
+        assert_eq!(t.denied, 1);
+        assert_eq!(t.len(), 2);
+        assert!((t.occupancy() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn remove_frees_space() {
+        let mut t = NmpTable::new(1);
+        t.allocate(entry(7)).unwrap();
+        assert!(t.remove(7).is_some());
+        assert!(t.remove(7).is_none());
+        assert!(t.has_space());
+    }
+
+    #[test]
+    fn occupancy_average() {
+        let mut t = NmpTable::new(4);
+        t.allocate(entry(1)).unwrap();
+        t.observe(); // 1/4
+        t.allocate(entry(2)).unwrap();
+        t.observe(); // 2/4
+        assert!((t.avg_occupancy() - 0.375).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,47 @@
+//! # AIMM — continual-learning data & computation mapping for NMP
+//!
+//! Reproduction of *"Continual Learning Approach for Improving the Data and
+//! Computation Mapping in Near-Memory Processing System"* (cs.AR 2021).
+//!
+//! The crate hosts the full three-layer stack's Layer 3: a cycle-level
+//! memory-cube-network NMP simulator (the paper's evaluation substrate), the
+//! NMP offloading techniques (BNMP / LDB / PEI), the mapping schemes
+//! (default / TOM / AIMM), and the AIMM reinforcement-learning coordinator
+//! whose dueling Q-network executes AOT-compiled JAX/Pallas HLO through the
+//! PJRT C API ([`runtime`]). Python never runs at simulation time.
+//!
+//! Module map (see DESIGN.md §4 for the full inventory):
+//!
+//! * [`sim`] — deterministic cycle-level simulation core (clock, RNG, stats)
+//! * [`noc`] — mesh memory-cube network: routers, links, XY routing, VCs
+//! * [`cube`] — 3D memory cube: vaults, banks, row buffer, NMP-op table
+//! * [`mc`] — memory controllers: queues, page-info cache, system counters
+//! * [`mmu`] — 4-level page table, V→P translation, per-cube frame pools
+//! * [`alloc`] — NMP-aware HOARD page-frame allocator
+//! * [`migration`] — migration queue + MDMA engine (blocking/non-blocking)
+//! * [`nmp`] — NMP-op format and the BNMP/LDB/PEI offloading techniques
+//! * [`mapping`] — physical→DRAM hashing, TOM epoch remapping, remap tables
+//! * [`agent`] — AIMM RL agent: state, actions, reward, replay, ε-greedy
+//! * [`runtime`] — PJRT artifact loading + execution (`QFunction`)
+//! * [`workloads`] — the 9 benchmark trace generators + workload analysis
+//! * [`coordinator`] — episode runner wiring everything together
+//! * [`metrics`] — performance counters, energy/area model (paper §7.7)
+//! * [`config`] — hardware/agent configuration (paper Table 1 defaults)
+//! * [`bench`] — self-contained measurement harness used by `cargo bench`
+
+pub mod agent;
+pub mod alloc;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod cube;
+pub mod mapping;
+pub mod mc;
+pub mod metrics;
+pub mod migration;
+pub mod mmu;
+pub mod nmp;
+pub mod noc;
+pub mod runtime;
+pub mod sim;
+pub mod workloads;

@@ -1,0 +1,251 @@
+//! `aimm` — the leader binary: run episodes, regenerate the paper's
+//! tables and figures, inspect workloads and configurations.
+//!
+//! ```text
+//! aimm run      --bench SPMV [--technique BNMP] [--mapping AIMM]
+//!               [--scale 0.5] [--runs 5] [--mesh 4x4] [--hoard]
+//!               [--config file.toml] [--seed N]
+//! aimm analyze  --fig 5a|5b|5c [--scale 1.0]
+//! aimm table    --fig 6|7|8|9|10|11|12|13|14|area [--scale 0.25] [--runs 3]
+//! aimm table1 | aimm table2
+//! aimm multi    --benches SC,KM,RD,MAC [--hoard] [--mapping AIMM] ...
+//! ```
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use aimm::bench::figures;
+use aimm::config::{MappingScheme, SystemConfig, Technique};
+use aimm::coordinator::{run_multi, run_single};
+use aimm::workloads::Benchmark;
+
+fn usage() -> &'static str {
+    "aimm — AIMM NMP mapping reproduction\n\
+     \n\
+     subcommands:\n\
+       run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
+                [--scale F] [--runs N] [--mesh CxR] [--hoard] [--seed N] [--config FILE]\n\
+       multi    --benches A,B,C (same options as run)\n\
+       analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
+       table    --fig 6|7|8|9|10|11|12|13|14|area [--scale F] [--runs N]\n\
+       table1   print the active hardware configuration (paper Table 1)\n\
+       table2   print the benchmark list (paper Table 2)\n\
+       config   print the default config as TOML\n\
+     \n\
+     Artifacts: set AIMM_ARTIFACTS or run from the repo root (artifacts/).\n\
+     Without artifacts the agent falls back to a pure-rust linear Q (noted in output)."
+}
+
+/// Tiny flag parser: `--key value` pairs plus bare flags.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let boolean = ["hoard", "help"].contains(&key);
+                if boolean {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .ok_or_else(|| format!("--{key} needs a value"))?;
+                    flags.insert(key.to_string(), val.clone());
+                    i += 2;
+                }
+            } else {
+                return Err(format!("unexpected argument {a:?}"));
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad number {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn build_cfg(args: &Args) -> Result<SystemConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => SystemConfig::load(std::path::Path::new(path))
+            .map_err(|e| format!("config {path}: {e}"))?,
+        None => SystemConfig::default(),
+    };
+    if let Some(t) = args.get("technique") {
+        cfg.technique = match t.to_ascii_uppercase().as_str() {
+            "BNMP" => Technique::Bnmp,
+            "LDB" => Technique::Ldb,
+            "PEI" => Technique::Pei,
+            other => return Err(format!("unknown technique {other}")),
+        };
+    }
+    if let Some(m) = args.get("mapping") {
+        cfg.mapping = match m.to_ascii_uppercase().as_str() {
+            "B" | "BASELINE" => MappingScheme::Baseline,
+            "TOM" => MappingScheme::Tom,
+            "AIMM" => MappingScheme::Aimm,
+            other => return Err(format!("unknown mapping {other}")),
+        };
+    }
+    if let Some(mesh) = args.get("mesh") {
+        let (c, r) = mesh
+            .split_once('x')
+            .ok_or_else(|| format!("--mesh expects CxR, got {mesh:?}"))?;
+        cfg.mesh_cols = c.parse().map_err(|_| "bad mesh cols".to_string())?;
+        cfg.mesh_rows = r.parse().map_err(|_| "bad mesh rows".to_string())?;
+    }
+    if args.get("hoard").is_some() {
+        cfg.hoard = true;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().map_err(|_| "bad seed".to_string())?;
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn print_summary(s: &aimm::coordinator::EpisodeSummary, cfg: &SystemConfig) {
+    println!(
+        "episode {} [{} + {}{}] — {} runs",
+        s.name,
+        cfg.technique,
+        cfg.mapping,
+        if cfg.hoard { " + HOARD" } else { "" },
+        s.runs.len()
+    );
+    for (i, r) in s.runs.iter().enumerate() {
+        println!(
+            "  run {i}: cycles={:>9} ops={:>8} opc={:.4} hops={:.2} util={:.3} \
+             migrated={:.2} inv={} loss={:.4}",
+            r.cycles,
+            r.ops_completed,
+            r.opc(),
+            r.avg_hops,
+            r.compute_utilization,
+            r.fraction_pages_migrated,
+            r.agent_invocations,
+            r.agent_avg_loss,
+        );
+    }
+    let first = s.first();
+    let last = s.last();
+    if first.cycles > 0 {
+        println!(
+            "  exec-time change across runs: {:+.1}%  (energy: aimm {:.0} nJ, net {:.0} nJ, mem {:.0} nJ)",
+            (last.cycles as f64 / first.cycles as f64 - 1.0) * 100.0,
+            last.energy.aimm_hardware_nj,
+            last.energy.network_nj,
+            last.energy.memory_nj,
+        );
+    }
+}
+
+fn real_main() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    if args.get("help").is_some() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let scale = args.f64_or("scale", 0.25)?;
+    let seed = args.usize_or("seed", 7)? as u64;
+
+    match cmd.as_str() {
+        "run" => {
+            let cfg = build_cfg(&args)?;
+            let name = args.get("bench").ok_or("run needs --bench")?;
+            let bench = Benchmark::from_name(name)
+                .ok_or_else(|| format!("unknown benchmark {name:?}"))?;
+            let runs = args.usize_or("runs", figures::SINGLE_RUNS)?;
+            let s = run_single(&cfg, bench, scale, runs).map_err(|e| e.to_string())?;
+            print_summary(&s, &cfg);
+        }
+        "multi" => {
+            let cfg = build_cfg(&args)?;
+            let list = args.get("benches").ok_or("multi needs --benches A,B,C")?;
+            let benches: Vec<Benchmark> = list
+                .split(',')
+                .map(|n| {
+                    Benchmark::from_name(n.trim())
+                        .ok_or_else(|| format!("unknown benchmark {n:?}"))
+                })
+                .collect::<Result<_, _>>()?;
+            let runs = args.usize_or("runs", figures::MULTI_RUNS)?;
+            let s = run_multi(&cfg, &benches, scale, runs).map_err(|e| e.to_string())?;
+            print_summary(&s, &cfg);
+        }
+        "analyze" => {
+            let fig = args.get("fig").ok_or("analyze needs --fig 5a|5b|5c")?;
+            let t = match fig {
+                "5a" => figures::fig5a(scale.max(0.5), seed),
+                "5b" => figures::fig5b(scale.max(0.5), seed),
+                "5c" => figures::fig5c(scale.max(0.5), seed),
+                other => return Err(format!("unknown analysis figure {other}")),
+            };
+            println!("{}", t.render());
+        }
+        "table" => {
+            let fig = args.get("fig").ok_or("table needs --fig N")?;
+            let runs = args.usize_or("runs", 3)?;
+            let t = match fig {
+                "6" => figures::fig6(scale, runs),
+                "7" => figures::fig7(scale, runs),
+                "8" => figures::fig8(scale, runs),
+                "9" => figures::fig9(scale, runs, 24),
+                "10" => figures::fig10(scale, runs),
+                "11" => figures::fig11(scale, runs),
+                "12" => figures::fig12(scale, runs),
+                "13" => figures::fig13(scale, runs),
+                "14" => figures::fig14(scale, runs),
+                "area" => Ok(figures::area_table()),
+                other => return Err(format!("unknown figure {other}")),
+            }
+            .map_err(|e| e.to_string())?;
+            println!("{}", t.render());
+        }
+        "table1" => {
+            let cfg = build_cfg(&args)?;
+            println!("{}", figures::table1(&cfg).render());
+        }
+        "table2" => println!("{}", figures::table2().render()),
+        "config" => println!("{}", SystemConfig::default().to_toml()),
+        other => {
+            return Err(format!("unknown subcommand {other:?}\n\n{}", usage()));
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Mapping schemes: the TOM physical-address remapper and the AIMM
+//! compute-remap table (§5.3, §6.3). Together with the placement policies
+//! in [`crate::alloc`], these implement the "B / TOM / AIMM" columns of
+//! the paper's evaluation.
+
+pub mod remap_table;
+pub mod tom;
+
+pub use remap_table::ComputeRemapTable;
+pub use tom::{TomEvent, TomMapper, TOM_CANDIDATES};

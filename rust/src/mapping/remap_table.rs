@@ -1,0 +1,107 @@
+//! The compute-remap table (paper §5.3): maps a destination page to the
+//! cube where its NMP operations should execute, decoupling computation
+//! location from data location. Consulted by the NMP-op scheduler in the
+//! MC on every dispatch; written by the AIMM agent's compute-remapping
+//! actions.
+
+use std::collections::HashMap;
+
+use crate::config::{CubeId, Pid, VPage};
+
+/// Bounded page → compute-cube remap table.
+#[derive(Debug)]
+pub struct ComputeRemapTable {
+    map: HashMap<(Pid, VPage), CubeId>,
+    /// Insertion order for capacity eviction (oldest first).
+    order: Vec<(Pid, VPage)>,
+    capacity: usize,
+    pub lookups: u64,
+    pub hits: u64,
+}
+
+impl ComputeRemapTable {
+    pub fn new(capacity: usize) -> Self {
+        Self { map: HashMap::new(), order: Vec::new(), capacity, lookups: 0, hits: 0 }
+    }
+
+    /// Record an agent suggestion for a page.
+    pub fn insert(&mut self, pid: Pid, vpage: VPage, cube: CubeId) {
+        let key = (pid, vpage);
+        if self.map.insert(key, cube).is_none() {
+            self.order.push(key);
+            if self.order.len() > self.capacity {
+                let victim = self.order.remove(0);
+                self.map.remove(&victim);
+            }
+        }
+    }
+
+    /// Scheduler consultation: where should ops on this page compute?
+    pub fn lookup(&mut self, pid: Pid, vpage: VPage) -> Option<CubeId> {
+        self.lookups += 1;
+        let hit = self.map.get(&(pid, vpage)).copied();
+        if hit.is_some() {
+            self.hits += 1;
+        }
+        hit
+    }
+
+    /// Drop a suggestion (agent chose "default mapping" for this page).
+    pub fn remove(&mut self, pid: Pid, vpage: VPage) {
+        if self.map.remove(&(pid, vpage)).is_some() {
+            self.order.retain(|k| *k != (pid, vpage));
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_after_insert() {
+        let mut t = ComputeRemapTable::new(4);
+        t.insert(1, 100, 7);
+        assert_eq!(t.lookup(1, 100), Some(7));
+        assert_eq!(t.lookup(1, 101), None);
+        assert_eq!(t.hits, 1);
+        assert_eq!(t.lookups, 2);
+    }
+
+    #[test]
+    fn overwrite_updates() {
+        let mut t = ComputeRemapTable::new(4);
+        t.insert(1, 100, 7);
+        t.insert(1, 100, 3);
+        assert_eq!(t.lookup(1, 100), Some(3));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let mut t = ComputeRemapTable::new(2);
+        t.insert(1, 1, 0);
+        t.insert(1, 2, 0);
+        t.insert(1, 3, 0);
+        assert_eq!(t.lookup(1, 1), None);
+        assert!(t.lookup(1, 2).is_some());
+        assert!(t.lookup(1, 3).is_some());
+    }
+
+    #[test]
+    fn remove_clears() {
+        let mut t = ComputeRemapTable::new(2);
+        t.insert(1, 1, 5);
+        t.remove(1, 1);
+        assert_eq!(t.lookup(1, 1), None);
+        assert!(t.is_empty());
+    }
+}

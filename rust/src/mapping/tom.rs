@@ -1,0 +1,260 @@
+//! Transparent Offloading and Mapping (TOM) — the physical-address
+//! remapping comparison point (paper §6.3).
+//!
+//! TOM derives, per epoch, the page→cube hash with the best data
+//! co-location: it "profiles a small fraction of the data and derives a
+//! mapping with best data co-location, which is used as the mapping
+//! scheme for that kernel". Our adaptation profiles the first
+//! [`PROFILE_CYCLES`] of each epoch, scoring **all** candidate mappings
+//! simultaneously on the observed NMP-op stream (virtual evaluation —
+//! nothing moves during profiling), then adopts the scheme with the best
+//! co-location that incurs the least data movement for the remainder of
+//! the epoch.
+//!
+//! Because TOM is a *physical-to-DRAM* scheme, adoption is a
+//! kernel-boundary re-layout, not runtime migration: the system applies
+//! the bulk remap without network traffic (unlike AIMM page migration,
+//! which pays for every byte moved — exactly the trade-off §3.1
+//! discusses).
+
+use std::collections::HashSet;
+
+use crate::config::{CubeId, Pid, VPage};
+use crate::sim::Cycle;
+
+/// Number of candidate hash schemes.
+pub const TOM_CANDIDATES: usize = 8;
+/// Profiling window per epoch ("a small fraction").
+pub const PROFILE_CYCLES: u64 = 1500;
+/// Steady phase after adoption.
+pub const EPOCH_CYCLES: u64 = 30_000;
+
+/// One candidate page→cube hash.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    /// Right-shift (block size in pages = 2^shift).
+    pub shift: u32,
+    /// XOR-fold shift (0 = none).
+    pub fold: u32,
+}
+
+impl Candidate {
+    pub fn cube(&self, pid: Pid, vpage: VPage, n_cubes: usize) -> CubeId {
+        // Distinct per-process rotation so multi-program runs do not
+        // trivially collide on cube 0.
+        let v = vpage >> self.shift;
+        let v = if self.fold > 0 { v ^ (v >> self.fold) } else { v };
+        ((v + pid as u64) % n_cubes as u64) as CubeId
+    }
+}
+
+/// Built-in candidate set: interleavings at several block granularities
+/// plus xor-folded variants (covers streaming and strided access).
+pub fn candidates() -> [Candidate; TOM_CANDIDATES] {
+    [
+        Candidate { shift: 0, fold: 0 },
+        Candidate { shift: 1, fold: 0 },
+        Candidate { shift: 2, fold: 0 },
+        Candidate { shift: 3, fold: 0 },
+        Candidate { shift: 4, fold: 0 },
+        Candidate { shift: 6, fold: 0 },
+        Candidate { shift: 0, fold: 4 },
+        Candidate { shift: 2, fold: 6 },
+    ]
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Observing traffic until `until`; all candidates scored virtually.
+    Profiling { until: Cycle },
+    /// Best candidate adopted until `until`.
+    Steady { until: Cycle },
+}
+
+/// What the system must do after a `tick`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TomEvent {
+    /// Apply candidate `idx`'s mapping (bulk re-layout).
+    Apply(usize),
+}
+
+/// The TOM mapper.
+pub struct TomMapper {
+    cands: [Candidate; TOM_CANDIDATES],
+    n_cubes: usize,
+    phase: Phase,
+    current: usize,
+    /// Per-candidate (co-location score, ops observed) for this epoch.
+    scores: [(f64, u64); TOM_CANDIDATES],
+    /// Pages seen while profiling (for the data-movement tiebreak).
+    seen_pages: HashSet<(Pid, VPage)>,
+    pub adoptions: u64,
+}
+
+impl TomMapper {
+    pub fn new(n_cubes: usize) -> Self {
+        Self {
+            cands: candidates(),
+            n_cubes,
+            phase: Phase::Profiling { until: PROFILE_CYCLES },
+            current: 0,
+            scores: [(0.0, 0); TOM_CANDIDATES],
+            seen_pages: HashSet::new(),
+            adoptions: 0,
+        }
+    }
+
+    /// The cube the *currently adopted* candidate assigns to a page.
+    pub fn target_cube(&self, pid: Pid, vpage: VPage) -> CubeId {
+        self.cands[self.current].cube(pid, vpage, self.n_cubes)
+    }
+
+    pub fn current_candidate(&self) -> usize {
+        self.current
+    }
+
+    /// Record a dispatched op: score the co-location every candidate
+    /// WOULD achieve (virtual profiling — data does not move).
+    pub fn record_op(&mut self, dest: (Pid, VPage), sources: &[(Pid, VPage)]) {
+        if let Phase::Profiling { .. } = self.phase {
+            for (i, cand) in self.cands.iter().enumerate() {
+                let dc = cand.cube(dest.0, dest.1, self.n_cubes);
+                let co = if sources.is_empty() {
+                    1.0
+                } else {
+                    sources
+                        .iter()
+                        .filter(|(p, v)| cand.cube(*p, *v, self.n_cubes) == dc)
+                        .count() as f64
+                        / sources.len() as f64
+                };
+                self.scores[i].0 += co;
+                self.scores[i].1 += 1;
+            }
+            self.seen_pages.insert(dest);
+            for s in sources {
+                self.seen_pages.insert(*s);
+            }
+        }
+    }
+
+    /// Advance the phase machine. Returns a mapping change to apply.
+    pub fn tick(&mut self, now: Cycle) -> Option<TomEvent> {
+        match self.phase {
+            Phase::Profiling { until } if now >= until => {
+                let best = self.pick_best();
+                self.phase = Phase::Steady { until: now + EPOCH_CYCLES };
+                self.adoptions += 1;
+                let changed = best != self.current;
+                self.current = best;
+                self.scores = [(0.0, 0); TOM_CANDIDATES];
+                self.seen_pages.clear();
+                changed.then_some(TomEvent::Apply(best))
+            }
+            Phase::Steady { until } if now >= until => {
+                self.phase = Phase::Profiling { until: now + PROFILE_CYCLES };
+                None
+            }
+            _ => None,
+        }
+    }
+
+    /// Best co-location; ties broken by least data movement relative to
+    /// the currently adopted candidate.
+    fn pick_best(&self) -> usize {
+        let mut best = self.current;
+        let mut best_score = -1.0f64;
+        let mut best_movement = u64::MAX;
+        for i in 0..TOM_CANDIDATES {
+            let (sum, n) = self.scores[i];
+            let score = if n == 0 { 0.0 } else { sum / n as f64 };
+            let movement = self.movement(i);
+            if score > best_score + 1e-12
+                || ((score - best_score).abs() <= 1e-12 && movement < best_movement)
+            {
+                best = i;
+                best_score = score;
+                best_movement = movement;
+            }
+        }
+        best
+    }
+
+    /// Pages that would change cube if candidate `idx` replaced the
+    /// currently adopted one.
+    fn movement(&self, idx: usize) -> u64 {
+        self.seen_pages
+            .iter()
+            .filter(|(p, v)| {
+                self.cands[idx].cube(*p, *v, self.n_cubes)
+                    != self.cands[self.current].cube(*p, *v, self.n_cubes)
+            })
+            .count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_cubes_in_range() {
+        for cand in candidates() {
+            for v in 0..1000u64 {
+                assert!(cand.cube(1, v, 16) < 16);
+            }
+        }
+    }
+
+    #[test]
+    fn adoption_after_profiling_window() {
+        let mut tom = TomMapper::new(16);
+        let mut now = 0;
+        while tom.adoptions == 0 {
+            tom.tick(now);
+            now += 1;
+            assert!(now < 10_000);
+        }
+        assert!(now >= PROFILE_CYCLES);
+    }
+
+    #[test]
+    fn aligned_pairs_select_colocating_candidate() {
+        // Ops pair page X with page X+64-aligned counterpart in another
+        // region whose base is congruent mod 16: candidate shift 0
+        // co-locates them; block candidates do not.
+        let mut tom = TomMapper::new(16);
+        for k in 0..200u64 {
+            // dest region base 0, src region base 1024 (64-page aligned,
+            // 1024 % 16 == 0): same index → same cube under shift 0.
+            tom.record_op((1, k % 48), &[(1, 1024 + k % 48)]);
+        }
+        let mut now = 0;
+        while tom.adoptions == 0 {
+            tom.tick(now);
+            now += 1;
+        }
+        let chosen = candidates()[tom.current_candidate()];
+        assert_eq!(chosen, candidates()[0], "shift-0 co-locates aligned pairs: {chosen:?}");
+    }
+
+    #[test]
+    fn virtual_profiling_does_not_remap_midwindow() {
+        let mut tom = TomMapper::new(16);
+        // No Apply events before the window closes.
+        for now in 0..PROFILE_CYCLES - 1 {
+            assert!(tom.tick(now).is_none());
+        }
+    }
+
+    #[test]
+    fn steady_phase_returns_to_profiling() {
+        let mut tom = TomMapper::new(16);
+        let mut now = 0;
+        while tom.adoptions < 2 {
+            tom.tick(now);
+            now += 1;
+            assert!(now < 3 * (EPOCH_CYCLES + PROFILE_CYCLES));
+        }
+    }
+}

@@ -1,0 +1,436 @@
+//! The memory controller proper: queues ops from the CPU side, translates
+//! them (TLB + 4-level walk + first-touch placement), schedules the
+//! compute cube (technique + compute-remap table), dispatches into the
+//! network and absorbs ACKs.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::alloc::Placement;
+use crate::config::{McId, SystemConfig, Technique, VPage};
+use crate::cube::PhysAddr;
+use crate::mapping::{ComputeRemapTable, TomMapper};
+use crate::migration::MigrationSystem;
+use crate::mmu::{Mmu, Tlb, WALK_LEVELS};
+use crate::nmp::{schedule, CpuCache, NmpOp};
+use crate::noc::packet::{NodeId, OpToken, Packet, Payload};
+use crate::noc::Mesh;
+use crate::sim::{BoundedQueue, Cycle};
+
+use super::page_cache::PageInfoCache;
+use super::sys_counters::SystemCounters;
+
+/// TLB entries per MC.
+const TLB_ENTRIES: usize = 64;
+/// NMP-op dispatches per MC per cycle.
+const DISPATCH_WIDTH: usize = 2;
+
+/// Shared structures the MC borrows while issuing (owned by the System).
+pub struct IssueDeps<'a> {
+    pub mmu: &'a mut Mmu,
+    pub placement: &'a mut dyn Placement,
+    pub tom: Option<&'a mut TomMapper>,
+    pub cpu_cache: &'a mut CpuCache,
+    pub remap: &'a mut ComputeRemapTable,
+    pub migration: &'a MigrationSystem,
+    pub mesh: &'a Mesh,
+    pub technique: Technique,
+}
+
+/// An op dispatched and not yet ACKed.
+#[derive(Debug, Clone, Copy)]
+struct Outstanding {
+    pid: u32,
+    dest_vpage: VPage,
+    dispatched_at: Cycle,
+}
+
+/// MC statistics.
+#[derive(Debug, Clone, Default)]
+pub struct McStats {
+    pub ops_enqueued: u64,
+    pub ops_dispatched: u64,
+    pub ops_completed: u64,
+    pub total_op_latency: u64,
+    pub tlb_miss_stalls: u64,
+    pub blocked_on_migration: u64,
+}
+
+/// One memory controller.
+pub struct Mc {
+    pub id: McId,
+    pub queue: BoundedQueue<NmpOp>,
+    /// Ops parked by a blocking migration of a page they touch; only
+    /// accesses to the migrating page block (§5.3), everything else
+    /// keeps flowing.
+    parked: Vec<NmpOp>,
+    pub tlb: Tlb,
+    pub page_cache: PageInfoCache,
+    pub counters: SystemCounters,
+    pub out: VecDeque<Packet>,
+    outstanding: HashMap<OpToken, Outstanding>,
+    next_token: OpToken,
+    token_stride: u64,
+    stall_until: Cycle,
+    pub stats: McStats,
+    pt_walk_latency: u64,
+}
+
+impl Mc {
+    pub fn new(id: McId, cfg: &SystemConfig) -> Self {
+        Self {
+            id,
+            queue: BoundedQueue::new(cfg.mc_queue_cap),
+            parked: Vec::new(),
+            tlb: Tlb::new(TLB_ENTRIES),
+            page_cache: PageInfoCache::new(cfg.page_info_entries),
+            counters: SystemCounters::new(cfg.mc_nearest_cubes(id)),
+            out: VecDeque::new(),
+            outstanding: HashMap::new(),
+            next_token: id as u64 + 1,
+            token_stride: cfg.num_mcs() as u64,
+            stall_until: 0,
+            stats: McStats::default(),
+            pt_walk_latency: cfg.timing.pt_walk,
+        }
+    }
+
+    /// Offer an op from the CPU side. Errors when the queue is full.
+    pub fn enqueue(&mut self, op: NmpOp) -> Result<(), NmpOp> {
+        self.queue.push(op).map(|()| {
+            self.stats.ops_enqueued += 1;
+        })
+    }
+
+    pub fn outstanding_count(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.parked.is_empty()
+            && self.outstanding.is_empty()
+            && self.out.is_empty()
+    }
+
+    /// Translate one page, charging walk latency on a TLB miss and
+    /// performing first-touch placement for unmapped pages.
+    fn translate_page(
+        &mut self,
+        deps: &mut IssueDeps<'_>,
+        pid: u32,
+        vpage: VPage,
+    ) -> anyhow::Result<crate::mmu::PhysLoc> {
+        if let Some(loc) = self.tlb.lookup(pid, vpage) {
+            return Ok(loc);
+        }
+        self.stats.tlb_miss_stalls += 1;
+        self.stall_until = self.stall_until.max(self.pt_walk_latency * WALK_LEVELS as u64 / 4);
+        let loc = match deps.mmu.translate(pid, vpage) {
+            Some(loc) => loc,
+            None => {
+                // First touch: OS default placement (or TOM's hash).
+                let cube = match deps.tom.as_deref() {
+                    Some(tom) => tom.target_cube(pid, vpage),
+                    None => {
+                        let n = deps.mesh.cols * deps.mesh.rows;
+                        let free: Vec<usize> =
+                            (0..n).map(|c| deps.mmu.free_frames(c)).collect();
+                        deps.placement.place(pid, vpage, &free)
+                    }
+                };
+                deps.mmu.map_page(pid, vpage, cube)?
+            }
+        };
+        self.tlb.insert(pid, vpage, loc);
+        Ok(loc)
+    }
+
+    /// Issue up to `DISPATCH_WIDTH` ops per cycle (dual-channel command
+    /// issue). Ops touching a blocking-migrating page are parked (only
+    /// that page's accesses wait); others flow.
+    pub fn tick_issue(&mut self, now: Cycle, deps: &mut IssueDeps<'_>) -> anyhow::Result<()> {
+        self.queue.observe();
+        if now < self.stall_until {
+            return Ok(());
+        }
+        for _ in 0..DISPATCH_WIDTH {
+            self.issue_one(now, deps)?;
+        }
+        Ok(())
+    }
+
+    fn issue_one(&mut self, now: Cycle, deps: &mut IssueDeps<'_>) -> anyhow::Result<()> {
+        // First, try to un-park an op whose migration has finished.
+        let op = if let Some(pos) = self.parked.iter().position(|op| {
+            let (pages, n) = op.vpages_arr();
+            !pages[..n].iter().any(|&v| deps.migration.is_blocked(op.pid, v))
+        }) {
+            self.parked.remove(pos)
+        } else {
+            // Pull from the queue, parking blocked heads (bounded scan).
+            let mut picked = None;
+            for _ in 0..4 {
+                match self.queue.pop() {
+                    Some(op)
+                        if {
+                            let (pages, n) = op.vpages_arr();
+                            pages[..n].iter().any(|&v| deps.migration.is_blocked(op.pid, v))
+                        } =>
+                    {
+                        self.stats.blocked_on_migration += 1;
+                        self.parked.push(op);
+                    }
+                    Some(op) => {
+                        picked = Some(op);
+                        break;
+                    }
+                    None => break,
+                }
+            }
+            match picked {
+                Some(op) => op,
+                None => return Ok(()),
+            }
+        };
+
+        // V→P for all operands (may first-touch allocate).
+        let dest_loc = self.translate_page(deps, op.pid, op.dest_vpage())?;
+        let src1_loc = self.translate_page(deps, op.pid, op.src1_vpage())?;
+        let src2_loc = match op.src2_vpage() {
+            Some(v) => Some(self.translate_page(deps, op.pid, v)?),
+            None => None,
+        };
+        let page_off = |addr: u64| addr & (crate::config::PAGE_SIZE - 1);
+        let dest = PhysAddr::new(
+            dest_loc.cube,
+            dest_loc.frame * crate::config::PAGE_SIZE + page_off(op.dest),
+        );
+        let src1 = PhysAddr::new(
+            src1_loc.cube,
+            src1_loc.frame * crate::config::PAGE_SIZE + page_off(op.src1),
+        );
+        let src2 = src2_loc.map(|loc| {
+            PhysAddr::new(
+                loc.cube,
+                loc.frame * crate::config::PAGE_SIZE + page_off(op.src2.unwrap()),
+            )
+        });
+
+        // Technique scheduling, then the agent's compute-remap table
+        // overrides (keyed by destination page, §5.3).
+        let mut decision = schedule(deps.technique, &op, dest, src1, src2, deps.cpu_cache);
+        if let Some(cube) = deps.remap.lookup(op.pid, op.dest_vpage()) {
+            decision.compute_cube = cube;
+        }
+
+        // TOM profiles co-location from dispatched ops.
+        if let Some(tom) = deps.tom.as_deref_mut() {
+            let mut sources = vec![(op.pid, op.src1_vpage())];
+            if let Some(v) = op.src2_vpage() {
+                sources.push((op.pid, v));
+            }
+            tom.record_op((op.pid, op.dest_vpage()), &sources);
+        }
+
+        let token = self.next_token;
+        self.next_token += self.token_stride;
+
+        let pk = Packet::new(
+            token,
+            NodeId::Mc(self.id),
+            NodeId::Cube(decision.compute_cube),
+            Payload::NmpDispatch {
+                token,
+                dest,
+                src1,
+                src2,
+                carried_operands: decision.carried_operands,
+                dest_vpage: op.dest_vpage(),
+            },
+            now,
+        );
+        self.out.push_back(pk);
+
+        self.outstanding.insert(
+            token,
+            Outstanding { pid: op.pid, dest_vpage: op.dest_vpage(), dispatched_at: now },
+        );
+        self.stats.ops_dispatched += 1;
+        // Page-info accounting for every page the op touches; the dest
+        // page additionally records the source cube for source-compute
+        // remapping.
+        // Per-page hop history: distance between the page's data and the
+        // computation consuming it (§4.2 "communication hop count ... of
+        // the data in the page") — the signal that tells the agent which
+        // pages are far from their compute.
+        let cc = decision.compute_cube;
+        let dist = |cube: crate::config::CubeId| {
+            deps.mesh.hop_distance(NodeId::Cube(cube), NodeId::Cube(cc))
+        };
+        self.page_cache
+            .on_dispatch((op.pid, op.dest_vpage()), dist(dest.cube), src1.cube, cc);
+        self.page_cache
+            .on_dispatch((op.pid, op.src1_vpage()), dist(src1.cube), src1.cube, cc);
+        if let (Some(v), Some(s2)) = (op.src2_vpage(), src2) {
+            self.page_cache.on_dispatch((op.pid, v), dist(s2.cube), src1.cube, cc);
+        }
+        Ok(())
+    }
+
+    /// Handle a packet delivered to this MC.
+    pub fn receive(&mut self, pk: Packet, now: Cycle) -> Option<u64> {
+        match pk.payload {
+            Payload::NmpAck { token, .. } => {
+                if let Some(o) = self.outstanding.remove(&token) {
+                    let latency = now - o.dispatched_at;
+                    self.stats.ops_completed += 1;
+                    self.stats.total_op_latency += latency;
+                    self.page_cache.on_ack((o.pid, o.dest_vpage), latency);
+                    return Some(latency);
+                }
+                None
+            }
+            _ => None,
+        }
+    }
+
+    /// A migration of a page this MC tracks completed.
+    pub fn on_migration_done(&mut self, pid: u32, vpage: VPage, latency: u64) {
+        self.tlb.invalidate(pid, vpage);
+        self.page_cache.on_migration((pid, vpage), latency);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::StripePlacement;
+    use crate::nmp::OpKind;
+
+    fn op(dest: u64, src1: u64, src2: Option<u64>) -> NmpOp {
+        NmpOp { pid: 1, kind: OpKind::Add, dest, src1, src2 }
+    }
+
+    struct Ctx {
+        mmu: Mmu,
+        placement: StripePlacement,
+        cpu_cache: CpuCache,
+        remap: ComputeRemapTable,
+        migration: MigrationSystem,
+        mesh: Mesh,
+    }
+
+    fn ctx() -> (Mc, Ctx) {
+        let cfg = SystemConfig::default();
+        let mut mmu = Mmu::new(&cfg);
+        mmu.create_process(1);
+        (
+            Mc::new(0, &cfg),
+            Ctx {
+                mmu,
+                placement: StripePlacement::default(),
+                cpu_cache: CpuCache::new(cfg.cpu_cache_lines),
+                remap: ComputeRemapTable::new(1024),
+                migration: MigrationSystem::new(&cfg),
+                mesh: Mesh::new(&cfg),
+            },
+        )
+    }
+
+    fn deps(c: &mut Ctx) -> IssueDeps<'_> {
+        IssueDeps {
+            mmu: &mut c.mmu,
+            placement: &mut c.placement,
+            tom: None,
+            cpu_cache: &mut c.cpu_cache,
+            remap: &mut c.remap,
+            migration: &c.migration,
+            mesh: &c.mesh,
+            technique: Technique::Bnmp,
+        }
+    }
+
+    #[test]
+    fn dispatch_creates_packet_and_outstanding() {
+        let (mut mc, mut c) = ctx();
+        mc.enqueue(op(0x1000, 0x2000, Some(0x3000))).unwrap();
+        let mut now = 0;
+        while mc.out.is_empty() {
+            mc.tick_issue(now, &mut deps(&mut c)).unwrap();
+            now += 1;
+            assert!(now < 10_000);
+        }
+        assert_eq!(mc.outstanding_count(), 1);
+        assert_eq!(mc.stats.ops_dispatched, 1);
+        let pk = &mc.out[0];
+        assert!(matches!(pk.payload, Payload::NmpDispatch { .. }));
+        // BNMP: compute cube = dest page's cube (stripe put page 1 in cube 0).
+        assert_eq!(pk.dst, NodeId::Cube(0));
+    }
+
+    #[test]
+    fn ack_completes_and_records_latency() {
+        let (mut mc, mut c) = ctx();
+        mc.enqueue(op(0x1000, 0x2000, None)).unwrap();
+        let mut now = 0;
+        while mc.outstanding_count() == 0 {
+            mc.tick_issue(now, &mut deps(&mut c)).unwrap();
+            now += 1;
+        }
+        let token = *mc.outstanding.keys().next().unwrap();
+        let ack = Packet::new(
+            token,
+            NodeId::Cube(0),
+            NodeId::Mc(0),
+            Payload::NmpAck { token, compute_cube: 0 },
+            now + 90,
+        );
+        let lat = mc.receive(ack, now + 100);
+        assert!(lat.is_some());
+        assert_eq!(mc.stats.ops_completed, 1);
+        assert!(mc.is_idle() || !mc.out.is_empty());
+    }
+
+    #[test]
+    fn remap_table_overrides_compute_cube() {
+        let (mut mc, mut c) = ctx();
+        c.remap.insert(1, 1, 9); // dest vpage 1 → cube 9
+        mc.enqueue(op(0x1000, 0x2000, None)).unwrap();
+        let mut now = 0;
+        while mc.out.is_empty() {
+            mc.tick_issue(now, &mut deps(&mut c)).unwrap();
+            now += 1;
+        }
+        assert_eq!(mc.out[0].dst, NodeId::Cube(9));
+    }
+
+    #[test]
+    fn blocking_migration_holds_op() {
+        let (mut mc, mut c) = ctx();
+        // Map the page first so migration can target it.
+        c.mmu.map_page(1, 1, 0).unwrap();
+        c.migration
+            .request(crate::migration::MigRequest { pid: 1, vpage: 1, to_cube: 3, blocking: true });
+        mc.enqueue(op(0x1000, 0x2000, None)).unwrap();
+        for now in 0..50 {
+            mc.tick_issue(now, &mut deps(&mut c)).unwrap();
+        }
+        assert_eq!(mc.stats.ops_dispatched, 0);
+        assert!(mc.stats.blocked_on_migration > 0);
+    }
+
+    #[test]
+    fn tlb_caches_translations() {
+        let (mut mc, mut c) = ctx();
+        mc.enqueue(op(0x1000, 0x1008, None)).unwrap(); // same page twice
+        mc.enqueue(op(0x1010, 0x1018, None)).unwrap();
+        let mut now = 0;
+        while mc.stats.ops_dispatched < 2 {
+            mc.tick_issue(now, &mut deps(&mut c)).unwrap();
+            now += 1;
+            assert!(now < 10_000);
+        }
+        // First op misses once (dest+src same page), second op hits.
+        assert!(mc.tlb.hits >= 2, "hits={}", mc.tlb.hits);
+    }
+}

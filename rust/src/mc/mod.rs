@@ -1,0 +1,12 @@
+//! Memory controllers (Table 1: 4, one per CMP corner): request queues,
+//! the fully-associative page-information cache feeding the AIMM agent,
+//! per-quadrant system-information counters, V→P translation via TLB +
+//! MMU, and NMP-op scheduling/dispatch into the memory network.
+
+pub mod mc;
+pub mod page_cache;
+pub mod sys_counters;
+
+pub use mc::{IssueDeps, Mc, McStats};
+pub use page_cache::{PageInfo, PageInfoCache};
+pub use sys_counters::SystemCounters;

@@ -1,0 +1,249 @@
+//! Fully-associative page-information cache (paper §5.1): one per MC,
+//! 128 entries by default, least-frequently-used replacement where the
+//! victim's content is *abandoned* (unlike a cache, nothing writes back).
+//!
+//! Each entry tracks the per-page signals of the agent's state: access
+//! and migration counts plus four fixed-length histories — communication
+//! hop count, packet latency, migration latency, and actions taken.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{CubeId, Pid, VPage};
+use crate::sim::History;
+
+/// History length for each per-page series (DESIGN.md §5: 4 samples).
+pub const HIST_LEN: usize = 4;
+
+/// Per-page information record.
+#[derive(Debug, Clone)]
+pub struct PageInfo {
+    pub accesses: u64,
+    pub migrations: u64,
+    pub hop_hist: History,
+    pub lat_hist: History,
+    pub mig_lat_hist: History,
+    pub action_hist: History,
+    /// Host cube of the first source of the page's most recent op —
+    /// target of the "source compute remapping" action.
+    pub last_src1_cube: CubeId,
+    /// Compute cube of the page's most recent op — the reference point
+    /// of the near/far remapping actions (§4.2).
+    pub last_compute_cube: CubeId,
+}
+
+impl PageInfo {
+    fn new() -> Self {
+        Self {
+            accesses: 0,
+            migrations: 0,
+            hop_hist: History::new(HIST_LEN),
+            lat_hist: History::new(HIST_LEN),
+            mig_lat_hist: History::new(HIST_LEN),
+            action_hist: History::new(HIST_LEN),
+            last_src1_cube: 0,
+            last_compute_cube: 0,
+        }
+    }
+
+    /// Migrations per access (agent state field).
+    pub fn migrations_per_access(&self) -> f32 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.migrations as f32 / self.accesses as f32
+        }
+    }
+}
+
+/// The cache itself.
+#[derive(Debug)]
+pub struct PageInfoCache {
+    entries: HashMap<(Pid, VPage), PageInfo>,
+    capacity: usize,
+    /// Recently supplied remap candidates (rotation ring): the agent
+    /// works through the actively-accessed set instead of hammering one
+    /// page (§5.3 "actively accessed pages are chosen as candidates").
+    recent_selected: VecDeque<(Pid, VPage)>,
+    /// Total accesses recorded across all (even evicted) entries — the
+    /// denominator of the "page access rate" state field.
+    pub total_accesses: u64,
+    /// Cache touches for the 0.05 nJ/access energy constant (§7.7).
+    pub touches: u64,
+    pub evictions: u64,
+}
+
+impl PageInfoCache {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            entries: HashMap::with_capacity(capacity),
+            capacity,
+            recent_selected: VecDeque::new(),
+            total_accesses: 0,
+            touches: 0,
+            evictions: 0,
+        }
+    }
+
+    fn entry_mut(&mut self, key: (Pid, VPage)) -> &mut PageInfo {
+        self.touches += 1;
+        if !self.entries.contains_key(&key) {
+            if self.entries.len() >= self.capacity {
+                // LFU victim, content abandoned (§5.1).
+                let victim = self
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.accesses)
+                    .map(|(k, _)| *k)
+                    .unwrap();
+                self.entries.remove(&victim);
+                self.evictions += 1;
+            }
+            self.entries.insert(key, PageInfo::new());
+        }
+        self.entries.get_mut(&key).unwrap()
+    }
+
+    /// An NMP-op touching this page was dispatched.
+    pub fn on_dispatch(
+        &mut self,
+        key: (Pid, VPage),
+        hop_estimate: u32,
+        src1_cube: CubeId,
+        compute_cube: CubeId,
+    ) {
+        self.total_accesses += 1;
+        let e = self.entry_mut(key);
+        e.accesses += 1;
+        e.hop_hist.push(hop_estimate as f32);
+        e.last_src1_cube = src1_cube;
+        e.last_compute_cube = compute_cube;
+    }
+
+    /// ACK observed: record round-trip packet latency.
+    pub fn on_ack(&mut self, key: (Pid, VPage), latency: u64) {
+        if self.entries.contains_key(&key) {
+            self.touches += 1;
+            self.entries.get_mut(&key).unwrap().lat_hist.push(latency as f32);
+        }
+    }
+
+    /// Migration of this page finished.
+    pub fn on_migration(&mut self, key: (Pid, VPage), latency: u64) {
+        let e = self.entry_mut(key);
+        e.migrations += 1;
+        e.mig_lat_hist.push(latency as f32);
+    }
+
+    /// The agent took `action` with this page as the remap target.
+    pub fn on_action(&mut self, key: (Pid, VPage), action: u8) {
+        let e = self.entry_mut(key);
+        e.action_hist.push(action as f32);
+    }
+
+    pub fn get(&self, key: &(Pid, VPage)) -> Option<&PageInfo> {
+        self.entries.get(key)
+    }
+
+    /// The most frequently accessed page currently cached — the paper's
+    /// "highly accessed page" selected as the remapping candidate.
+    pub fn hottest(&self) -> Option<((Pid, VPage), &PageInfo)> {
+        self.entries
+            .iter()
+            .max_by_key(|(k, e)| (e.accesses, std::cmp::Reverse(*k)))
+            .map(|(k, e)| (*k, e))
+    }
+
+    /// Remap-candidate selection: the most-accessed page NOT supplied
+    /// recently, rotating the agent through the active set. Falls back to
+    /// the overall hottest when everything is recent.
+    pub fn select_candidate(&mut self) -> Option<(Pid, VPage)> {
+        let ring = self.capacity / 2;
+        let pick = self
+            .entries
+            .iter()
+            .filter(|(k, _)| !self.recent_selected.contains(k))
+            .max_by_key(|(k, e)| (e.accesses, std::cmp::Reverse(**k)))
+            .map(|(k, _)| *k)
+            .or_else(|| self.hottest().map(|(k, _)| k))?;
+        self.recent_selected.push_back(pick);
+        while self.recent_selected.len() > ring {
+            self.recent_selected.pop_front();
+        }
+        Some(pick)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Fraction of all recorded accesses that hit `key`'s page (the
+    /// "page access rate" state field).
+    pub fn access_rate(&self, key: &(Pid, VPage)) -> f32 {
+        match (self.entries.get(key), self.total_accesses) {
+            (Some(e), t) if t > 0 => e.accesses as f32 / t as f32,
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_creates_and_counts() {
+        let mut c = PageInfoCache::new(4);
+        c.on_dispatch((1, 10), 3, 7, 2);
+        c.on_dispatch((1, 10), 5, 8, 4);
+        let e = c.get(&(1, 10)).unwrap();
+        assert_eq!(e.accesses, 2);
+        assert_eq!(e.last_src1_cube, 8);
+        assert_eq!(e.hop_hist.last(), Some(5.0));
+        assert!((c.access_rate(&(1, 10)) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lfu_evicts_coldest() {
+        let mut c = PageInfoCache::new(2);
+        c.on_dispatch((1, 1), 0, 0, 0);
+        c.on_dispatch((1, 1), 0, 0, 0);
+        c.on_dispatch((1, 2), 0, 0, 0);
+        c.on_dispatch((1, 3), 0, 0, 0); // evicts (1,2): fewest accesses
+        assert!(c.get(&(1, 1)).is_some());
+        assert!(c.get(&(1, 2)).is_none());
+        assert!(c.get(&(1, 3)).is_some());
+        assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn hottest_by_access_count() {
+        let mut c = PageInfoCache::new(4);
+        for _ in 0..5 {
+            c.on_dispatch((1, 9), 0, 0, 0);
+        }
+        c.on_dispatch((1, 2), 0, 0, 0);
+        assert_eq!(c.hottest().unwrap().0, (1, 9));
+    }
+
+    #[test]
+    fn ack_without_entry_is_noop() {
+        let mut c = PageInfoCache::new(2);
+        c.on_ack((1, 99), 100);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn migration_stats_tracked() {
+        let mut c = PageInfoCache::new(2);
+        c.on_dispatch((1, 1), 0, 0, 0);
+        c.on_migration((1, 1), 400);
+        let e = c.get(&(1, 1)).unwrap();
+        assert_eq!(e.migrations, 1);
+        assert_eq!(e.mig_lat_hist.last(), Some(400.0));
+        assert!((e.migrations_per_access() - 1.0).abs() < 1e-6);
+    }
+}

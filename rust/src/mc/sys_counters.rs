@@ -1,0 +1,97 @@
+//! Per-MC system-information counters (paper §5.1): two vectors tracking
+//! the running average of NMP-table occupancy and row-buffer hit rate for
+//! the MC's nearest cubes, refreshed by periodic cube reports.
+
+use crate::config::CubeId;
+use crate::sim::RunningAvg;
+
+/// Smoothing weight for the running averages.
+const ALPHA: f64 = 0.25;
+
+#[derive(Debug)]
+pub struct SystemCounters {
+    cubes: Vec<CubeId>,
+    occ: Vec<RunningAvg>,
+    row_hit: Vec<RunningAvg>,
+}
+
+impl SystemCounters {
+    pub fn new(nearest: Vec<CubeId>) -> Self {
+        let n = nearest.len();
+        Self {
+            cubes: nearest,
+            occ: (0..n).map(|_| RunningAvg::new(ALPHA)).collect(),
+            row_hit: (0..n).map(|_| RunningAvg::new(ALPHA)).collect(),
+        }
+    }
+
+    /// Periodic report from a cube (ignored if not one of ours).
+    pub fn report(&mut self, cube: CubeId, occupancy: f64, row_hit_rate: f64) {
+        if let Some(i) = self.cubes.iter().position(|&c| c == cube) {
+            self.occ[i].update(occupancy);
+            self.row_hit[i].update(row_hit_rate);
+        }
+    }
+
+    pub fn nearest(&self) -> &[CubeId] {
+        &self.cubes
+    }
+
+    /// Aggregates for the agent state (mesh-size-invariant encoding,
+    /// DESIGN.md §5): occupancy mean/max, row-hit mean/min.
+    pub fn occ_mean(&self) -> f32 {
+        mean(self.occ.iter().map(|a| a.get()))
+    }
+
+    pub fn occ_max(&self) -> f32 {
+        self.occ.iter().map(|a| a.get()).fold(0.0, f64::max) as f32
+    }
+
+    pub fn row_hit_mean(&self) -> f32 {
+        mean(self.row_hit.iter().map(|a| a.get()))
+    }
+
+    pub fn row_hit_min(&self) -> f32 {
+        self.row_hit.iter().map(|a| a.get()).fold(1.0, f64::min) as f32
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f32 {
+    let (sum, n) = it.fold((0.0, 0usize), |(s, n), v| (s + v, n + 1));
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_tracked_per_cube() {
+        let mut sc = SystemCounters::new(vec![0, 1, 4, 5]);
+        sc.report(0, 0.8, 0.5);
+        sc.report(1, 0.4, 0.9);
+        assert!((sc.occ_mean() - 0.3).abs() < 1e-6); // (0.8+0.4+0+0)/4
+        assert!((sc.occ_max() - 0.8).abs() < 1e-6);
+        assert!((sc.row_hit_min() - 0.0).abs() < 1e-6); // unreported cubes 0
+    }
+
+    #[test]
+    fn foreign_cube_ignored() {
+        let mut sc = SystemCounters::new(vec![0, 1]);
+        sc.report(9, 1.0, 1.0);
+        assert_eq!(sc.occ_max(), 0.0);
+    }
+
+    #[test]
+    fn running_average_smooths() {
+        let mut sc = SystemCounters::new(vec![0]);
+        sc.report(0, 1.0, 1.0);
+        sc.report(0, 0.0, 0.0);
+        let v = sc.occ_mean();
+        assert!(v > 0.0 && v < 1.0, "smoothed value, got {v}");
+    }
+}

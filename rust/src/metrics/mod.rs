@@ -1,0 +1,69 @@
+//! Metrics: run statistics feeding every figure of the paper, plus the
+//! dynamic-energy and area models of §7.7.
+
+pub mod area;
+pub mod energy;
+
+pub use area::{area_report, AreaItem};
+pub use energy::{EnergyBreakdown, EnergyCounts, EnergyModel};
+
+/// End-of-run statistics for one episode.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    /// Execution time in cycles (Fig 6 / 11 / 12).
+    pub cycles: u64,
+    /// NMP operations completed.
+    pub ops_completed: u64,
+    /// Sampled operations-per-cycle timeline (Fig 9).
+    pub opc_timeline: Vec<f32>,
+    /// Average network hop count (Fig 7).
+    pub avg_hops: f64,
+    /// Average packet latency in cycles.
+    pub avg_packet_latency: f64,
+    /// Computation utilization: busy-ALU cycles / (cycles × cubes), Fig 7.
+    pub compute_utilization: f64,
+    /// Coefficient describing how evenly compute spread across cubes
+    /// (1 = perfectly even; paper's "computation distribution").
+    pub compute_balance: f64,
+    /// Distinct pages migrated / distinct pages touched (Fig 10 major axis).
+    pub fraction_pages_migrated: f64,
+    /// Accesses landing on migrated pages / all accesses (Fig 10 minor).
+    pub fraction_accesses_on_migrated: f64,
+    /// Pages migrated (absolute).
+    pub pages_migrated: u64,
+    /// Migration count (can exceed pages when a page moves repeatedly).
+    pub migrations: u64,
+    /// Average DRAM row-buffer hit rate.
+    pub row_hit_rate: f64,
+    /// Agent bookkeeping (AIMM runs only).
+    pub agent_invocations: u64,
+    pub agent_train_steps: u64,
+    pub agent_avg_loss: f64,
+    pub agent_cumulative_reward: f64,
+    /// Dynamic energy breakdown (Fig 14).
+    pub energy: EnergyBreakdown,
+}
+
+impl RunStats {
+    /// Overall operations per cycle (Fig 8).
+    pub fn opc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.ops_completed as f64 / self.cycles as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opc_division() {
+        let s = RunStats { cycles: 1000, ops_completed: 250, ..Default::default() };
+        assert!((s.opc() - 0.25).abs() < 1e-12);
+        let z = RunStats::default();
+        assert_eq!(z.opc(), 0.0);
+    }
+}

@@ -1,0 +1,313 @@
+//! Migration management system (paper §5.3): a 128-entry migration queue
+//! and a migration DMA (MDMA) engine that streams a page from its old
+//! host cube to the new one in 256 B chunks, then reports the migration
+//! latency back to the MC and interrupts the OS for the page-table update.
+//!
+//! Two modes, chosen by page permission:
+//! * **blocking** (read-write pages): the page is locked — the MCs hold
+//!   back every op touching it until the migration commits.
+//! * **non-blocking** (read-only pages): the old frame keeps serving
+//!   accesses during the copy; new accesses use the new mapping after the
+//!   commit.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{CubeId, Pid, SystemConfig, VPage, PAGE_SIZE};
+use crate::mmu::Mmu;
+use crate::noc::packet::{MigToken, NodeId, Packet, Payload};
+use crate::sim::{BoundedQueue, Cycle};
+
+/// Migration chunk size in bytes (a page moves in 16 chunks).
+pub const CHUNK_BYTES: u64 = 256;
+/// Outstanding chunk reads the MDMA keeps in flight per job.
+pub const MDMA_WINDOW: u32 = 4;
+/// Concurrent page migrations the MDMA engine sustains (its 1 KiB of
+/// buffering = 4 in-flight 256 B chunks across jobs, §7.7).
+pub const MDMA_JOBS: usize = 4;
+
+/// A migration request from the agent's data-remapping action.
+#[derive(Debug, Clone, Copy)]
+pub struct MigRequest {
+    pub pid: Pid,
+    pub vpage: VPage,
+    pub to_cube: CubeId,
+    /// Blocking (read-write page) or non-blocking (read-only page).
+    pub blocking: bool,
+}
+
+/// The active MDMA job.
+#[derive(Debug)]
+struct ActiveJob {
+    token: MigToken,
+    req: MigRequest,
+    old_cube: CubeId,
+    chunks_total: u32,
+    reads_sent: u32,
+    acks: u32,
+    started: Cycle,
+}
+
+/// A committed migration, reported to the system for bookkeeping.
+#[derive(Debug, Clone, Copy)]
+pub struct CompletedMigration {
+    pub pid: Pid,
+    pub vpage: VPage,
+    pub from_cube: CubeId,
+    pub to_cube: CubeId,
+    pub latency: u64,
+}
+
+/// Statistics for Fig 10 and the energy model.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationStats {
+    pub requested: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_invalid: u64,
+    pub completed: u64,
+    pub total_latency: u64,
+    /// Migration-queue touches (energy constant 0.02689 nJ).
+    pub queue_touches: u64,
+    /// MDMA buffer touches (energy constant 0.1062 nJ).
+    pub mdma_touches: u64,
+}
+
+/// The migration management system. Lives beside MC 0 (its MDMA injects
+/// and receives through `NodeId::Mc(0)`).
+pub struct MigrationSystem {
+    queue: BoundedQueue<MigRequest>,
+    active: Vec<ActiveJob>,
+    next_token: MigToken,
+    /// Pages currently migrating, with their blocking flag.
+    in_flight: HashMap<(Pid, VPage), bool>,
+    /// Packets to inject (drained by the system).
+    pub out: VecDeque<Packet>,
+    /// Migrations committed this tick (drained by the system).
+    pub completed: Vec<CompletedMigration>,
+    pub stats: MigrationStats,
+    home_mc: usize,
+}
+
+impl MigrationSystem {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            queue: BoundedQueue::new(cfg.migration_queue_cap),
+            active: Vec::new(),
+            next_token: 1,
+            in_flight: HashMap::new(),
+            out: VecDeque::new(),
+            completed: Vec::new(),
+            stats: MigrationStats::default(),
+            home_mc: 0,
+        }
+    }
+
+    /// Enqueue a migration (agent data-remap action). Fails when the
+    /// migration queue is full or the page is already migrating.
+    pub fn request(&mut self, req: MigRequest) -> bool {
+        self.stats.requested += 1;
+        if self.in_flight.contains_key(&(req.pid, req.vpage)) {
+            self.stats.rejected_invalid += 1;
+            return false;
+        }
+        self.stats.queue_touches += 1;
+        match self.queue.push(req) {
+            Ok(()) => {
+                self.in_flight.insert((req.pid, req.vpage), req.blocking);
+                true
+            }
+            Err(_) => {
+                self.stats.rejected_queue_full += 1;
+                false
+            }
+        }
+    }
+
+    /// Is this page locked by a blocking migration?
+    pub fn is_blocked(&self, pid: Pid, vpage: VPage) -> bool {
+        self.in_flight.get(&(pid, vpage)).copied().unwrap_or(false)
+    }
+
+    /// Is this page migrating at all (blocking or not)?
+    pub fn is_migrating(&self, pid: Pid, vpage: VPage) -> bool {
+        self.in_flight.contains_key(&(pid, vpage))
+    }
+
+    pub fn queue_occupancy(&self) -> f32 {
+        self.queue.occupancy()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active.is_empty() && self.queue.is_empty() && self.out.is_empty()
+    }
+
+    /// Handle a chunk ACK delivered to the MDMA.
+    pub fn receive_ack(&mut self, token: MigToken, now: Cycle, mmu: &mut Mmu) {
+        let Some(idx) = self.active.iter().position(|j| j.token == token) else {
+            return;
+        };
+        self.stats.mdma_touches += 1;
+        let job = &mut self.active[idx];
+        job.acks += 1;
+        // Keep the read window full.
+        if job.reads_sent < job.chunks_total {
+            let chunk = job.reads_sent;
+            job.reads_sent += 1;
+            let (old, new, tok) = (job.old_cube, job.req.to_cube, job.token);
+            self.push_read(tok, chunk, old, new, now);
+        } else if job.acks == job.chunks_total {
+            // All chunks landed: commit the remap (OS page-table update).
+            let job = self.active.swap_remove(idx);
+            let latency = now - job.started;
+            match mmu.commit_remap(job.req.pid, job.req.vpage) {
+                Ok(pr) => {
+                    self.in_flight.remove(&(job.req.pid, job.req.vpage));
+                    self.stats.completed += 1;
+                    self.stats.total_latency += latency;
+                    self.completed.push(CompletedMigration {
+                        pid: job.req.pid,
+                        vpage: job.req.vpage,
+                        from_cube: pr.old.cube,
+                        to_cube: pr.new.cube,
+                        latency,
+                    });
+                }
+                Err(_) => {
+                    self.in_flight.remove(&(job.req.pid, job.req.vpage));
+                    self.stats.rejected_invalid += 1;
+                }
+            }
+        }
+    }
+
+    fn push_read(&mut self, token: MigToken, chunk: u32, old: CubeId, new: CubeId, now: Cycle) {
+        self.stats.mdma_touches += 1;
+        self.out.push_back(Packet::new(
+            token * 1000 + chunk as u64,
+            NodeId::Mc(self.home_mc),
+            NodeId::Cube(old),
+            Payload::MigRead { token, chunk, old, new },
+            now,
+        ));
+    }
+
+    /// Advance the MDMA: start queued jobs while slots are free.
+    pub fn tick(&mut self, now: Cycle, mmu: &mut Mmu) {
+        self.queue.observe();
+        while self.active.len() < MDMA_JOBS {
+            let Some(req) = self.queue.pop() else { return };
+            self.stats.queue_touches += 1;
+            // Consult the OS for a frame in the new host cube (§5.3).
+            match mmu.begin_remap(req.pid, req.vpage, req.to_cube) {
+                Ok(pr) => {
+                    let chunks_total = (PAGE_SIZE / CHUNK_BYTES) as u32;
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    let mut job = ActiveJob {
+                        token,
+                        req,
+                        old_cube: pr.old.cube,
+                        chunks_total,
+                        reads_sent: 0,
+                        acks: 0,
+                        started: now,
+                    };
+                    let initial = MDMA_WINDOW.min(chunks_total);
+                    for chunk in 0..initial {
+                        job.reads_sent += 1;
+                        self.push_read(token, chunk, pr.old.cube, req.to_cube, now);
+                    }
+                    self.active.push(job);
+                }
+                Err(_) => {
+                    // Same cube / no frame / already pending: drop it.
+                    self.in_flight.remove(&(req.pid, req.vpage));
+                    self.stats.rejected_invalid += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn setup() -> (MigrationSystem, Mmu) {
+        let mut cfg = SystemConfig::default();
+        cfg.frames_per_cube = 64;
+        let mut mmu = Mmu::new(&cfg);
+        mmu.create_process(1);
+        mmu.map_page(1, 10, 0).unwrap();
+        (MigrationSystem::new(&cfg), mmu)
+    }
+
+    fn drain_acks(ms: &mut MigrationSystem, mmu: &mut Mmu, now: &mut Cycle) {
+        // Answer every outstanding MigRead with an immediate ack.
+        while let Some(pk) = ms.out.pop_front() {
+            if let Payload::MigRead { token, .. } = pk.payload {
+                *now += 1;
+                ms.receive_ack(token, *now, mmu);
+            }
+        }
+    }
+
+    #[test]
+    fn full_migration_lifecycle() {
+        let (mut ms, mut mmu) = setup();
+        assert!(ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 5, blocking: true }));
+        assert!(ms.is_blocked(1, 10));
+        let mut now = 0;
+        ms.tick(now, &mut mmu);
+        // MDMA window of initial reads.
+        assert_eq!(ms.out.len(), MDMA_WINDOW as usize);
+        while ms.stats.completed == 0 {
+            drain_acks(&mut ms, &mut mmu, &mut now);
+            ms.tick(now, &mut mmu);
+            assert!(now < 10_000);
+        }
+        assert!(!ms.is_migrating(1, 10));
+        assert_eq!(mmu.translate(1, 10).unwrap().cube, 5);
+        assert_eq!(ms.completed.len(), 1);
+        assert_eq!(ms.completed[0].from_cube, 0);
+        assert_eq!(ms.completed[0].to_cube, 5);
+    }
+
+    #[test]
+    fn nonblocking_pages_not_locked() {
+        let (mut ms, _mmu) = setup();
+        ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 5, blocking: false });
+        assert!(!ms.is_blocked(1, 10));
+        assert!(ms.is_migrating(1, 10));
+    }
+
+    #[test]
+    fn duplicate_request_rejected() {
+        let (mut ms, _mmu) = setup();
+        assert!(ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 5, blocking: true }));
+        assert!(!ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 6, blocking: true }));
+    }
+
+    #[test]
+    fn queue_overflow_rejected() {
+        let mut cfg = SystemConfig::default();
+        cfg.migration_queue_cap = 2;
+        let mut ms = MigrationSystem::new(&cfg);
+        assert!(ms.request(MigRequest { pid: 1, vpage: 1, to_cube: 5, blocking: true }));
+        assert!(ms.request(MigRequest { pid: 1, vpage: 2, to_cube: 5, blocking: true }));
+        assert!(!ms.request(MigRequest { pid: 1, vpage: 3, to_cube: 5, blocking: true }));
+        assert_eq!(ms.stats.rejected_queue_full, 1);
+        // The page whose request overflowed must not stay marked.
+        assert!(!ms.is_migrating(1, 3));
+    }
+
+    #[test]
+    fn remap_to_same_cube_dropped() {
+        let (mut ms, mut mmu) = setup();
+        ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 0, blocking: true });
+        ms.tick(0, &mut mmu);
+        assert_eq!(ms.stats.rejected_invalid, 1);
+        assert!(!ms.is_migrating(1, 10));
+        assert!(ms.is_idle());
+    }
+}

@@ -1,0 +1,105 @@
+//! Per-cube physical frame pools. A pool hands out frame indices in
+//! ascending order first (fresh memory), then recycles freed frames LIFO
+//! (hot reuse), and never double-allocates — property-tested below.
+
+/// Free-frame pool for one cube.
+#[derive(Debug)]
+pub struct FramePool {
+    capacity: usize,
+    next_fresh: u64,
+    freelist: Vec<u64>,
+    allocated: usize,
+}
+
+impl FramePool {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, next_fresh: 0, freelist: Vec::new(), allocated: 0 }
+    }
+
+    pub fn alloc(&mut self) -> Option<u64> {
+        let frame = if let Some(f) = self.freelist.pop() {
+            f
+        } else if (self.next_fresh as usize) < self.capacity {
+            let f = self.next_fresh;
+            self.next_fresh += 1;
+            f
+        } else {
+            return None;
+        };
+        self.allocated += 1;
+        Some(frame)
+    }
+
+    pub fn free(&mut self, frame: u64) {
+        debug_assert!(frame < self.next_fresh, "free of never-allocated frame");
+        debug_assert!(!self.freelist.contains(&frame), "double free of frame {frame}");
+        self.allocated -= 1;
+        self.freelist.push(frame);
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.capacity - self.allocated
+    }
+
+    pub fn allocated(&self) -> usize {
+        self.allocated
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+    use std::collections::HashSet;
+
+    #[test]
+    fn alloc_unique_until_exhausted() {
+        let mut p = FramePool::new(16);
+        let mut seen = HashSet::new();
+        for _ in 0..16 {
+            assert!(seen.insert(p.alloc().unwrap()));
+        }
+        assert_eq!(p.alloc(), None);
+    }
+
+    #[test]
+    fn recycles_freed() {
+        let mut p = FramePool::new(2);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        assert_eq!(p.alloc(), None);
+        p.free(a);
+        assert_eq!(p.alloc(), Some(a));
+    }
+
+    /// Property: under random alloc/free interleavings, live frames are
+    /// always unique and counts are consistent.
+    #[test]
+    fn prop_no_double_allocation() {
+        let mut rng = Rng::new(2024);
+        for trial in 0..50 {
+            let cap = 1 + rng.index(64);
+            let mut p = FramePool::new(cap);
+            let mut live: Vec<u64> = Vec::new();
+            for _ in 0..500 {
+                if rng.chance(0.6) {
+                    if let Some(f) = p.alloc() {
+                        assert!(!live.contains(&f), "trial {trial}: frame {f} double-allocated");
+                        live.push(f);
+                    } else {
+                        assert_eq!(live.len(), cap);
+                    }
+                } else if !live.is_empty() {
+                    let idx = rng.index(live.len());
+                    p.free(live.swap_remove(idx));
+                }
+                assert_eq!(p.allocated(), live.len());
+                assert_eq!(p.free_count(), cap - live.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Paging system: 4-level page tables per process, a per-MC TLB, and
+//! per-cube physical frame pools (Table 1: MMU with 4-level page table).
+//!
+//! The virtual→physical mapping is the lever AIMM actuates: page
+//! remapping allocates a frame in a new cube, migrates the data, and
+//! updates the page table (§5.3). The frame pools bound cube capacity.
+
+pub mod frames;
+pub mod page_table;
+pub mod tlb;
+
+pub use frames::FramePool;
+pub use page_table::{AddressSpace, PhysLoc, WALK_LEVELS};
+pub use tlb::Tlb;
+
+use std::collections::HashMap;
+
+use crate::config::{CubeId, Pid, SystemConfig, VPage, PAGE_SIZE};
+use crate::cube::PhysAddr;
+
+/// An in-progress remap (allocated new frame, old mapping still live).
+#[derive(Debug, Clone, Copy)]
+pub struct PendingRemap {
+    pub old: PhysLoc,
+    pub new: PhysLoc,
+}
+
+/// The memory-management unit: address spaces + frame pools.
+pub struct Mmu {
+    spaces: HashMap<Pid, AddressSpace>,
+    pools: Vec<FramePool>,
+    pending: HashMap<(Pid, VPage), PendingRemap>,
+    /// Cumulative page-table walk levels touched (walk-latency model).
+    pub walks: u64,
+}
+
+impl Mmu {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self {
+            spaces: HashMap::new(),
+            pools: (0..cfg.num_cubes()).map(|_| FramePool::new(cfg.frames_per_cube)).collect(),
+            pending: HashMap::new(),
+            walks: 0,
+        }
+    }
+
+    pub fn create_process(&mut self, pid: Pid) {
+        self.spaces.entry(pid).or_insert_with(|| AddressSpace::new(pid));
+    }
+
+    pub fn has_process(&self, pid: Pid) -> bool {
+        self.spaces.contains_key(&pid)
+    }
+
+    /// Map `vpage` into a frame of `cube`. Errors if the cube is out of
+    /// frames or the page is already mapped.
+    pub fn map_page(&mut self, pid: Pid, vpage: VPage, cube: CubeId) -> anyhow::Result<PhysLoc> {
+        let space = self
+            .spaces
+            .get_mut(&pid)
+            .ok_or_else(|| anyhow::anyhow!("unknown pid {pid}"))?;
+        anyhow::ensure!(space.translate(vpage).is_none(), "vpage {vpage:#x} already mapped");
+        let frame = self.pools[cube]
+            .alloc()
+            .ok_or_else(|| anyhow::anyhow!("cube {cube} out of frames"))?;
+        let loc = PhysLoc { cube, frame };
+        space.map(vpage, loc);
+        Ok(loc)
+    }
+
+    /// Translate, counting the 4-level walk (the MC charges TLB-miss
+    /// latency based on [`WALK_LEVELS`]).
+    pub fn translate(&mut self, pid: Pid, vpage: VPage) -> Option<PhysLoc> {
+        let space = self.spaces.get(&pid)?;
+        let loc = space.translate(vpage)?;
+        self.walks += WALK_LEVELS as u64;
+        Some(loc)
+    }
+
+    /// Physical address of a virtual byte address (None if unmapped).
+    pub fn phys_addr(&mut self, pid: Pid, vaddr: u64) -> Option<PhysAddr> {
+        let loc = self.translate(pid, vaddr >> crate::config::PAGE_SHIFT)?;
+        Some(PhysAddr::new(loc.cube, loc.frame * PAGE_SIZE + (vaddr & (PAGE_SIZE - 1))))
+    }
+
+    /// Begin a page remap: allocate the destination frame, keep the old
+    /// mapping live (reads continue during non-blocking migration).
+    pub fn begin_remap(
+        &mut self,
+        pid: Pid,
+        vpage: VPage,
+        new_cube: CubeId,
+    ) -> anyhow::Result<PendingRemap> {
+        anyhow::ensure!(
+            !self.pending.contains_key(&(pid, vpage)),
+            "vpage {vpage:#x} already migrating"
+        );
+        let space = self
+            .spaces
+            .get(&pid)
+            .ok_or_else(|| anyhow::anyhow!("unknown pid {pid}"))?;
+        let old = space
+            .translate(vpage)
+            .ok_or_else(|| anyhow::anyhow!("vpage {vpage:#x} not mapped"))?;
+        anyhow::ensure!(old.cube != new_cube, "remap to the same cube");
+        let frame = self.pools[new_cube]
+            .alloc()
+            .ok_or_else(|| anyhow::anyhow!("cube {new_cube} out of frames"))?;
+        let pr = PendingRemap { old, new: PhysLoc { cube: new_cube, frame } };
+        self.pending.insert((pid, vpage), pr);
+        Ok(pr)
+    }
+
+    /// Commit a remap: install the new mapping, release the old frame
+    /// (the OS page-table-update interrupt of §5.3).
+    pub fn commit_remap(&mut self, pid: Pid, vpage: VPage) -> anyhow::Result<PendingRemap> {
+        let pr = self
+            .pending
+            .remove(&(pid, vpage))
+            .ok_or_else(|| anyhow::anyhow!("no pending remap for {vpage:#x}"))?;
+        let space = self.spaces.get_mut(&pid).expect("space existed at begin_remap");
+        space.remap(vpage, pr.new);
+        self.pools[pr.old.cube].free(pr.old.frame);
+        Ok(pr)
+    }
+
+    /// Abort a remap (e.g. migration queue overflow downstream).
+    pub fn abort_remap(&mut self, pid: Pid, vpage: VPage) {
+        if let Some(pr) = self.pending.remove(&(pid, vpage)) {
+            self.pools[pr.new.cube].free(pr.new.frame);
+        }
+    }
+
+    /// Instantly move a page to `new_cube` with no migration traffic —
+    /// TOM's kernel-boundary bulk re-layout (see mapping::tom). No-op if
+    /// the page already lives there or is mid-migration.
+    pub fn force_remap(&mut self, pid: Pid, vpage: VPage, new_cube: CubeId) -> bool {
+        if self.pending.contains_key(&(pid, vpage)) {
+            return false;
+        }
+        let Some(space) = self.spaces.get(&pid) else { return false };
+        let Some(old) = space.translate(vpage) else { return false };
+        if old.cube == new_cube {
+            return false;
+        }
+        let Some(frame) = self.pools[new_cube].alloc() else { return false };
+        let space = self.spaces.get_mut(&pid).unwrap();
+        space.remap(vpage, PhysLoc { cube: new_cube, frame });
+        self.pools[old.cube].free(old.frame);
+        true
+    }
+
+    pub fn free_frames(&self, cube: CubeId) -> usize {
+        self.pools[cube].free_count()
+    }
+
+    /// All (vpage, loc) mappings of a process (analysis/debug).
+    pub fn mappings(&self, pid: Pid) -> Vec<(VPage, PhysLoc)> {
+        self.spaces.get(&pid).map(|s| s.mappings()).unwrap_or_default()
+    }
+
+    /// All live process ids.
+    pub fn pids(&self) -> Vec<Pid> {
+        let mut v: Vec<Pid> = self.spaces.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mmu() -> Mmu {
+        let mut cfg = SystemConfig::default();
+        cfg.frames_per_cube = 8;
+        let mut m = Mmu::new(&cfg);
+        m.create_process(1);
+        m
+    }
+
+    #[test]
+    fn map_translate_roundtrip() {
+        let mut m = mmu();
+        let loc = m.map_page(1, 0x42, 3).unwrap();
+        assert_eq!(loc.cube, 3);
+        assert_eq!(m.translate(1, 0x42), Some(loc));
+        assert_eq!(m.translate(1, 0x43), None);
+    }
+
+    #[test]
+    fn double_map_rejected() {
+        let mut m = mmu();
+        m.map_page(1, 7, 0).unwrap();
+        assert!(m.map_page(1, 7, 1).is_err());
+    }
+
+    #[test]
+    fn frames_exhaust() {
+        let mut m = mmu();
+        for v in 0..8 {
+            m.map_page(1, v, 2).unwrap();
+        }
+        assert!(m.map_page(1, 99, 2).is_err());
+        assert_eq!(m.free_frames(2), 0);
+    }
+
+    #[test]
+    fn remap_lifecycle() {
+        let mut m = mmu();
+        let old = m.map_page(1, 5, 0).unwrap();
+        let pr = m.begin_remap(1, 5, 4).unwrap();
+        assert_eq!(pr.old, old);
+        // Old mapping still live during migration.
+        assert_eq!(m.translate(1, 5), Some(old));
+        let committed = m.commit_remap(1, 5).unwrap();
+        assert_eq!(m.translate(1, 5), Some(committed.new));
+        // Old frame returned to its pool.
+        assert_eq!(m.free_frames(0), 8);
+    }
+
+    #[test]
+    fn abort_returns_new_frame() {
+        let mut m = mmu();
+        m.map_page(1, 5, 0).unwrap();
+        m.begin_remap(1, 5, 4).unwrap();
+        assert_eq!(m.free_frames(4), 7);
+        m.abort_remap(1, 5);
+        assert_eq!(m.free_frames(4), 8);
+    }
+
+    #[test]
+    fn phys_addr_offsets() {
+        let mut m = mmu();
+        let loc = m.map_page(1, 2, 6).unwrap();
+        let pa = m.phys_addr(1, 2 * PAGE_SIZE + 100).unwrap();
+        assert_eq!(pa.cube, 6);
+        assert_eq!(pa.offset, loc.frame * PAGE_SIZE + 100);
+    }
+
+    #[test]
+    fn double_remap_rejected() {
+        let mut m = mmu();
+        m.map_page(1, 5, 0).unwrap();
+        m.begin_remap(1, 5, 4).unwrap();
+        assert!(m.begin_remap(1, 5, 2).is_err());
+    }
+}

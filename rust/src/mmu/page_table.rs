@@ -1,0 +1,178 @@
+//! A real 4-level radix page table (9 bits per level, 4 KiB pages), as in
+//! x86-64 / Table 1's "4-level page table". The walk cost model charges
+//! [`WALK_LEVELS`] sequential accesses on a TLB miss.
+
+use crate::config::{CubeId, Pid, VPage};
+
+/// Levels in the radix tree.
+pub const WALK_LEVELS: usize = 4;
+/// Radix bits per level.
+const BITS: u32 = 9;
+const FANOUT: usize = 1 << BITS;
+
+/// A physical page location: cube + frame index within the cube.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PhysLoc {
+    pub cube: CubeId,
+    pub frame: u64,
+}
+
+/// Leaf level: frame entries.
+struct L1 {
+    entries: Vec<Option<PhysLoc>>,
+}
+
+impl L1 {
+    fn new() -> Self {
+        Self { entries: vec![None; FANOUT] }
+    }
+}
+
+/// Interior level: children.
+struct Interior<T> {
+    children: Vec<Option<Box<T>>>,
+}
+
+impl<T> Interior<T> {
+    fn new() -> Self {
+        Self { children: (0..FANOUT).map(|_| None).collect() }
+    }
+}
+
+type L2 = Interior<L1>;
+type L3 = Interior<L2>;
+type L4 = Interior<L3>;
+
+/// One process's address space: the 4-level tree.
+pub struct AddressSpace {
+    pub pid: Pid,
+    root: L4,
+    mapped: u64,
+}
+
+fn idx(vpage: VPage, level: u32) -> usize {
+    ((vpage >> (BITS * level)) & (FANOUT as u64 - 1)) as usize
+}
+
+impl AddressSpace {
+    pub fn new(pid: Pid) -> Self {
+        Self { pid, root: L4::new(), mapped: 0 }
+    }
+
+    pub fn mapped_pages(&self) -> u64 {
+        self.mapped
+    }
+
+    /// Walk the tree; `None` on any non-present level.
+    pub fn translate(&self, vpage: VPage) -> Option<PhysLoc> {
+        let l3 = self.root.children[idx(vpage, 3)].as_ref()?;
+        let l2 = l3.children[idx(vpage, 2)].as_ref()?;
+        let l1 = l2.children[idx(vpage, 1)].as_ref()?;
+        l1.entries[idx(vpage, 0)]
+    }
+
+    /// Install a mapping, allocating interior nodes on demand.
+    pub fn map(&mut self, vpage: VPage, loc: PhysLoc) {
+        let l3 = self.root.children[idx(vpage, 3)].get_or_insert_with(|| Box::new(L3::new()));
+        let l2 = l3.children[idx(vpage, 2)].get_or_insert_with(|| Box::new(L2::new()));
+        let l1 = l2.children[idx(vpage, 1)].get_or_insert_with(|| Box::new(L1::new()));
+        let slot = &mut l1.entries[idx(vpage, 0)];
+        if slot.is_none() {
+            self.mapped += 1;
+        }
+        *slot = Some(loc);
+    }
+
+    /// Replace an existing mapping (page remap / migration commit).
+    pub fn remap(&mut self, vpage: VPage, loc: PhysLoc) {
+        debug_assert!(self.translate(vpage).is_some(), "remap of unmapped page");
+        self.map(vpage, loc);
+    }
+
+    /// Remove a mapping; returns the old location.
+    pub fn unmap(&mut self, vpage: VPage) -> Option<PhysLoc> {
+        let l3 = self.root.children[idx(vpage, 3)].as_mut()?;
+        let l2 = l3.children[idx(vpage, 2)].as_mut()?;
+        let l1 = l2.children[idx(vpage, 1)].as_mut()?;
+        let old = l1.entries[idx(vpage, 0)].take();
+        if old.is_some() {
+            self.mapped -= 1;
+        }
+        old
+    }
+
+    /// Enumerate all mappings (walks the whole tree; analysis only).
+    pub fn mappings(&self) -> Vec<(VPage, PhysLoc)> {
+        let mut out = Vec::with_capacity(self.mapped as usize);
+        for (i3, l3) in self.root.children.iter().enumerate() {
+            let Some(l3) = l3 else { continue };
+            for (i2, l2) in l3.children.iter().enumerate() {
+                let Some(l2) = l2 else { continue };
+                for (i1, l1) in l2.children.iter().enumerate() {
+                    let Some(l1) = l1 else { continue };
+                    for (i0, e) in l1.entries.iter().enumerate() {
+                        if let Some(loc) = e {
+                            let vpage = ((i3 as u64) << (BITS * 3))
+                                | ((i2 as u64) << (BITS * 2))
+                                | ((i1 as u64) << BITS)
+                                | i0 as u64;
+                            out.push((vpage, *loc));
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_tree_translate() {
+        let mut a = AddressSpace::new(1);
+        assert_eq!(a.translate(0), None);
+        a.map(0, PhysLoc { cube: 1, frame: 10 });
+        // A vpage sharing no interior nodes (differs in the top level).
+        a.map(1 << 27, PhysLoc { cube: 2, frame: 20 });
+        assert_eq!(a.translate(0).unwrap().frame, 10);
+        assert_eq!(a.translate(1 << 27).unwrap().cube, 2);
+        assert_eq!(a.translate(12345), None);
+        assert_eq!(a.mapped_pages(), 2);
+    }
+
+    #[test]
+    fn remap_replaces() {
+        let mut a = AddressSpace::new(1);
+        a.map(99, PhysLoc { cube: 0, frame: 1 });
+        a.remap(99, PhysLoc { cube: 5, frame: 7 });
+        assert_eq!(a.translate(99), Some(PhysLoc { cube: 5, frame: 7 }));
+        assert_eq!(a.mapped_pages(), 1);
+    }
+
+    #[test]
+    fn unmap_removes() {
+        let mut a = AddressSpace::new(1);
+        a.map(4, PhysLoc { cube: 0, frame: 0 });
+        assert_eq!(a.unmap(4), Some(PhysLoc { cube: 0, frame: 0 }));
+        assert_eq!(a.translate(4), None);
+        assert_eq!(a.unmap(4), None);
+        assert_eq!(a.mapped_pages(), 0);
+    }
+
+    #[test]
+    fn mappings_enumerate_all() {
+        let mut a = AddressSpace::new(1);
+        let pages: Vec<VPage> = vec![0, 1, 511, 512, 1 << 18, (1 << 27) + 3];
+        for (i, &p) in pages.iter().enumerate() {
+            a.map(p, PhysLoc { cube: i % 4, frame: i as u64 });
+        }
+        let mut got: Vec<VPage> = a.mappings().into_iter().map(|(v, _)| v).collect();
+        got.sort_unstable();
+        let mut want = pages.clone();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,123 @@
+//! Small fully-associative TLB with LRU replacement, one per MC. A miss
+//! charges the 4-level walk latency to the issuing memory controller.
+
+use crate::config::{Pid, VPage};
+
+use super::page_table::PhysLoc;
+
+#[derive(Debug)]
+struct TlbEntry {
+    pid: Pid,
+    vpage: VPage,
+    loc: PhysLoc,
+    /// LRU stamp.
+    used: u64,
+}
+
+/// Fully-associative, LRU-replaced TLB.
+#[derive(Debug)]
+pub struct Tlb {
+    entries: Vec<TlbEntry>,
+    capacity: usize,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Tlb {
+    pub fn new(capacity: usize) -> Self {
+        Self { entries: Vec::with_capacity(capacity), capacity, clock: 0, hits: 0, misses: 0 }
+    }
+
+    pub fn lookup(&mut self, pid: Pid, vpage: VPage) -> Option<PhysLoc> {
+        self.clock += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.pid == pid && e.vpage == vpage) {
+            e.used = self.clock;
+            self.hits += 1;
+            Some(e.loc)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    pub fn insert(&mut self, pid: Pid, vpage: VPage, loc: PhysLoc) {
+        self.clock += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.pid == pid && e.vpage == vpage) {
+            e.loc = loc;
+            e.used = self.clock;
+            return;
+        }
+        if self.entries.len() >= self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.used)
+                .map(|(i, _)| i)
+                .unwrap();
+            self.entries.swap_remove(lru);
+        }
+        self.entries.push(TlbEntry { pid, vpage, loc, used: self.clock });
+    }
+
+    /// Invalidate a translation (page remapped by migration).
+    pub fn invalidate(&mut self, pid: Pid, vpage: VPage) {
+        self.entries.retain(|e| !(e.pid == pid && e.vpage == vpage));
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(cube: usize) -> PhysLoc {
+        PhysLoc { cube, frame: 0 }
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut t = Tlb::new(4);
+        assert_eq!(t.lookup(1, 10), None);
+        t.insert(1, 10, loc(3));
+        assert_eq!(t.lookup(1, 10), Some(loc(3)));
+        assert_eq!(t.hits, 1);
+        assert_eq!(t.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut t = Tlb::new(2);
+        t.insert(1, 1, loc(0));
+        t.insert(1, 2, loc(1));
+        t.lookup(1, 1); // touch 1 → 2 becomes LRU
+        t.insert(1, 3, loc(2));
+        assert_eq!(t.lookup(1, 2), None);
+        assert!(t.lookup(1, 1).is_some());
+        assert!(t.lookup(1, 3).is_some());
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut t = Tlb::new(4);
+        t.insert(1, 10, loc(3));
+        t.invalidate(1, 10);
+        assert_eq!(t.lookup(1, 10), None);
+    }
+
+    #[test]
+    fn pid_isolation() {
+        let mut t = Tlb::new(4);
+        t.insert(1, 10, loc(3));
+        assert_eq!(t.lookup(2, 10), None);
+    }
+}

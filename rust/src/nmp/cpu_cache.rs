@@ -1,0 +1,132 @@
+//! CPU-side cache model for PEI (paper §6.3): PEI "recognizes and tries
+//! to simultaneously exploit the benefit of cache memory as well as NMP";
+//! on a hit for at least one operand, the op is offloaded with that
+//! operand's data to the other source's location.
+//!
+//! Model: one shared last-level view of the CMP's caches (16 × 32 KiB,
+//! Table 1) — set-associative, 64 B lines, LRU.
+
+use crate::config::VAddr;
+
+const LINE_SHIFT: u32 = 6;
+const WAYS: usize = 8;
+
+#[derive(Debug, Clone, Copy)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    used: u64,
+}
+
+/// Set-associative LRU cache over virtual line addresses. PEI's cache
+/// check happens CPU-side, pre-translation, so virtual addresses are the
+/// right key (per-process tags avoid aliasing).
+#[derive(Debug)]
+pub struct CpuCache {
+    sets: Vec<[Line; WAYS]>,
+    num_sets: usize,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CpuCache {
+    /// `lines` = total line capacity (rounded down to a power-of-two set
+    /// count × 8 ways).
+    pub fn new(lines: usize) -> Self {
+        let num_sets = (lines / WAYS).next_power_of_two().max(1);
+        let num_sets = if num_sets * WAYS > lines.max(WAYS) { num_sets / 2 } else { num_sets };
+        let num_sets = num_sets.max(1);
+        Self {
+            sets: vec![[Line { tag: 0, valid: false, used: 0 }; WAYS]; num_sets],
+            num_sets,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn set_and_tag(&self, pid: u32, addr: VAddr) -> (usize, u64) {
+        let line = addr >> LINE_SHIFT;
+        let set = (line as usize ^ ((pid as usize) << 4)) & (self.num_sets - 1);
+        let tag = (line << 8) | pid as u64;
+        (set, tag)
+    }
+
+    /// Probe without fill.
+    pub fn probe(&mut self, pid: u32, addr: VAddr) -> bool {
+        self.clock += 1;
+        let (set, tag) = self.set_and_tag(pid, addr);
+        for l in self.sets[set].iter_mut() {
+            if l.valid && l.tag == tag {
+                l.used = self.clock;
+                self.hits += 1;
+                return true;
+            }
+        }
+        self.misses += 1;
+        false
+    }
+
+    /// Fill a line (CPU touched this data).
+    pub fn fill(&mut self, pid: u32, addr: VAddr) {
+        self.clock += 1;
+        let (set, tag) = self.set_and_tag(pid, addr);
+        // Already present → refresh.
+        if let Some(l) = self.sets[set].iter_mut().find(|l| l.valid && l.tag == tag) {
+            l.used = self.clock;
+            return;
+        }
+        let victim = self.sets[set]
+            .iter_mut()
+            .min_by_key(|l| if l.valid { l.used } else { 0 })
+            .unwrap();
+        *victim = Line { tag, valid: true, used: self.clock };
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_miss_then_hit_after_fill() {
+        let mut c = CpuCache::new(1024);
+        assert!(!c.probe(1, 0x1000));
+        c.fill(1, 0x1000);
+        assert!(c.probe(1, 0x1000));
+        // Same line, different offset.
+        assert!(c.probe(1, 0x103f));
+        // Different line.
+        assert!(!c.probe(1, 0x1040));
+    }
+
+    #[test]
+    fn pid_isolation() {
+        let mut c = CpuCache::new(1024);
+        c.fill(1, 0x1000);
+        assert!(!c.probe(2, 0x1000));
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        let mut c = CpuCache::new(64); // 8 sets × 8 ways
+        // Fill 9 lines mapping to the same set: line stride = num_sets.
+        let stride = (c.num_sets as u64) << LINE_SHIFT;
+        for i in 0..9u64 {
+            c.fill(1, i * stride);
+        }
+        // Oldest line evicted.
+        assert!(!c.probe(1, 0));
+        assert!(c.probe(1, 8 * stride));
+    }
+}

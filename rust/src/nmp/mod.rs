@@ -1,0 +1,100 @@
+//! NMP operation format and the three offloading techniques the paper
+//! evaluates (§6.3): BNMP, LDB and PEI.
+//!
+//! The op format follows the paper: `<&dest += &src1 OP &src2>` — a
+//! destination accumulator page plus one or two source operands.
+
+pub mod cpu_cache;
+pub mod technique;
+
+pub use cpu_cache::CpuCache;
+pub use technique::{schedule, ScheduleDecision};
+
+use crate::config::{Pid, VAddr, PAGE_SHIFT};
+
+/// Arithmetic performed on the base die (latency-identical in the model;
+/// kept for trace realism and analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Add,
+    Mul,
+    Mac,
+    Max,
+    Min,
+}
+
+/// One NMP operation from an application trace.
+#[derive(Debug, Clone, Copy)]
+pub struct NmpOp {
+    pub pid: Pid,
+    pub kind: OpKind,
+    pub dest: VAddr,
+    pub src1: VAddr,
+    pub src2: Option<VAddr>,
+}
+
+impl NmpOp {
+    pub fn dest_vpage(&self) -> u64 {
+        self.dest >> PAGE_SHIFT
+    }
+
+    pub fn src1_vpage(&self) -> u64 {
+        self.src1 >> PAGE_SHIFT
+    }
+
+    pub fn src2_vpage(&self) -> Option<u64> {
+        self.src2.map(|s| s >> PAGE_SHIFT)
+    }
+
+    /// All distinct virtual pages this op touches.
+    pub fn vpages(&self) -> Vec<u64> {
+        let (arr, n) = self.vpages_arr();
+        arr[..n].to_vec()
+    }
+
+    /// Alloc-free variant for hot paths: distinct pages + count.
+    #[inline]
+    pub fn vpages_arr(&self) -> ([u64; 3], usize) {
+        let d = self.dest_vpage();
+        let s1 = self.src1_vpage();
+        let mut arr = [d, 0, 0];
+        let mut n = 1;
+        if s1 != d {
+            arr[n] = s1;
+            n += 1;
+        }
+        if let Some(s2) = self.src2_vpage() {
+            if s2 != d && s2 != s1 {
+                arr[n] = s2;
+                n += 1;
+            }
+        }
+        arr[..n].sort_unstable();
+        (arr, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vpages_dedup() {
+        let op = NmpOp {
+            pid: 1,
+            kind: OpKind::Add,
+            dest: 0x1000,
+            src1: 0x1008, // same page as dest
+            src2: Some(0x2000),
+        };
+        assert_eq!(op.vpages(), vec![1, 2]);
+    }
+
+    #[test]
+    fn page_extraction() {
+        let op = NmpOp { pid: 1, kind: OpKind::Mac, dest: 0x3040, src1: 0x5000, src2: None };
+        assert_eq!(op.dest_vpage(), 3);
+        assert_eq!(op.src1_vpage(), 5);
+        assert_eq!(op.src2_vpage(), None);
+    }
+}

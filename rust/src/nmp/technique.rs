@@ -1,0 +1,137 @@
+//! NMP-op scheduling: where does an operation compute? (paper §6.3)
+//!
+//! * **BNMP** — Active-Routing-style: compute at the destination page's
+//!   host cube (the NMP-op table entry is made there; sources are fetched
+//!   from their cubes).
+//! * **LDB** — load balancing: most applications touch many more source
+//!   pages than destination pages, so computing at the *first source's*
+//!   cube spreads NMP-table load; the result is written back to the
+//!   destination cube afterwards.
+//! * **PEI** — cache-aware: if at least one operand hits in the CPU
+//!   cache, offload the op *with* that operand's data to the other
+//!   source's cube (one fetch saved); otherwise behave like BNMP. PEI
+//!   also warms the cache with the operands it touches.
+
+use crate::config::{CubeId, Technique};
+use crate::cube::PhysAddr;
+
+use super::cpu_cache::CpuCache;
+use super::NmpOp;
+
+/// Outcome of the scheduling decision for one op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleDecision {
+    /// Cube where the NMP-op table entry is allocated and the ALU runs.
+    pub compute_cube: CubeId,
+    /// Operands whose data rides in the dispatch packet (no fetch).
+    pub carried_operands: u8,
+}
+
+/// Decide the compute cube per the technique. `dest/src1/src2` are the
+/// post-translation physical locations of the operands.
+pub fn schedule(
+    technique: Technique,
+    op: &NmpOp,
+    dest: PhysAddr,
+    src1: PhysAddr,
+    src2: Option<PhysAddr>,
+    cache: &mut CpuCache,
+) -> ScheduleDecision {
+    match technique {
+        Technique::Bnmp => ScheduleDecision { compute_cube: dest.cube, carried_operands: 0 },
+        Technique::Ldb => ScheduleDecision { compute_cube: src1.cube, carried_operands: 0 },
+        Technique::Pei => {
+            let hit1 = cache.probe(op.pid, op.src1);
+            let hit2 = op.src2.map(|a| cache.probe(op.pid, a)).unwrap_or(false);
+            // PEI warms the cache with what the CPU saw.
+            cache.fill(op.pid, op.src1);
+            if let Some(a) = op.src2 {
+                cache.fill(op.pid, a);
+            }
+            match (hit1, hit2, src2) {
+                // src1 cached → carry it, compute at the other source.
+                (true, _, Some(s2)) => {
+                    ScheduleDecision { compute_cube: s2.cube, carried_operands: 1 }
+                }
+                // only src2 cached → carry it, compute at src1's cube.
+                (false, true, Some(_)) => {
+                    ScheduleDecision { compute_cube: src1.cube, carried_operands: 1 }
+                }
+                // single-source op with the source cached → compute at the
+                // destination, operand carried.
+                (true, _, None) => {
+                    ScheduleDecision { compute_cube: dest.cube, carried_operands: 1 }
+                }
+                // no hits → BNMP behaviour.
+                _ => ScheduleDecision { compute_cube: dest.cube, carried_operands: 0 },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmp::OpKind;
+
+    fn op(src2: bool) -> NmpOp {
+        NmpOp {
+            pid: 1,
+            kind: OpKind::Add,
+            dest: 0x10_000,
+            src1: 0x20_000,
+            src2: src2.then_some(0x30_000),
+        }
+    }
+
+    fn pa(cube: CubeId) -> PhysAddr {
+        PhysAddr::new(cube, 0)
+    }
+
+    #[test]
+    fn bnmp_computes_at_dest() {
+        let mut cache = CpuCache::new(64);
+        let d = schedule(Technique::Bnmp, &op(true), pa(3), pa(5), Some(pa(9)), &mut cache);
+        assert_eq!(d, ScheduleDecision { compute_cube: 3, carried_operands: 0 });
+    }
+
+    #[test]
+    fn ldb_computes_at_first_source() {
+        let mut cache = CpuCache::new(64);
+        let d = schedule(Technique::Ldb, &op(true), pa(3), pa(5), Some(pa(9)), &mut cache);
+        assert_eq!(d.compute_cube, 5);
+    }
+
+    #[test]
+    fn pei_cold_cache_behaves_like_bnmp() {
+        let mut cache = CpuCache::new(64);
+        let d = schedule(Technique::Pei, &op(true), pa(3), pa(5), Some(pa(9)), &mut cache);
+        assert_eq!(d, ScheduleDecision { compute_cube: 3, carried_operands: 0 });
+    }
+
+    #[test]
+    fn pei_hit_offloads_to_other_source() {
+        let mut cache = CpuCache::new(64);
+        // Warm src1.
+        cache.fill(1, 0x20_000);
+        let d = schedule(Technique::Pei, &op(true), pa(3), pa(5), Some(pa(9)), &mut cache);
+        assert_eq!(d, ScheduleDecision { compute_cube: 9, carried_operands: 1 });
+    }
+
+    #[test]
+    fn pei_second_use_hits_via_warming() {
+        let mut cache = CpuCache::new(64);
+        let _ = schedule(Technique::Pei, &op(true), pa(3), pa(5), Some(pa(9)), &mut cache);
+        // First call warmed both sources; second probes must hit.
+        let d = schedule(Technique::Pei, &op(true), pa(3), pa(5), Some(pa(9)), &mut cache);
+        assert_eq!(d.carried_operands, 1);
+    }
+
+    #[test]
+    fn pei_single_source_hit_computes_at_dest_carried() {
+        let mut cache = CpuCache::new(64);
+        cache.fill(1, 0x20_000);
+        let d = schedule(Technique::Pei, &op(false), pa(3), pa(5), None, &mut cache);
+        assert_eq!(d, ScheduleDecision { compute_cube: 3, carried_operands: 1 });
+    }
+}

@@ -1,0 +1,527 @@
+//! The mesh fabric: topology, XY routing, credit flow control, link
+//! serialization and per-node delivery queues.
+//!
+//! Model granularity: packets (not individual flits) are the switched
+//! unit; a packet occupies an output link for `ceil(size/link_bits)`
+//! cycles (serialization) and reaches the neighbouring router's input
+//! buffer after the 3-cycle router pipeline. Finite input buffers plus
+//! credit checks create the backpressure and congestion the paper's
+//! hop-count/latency analysis (§7.4) depends on.
+
+use crate::config::{CubeId, McId, SystemConfig};
+use crate::sim::Cycle;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::packet::{NodeId, Packet, NUM_CLASSES};
+use super::router::{Dir, Router, NUM_PORTS};
+
+/// A packet traversing a link, due to arrive at `arrival`.
+#[derive(Debug)]
+struct InFlight {
+    arrival: Cycle,
+    seq: u64,
+    /// Boxed: heap sift operations move 16 bytes instead of ~140.
+    packet: Box<Packet>,
+    router: usize,
+    port: usize,
+    class: usize,
+}
+
+impl PartialEq for InFlight {
+    fn eq(&self, other: &Self) -> bool {
+        (self.arrival, self.seq) == (other.arrival, other.seq)
+    }
+}
+impl Eq for InFlight {}
+impl PartialOrd for InFlight {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for InFlight {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.arrival, self.seq).cmp(&(other.arrival, other.seq))
+    }
+}
+
+/// Aggregate network statistics (feed Fig 7 and the energy model).
+#[derive(Debug, Clone, Default)]
+pub struct NocStats {
+    pub delivered: u64,
+    pub total_hops: u64,
+    pub total_latency: u64,
+    /// Σ cycles packets spent waiting in router input buffers.
+    pub total_queue_wait: u64,
+    /// Forward events (denominator for per-hop queue wait).
+    pub forwards: u64,
+    /// Σ size_bits × hops — ×5 pJ/bit/hop gives network energy (§7.7).
+    pub bit_hops: u64,
+    pub injected: u64,
+    pub inject_rejected: u64,
+}
+
+impl NocStats {
+    pub fn avg_hops(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_hops as f64 / self.delivered as f64
+        }
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        if self.delivered == 0 {
+            0.0
+        } else {
+            self.total_latency as f64 / self.delivered as f64
+        }
+    }
+}
+
+/// The mesh network connecting memory cubes and (at the corners) MCs.
+pub struct Mesh {
+    pub cols: usize,
+    pub rows: usize,
+    routers: Vec<Router>,
+    wire: BinaryHeap<Reverse<InFlight>>,
+    seq: u64,
+    next_packet_id: u64,
+    router_pipeline: u64,
+    link_bits: u64,
+    /// Cube each MC hangs off (index = MC id).
+    mc_attach: Vec<CubeId>,
+    /// Per-cube and per-MC delivery queues (drained by owners each cycle).
+    pub delivered_cube: Vec<Vec<Packet>>,
+    pub delivered_mc: Vec<Vec<Packet>>,
+    pub stats: NocStats,
+}
+
+impl Mesh {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n = cfg.num_cubes();
+        let routers = (0..n).map(|c| Router::new(c, cfg.router_buf_cap)).collect();
+        let mc_attach = (0..cfg.num_mcs()).map(|m| cfg.mc_attach_cube(m)).collect();
+        Self {
+            cols: cfg.mesh_cols,
+            rows: cfg.mesh_rows,
+            routers,
+            wire: BinaryHeap::new(),
+            seq: 0,
+            next_packet_id: 0,
+            router_pipeline: cfg.timing.router_pipeline,
+            link_bits: cfg.timing.link_bits,
+            mc_attach,
+            delivered_cube: vec![Vec::new(); n],
+            delivered_mc: vec![Vec::new(); cfg.num_mcs()],
+            stats: NocStats::default(),
+        }
+    }
+
+    pub fn xy(&self, cube: CubeId) -> (usize, usize) {
+        (cube % self.cols, cube / self.cols)
+    }
+
+    pub fn cube_at(&self, x: usize, y: usize) -> CubeId {
+        y * self.cols + x
+    }
+
+    /// Mesh neighbours of a cube (2–4 of them).
+    pub fn neighbors(&self, cube: CubeId) -> Vec<CubeId> {
+        let (x, y) = self.xy(cube);
+        let mut out = Vec::with_capacity(4);
+        if y > 0 {
+            out.push(self.cube_at(x, y - 1));
+        }
+        if y + 1 < self.rows {
+            out.push(self.cube_at(x, y + 1));
+        }
+        if x > 0 {
+            out.push(self.cube_at(x - 1, y));
+        }
+        if x + 1 < self.cols {
+            out.push(self.cube_at(x + 1, y));
+        }
+        out
+    }
+
+    /// Diagonal-opposite cube in the 2D array (the paper's "far" target).
+    pub fn diagonal_opposite(&self, cube: CubeId) -> CubeId {
+        let (x, y) = self.xy(cube);
+        self.cube_at(self.cols - 1 - x, self.rows - 1 - y)
+    }
+
+    /// Manhattan hop distance between two nodes' routers.
+    pub fn hop_distance(&self, a: NodeId, b: NodeId) -> u32 {
+        let ra = self.router_of(a);
+        let rb = self.router_of(b);
+        let (ax, ay) = self.xy(ra);
+        let (bx, by) = self.xy(rb);
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+    }
+
+    pub fn router_of(&self, node: NodeId) -> CubeId {
+        match node {
+            NodeId::Cube(c) => c,
+            NodeId::Mc(m) => self.mc_attach[m],
+        }
+    }
+
+    pub fn mc_attach_cube(&self, mc: McId) -> CubeId {
+        self.mc_attach[mc]
+    }
+
+    pub fn fresh_packet_id(&mut self) -> u64 {
+        self.next_packet_id += 1;
+        self.next_packet_id
+    }
+
+    /// XY output port at router `at` toward destination router `dst`.
+    fn route(&self, at: CubeId, dst_router: CubeId, dst: NodeId) -> Dir {
+        if at == dst_router {
+            return match dst {
+                NodeId::Cube(_) => Dir::Local,
+                NodeId::Mc(_) => Dir::Mc,
+            };
+        }
+        let (x, y) = self.xy(at);
+        let (dx, dy) = self.xy(dst_router);
+        if x < dx {
+            Dir::East
+        } else if x > dx {
+            Dir::West
+        } else if y < dy {
+            Dir::South
+        } else {
+            Dir::North
+        }
+    }
+
+    /// Inject a packet at its source node. Fails (backpressure) when the
+    /// source router's injection buffer has no credit.
+    pub fn inject(&mut self, packet: Packet) -> Result<(), Packet> {
+        let router = self.router_of(packet.src);
+        let port = match packet.src {
+            NodeId::Cube(_) => Dir::Local as usize,
+            NodeId::Mc(_) => Dir::Mc as usize,
+        };
+        let class = packet.class() as usize;
+        let r = &mut self.routers[router];
+        match r.in_q[port][class].push(packet) {
+            Ok(()) => {
+                r.buffered_count += 1;
+                r.mark_queue(port, class);
+                self.stats.injected += 1;
+                Ok(())
+            }
+            Err(p) => {
+                self.stats.inject_rejected += 1;
+                Err(p)
+            }
+        }
+    }
+
+    /// Advance the fabric one cycle.
+    pub fn tick(&mut self, now: Cycle) {
+        // 1. Land matured in-flight packets into their reserved buffers.
+        while let Some(Reverse(head)) = self.wire.peek() {
+            if head.arrival > now {
+                break;
+            }
+            let Reverse(f) = self.wire.pop().unwrap();
+            let r = &mut self.routers[f.router];
+            r.reserved[f.port][f.class] -= 1;
+            let mut pk = *f.packet;
+            pk.queued_at = f.arrival;
+            r.in_q[f.port][f.class]
+                .push(pk)
+                .unwrap_or_else(|_| panic!("credit flow control violated"));
+            r.buffered_count += 1;
+            r.mark_queue(f.port, f.class);
+        }
+
+        // 2. Switch allocation per router: response class first (drain),
+        //    one forward per input port, one acceptance per output port.
+        for ri in 0..self.routers.len() {
+            if self.routers[ri].buffered_count == 0 {
+                continue; // idle router fast path
+            }
+            let mut out_used = [false; NUM_PORTS];
+            let rr = self.routers[ri].rr;
+            let occupied = self.routers[ri].occupied;
+            for class in (0..NUM_CLASSES).rev() {
+                for p in 0..NUM_PORTS {
+                    let port = (p + rr) % NUM_PORTS;
+                    if occupied & (1 << (port * NUM_CLASSES + class)) != 0 {
+                        self.try_forward(ri, port, class, &mut out_used, now);
+                    }
+                }
+            }
+            self.routers[ri].rr = (rr + 1) % NUM_PORTS;
+        }
+    }
+
+    fn try_forward(
+        &mut self,
+        ri: usize,
+        port: usize,
+        class: usize,
+        out_used: &mut [bool; NUM_PORTS],
+        now: Cycle,
+    ) {
+        let (dst, dst_router) = {
+            let r = &self.routers[ri];
+            match r.in_q[port][class].peek() {
+                Some(pk) => (pk.dst, self.router_of(pk.dst)),
+                None => return,
+            }
+        };
+        let at = self.routers[ri].cube;
+        let out = self.route(at, dst_router, dst);
+        let out_idx = out as usize;
+        if out_used[out_idx] {
+            return;
+        }
+
+        match out {
+            Dir::Local => {
+                let pk = self.routers[ri].in_q[port][class].pop().unwrap();
+                self.routers[ri].buffered_count -= 1;
+                self.routers[ri].unmark_if_empty(port, class);
+                out_used[out_idx] = true;
+                self.stats.total_queue_wait += now.saturating_sub(pk.queued_at);
+                self.stats.forwards += 1;
+                self.record_delivery(&pk, now);
+                self.delivered_cube[at].push(pk);
+            }
+            Dir::Mc => {
+                let pk = self.routers[ri].in_q[port][class].pop().unwrap();
+                self.routers[ri].buffered_count -= 1;
+                self.routers[ri].unmark_if_empty(port, class);
+                out_used[out_idx] = true;
+                self.stats.total_queue_wait += now.saturating_sub(pk.queued_at);
+                self.stats.forwards += 1;
+                let mc = self
+                    .mc_attach
+                    .iter()
+                    .position(|&c| c == at)
+                    .expect("Mc-port ejection at a router with no attached MC");
+                self.record_delivery(&pk, now);
+                self.delivered_mc[mc].push(pk);
+            }
+            dir => {
+                // Mesh hop: check link availability + downstream credit.
+                if self.routers[ri].link_busy_until[out_idx] > now {
+                    return;
+                }
+                let (x, y) = self.xy(at);
+                let next = match dir {
+                    Dir::North => self.cube_at(x, y - 1),
+                    Dir::South => self.cube_at(x, y + 1),
+                    Dir::East => self.cube_at(x + 1, y),
+                    Dir::West => self.cube_at(x - 1, y),
+                    _ => unreachable!(),
+                };
+                let in_port = dir.opposite() as usize;
+                if self.routers[next].free_slots(in_port, class) == 0 {
+                    return;
+                }
+                let mut pk = self.routers[ri].in_q[port][class].pop().unwrap();
+                self.routers[ri].buffered_count -= 1;
+                self.routers[ri].unmark_if_empty(port, class);
+                out_used[out_idx] = true;
+                self.stats.total_queue_wait += now.saturating_sub(pk.queued_at);
+                self.stats.forwards += 1;
+                pk.hops += 1;
+                self.stats.bit_hops += pk.size_bits;
+                let ser = pk.size_bits.div_ceil(self.link_bits).max(1);
+                self.routers[ri].link_busy_until[out_idx] = now + ser;
+                self.routers[next].reserved[in_port][class] += 1;
+                self.seq += 1;
+                self.wire.push(Reverse(InFlight {
+                    arrival: now + self.router_pipeline + ser,
+                    seq: self.seq,
+                    packet: Box::new(pk),
+                    router: next,
+                    port: in_port,
+                    class,
+                }));
+            }
+        }
+    }
+
+    fn record_delivery(&mut self, pk: &Packet, now: Cycle) {
+        self.stats.delivered += 1;
+        self.stats.total_hops += pk.hops as u64;
+        self.stats.total_latency += now.saturating_sub(pk.injected_at);
+    }
+
+    /// True when no packet is buffered or in flight anywhere.
+    pub fn is_idle(&self) -> bool {
+        self.wire.is_empty() && self.routers.iter().all(|r| r.buffered() == 0)
+    }
+
+    /// Total buffered packets across all routers (congestion signal).
+    pub fn total_buffered(&self) -> usize {
+        self.routers.iter().map(|r| r.buffered()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cube::PhysAddr;
+    use crate::noc::packet::Payload;
+
+    fn test_cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn mk_packet(mesh: &mut Mesh, src: NodeId, dst: NodeId, now: Cycle) -> Packet {
+        let id = mesh.fresh_packet_id();
+        Packet::new(
+            id,
+            src,
+            dst,
+            Payload::SourceReq { token: id, addr: PhysAddr::new(0, 0), reply_to: 0 },
+            now,
+        )
+    }
+
+    /// Drive the mesh until idle or a cycle limit.
+    fn run_until_idle(mesh: &mut Mesh, mut now: Cycle, limit: u64) -> Cycle {
+        for _ in 0..limit {
+            mesh.tick(now);
+            if mesh.is_idle() {
+                break;
+            }
+            now += 1;
+        }
+        now
+    }
+
+    #[test]
+    fn delivers_across_mesh() {
+        let cfg = test_cfg();
+        let mut mesh = Mesh::new(&cfg);
+        let pk = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(15), 0);
+        mesh.inject(pk).unwrap();
+        run_until_idle(&mut mesh, 0, 1000);
+        assert_eq!(mesh.delivered_cube[15].len(), 1);
+        // 4x4 corner-to-corner = 3 + 3 hops.
+        assert_eq!(mesh.delivered_cube[15][0].hops, 6);
+    }
+
+    #[test]
+    fn local_delivery_zero_hops() {
+        let cfg = test_cfg();
+        let mut mesh = Mesh::new(&cfg);
+        let pk = mk_packet(&mut mesh, NodeId::Cube(5), NodeId::Cube(5), 0);
+        mesh.inject(pk).unwrap();
+        run_until_idle(&mut mesh, 0, 100);
+        assert_eq!(mesh.delivered_cube[5].len(), 1);
+        assert_eq!(mesh.delivered_cube[5][0].hops, 0);
+    }
+
+    #[test]
+    fn mc_port_delivery() {
+        let cfg = test_cfg();
+        let mut mesh = Mesh::new(&cfg);
+        let pk = mk_packet(&mut mesh, NodeId::Cube(10), NodeId::Mc(3), 0);
+        mesh.inject(pk).unwrap();
+        run_until_idle(&mut mesh, 0, 1000);
+        assert_eq!(mesh.delivered_mc[3].len(), 1);
+    }
+
+    #[test]
+    fn hop_distance_matches_manhattan() {
+        let cfg = test_cfg();
+        let mesh = Mesh::new(&cfg);
+        assert_eq!(mesh.hop_distance(NodeId::Cube(0), NodeId::Cube(15)), 6);
+        assert_eq!(mesh.hop_distance(NodeId::Cube(0), NodeId::Cube(1)), 1);
+        assert_eq!(mesh.hop_distance(NodeId::Cube(7), NodeId::Cube(7)), 0);
+    }
+
+    #[test]
+    fn diagonal_opposite_involution() {
+        let cfg = test_cfg();
+        let mesh = Mesh::new(&cfg);
+        for cube in 0..16 {
+            let opp = mesh.diagonal_opposite(cube);
+            assert_eq!(mesh.diagonal_opposite(opp), cube);
+        }
+        assert_eq!(mesh.diagonal_opposite(0), 15);
+        assert_eq!(mesh.diagonal_opposite(5), 10);
+    }
+
+    #[test]
+    fn neighbors_counts() {
+        let cfg = test_cfg();
+        let mesh = Mesh::new(&cfg);
+        assert_eq!(mesh.neighbors(0).len(), 2); // corner
+        assert_eq!(mesh.neighbors(1).len(), 3); // edge
+        assert_eq!(mesh.neighbors(5).len(), 4); // interior
+    }
+
+    #[test]
+    fn many_packets_all_delivered() {
+        let cfg = test_cfg();
+        let mut mesh = Mesh::new(&cfg);
+        let mut now: Cycle = 0;
+        let mut to_send: Vec<Packet> = (0..64)
+            .map(|i| {
+                let src = NodeId::Cube((i * 3) % 16);
+                let dst = NodeId::Cube((i * 7 + 5) % 16);
+                mk_packet(&mut mesh, src, dst, 0)
+            })
+            .collect();
+        let mut sent = 0u64;
+        while sent < 64 || !mesh.is_idle() {
+            while let Some(pk) = to_send.pop() {
+                match mesh.inject(pk) {
+                    Ok(()) => sent += 1,
+                    Err(pk) => {
+                        to_send.push(pk);
+                        break;
+                    }
+                }
+            }
+            mesh.tick(now);
+            now += 1;
+            assert!(now < 100_000, "network did not drain");
+        }
+        let total: usize = mesh.delivered_cube.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 64);
+        assert_eq!(mesh.stats.delivered, 64);
+    }
+
+    #[test]
+    fn congestion_backpressures_injection() {
+        let mut cfg = test_cfg();
+        cfg.router_buf_cap = 1;
+        let mut mesh = Mesh::new(&cfg);
+        // Flood one router's injection port without ticking: the second or
+        // third packet must be rejected (finite buffering).
+        let mut rejected = false;
+        for _ in 0..8 {
+            let pk = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(15), 0);
+            if mesh.inject(pk).is_err() {
+                rejected = true;
+                break;
+            }
+        }
+        assert!(rejected);
+        assert!(mesh.stats.inject_rejected > 0);
+    }
+
+    #[test]
+    fn bit_hops_accumulate() {
+        let cfg = test_cfg();
+        let mut mesh = Mesh::new(&cfg);
+        let pk = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(3), 0);
+        let bits = pk.size_bits;
+        mesh.inject(pk).unwrap();
+        run_until_idle(&mut mesh, 0, 1000);
+        assert_eq!(mesh.stats.bit_hops, bits * 3);
+    }
+}

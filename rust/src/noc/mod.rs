@@ -1,0 +1,15 @@
+//! Memory-cube network: a 2D mesh of 6-port, 3-stage-pipeline routers with
+//! virtual-channel buffering, credit (token) flow control and static XY
+//! routing — Table 1's "4×4 mesh, 3 stage router, 128 bit link bandwidth".
+//!
+//! Two traffic classes (request / response) ride disjoint buffer pools,
+//! which is how the real design uses its 5 VCs to rule out protocol
+//! deadlock (§6.2); within a class, XY routing is deadlock-free.
+
+pub mod mesh;
+pub mod packet;
+pub mod router;
+
+pub use mesh::{Mesh, NocStats};
+pub use packet::{NodeId, Packet, Payload, TrafficClass};
+pub use router::{Dir, Router};

@@ -1,0 +1,168 @@
+//! Packet model for the memory-cube network.
+//!
+//! Packets are the unit of switching; serialization over the 128-bit links
+//! is charged as `ceil(size_bits / link_bits)` cycles of link occupancy per
+//! hop. Payloads carry the simulation-level protocol: NMP-op dispatch,
+//! operand fetches, write-backs, ACKs, and migration DMA traffic.
+
+use crate::config::{CubeId, McId, VAddr};
+use crate::cube::PhysAddr;
+use crate::sim::Cycle;
+
+/// Endpoint of the network: a memory cube or a memory controller (MCs hang
+/// off their corner cube's router through a dedicated port).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeId {
+    Cube(CubeId),
+    Mc(McId),
+}
+
+/// Request/response separation — disjoint buffer pools per class prevent
+/// protocol deadlock (the paper's 5-VC routers serve the same purpose).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrafficClass {
+    Req = 0,
+    Resp = 1,
+}
+
+pub const NUM_CLASSES: usize = 2;
+
+/// Unique id of an in-flight NMP operation (assigned by the issuing MC).
+pub type OpToken = u64;
+/// Unique id of a migration job (assigned by the migration system).
+pub type MigToken = u64;
+
+/// Protocol payloads.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// MC → compute cube: start an NMP op. Operand physical addresses are
+    /// resolved by the MC (post V→P translation and remapping decisions).
+    NmpDispatch {
+        token: OpToken,
+        dest: PhysAddr,
+        src1: PhysAddr,
+        /// `None` for single-operand ops (e.g. reductions feeding an
+        /// accumulator page, or PEI ops whose other operand rode along).
+        src2: Option<PhysAddr>,
+        /// Number of operands already satisfied at dispatch (PEI carries a
+        /// cache-hit operand inline).
+        carried_operands: u8,
+        /// Virtual page of the destination, for page-info accounting.
+        dest_vpage: VAddr,
+    },
+    /// Compute cube → source cube: fetch an operand.
+    SourceReq { token: OpToken, addr: PhysAddr, reply_to: CubeId },
+    /// Source cube → compute cube: operand data.
+    SourceResp { token: OpToken, addr: PhysAddr },
+    /// Compute cube → destination cube: write back a remotely-computed
+    /// result (LDB and remapped-compute paths).
+    WriteReq { token: OpToken, addr: PhysAddr, reply_to: CubeId },
+    /// Destination cube → compute cube: write completed.
+    WriteAck { token: OpToken },
+    /// Compute cube → issuing MC: op finished (carries network latency
+    /// info the MC folds into the page-info cache, §5.1).
+    NmpAck { token: OpToken, compute_cube: CubeId },
+    /// MDMA → old host cube: read one migration chunk.
+    MigRead { token: MigToken, chunk: u32, old: CubeId, new: CubeId },
+    /// Old host cube → new host cube: one chunk of page data.
+    MigChunk { token: MigToken, chunk: u32, new: CubeId },
+    /// New host cube → MDMA: chunk landed.
+    MigChunkAck { token: MigToken, chunk: u32 },
+}
+
+impl Payload {
+    /// Traffic class for deadlock-free buffer separation.
+    pub fn class(&self) -> TrafficClass {
+        match self {
+            Payload::NmpDispatch { .. }
+            | Payload::SourceReq { .. }
+            | Payload::WriteReq { .. }
+            | Payload::MigRead { .. }
+            | Payload::MigChunk { .. } => TrafficClass::Req,
+            Payload::SourceResp { .. }
+            | Payload::WriteAck { .. }
+            | Payload::NmpAck { .. }
+            | Payload::MigChunkAck { .. } => TrafficClass::Resp,
+        }
+    }
+
+    /// Packet size in bits: header (128) plus any data beat.
+    /// Operand/result transfers move a 64 B beat (512 bits); migration
+    /// chunks move 256 B (2048 bits).
+    pub fn size_bits(&self) -> u64 {
+        const HDR: u64 = 128;
+        match self {
+            Payload::NmpDispatch { carried_operands, .. } => {
+                HDR + 128 + (*carried_operands as u64) * 512
+            }
+            Payload::SourceReq { .. } => HDR,
+            Payload::SourceResp { .. } => HDR + 512,
+            Payload::WriteReq { .. } => HDR + 512,
+            Payload::WriteAck { .. } => HDR,
+            Payload::NmpAck { .. } => HDR,
+            Payload::MigRead { .. } => HDR,
+            Payload::MigChunk { .. } => HDR + 2048,
+            Payload::MigChunkAck { .. } => HDR,
+        }
+    }
+}
+
+/// A packet in flight through the mesh.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub id: u64,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub payload: Payload,
+    pub size_bits: u64,
+    pub injected_at: Cycle,
+    /// Cycle this packet entered its current router input buffer
+    /// (queue-wait accounting).
+    pub queued_at: Cycle,
+    pub hops: u32,
+}
+
+impl Packet {
+    pub fn new(id: u64, src: NodeId, dst: NodeId, payload: Payload, now: Cycle) -> Self {
+        let size_bits = payload.size_bits();
+        Self { id, src, dst, payload, size_bits, injected_at: now, queued_at: now, hops: 0 }
+    }
+
+    pub fn class(&self) -> TrafficClass {
+        self.payload.class()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_partition_protocol() {
+        let req = Payload::SourceReq { token: 1, addr: PhysAddr::new(0, 0), reply_to: 0 };
+        let resp = Payload::SourceResp { token: 1, addr: PhysAddr::new(0, 0) };
+        assert_eq!(req.class(), TrafficClass::Req);
+        assert_eq!(resp.class(), TrafficClass::Resp);
+    }
+
+    #[test]
+    fn dispatch_with_carried_operand_is_bigger() {
+        let bare = Payload::NmpDispatch {
+            token: 0,
+            dest: PhysAddr::new(0, 0),
+            src1: PhysAddr::new(0, 64),
+            src2: None,
+            carried_operands: 0,
+            dest_vpage: 0,
+        };
+        let carried = Payload::NmpDispatch {
+            token: 0,
+            dest: PhysAddr::new(0, 0),
+            src1: PhysAddr::new(0, 64),
+            src2: None,
+            carried_operands: 1,
+            dest_vpage: 0,
+        };
+        assert!(carried.size_bits() > bare.size_bits());
+    }
+}

@@ -1,0 +1,131 @@
+//! 6-port mesh router: 4 mesh directions, a local (cube) port and an MC
+//! port. Three-stage pipeline per hop, per-class input buffering, credit
+//! flow control handled by the owning [`Mesh`](super::mesh::Mesh).
+
+use crate::config::CubeId;
+use crate::sim::{BoundedQueue, Cycle};
+
+use super::packet::{Packet, NUM_CLASSES};
+
+/// Router port directions. `Local` ejects/injects at the cube; `Mc` is the
+/// dedicated memory-controller port present on corner routers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    North = 0,
+    South = 1,
+    East = 2,
+    West = 3,
+    Local = 4,
+    Mc = 5,
+}
+
+pub const NUM_PORTS: usize = 6;
+
+impl Dir {
+    pub fn from_index(i: usize) -> Dir {
+        match i {
+            0 => Dir::North,
+            1 => Dir::South,
+            2 => Dir::East,
+            3 => Dir::West,
+            4 => Dir::Local,
+            5 => Dir::Mc,
+            _ => panic!("bad port index {i}"),
+        }
+    }
+
+    /// Input port on the neighbouring router after leaving through `self`.
+    pub fn opposite(self) -> Dir {
+        match self {
+            Dir::North => Dir::South,
+            Dir::South => Dir::North,
+            Dir::East => Dir::West,
+            Dir::West => Dir::East,
+            d => d,
+        }
+    }
+}
+
+/// Per-router state: input queues per (port, class), per-output link
+/// serialization bookkeeping, and a round-robin arbitration pointer.
+#[derive(Debug)]
+pub struct Router {
+    pub cube: CubeId,
+    /// Input buffers, indexed `[port][class]`.
+    pub in_q: Vec<[BoundedQueue<Packet>; NUM_CLASSES]>,
+    /// Cycle until which each output link is serializing a packet.
+    pub link_busy_until: [Cycle; NUM_PORTS],
+    /// Round-robin start port for switch allocation fairness.
+    pub rr: usize,
+    /// Credits reserved by packets already in flight toward each
+    /// `[port][class]` input buffer of *this* router.
+    pub reserved: [[u32; NUM_CLASSES]; NUM_PORTS],
+    /// Cached total buffered packets (fast-skip for idle routers).
+    pub buffered_count: u32,
+    /// Bitmask of non-empty input queues: bit `port * NUM_CLASSES + class`.
+    pub occupied: u16,
+}
+
+impl Router {
+    pub fn new(cube: CubeId, buf_cap: usize) -> Self {
+        let in_q = (0..NUM_PORTS)
+            .map(|_| [BoundedQueue::new(buf_cap), BoundedQueue::new(buf_cap)])
+            .collect();
+        Self {
+            cube,
+            in_q,
+            link_busy_until: [0; NUM_PORTS],
+            rr: 0,
+            reserved: [[0; NUM_CLASSES]; NUM_PORTS],
+            buffered_count: 0,
+            occupied: 0,
+        }
+    }
+
+    /// Free buffer slots for a given input port/class, accounting for
+    /// in-flight reservations (credit check).
+    pub fn free_slots(&self, port: usize, class: usize) -> u32 {
+        let q = &self.in_q[port][class];
+        let used = q.len() as u32 + self.reserved[port][class];
+        (q.capacity() as u32).saturating_sub(used)
+    }
+
+    /// Total buffered packets (for congestion metrics).
+    pub fn buffered(&self) -> usize {
+        self.in_q.iter().flat_map(|p| p.iter()).map(|q| q.len()).sum()
+    }
+
+    #[inline]
+    pub fn mark_queue(&mut self, port: usize, class: usize) {
+        self.occupied |= 1 << (port * NUM_CLASSES + class);
+    }
+
+    #[inline]
+    pub fn unmark_if_empty(&mut self, port: usize, class: usize) {
+        if self.in_q[port][class].is_empty() {
+            self.occupied &= !(1 << (port * NUM_CLASSES + class));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opposite_directions() {
+        assert_eq!(Dir::North.opposite(), Dir::South);
+        assert_eq!(Dir::East.opposite(), Dir::West);
+        assert_eq!(Dir::Local.opposite(), Dir::Local);
+    }
+
+    #[test]
+    fn credit_accounting() {
+        let mut r = Router::new(0, 4);
+        assert_eq!(r.free_slots(0, 0), 4);
+        r.reserved[0][0] = 3;
+        assert_eq!(r.free_slots(0, 0), 1);
+        r.reserved[0][0] = 9; // over-reservation must saturate, not wrap
+        assert_eq!(r.free_slots(0, 0), 0);
+    }
+}

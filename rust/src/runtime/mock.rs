@@ -1,0 +1,146 @@
+//! Dependency-free Q-function: a linear per-action approximator trained
+//! with the same DQN target rule. Used by unit/integration tests and as a
+//! graceful fallback when `artifacts/` is absent. NOT the paper's agent —
+//! the evaluation always runs the PJRT dueling network.
+
+use crate::sim::Rng;
+
+use super::{QFunction, TrainBatch, NUM_ACTIONS, STATE_DIM};
+
+/// Q(s, a) = w_a · s + b_a.
+pub struct LinearQ {
+    w: Vec<f32>, // NUM_ACTIONS × STATE_DIM
+    b: [f32; NUM_ACTIONS],
+    tw: Vec<f32>,
+    tb: [f32; NUM_ACTIONS],
+    lr: f32,
+    gamma: f32,
+    pub train_steps: u64,
+}
+
+impl LinearQ {
+    pub fn new(lr: f32, gamma: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> =
+            (0..NUM_ACTIONS * STATE_DIM).map(|_| (rng.f32() - 0.5) * 0.02).collect();
+        Self {
+            tw: w.clone(),
+            w,
+            b: [0.0; NUM_ACTIONS],
+            tb: [0.0; NUM_ACTIONS],
+            lr,
+            gamma,
+            train_steps: 0,
+        }
+    }
+
+    fn q_with(w: &[f32], b: &[f32; NUM_ACTIONS], s: &[f32]) -> [f32; NUM_ACTIONS] {
+        let mut out = *b;
+        for (a, out_a) in out.iter_mut().enumerate() {
+            let row = &w[a * STATE_DIM..(a + 1) * STATE_DIM];
+            *out_a += row.iter().zip(s).map(|(wi, si)| wi * si).sum::<f32>();
+        }
+        out
+    }
+}
+
+impl QFunction for LinearQ {
+    fn q_values(&mut self, s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]> {
+        anyhow::ensure!(s.len() == STATE_DIM);
+        Ok(Self::q_with(&self.w, &self.b, s))
+    }
+
+    fn train_batch(&mut self, batch: &TrainBatch) -> anyhow::Result<f32> {
+        batch.validate()?;
+        self.train_steps += 1;
+        let n = batch.a.len();
+        let mut loss = 0.0f32;
+        for i in 0..n {
+            let s = &batch.s[i * STATE_DIM..(i + 1) * STATE_DIM];
+            let s2 = &batch.s2[i * STATE_DIM..(i + 1) * STATE_DIM];
+            let a = batch.a[i] as usize;
+            let q = Self::q_with(&self.w, &self.b, s)[a];
+            let q2max = Self::q_with(&self.tw, &self.tb, s2)
+                .iter()
+                .copied()
+                .fold(f32::NEG_INFINITY, f32::max);
+            let y = batch.r[i] + self.gamma * (1.0 - batch.done[i]) * q2max;
+            let td = y - q;
+            loss += td * td;
+            let row = &mut self.w[a * STATE_DIM..(a + 1) * STATE_DIM];
+            for (wi, si) in row.iter_mut().zip(s) {
+                *wi += self.lr * td * si;
+            }
+            self.b[a] += self.lr * td;
+        }
+        Ok(loss / n as f32)
+    }
+
+    fn sync_target(&mut self) {
+        self.tw.copy_from_slice(&self.w);
+        self.tb = self.b;
+    }
+
+    fn backend(&self) -> &'static str {
+        "linear-mock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::BATCH;
+
+    fn batch_for_action(a: i32, r: f32) -> TrainBatch {
+        let mut s = vec![0.0; BATCH * STATE_DIM];
+        for i in 0..BATCH {
+            s[i * STATE_DIM] = 1.0;
+        }
+        TrainBatch {
+            s: s.clone(),
+            a: vec![a; BATCH],
+            r: vec![r; BATCH],
+            s2: s,
+            done: vec![1.0; BATCH],
+        }
+    }
+
+    #[test]
+    fn learns_action_values() {
+        let mut q = LinearQ::new(0.05, 0.9, 1);
+        for _ in 0..50 {
+            q.train_batch(&batch_for_action(3, 1.0)).unwrap();
+            q.train_batch(&batch_for_action(5, -1.0)).unwrap();
+        }
+        let mut s = vec![0.0; STATE_DIM];
+        s[0] = 1.0;
+        let qv = q.q_values(&s).unwrap();
+        assert!(qv[3] > 0.5, "q[3]={}", qv[3]);
+        assert!(qv[5] < -0.5, "q[5]={}", qv[5]);
+    }
+
+    #[test]
+    fn loss_decreases() {
+        let mut q = LinearQ::new(0.05, 0.9, 2);
+        let b = batch_for_action(0, 1.0);
+        let first = q.train_batch(&b).unwrap();
+        for _ in 0..30 {
+            q.train_batch(&b).unwrap();
+        }
+        let last = q.train_batch(&b).unwrap();
+        assert!(last < first);
+    }
+
+    #[test]
+    fn target_network_lags_until_sync() {
+        let mut q = LinearQ::new(0.05, 0.9, 3);
+        let b = batch_for_action(0, 1.0);
+        for _ in 0..10 {
+            q.train_batch(&b).unwrap();
+        }
+        // Online weights moved; target still initial.
+        assert_ne!(q.w, q.tw);
+        q.sync_target();
+        assert_eq!(q.w, q.tw);
+    }
+}

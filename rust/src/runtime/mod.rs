@@ -1,0 +1,121 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (python/compile/aot.py) and executes the AIMM Q-network from rust.
+//!
+//! This is the only place the three layers meet at run time: the L2 JAX
+//! model (with its L1 Pallas kernels already lowered inside) arrives as
+//! HLO text, is compiled once on the PJRT CPU client, and then serves the
+//! agent's inference and training calls with **no python anywhere**.
+//!
+//! The artifact contract (shapes, flat-parameter layout) is defined by
+//! python/compile/model.py and mirrored by the constants below; the
+//! manifest.json emitted alongside the artifacts is checked at load time
+//! so drift fails loudly instead of mis-executing.
+
+pub mod json;
+pub mod mock;
+pub mod params;
+pub mod pjrt;
+
+pub use mock::LinearQ;
+pub use params::{Manifest, ParamStore};
+pub use pjrt::PjrtQNet;
+
+use std::path::PathBuf;
+
+/// Agent state vector width — MUST equal model.STATE_DIM in python.
+pub const STATE_DIM: usize = 64;
+/// Action count — MUST equal model.NUM_ACTIONS.
+pub const NUM_ACTIONS: usize = 8;
+/// Training batch — MUST equal model.BATCH.
+pub const BATCH: usize = 32;
+/// Hidden width (for energy accounting of weight-matrix touches).
+pub const HIDDEN: usize = 128;
+
+/// One training batch in flat layout (`s`/`s2` are `BATCH × STATE_DIM`).
+#[derive(Debug, Clone)]
+pub struct TrainBatch {
+    pub s: Vec<f32>,
+    pub a: Vec<i32>,
+    pub r: Vec<f32>,
+    pub s2: Vec<f32>,
+    pub done: Vec<f32>,
+}
+
+impl TrainBatch {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.s.len() == BATCH * STATE_DIM, "bad s len {}", self.s.len());
+        anyhow::ensure!(self.s2.len() == BATCH * STATE_DIM, "bad s2 len");
+        anyhow::ensure!(self.a.len() == BATCH, "bad a len");
+        anyhow::ensure!(self.r.len() == BATCH, "bad r len");
+        anyhow::ensure!(self.done.len() == BATCH, "bad done len");
+        anyhow::ensure!(self.a.iter().all(|&a| (a as usize) < NUM_ACTIONS), "action out of range");
+        Ok(())
+    }
+}
+
+/// The Q-function the agent consults. Implemented by [`PjrtQNet`] (the
+/// real AOT-compiled network) and [`LinearQ`] (a dependency-free mock for
+/// tests and artifact-less environments).
+pub trait QFunction {
+    /// Q(s, ·) for a single state.
+    fn q_values(&mut self, s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]>;
+    /// One DQN training step; returns the batch loss.
+    fn train_batch(&mut self, batch: &TrainBatch) -> anyhow::Result<f32>;
+    /// Copy online parameters into the target network.
+    fn sync_target(&mut self);
+    /// Human-readable backend name (diagnostics).
+    fn backend(&self) -> &'static str;
+}
+
+/// Locate the artifacts directory: `$AIMM_ARTIFACTS`, then `artifacts/`
+/// relative to the working directory and its parents.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("AIMM_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.is_dir() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Build the best available Q-function: PJRT artifacts when present,
+/// otherwise the pure-rust mock (tests, CI without `make artifacts`).
+pub fn best_qfunction(lr: f32, gamma: f32, seed: u64) -> Box<dyn QFunction> {
+    match artifacts_dir().and_then(|d| PjrtQNet::load(&d, lr, gamma).ok()) {
+        Some(q) => Box::new(q),
+        None => Box::new(LinearQ::new(lr, gamma, seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_batch_validation() {
+        let good = TrainBatch {
+            s: vec![0.0; BATCH * STATE_DIM],
+            a: vec![0; BATCH],
+            r: vec![0.0; BATCH],
+            s2: vec![0.0; BATCH * STATE_DIM],
+            done: vec![0.0; BATCH],
+        };
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.a[0] = NUM_ACTIONS as i32;
+        assert!(bad.validate().is_err());
+        let mut short = good;
+        short.s.pop();
+        assert!(short.validate().is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Artifact manifest parsing and the flat-parameter store.
+//!
+//! `manifest.json` (written by python/compile/aot.py) pins the network
+//! dimensions and the flat-θ layout; loading verifies them against this
+//! crate's compiled-in constants so a stale artifact cannot silently
+//! mis-execute. `theta_init.bin` carries the He-initialised parameters as
+//! little-endian f32.
+
+use std::path::Path;
+
+use super::json::{self, Json};
+use super::{BATCH, NUM_ACTIONS, STATE_DIM};
+
+/// One named parameter slice of the flat vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub param_size: usize,
+    pub params: Vec<ParamSpec>,
+    pub infer_file: String,
+    pub train_file: String,
+    pub theta_init_file: String,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = json::parse(text)?;
+        let field = |k: &str| -> anyhow::Result<&Json> {
+            j.get(k).ok_or_else(|| anyhow::anyhow!("manifest missing key {k:?}"))
+        };
+        let usize_field = |k: &str| -> anyhow::Result<usize> {
+            field(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("manifest key {k:?} not a number"))
+        };
+        let params = field("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow::anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow::anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    start: p.get("start").and_then(Json::as_usize).unwrap_or(0),
+                    end: p.get("end").and_then(Json::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let artifacts = field("artifacts")?;
+        let art = |k: &str| -> anyhow::Result<String> {
+            Ok(artifacts
+                .get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("artifacts missing {k:?}"))?
+                .to_string())
+        };
+        Ok(Self {
+            state_dim: usize_field("state_dim")?,
+            num_actions: usize_field("num_actions")?,
+            hidden: usize_field("hidden")?,
+            batch: usize_field("batch")?,
+            param_size: usize_field("param_size")?,
+            params,
+            infer_file: art("infer")?,
+            train_file: art("train")?,
+            theta_init_file: art("theta_init")?,
+        })
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let m = Self::parse(&text)?;
+        m.check_contract()?;
+        Ok(m)
+    }
+
+    /// Verify the artifact matches this build's compiled-in interface.
+    pub fn check_contract(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.state_dim == STATE_DIM,
+            "artifact state_dim {} != crate {}",
+            self.state_dim,
+            STATE_DIM
+        );
+        anyhow::ensure!(
+            self.num_actions == NUM_ACTIONS,
+            "artifact num_actions {} != crate {}",
+            self.num_actions,
+            NUM_ACTIONS
+        );
+        anyhow::ensure!(self.batch == BATCH, "artifact batch {} != crate {}", self.batch, BATCH);
+        let spec_total: usize = self.params.iter().map(|p| p.end - p.start).sum();
+        anyhow::ensure!(
+            spec_total == self.param_size,
+            "param spec total {spec_total} != param_size {}",
+            self.param_size
+        );
+        Ok(())
+    }
+}
+
+/// Online/target parameters plus Adam moments, all flat f32.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub theta: Vec<f32>,
+    pub target_theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Adam step count (1-based at first update).
+    pub t: u64,
+}
+
+impl ParamStore {
+    /// Load `theta_init.bin` (little-endian f32) and zeroed moments.
+    pub fn load(dir: &Path, manifest: &Manifest) -> anyhow::Result<Self> {
+        let bytes = std::fs::read(dir.join(&manifest.theta_init_file))?;
+        anyhow::ensure!(
+            bytes.len() == manifest.param_size * 4,
+            "theta_init.bin is {} bytes, expected {}",
+            bytes.len(),
+            manifest.param_size * 4
+        );
+        let theta: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Self::from_theta(theta))
+    }
+
+    pub fn from_theta(theta: Vec<f32>) -> Self {
+        let n = theta.len();
+        Self {
+            target_theta: theta.clone(),
+            theta,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    pub fn sync_target(&mut self) {
+        self.target_theta.copy_from_slice(&self.theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_text(state_dim: usize) -> String {
+        format!(
+            r#"{{
+              "state_dim": {state_dim}, "num_actions": 8, "hidden": 128,
+              "batch": 32, "param_size": 20,
+              "adam": {{"b1": 0.9, "b2": 0.999, "eps": 1e-8}},
+              "params": [
+                {{"name": "w1", "shape": [4, 4], "start": 0, "end": 16}},
+                {{"name": "b1", "shape": [4], "start": 16, "end": 20}}
+              ],
+              "artifacts": {{"infer": "i.txt", "train": "t.txt", "theta_init": "th.bin"}}
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parse_and_contract() {
+        let m = Manifest::parse(&manifest_text(64)).unwrap();
+        assert_eq!(m.param_size, 20);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![4, 4]);
+        assert!(m.check_contract().is_ok());
+    }
+
+    #[test]
+    fn contract_rejects_dim_mismatch() {
+        let m = Manifest::parse(&manifest_text(32)).unwrap();
+        assert!(m.check_contract().is_err());
+    }
+
+    #[test]
+    fn param_store_sync() {
+        let mut p = ParamStore::from_theta(vec![1.0, 2.0]);
+        p.theta[0] = 9.0;
+        assert_eq!(p.target_theta[0], 1.0);
+        p.sync_target();
+        assert_eq!(p.target_theta[0], 9.0);
+    }
+}

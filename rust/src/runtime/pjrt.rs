@@ -1,0 +1,202 @@
+//! The real Q-network: AOT-compiled HLO executed through the PJRT C API
+//! (xla crate). HLO *text* is the interchange format — see aot.py and
+//! /opt/xla-example/README.md for why serialized protos are rejected.
+
+use std::path::Path;
+
+use super::params::{Manifest, ParamStore};
+use super::{QFunction, TrainBatch, NUM_ACTIONS, STATE_DIM};
+
+/// Energy-relevant event counters (folded into Fig 14 by the metrics
+/// module: weight-matrix / state-buffer accesses per §7.7).
+#[derive(Debug, Clone, Default)]
+pub struct QNetCounters {
+    pub inferences: u64,
+    pub train_steps: u64,
+}
+
+/// PJRT-backed dueling DQN.
+pub struct PjrtQNet {
+    exe_infer: xla::PjRtLoadedExecutable,
+    exe_train: xla::PjRtLoadedExecutable,
+    store: ParamStore,
+    manifest: Manifest,
+    lr: f32,
+    gamma: f32,
+    /// Cached θ literal: rebuilt only when training updates parameters.
+    theta_lit: xla::Literal,
+    pub counters: QNetCounters,
+}
+
+impl PjrtQNet {
+    /// Load artifacts from `dir`, compile both executables on the PJRT
+    /// CPU client, and initialise parameters from `theta_init.bin`.
+    pub fn load(dir: &Path, lr: f32, gamma: f32) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let store = ParamStore::load(dir, &manifest)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |file: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(file)
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path"))?,
+            )?;
+            Ok(client.compile(&xla::XlaComputation::from_proto(&proto))?)
+        };
+        let exe_infer = compile(&manifest.infer_file)?;
+        let exe_train = compile(&manifest.train_file)?;
+        let theta_lit = xla::Literal::vec1(&store.theta);
+        Ok(Self {
+            exe_infer,
+            exe_train,
+            store,
+            manifest,
+            lr,
+            gamma,
+            theta_lit,
+            counters: QNetCounters::default(),
+        })
+    }
+
+    pub fn param_size(&self) -> usize {
+        self.manifest.param_size
+    }
+
+    pub fn store(&self) -> &ParamStore {
+        &self.store
+    }
+
+    /// Reset parameters (fresh episode family); keeps compiled executables.
+    pub fn reset_params(&mut self, theta: Vec<f32>) {
+        self.store = ParamStore::from_theta(theta);
+        self.theta_lit = xla::Literal::vec1(&self.store.theta);
+    }
+}
+
+impl QFunction for PjrtQNet {
+    fn q_values(&mut self, s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]> {
+        anyhow::ensure!(s.len() == STATE_DIM, "state len {} != {STATE_DIM}", s.len());
+        self.counters.inferences += 1;
+        let s_lit = xla::Literal::vec1(s).reshape(&[1, STATE_DIM as i64])?;
+        let result = self.exe_infer.execute::<xla::Literal>(&[self.theta_lit.clone(), s_lit])?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let q = out.to_vec::<f32>()?;
+        anyhow::ensure!(q.len() == NUM_ACTIONS, "bad q length {}", q.len());
+        let mut arr = [0.0f32; NUM_ACTIONS];
+        arr.copy_from_slice(&q);
+        Ok(arr)
+    }
+
+    fn train_batch(&mut self, batch: &TrainBatch) -> anyhow::Result<f32> {
+        batch.validate()?;
+        self.counters.train_steps += 1;
+        let b = self.manifest.batch as i64;
+        let sdim = STATE_DIM as i64;
+        let hyper =
+            xla::Literal::vec1(&[(self.store.t + 1) as f32, self.lr, self.gamma]);
+        let args = [
+            self.theta_lit.clone(),
+            xla::Literal::vec1(&self.store.target_theta),
+            xla::Literal::vec1(&self.store.m),
+            xla::Literal::vec1(&self.store.v),
+            hyper,
+            xla::Literal::vec1(&batch.s).reshape(&[b, sdim])?,
+            xla::Literal::vec1(&batch.a),
+            xla::Literal::vec1(&batch.r),
+            xla::Literal::vec1(&batch.s2).reshape(&[b, sdim])?,
+            xla::Literal::vec1(&batch.done),
+        ];
+        let result = self.exe_train.execute::<xla::Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let (theta, m, v, loss) = tuple.to_tuple4()?;
+        self.store.theta = theta.to_vec::<f32>()?;
+        self.store.m = m.to_vec::<f32>()?;
+        self.store.v = v.to_vec::<f32>()?;
+        self.store.t += 1;
+        self.theta_lit = xla::Literal::vec1(&self.store.theta);
+        Ok(loss.to_vec::<f32>()?[0])
+    }
+
+    fn sync_target(&mut self) {
+        self.store.sync_target();
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts_dir;
+
+    fn load() -> Option<PjrtQNet> {
+        let dir = artifacts_dir()?;
+        PjrtQNet::load(&dir, 1e-3, 0.95).ok()
+    }
+
+    /// These tests exercise the full AOT round trip; they skip (pass
+    /// vacuously) when `make artifacts` has not been run.
+    #[test]
+    fn infer_shapes_and_determinism() {
+        let Some(mut q) = load() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let s = vec![0.1f32; STATE_DIM];
+        let a = q.q_values(&s).unwrap();
+        let b = q.q_values(&s).unwrap();
+        assert_eq!(a, b, "inference must be deterministic");
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn train_reduces_loss_on_fixed_batch() {
+        let Some(mut q) = load() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        // A fixed supervised-ish batch: reward 1 for action 2 everywhere.
+        let mut batch = TrainBatch {
+            s: vec![0.0; super::super::BATCH * STATE_DIM],
+            a: vec![2; super::super::BATCH],
+            r: vec![1.0; super::super::BATCH],
+            s2: vec![0.0; super::super::BATCH * STATE_DIM],
+            done: vec![1.0; super::super::BATCH],
+        };
+        for i in 0..super::super::BATCH {
+            for j in 0..STATE_DIM {
+                batch.s[i * STATE_DIM + j] = ((i + j) % 7) as f32 / 7.0;
+                batch.s2[i * STATE_DIM + j] = ((i * j) % 5) as f32 / 5.0;
+            }
+        }
+        let first = q.train_batch(&batch).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            last = q.train_batch(&batch).unwrap();
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first, "loss should fall: first={first} last={last}");
+    }
+
+    #[test]
+    fn params_change_after_training() {
+        let Some(mut q) = load() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let before = q.store().theta.clone();
+        let batch = TrainBatch {
+            s: vec![0.3; super::super::BATCH * STATE_DIM],
+            a: vec![0; super::super::BATCH],
+            r: vec![1.0; super::super::BATCH],
+            s2: vec![0.3; super::super::BATCH * STATE_DIM],
+            done: vec![0.0; super::super::BATCH],
+        };
+        q.train_batch(&batch).unwrap();
+        let after = &q.store().theta;
+        assert_ne!(&before, after);
+        assert_eq!(before.len(), after.len());
+    }
+}

@@ -1,0 +1,197 @@
+//! Fixed-length histories and running averages.
+//!
+//! The paper's state representation (§4.2) carries several fixed-length
+//! histories (hop count, packet latency, migration latency, actions) and
+//! the MCs keep *running averages* of cube-reported counters (§5.1).
+
+/// Fixed-capacity history that keeps the most recent `cap` samples in
+/// insertion order (oldest first when iterated).
+#[derive(Debug, Clone)]
+pub struct History {
+    buf: Vec<f32>,
+    cap: usize,
+    head: usize,
+    len: usize,
+}
+
+impl History {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self { buf: vec![0.0; cap], cap, head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, v: f32) {
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.cap;
+        self.len = (self.len + 1).min(self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Most-recent-last snapshot, zero-padded at the front to `cap`.
+    /// This is exactly the fixed-width encoding the agent state expects.
+    pub fn padded(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.cap - self.len];
+        out.extend(self.iter());
+        out
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = f32> + '_ {
+        (0..self.len).map(move |i| {
+            let idx = (self.head + self.cap - self.len + i) % self.cap;
+            self.buf[idx]
+        })
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.buf[(self.head + self.cap - 1) % self.cap])
+        }
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.len == 0 {
+            0.0
+        } else {
+            self.iter().sum::<f32>() / self.len as f32
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+/// Exponentially-weighted running average (the MCs' "running average of the
+/// received value", §5.1). `alpha` is the weight of the new sample.
+#[derive(Debug, Clone)]
+pub struct RunningAvg {
+    value: f64,
+    alpha: f64,
+    samples: u64,
+}
+
+impl RunningAvg {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { value: 0.0, alpha, samples: 0 }
+    }
+
+    pub fn update(&mut self, sample: f64) {
+        if self.samples == 0 {
+            self.value = sample;
+        } else {
+            self.value = self.alpha * sample + (1.0 - self.alpha) * self.value;
+        }
+        self.samples += 1;
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    pub fn reset(&mut self) {
+        self.value = 0.0;
+        self.samples = 0;
+    }
+}
+
+/// Plain arithmetic-mean accumulator for end-of-run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct MeanAcc {
+    sum: f64,
+    n: u64,
+}
+
+impl MeanAcc {
+    pub fn add(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_keeps_latest() {
+        let mut h = History::new(4);
+        for i in 0..10 {
+            h.push(i as f32);
+        }
+        let snap: Vec<f32> = h.iter().collect();
+        assert_eq!(snap, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(h.last(), Some(9.0));
+    }
+
+    #[test]
+    fn history_padded_front_zeros() {
+        let mut h = History::new(4);
+        h.push(5.0);
+        assert_eq!(h.padded(), vec![0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn history_mean() {
+        let mut h = History::new(3);
+        h.push(1.0);
+        h.push(2.0);
+        h.push(3.0);
+        h.push(4.0); // evicts 1.0
+        assert!((h.mean() - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn running_avg_first_sample_exact() {
+        let mut r = RunningAvg::new(0.25);
+        r.update(8.0);
+        assert_eq!(r.get(), 8.0);
+        r.update(0.0);
+        assert!((r.get() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_acc() {
+        let mut m = MeanAcc::default();
+        for v in [1.0, 2.0, 3.0] {
+            m.add(v);
+        }
+        assert!((m.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(m.count(), 3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-level simulation core: deterministic RNG, cycle bookkeeping,
+//! fixed-length histories, running averages and bounded queues.
+//!
+//! Everything in the simulator is deterministic given a seed — there is no
+//! wall-clock or OS entropy anywhere on the simulation path, which is what
+//! makes episodes reproducible across the paper's repeated runs (§6.1).
+
+pub mod history;
+pub mod queue;
+pub mod rng;
+
+pub use history::{History, RunningAvg};
+pub use queue::BoundedQueue;
+pub use rng::Rng;
+
+/// Simulation time, in memory-network clock cycles.
+pub type Cycle = u64;

@@ -1,0 +1,145 @@
+//! Bounded FIFO queue with occupancy accounting.
+//!
+//! Used for MC request queues, vault controller queues, router VC buffers
+//! and the migration queue. Rejecting on full is what creates backpressure
+//! in the cycle-level model.
+
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct BoundedQueue<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    /// Cumulative occupancy integral (sum of len over observed cycles),
+    /// for average-occupancy metrics.
+    occupancy_acc: u64,
+    observations: u64,
+    rejected: u64,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            items: VecDeque::with_capacity(capacity.min(1024)),
+            capacity,
+            occupancy_acc: 0,
+            observations: 0,
+            rejected: 0,
+        }
+    }
+
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.items.len() >= self.capacity {
+            self.rejected += 1;
+            Err(item)
+        } else {
+            self.items.push_back(item);
+            Ok(())
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.items.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fractional occupancy in [0, 1] — fed into the agent state.
+    pub fn occupancy(&self) -> f32 {
+        self.items.len() as f32 / self.capacity as f32
+    }
+
+    /// Record one occupancy observation (call once per cycle).
+    pub fn observe(&mut self) {
+        self.occupancy_acc += self.items.len() as u64;
+        self.observations += 1;
+    }
+
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.observations == 0 {
+            0.0
+        } else {
+            self.occupancy_acc as f64 / (self.observations as f64 * self.capacity as f64)
+        }
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.items.iter()
+    }
+
+    /// Remove and return the first element matching `pred`.
+    pub fn remove_first<F: Fn(&T) -> bool>(&mut self, pred: F) -> Option<T> {
+        let pos = self.items.iter().position(|x| pred(x))?;
+        self.items.remove(pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = BoundedQueue::new(3);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let mut q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(3));
+        assert_eq!(q.rejected(), 1);
+        assert!(q.is_full());
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let mut q = BoundedQueue::new(4);
+        q.push(()).unwrap();
+        q.push(()).unwrap();
+        q.observe();
+        q.observe();
+        assert!((q.avg_occupancy() - 0.5).abs() < 1e-9);
+        assert!((q.occupancy() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn remove_first_matching() {
+        let mut q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.remove_first(|&x| x == 3), Some(3));
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.remove_first(|&x| x == 3), None);
+    }
+}

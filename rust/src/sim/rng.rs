@@ -1,0 +1,181 @@
+//! Deterministic pseudo-random number generation (splitmix64 core).
+//!
+//! The offline crate universe has no `rand`; this is a small, fast,
+//! well-understood generator that is more than adequate for workload
+//! synthesis and ε-greedy exploration. Streams can be `split` so that
+//! subsystems draw from independent sequences regardless of call order.
+
+/// Splitmix64 PRNG. `Copy` is deliberately not derived: accidental copies
+/// would silently fork the stream.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Two generators with the same seed
+    /// produce identical sequences.
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zeros fixed point of a raw xorshift by running one
+        // splitmix round on the seed itself.
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent stream (e.g. one per subsystem).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free mapping is fine here; modulo bias is
+        // negligible for the magnitudes the simulator uses (< 2^32).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[0, n)`.
+    pub fn index(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniform element of a non-empty slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-distributed index in `[0, n)` with exponent `s` (s > 0).
+    /// Used by the graph-like workload generators (PR) whose page "radix"
+    /// follows a power law (paper Fig 5c).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF over the (truncated) harmonic weights. n is at most
+        // a few thousand in the generators; a linear scan is fine because
+        // generators run once per episode, not per cycle.
+        debug_assert!(n > 0);
+        let h: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let mut u = self.f64() * h;
+        for k in 1..=n {
+            u -= (k as f64).powf(-s);
+            if u <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Geometric-ish burst length in [1, max].
+    pub fn burst(&mut self, p_continue: f64, max: usize) -> usize {
+        let mut len = 1;
+        while len < max && self.chance(p_continue) {
+            len += 1;
+        }
+        len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = Rng::new(7);
+        let mut s1 = a.split();
+        let mut s2 = a.split();
+        let overlap = (0..100).filter(|_| s1.next_u64() == s2.next_u64()).count();
+        assert!(overlap < 3);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(5);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_near_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn zipf_skews_low() {
+        let mut r = Rng::new(13);
+        let mut counts = [0usize; 10];
+        for _ in 0..50_000 {
+            counts[r.zipf(10, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[4] > counts[9]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(17);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

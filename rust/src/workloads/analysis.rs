@@ -1,0 +1,225 @@
+//! Workload analysis (paper §6.5, Fig 5): page-access classification,
+//! active-page working sets and page-affinity quadrants.
+
+use std::collections::{HashMap, HashSet};
+
+use super::trace::Trace;
+
+/// Fig 5a: classification of pages by access volume.
+#[derive(Debug, Clone, Default)]
+pub struct PageClasses {
+    pub light: u64,
+    pub moderate: u64,
+    pub heavy: u64,
+}
+
+/// Access-volume class boundaries.
+pub const LIGHT_MAX: u64 = 15;
+pub const MODERATE_MAX: u64 = 255;
+
+impl PageClasses {
+    pub fn total(&self) -> u64 {
+        self.light + self.moderate + self.heavy
+    }
+
+    pub fn light_frac(&self) -> f64 {
+        self.frac(self.light)
+    }
+
+    pub fn moderate_frac(&self) -> f64 {
+        self.frac(self.moderate)
+    }
+
+    pub fn heavy_frac(&self) -> f64 {
+        self.frac(self.heavy)
+    }
+
+    fn frac(&self, x: u64) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            x as f64 / t as f64
+        }
+    }
+}
+
+/// Count per-page accesses (every operand page of every op counts once).
+fn page_accesses(trace: &Trace) -> HashMap<u64, u64> {
+    let mut acc: HashMap<u64, u64> = HashMap::new();
+    for op in &trace.ops {
+        for p in op.vpages() {
+            *acc.entry(p).or_insert(0) += 1;
+        }
+    }
+    acc
+}
+
+/// Fig 5a.
+pub fn classify_pages(trace: &Trace) -> PageClasses {
+    let mut out = PageClasses::default();
+    for (_, n) in page_accesses(trace) {
+        if n <= LIGHT_MAX {
+            out.light += 1;
+        } else if n <= MODERATE_MAX {
+            out.moderate += 1;
+        } else {
+            out.heavy += 1;
+        }
+    }
+    out
+}
+
+/// Fig 5b: distinct pages accessed per epoch window of `epoch_ops` ops,
+/// averaged over the trace.
+pub fn mean_active_pages(trace: &Trace, epoch_ops: usize) -> f64 {
+    if trace.ops.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0usize;
+    let mut windows = 0usize;
+    for chunk in trace.ops.chunks(epoch_ops.max(1)) {
+        let mut pages: HashSet<u64> = HashSet::new();
+        for op in chunk {
+            pages.extend(op.vpages());
+        }
+        total += pages.len();
+        windows += 1;
+    }
+    total as f64 / windows as f64
+}
+
+/// Fig 5c: page-affinity quadrants. For each page we compute its *radix*
+/// (distinct partner pages co-accessed in the same NMP op) and its
+/// *weight* (co-access events); pages are split into four quadrants by
+/// the median of each trait.
+#[derive(Debug, Clone, Default)]
+pub struct AffinityQuadrants {
+    pub low_radix_low_weight: u64,
+    pub low_radix_high_weight: u64,
+    pub high_radix_low_weight: u64,
+    pub high_radix_high_weight: u64,
+}
+
+impl AffinityQuadrants {
+    pub fn total(&self) -> u64 {
+        self.low_radix_low_weight
+            + self.low_radix_high_weight
+            + self.high_radix_low_weight
+            + self.high_radix_high_weight
+    }
+
+    /// Fraction of pages in the "hard" (high/high) quadrant.
+    pub fn high_affinity_frac(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.high_radix_high_weight as f64 / self.total() as f64
+        }
+    }
+}
+
+pub fn affinity_quadrants(trace: &Trace) -> AffinityQuadrants {
+    // Per page: partner set + co-access count.
+    let mut partners: HashMap<u64, HashSet<u64>> = HashMap::new();
+    let mut weight: HashMap<u64, u64> = HashMap::new();
+    for op in &trace.ops {
+        let pages = op.vpages();
+        for &a in &pages {
+            for &b in &pages {
+                if a != b {
+                    partners.entry(a).or_default().insert(b);
+                    *weight.entry(a).or_insert(0) += 1;
+                }
+            }
+        }
+    }
+    if partners.is_empty() {
+        return AffinityQuadrants::default();
+    }
+    let mut radixes: Vec<u64> = partners.values().map(|s| s.len() as u64).collect();
+    let mut weights: Vec<u64> = partners.keys().map(|p| weight[p]).collect();
+    radixes.sort_unstable();
+    weights.sort_unstable();
+    let med_r = radixes[radixes.len() / 2];
+    let med_w = weights[weights.len() / 2];
+    let mut out = AffinityQuadrants::default();
+    for (page, ps) in &partners {
+        let r = ps.len() as u64;
+        let w = weight[page];
+        match (r > med_r, w > med_w) {
+            (false, false) => out.low_radix_low_weight += 1,
+            (false, true) => out.low_radix_high_weight += 1,
+            (true, false) => out.high_radix_low_weight += 1,
+            (true, true) => out.high_radix_high_weight += 1,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmp::{NmpOp, OpKind};
+
+    fn mk(ops: Vec<(u64, u64)>) -> Trace {
+        Trace {
+            name: "t".into(),
+            pid: 1,
+            ops: ops
+                .into_iter()
+                .map(|(d, s)| NmpOp {
+                    pid: 1,
+                    kind: OpKind::Add,
+                    dest: d << 12,
+                    src1: s << 12,
+                    src2: None,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn classify_thresholds() {
+        // Pages {1,100}: 1 access (light); {2,101}: 20 (moderate);
+        // {3,102}: 300 (heavy).
+        let mut ops = vec![(1u64, 100u64)];
+        ops.extend(std::iter::repeat((2u64, 101u64)).take(20));
+        ops.extend(std::iter::repeat((3u64, 102u64)).take(300));
+        let c = classify_pages(&mk(ops));
+        assert_eq!(c.light, 2);
+        assert_eq!(c.moderate, 2);
+        assert_eq!(c.heavy, 2);
+    }
+
+    #[test]
+    fn active_pages_windows() {
+        // 4 ops per window touching 2 pages each, disjoint across windows.
+        let ops: Vec<(u64, u64)> = (0..8).map(|i| (i * 2, i * 2 + 1)).collect();
+        let t = mk(ops);
+        assert!((mean_active_pages(&t, 4) - 8.0).abs() < 1e-9);
+        assert!((mean_active_pages(&t, 8) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn affinity_hub_detected() {
+        // Page 0 pairs with everyone (hub); pages 1..9 pair only with 0.
+        let mut ops = Vec::new();
+        for i in 1..10u64 {
+            for _ in 0..5 {
+                ops.push((0, i));
+            }
+        }
+        let q = affinity_quadrants(&mk(ops));
+        assert_eq!(q.total(), 10);
+        assert_eq!(q.high_radix_high_weight, 1, "{q:?}");
+    }
+
+    #[test]
+    fn empty_trace_safe() {
+        let t = mk(vec![]);
+        assert_eq!(classify_pages(&t).total(), 0);
+        assert_eq!(mean_active_pages(&t, 16), 0.0);
+        assert_eq!(affinity_quadrants(&t).total(), 0);
+    }
+}

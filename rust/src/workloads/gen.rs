@@ -1,0 +1,486 @@
+//! The nine benchmark-kernel trace generators (paper Table 2).
+//!
+//! Each generator synthesises the page-granular access structure the
+//! paper characterises in §6.5 (see the table below); `scale` multiplies
+//! the op count ("medium input" ≈ scale 1.0), keeping the structure
+//! intact so benches can run shorter traces.
+//!
+//! | kernel | active pages | page usage    | affinity  |
+//! |--------|--------------|---------------|-----------|
+//! | BP     | low/moderate | light, many   | low       |
+//! | LUD    | high         | moderate      | high      |
+//! | KM     | moderate     | heavy hubs    | moderate  |
+//! | MAC    | low          | moderate      | low       |
+//! | PR     | high         | light, many   | high hubs |
+//! | RBM    | high (all)   | very heavy    | high      |
+//! | RD     | low          | light stream  | low       |
+//! | SC     | high         | moderate      | moderate  |
+//! | SPMV   | ~10          | mixed         | moderate  |
+
+use crate::config::Pid;
+use crate::nmp::{NmpOp, OpKind};
+use crate::sim::Rng;
+
+use super::trace::{Layout, Region, Trace};
+
+/// The paper's benchmarks (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    /// Backpropagation (Rodinia).
+    Bp,
+    /// LU decomposition (Rodinia).
+    Lud,
+    /// K-means clustering (Rodinia).
+    Km,
+    /// Multiply-and-accumulate over two sequential vectors.
+    Mac,
+    /// PageRank (CRONO).
+    Pr,
+    /// Restricted Boltzmann machine (CortexSuite).
+    Rbm,
+    /// Sum reduction over a sequential vector.
+    Rd,
+    /// Streamcluster (PARSEC).
+    Sc,
+    /// Sparse matrix-vector multiply (Rodinia).
+    Spmv,
+}
+
+impl Benchmark {
+    pub const ALL: [Benchmark; 9] = [
+        Benchmark::Bp,
+        Benchmark::Lud,
+        Benchmark::Km,
+        Benchmark::Mac,
+        Benchmark::Pr,
+        Benchmark::Rbm,
+        Benchmark::Rd,
+        Benchmark::Sc,
+        Benchmark::Spmv,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Benchmark::Bp => "BP",
+            Benchmark::Lud => "LUD",
+            Benchmark::Km => "KM",
+            Benchmark::Mac => "MAC",
+            Benchmark::Pr => "PR",
+            Benchmark::Rbm => "RBM",
+            Benchmark::Rd => "RD",
+            Benchmark::Sc => "SC",
+            Benchmark::Spmv => "SPMV",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Benchmark> {
+        Self::ALL.into_iter().find(|b| b.name().eq_ignore_ascii_case(s))
+    }
+
+    pub fn description(self) -> &'static str {
+        match self {
+            Benchmark::Bp => "feed-forward neural network training (gradient computation)",
+            Benchmark::Lud => "blocked lower-upper matrix decomposition",
+            Benchmark::Km => "iterative k-means clustering",
+            Benchmark::Mac => "multiply-and-accumulate over two sequential vectors",
+            Benchmark::Pr => "PageRank over a power-law graph",
+            Benchmark::Rbm => "restricted Boltzmann machine (bipartite dense updates)",
+            Benchmark::Rd => "sum reduction over a sequential vector",
+            Benchmark::Sc => "streaming points assigned to nearest centers",
+            Benchmark::Spmv => "sparse matrix-vector multiply",
+        }
+    }
+}
+
+/// Generate a kernel trace. `scale` ≈ input-size multiplier (1.0 =
+/// the paper's "medium"); `seed` fixes the synthetic structure.
+pub fn generate(bench: Benchmark, pid: Pid, scale: f64, seed: u64) -> Trace {
+    // Calibration: scale 1.0 ("medium", §6.1) targets episodes of tens of
+    // thousands of cycles so page migrations can amortise over the reuse
+    // the paper's traces exhibit.
+    let scale = scale * 4.0;
+    let mut rng = Rng::new(seed ^ (bench as u64) << 8);
+    let ops = match bench {
+        Benchmark::Bp => gen_bp(pid, scale, &mut rng),
+        Benchmark::Lud => gen_lud(pid, scale, &mut rng),
+        Benchmark::Km => gen_km(pid, scale, &mut rng),
+        Benchmark::Mac => gen_mac(pid, scale, &mut rng),
+        Benchmark::Pr => gen_pr(pid, scale, &mut rng),
+        Benchmark::Rbm => gen_rbm(pid, scale, &mut rng),
+        Benchmark::Rd => gen_rd(pid, scale, &mut rng),
+        Benchmark::Sc => gen_sc(pid, scale, &mut rng),
+        Benchmark::Spmv => gen_spmv(pid, scale, &mut rng),
+    };
+    Trace { name: bench.name().to_string(), pid, ops }
+}
+
+fn sc(base: f64, scale: f64) -> u64 {
+    ((base * scale).round() as u64).max(1)
+}
+
+fn op(pid: Pid, kind: OpKind, dest: u64, src1: u64, src2: Option<u64>) -> NmpOp {
+    NmpOp { pid, kind, dest, src1, src2 }
+}
+
+/// BP: layer sweeps over a big weight residency. Huge number of unique
+/// weight pages touched once or twice per epoch, small instantaneous
+/// working set (one layer), low affinity.
+fn gen_bp(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let layers = 4usize;
+    let weight_pages_per_layer = sc(80.0, scale);
+    let act_pages = sc(4.0, scale.sqrt());
+    // Ops per weight page: the MACs consuming that page's weights.
+    let ops_per_wpage = 8u64;
+    let weights: Vec<Region> = (0..layers).map(|_| l.region(weight_pages_per_layer)).collect();
+    let acts: Vec<Region> = (0..layers + 1).map(|_| l.region(act_pages)).collect();
+    let mut ops = Vec::new();
+    let epochs = 2;
+    for _ in 0..epochs {
+        // Forward then backward: sequential sweep of each layer's weights.
+        for dir in 0..2 {
+            let order: Vec<usize> =
+                if dir == 0 { (0..layers).collect() } else { (0..layers).rev().collect() };
+            for li in order {
+                let w = &weights[li];
+                let a_in = &acts[li];
+                let a_out = &acts[li + 1];
+                for p in 0..w.pages {
+                    for e in 0..ops_per_wpage {
+                        let d = a_out.page_addr(p % a_out.pages) + rng.below(64) * 64;
+                        ops.push(op(
+                            pid,
+                            OpKind::Mac,
+                            d,
+                            w.page_addr(p) + e * 128,
+                            Some(a_in.page_addr((p + e) % a_in.pages) + rng.below(64) * 64),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    ops
+}
+
+/// LUD: blocked factorisation. The k-th step touches row-k / col-k blocks
+/// against the trailing submatrix — many pages active at once, recurring
+/// pairs (high affinity), shrinking working set.
+fn gen_lud(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let n_blocks = sc(12.0, scale.sqrt()) as usize; // matrix is n×n blocks
+    let mut l = Layout::default();
+    // One page per block.
+    let mat = l.region((n_blocks * n_blocks) as u64);
+    let blk = |i: usize, j: usize| mat.page_addr((i * n_blocks + j) as u64);
+    let mut ops = Vec::new();
+    for k in 0..n_blocks {
+        // Diagonal factor.
+        ops.push(op(pid, OpKind::Mul, blk(k, k) + rng.below(64) * 64, blk(k, k) + rng.below(64) * 64, None));
+        // Row/column panels.
+        for i in k + 1..n_blocks {
+            ops.push(op(pid, OpKind::Mul, blk(i, k) + rng.below(64) * 64, blk(k, k) + rng.below(64) * 64, Some(blk(i, k) + rng.below(64) * 64)));
+            ops.push(op(pid, OpKind::Mul, blk(k, i) + rng.below(64) * 64, blk(k, k) + rng.below(64) * 64, Some(blk(k, i) + rng.below(64) * 64)));
+        }
+        // Trailing update: high-affinity triples.
+        for i in k + 1..n_blocks {
+            for j in k + 1..n_blocks {
+                let d = blk(i, j) + rng.below(64) * 64;
+                ops.push(op(pid, OpKind::Mac, d, blk(i, k) + rng.below(64) * 64, Some(blk(k, j) + rng.below(64) * 64)));
+            }
+        }
+    }
+    ops
+}
+
+/// KM: stream point pages against K hot centroid pages, several
+/// iterations — centroid pages are heavy hubs.
+fn gen_km(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let point_pages = sc(96.0, scale);
+    let k_pages = sc(6.0, scale.sqrt());
+    let points = l.region(point_pages);
+    let centroids = l.region(k_pages);
+    let accum = l.region(k_pages);
+    let mut ops = Vec::new();
+    let points_per_page = 12u64;
+    for _iter in 0..4 {
+        for p in 0..point_pages {
+            for e in 0..points_per_page {
+                let c = rng.below(k_pages);
+                // distance + assignment accumulate into a centroid page.
+                ops.push(op(
+                    pid,
+                    OpKind::Mac,
+                    accum.page_addr(c) + rng.below(64) * 64,
+                    points.page_addr(p) + e * 256,
+                    Some(centroids.page_addr(c) + rng.below(64) * 64),
+                ));
+            }
+        }
+        // Centroid update.
+        for c in 0..k_pages {
+            ops.push(op(pid, OpKind::Add, centroids.page_addr(c), accum.page_addr(c) + (c % 64) * 64, None));
+        }
+    }
+    ops
+}
+
+/// MAC: dest[i] += a[i] * b[i] over two long sequential vectors —
+/// pure streaming, three pages active at a time, no affinity structure
+/// beyond the aligned triple.
+fn gen_mac(pid: Pid, scale: f64, _rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let pages = sc(110.0, scale);
+    let a = l.region(pages);
+    let b = l.region(pages);
+    let d = l.region(pages);
+    let mut ops = Vec::new();
+    let elems_per_page = 128u64; // 32 B elements → 128 ops per page triple
+    for p in 0..pages {
+        for e in 0..elems_per_page {
+            ops.push(op(
+                pid,
+                OpKind::Mac,
+                d.page_addr(p) + e * 32,
+                a.page_addr(p) + e * 32,
+                Some(b.page_addr(p) + e * 32),
+            ));
+        }
+    }
+    ops
+}
+
+/// PR: rank updates over a power-law graph. Hub pages have huge radix
+/// (high affinity), the long tail of pages is touched a handful of times
+/// — matching Fig 5a's "many lightly-used pages" and Fig 5b's high
+/// active-page count.
+fn gen_pr(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let rank_pages = sc(128.0, scale);
+    let ranks = l.region(rank_pages);
+    let degs = l.region(rank_pages);
+    let edges = sc(4200.0, scale);
+    let mut ops = Vec::new();
+    for _ in 0..edges {
+        // Destination node ~ uniform; source neighbour ~ zipf (hubs).
+        let u = rng.below(rank_pages);
+        let v = rng.zipf(rank_pages as usize, 1.05) as u64;
+        ops.push(op(
+            pid,
+            OpKind::Mac,
+            ranks.page_addr(u) + rng.below(64) * 64,
+            ranks.page_addr(v) + rng.below(64) * 64,
+            Some(degs.page_addr(v) + rng.below(64) * 64),
+        ));
+    }
+    ops
+}
+
+/// RBM: bipartite dense visible×hidden updates over a tiny page set —
+/// every page is active in every window and accessed heavily (the 100 %
+/// migration-coverage case of Fig 10).
+fn gen_rbm(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let v_pages = sc(5.0, scale.sqrt());
+    let h_pages = sc(4.0, scale.sqrt());
+    let visible = l.region(v_pages);
+    let hidden = l.region(h_pages);
+    let weights = l.region(v_pages * h_pages);
+    let mut ops = Vec::new();
+    let gibbs_steps = sc(120.0, scale);
+    for _ in 0..gibbs_steps {
+        for hv in 0..h_pages {
+            for vv in 0..v_pages {
+                let w = weights.page_addr(hv * v_pages + vv) + rng.below(64) * 64;
+                ops.push(op(
+                    pid,
+                    OpKind::Mac,
+                    hidden.page_addr(hv) + rng.below(64) * 64,
+                    visible.page_addr(vv) + rng.below(64) * 64,
+                    Some(w),
+                ));
+            }
+        }
+    }
+    ops
+}
+
+/// RD: tree sum-reduction over a sequential vector — log-depth passes,
+/// each page read once or twice (light usage, streaming).
+fn gen_rd(pid: Pid, scale: f64, _rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let pages = sc(28.0, scale);
+    let elems_per_page = 256u64; // 16 B elements
+    let vec_r = l.region(pages);
+    let partial = l.region(pages / 2 + 1);
+    let mut ops = Vec::new();
+    // Level 0: element-pairwise reduction within each source page —
+    // sequential streaming, each page read heavily then never again.
+    for p in 0..pages {
+        for e in 0..elems_per_page / 2 {
+            ops.push(op(
+                pid,
+                OpKind::Add,
+                partial.page_addr(p / 2) + (e % 256) * 16,
+                vec_r.page_addr(p) + 2 * e * 16,
+                Some(vec_r.page_addr(p) + (2 * e + 1) * 16),
+            ));
+        }
+    }
+    // Higher levels: page-pairwise over the partial buffer.
+    let mut width = pages / 2 + 1;
+    let mut level = 0u64;
+    while width > 1 {
+        for i in 0..width / 2 {
+            for e in 0..32u64 {
+                ops.push(op(
+                    pid,
+                    OpKind::Add,
+                    partial.page_addr(i) + ((level * 32 + e) % 256) * 16,
+                    partial.page_addr(2 * i) + e * 64,
+                    Some(partial.page_addr(2 * i + 1) + e * 64),
+                ));
+            }
+        }
+        width /= 2;
+        level += 1;
+    }
+    ops
+}
+
+/// SC: streaming points vs a drifting center set — moderate-size working
+/// set that shifts over time (the "user-determined working set" of
+/// PARSEC's streamcluster).
+fn gen_sc(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let stream_pages = sc(140.0, scale);
+    let center_pages = sc(24.0, scale.sqrt());
+    let stream = l.region(stream_pages);
+    let centers = l.region(center_pages);
+    let mut ops = Vec::new();
+    let window = 8u64;
+    for p in 0..stream_pages {
+        // Each stream page is compared against a sliding window of
+        // centers that drifts with the stream position.
+        let base_c = (p * center_pages / stream_pages).min(center_pages - 1);
+        for wi in 0..window {
+            let c = (base_c + wi) % center_pages;
+            ops.push(op(
+                pid,
+                OpKind::Mac,
+                centers.page_addr(c) + rng.below(64) * 64,
+                stream.page_addr(p) + rng.below(64) * 64,
+                Some(centers.page_addr(c) + rng.below(64) * 64),
+            ));
+        }
+    }
+    ops
+}
+
+/// SPMV: y[r] += A[r, c] * x[c] with power-law column reuse — result and
+/// value pages stream, x pages hit irregularly; ≈10 pages active per
+/// window with the highest compute spread (paper §7.6).
+fn gen_spmv(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let mut l = Layout::default();
+    let row_pages = sc(48.0, scale);
+    let x_pages = sc(32.0, scale);
+    let y = l.region(row_pages);
+    let vals = l.region(row_pages * 2);
+    let x = l.region(x_pages);
+    let mut ops = Vec::new();
+    let nnz_per_row_page = 72u64;
+    for r in 0..row_pages {
+        for k in 0..nnz_per_row_page {
+            let c = rng.zipf(x_pages as usize, 0.9) as u64;
+            ops.push(op(
+                pid,
+                OpKind::Mac,
+                y.page_addr(r) + rng.below(64) * 64,
+                vals.page_addr(r * 2 + (k & 1)) + (k / 2) * 64,
+                Some(x.page_addr(c) + rng.below(64) * 64),
+            ));
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::analysis;
+
+    #[test]
+    fn all_benchmarks_generate() {
+        for b in Benchmark::ALL {
+            let t = generate(b, 1, 0.25, 7);
+            assert!(!t.is_empty(), "{b:?} empty");
+            assert!(t.distinct_pages() > 1, "{b:?} single page");
+            assert!(t.ops.iter().all(|o| o.pid == 1));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(Benchmark::Pr, 1, 0.25, 9);
+        let b = generate(Benchmark::Pr, 1, 0.25, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.ops.iter().zip(&b.ops) {
+            assert_eq!(x.dest, y.dest);
+            assert_eq!(x.src1, y.src1);
+        }
+        let c = generate(Benchmark::Pr, 1, 0.25, 10);
+        assert!(a.ops.iter().zip(&c.ops).any(|(x, y)| x.src1 != y.src1));
+    }
+
+    #[test]
+    fn scale_grows_traces() {
+        let small = generate(Benchmark::Mac, 1, 0.25, 3);
+        let big = generate(Benchmark::Mac, 1, 1.0, 3);
+        assert!(big.len() > 2 * small.len());
+    }
+
+    #[test]
+    fn rbm_has_small_heavy_working_set() {
+        let t = generate(Benchmark::Rbm, 1, 0.25, 3);
+        let pages = t.distinct_pages();
+        assert!(pages < 64, "RBM pages {pages}");
+        let per_page = t.len() as f64 * 2.5 / pages as f64;
+        assert!(per_page > 50.0, "RBM should hammer its pages: {per_page}");
+    }
+
+    #[test]
+    fn bp_has_large_residency_small_reuse() {
+        let t = generate(Benchmark::Bp, 1, 1.0, 3);
+        assert!(t.distinct_pages() > 250, "BP residency {}", t.distinct_pages());
+        let classes = analysis::classify_pages(&t);
+        assert!(
+            classes.heavy_frac() < 0.2,
+            "BP pages are not heavily reused: {classes:?}"
+        );
+    }
+
+    #[test]
+    fn active_page_classes_match_paper() {
+        // Paper §6.5: high active pages for LUD/PR/RBM/SC, low/moderate
+        // for BP/KM/MAC/RD/SPMV.
+        let epoch = 512;
+        let high: f64 = [Benchmark::Lud, Benchmark::Pr]
+            .iter()
+            .map(|&b| analysis::mean_active_pages(&generate(b, 1, 1.0, 3), epoch))
+            .sum::<f64>()
+            / 2.0;
+        let low: f64 = [Benchmark::Mac, Benchmark::Rd, Benchmark::Spmv]
+            .iter()
+            .map(|&b| analysis::mean_active_pages(&generate(b, 1, 1.0, 3), epoch))
+            .sum::<f64>()
+            / 3.0;
+        assert!(high > 2.0 * low, "high={high:.1} low={low:.1}");
+    }
+
+    #[test]
+    fn spmv_active_pages_near_ten() {
+        let t = generate(Benchmark::Spmv, 1, 0.25, 3);
+        let active = analysis::mean_active_pages(&t, 64);
+        assert!((4.0..32.0).contains(&active), "SPMV active {active}");
+    }
+}

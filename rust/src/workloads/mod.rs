@@ -1,0 +1,21 @@
+//! Workloads: synthetic NMP-op trace generators for the paper's nine
+//! benchmark kernels (Table 2), the workload-analysis functions behind
+//! Fig 5, and multi-program composition (§7.5.2).
+//!
+//! The authors collected traces by annotating NMP-friendly regions of
+//! Rodinia / CRONO / CortexSuite binaries; we do not have those traces
+//! (see DESIGN.md §2), so each generator synthesises the access *shape*
+//! the paper characterises for that kernel: page-access-volume
+//! classification (Fig 5a), active-page working set (Fig 5b) and page
+//! affinity (Fig 5c). The RL mapping problem only sees this page-granular
+//! structure, so matching it preserves the experiment.
+
+pub mod analysis;
+pub mod gen;
+pub mod multi;
+pub mod trace;
+
+pub use analysis::{affinity_quadrants, classify_pages, mean_active_pages, AffinityQuadrants, PageClasses};
+pub use gen::{generate, Benchmark};
+pub use multi::interleave;
+pub use trace::Trace;

@@ -1,0 +1,100 @@
+//! Multi-program workload composition (paper §7.5.2): run 2–4 diverse
+//! applications concurrently. Each program keeps its own pid (address
+//! space); ops interleave proportionally to remaining length, which
+//! approximates concurrent issue from independent cores.
+
+use crate::nmp::NmpOp;
+use crate::sim::Rng;
+
+use super::trace::Trace;
+
+/// The paper's studied combinations (§7.5.2).
+pub fn paper_combinations() -> Vec<Vec<&'static str>> {
+    vec![
+        vec!["SC", "KM", "RD", "MAC"],
+        vec!["LUD", "RBM", "SPMV"],
+        vec!["SC", "SPMV", "KM"],
+        vec!["BP", "PR"],
+    ]
+}
+
+/// Interleave several traces into one issue stream, preserving each
+/// program's internal order. Pids are reassigned to 1..=N.
+pub fn interleave(traces: Vec<Trace>, seed: u64) -> (Vec<NmpOp>, Vec<Trace>) {
+    let mut rng = Rng::new(seed);
+    let traces: Vec<Trace> = traces
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| t.with_pid(i as u32 + 1))
+        .collect();
+    let mut cursors = vec![0usize; traces.len()];
+    let total: usize = traces.iter().map(|t| t.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    while out.len() < total {
+        // Weighted pick by remaining ops.
+        let remaining: Vec<u64> =
+            traces.iter().zip(&cursors).map(|(t, &c)| (t.len() - c) as u64).collect();
+        let sum: u64 = remaining.iter().sum();
+        let mut pick = rng.below(sum);
+        let mut idx = 0;
+        for (i, &r) in remaining.iter().enumerate() {
+            if pick < r {
+                idx = i;
+                break;
+            }
+            pick -= r;
+        }
+        out.push(traces[idx].ops[cursors[idx]]);
+        cursors[idx] += 1;
+    }
+    (out, traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::gen::{generate, Benchmark};
+
+    #[test]
+    fn interleave_preserves_order_and_count() {
+        let t1 = generate(Benchmark::Mac, 1, 0.1, 1);
+        let t2 = generate(Benchmark::Rd, 1, 0.1, 2);
+        let (n1, n2) = (t1.len(), t2.len());
+        let (merged, traces) = interleave(vec![t1, t2], 3);
+        assert_eq!(merged.len(), n1 + n2);
+        // Per-pid subsequences match the originals.
+        for (i, t) in traces.iter().enumerate() {
+            let pid = i as u32 + 1;
+            let sub: Vec<_> = merged.iter().filter(|o| o.pid == pid).collect();
+            assert_eq!(sub.len(), t.len());
+            for (a, b) in sub.iter().zip(&t.ops) {
+                assert_eq!(a.dest, b.dest);
+            }
+        }
+    }
+
+    #[test]
+    fn pids_are_distinct() {
+        let (merged, _) = interleave(
+            vec![
+                generate(Benchmark::Mac, 9, 0.05, 1),
+                generate(Benchmark::Rd, 9, 0.05, 2),
+                generate(Benchmark::Km, 9, 0.05, 3),
+            ],
+            4,
+        );
+        let mut pids: Vec<u32> = merged.iter().map(|o| o.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        assert_eq!(pids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn paper_combos_resolve() {
+        for combo in paper_combinations() {
+            for name in combo {
+                assert!(Benchmark::from_name(name).is_some(), "{name}");
+            }
+        }
+    }
+}

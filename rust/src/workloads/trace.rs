@@ -1,0 +1,155 @@
+//! Trace representation and address-space layout helpers shared by the
+//! kernel generators.
+
+use crate::config::{Pid, VAddr, PAGE_SIZE};
+use crate::nmp::NmpOp;
+
+/// One application's NMP-op trace — "the traces of an application form an
+/// episode for the application" (§6.1).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub pid: Pid,
+    pub ops: Vec<NmpOp>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Distinct virtual pages touched.
+    pub fn distinct_pages(&self) -> usize {
+        let mut pages: Vec<u64> =
+            self.ops.iter().flat_map(|op| op.vpages()).collect();
+        pages.sort_unstable();
+        pages.dedup();
+        pages.len()
+    }
+
+    /// Retarget all ops to a different pid (multi-program composition).
+    pub fn with_pid(mut self, pid: Pid) -> Self {
+        self.pid = pid;
+        for op in &mut self.ops {
+            op.pid = pid;
+        }
+        self
+    }
+}
+
+/// A named contiguous virtual region (vector, matrix, …).
+#[derive(Debug, Clone, Copy)]
+pub struct Region {
+    pub base: VAddr,
+    pub pages: u64,
+}
+
+impl Region {
+    /// Byte address of `index` elements of `elem_bytes` into the region,
+    /// wrapping inside the region (generators keep indices in range; the
+    /// wrap is a guard, not a feature).
+    pub fn addr(&self, index: u64, elem_bytes: u64) -> VAddr {
+        let span = self.pages * PAGE_SIZE;
+        self.base + (index * elem_bytes) % span
+    }
+
+    /// Address of a page-sized record `page_idx` into the region.
+    pub fn page_addr(&self, page_idx: u64) -> VAddr {
+        self.base + (page_idx % self.pages) * PAGE_SIZE
+    }
+
+    pub fn end(&self) -> VAddr {
+        self.base + self.pages * PAGE_SIZE
+    }
+}
+
+/// Lays out successive regions in a process's address space with guard
+/// gaps, like a simple program loader / malloc would.
+#[derive(Debug)]
+pub struct Layout {
+    cursor: VAddr,
+}
+
+impl Default for Layout {
+    fn default() -> Self {
+        // Start above the zero page, like a real process image.
+        Self { cursor: 0x10_0000 }
+    }
+}
+
+impl Layout {
+    pub fn region(&mut self, pages: u64) -> Region {
+        // Regions start on 64-page (256 KiB) boundaries, like a real
+        // allocator handing out large aligned chunks. Alignment makes
+        // index-correlated pages across regions land congruently, which
+        // physical-address remapping schemes (TOM) can then exploit.
+        const ALIGN: u64 = 64 * PAGE_SIZE;
+        self.cursor = self.cursor.div_ceil(ALIGN) * ALIGN;
+        let r = Region { base: self.cursor, pages };
+        self.cursor = r.end() + PAGE_SIZE;
+        r
+    }
+
+    /// Pages needed to hold `n` elements of `elem_bytes`.
+    pub fn pages_for(n: u64, elem_bytes: u64) -> u64 {
+        (n * elem_bytes).div_ceil(PAGE_SIZE).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmp::OpKind;
+
+    #[test]
+    fn regions_do_not_overlap() {
+        let mut l = Layout::default();
+        let a = l.region(4);
+        let b = l.region(2);
+        assert!(a.end() <= b.base);
+        assert_eq!(a.pages, 4);
+    }
+
+    #[test]
+    fn addr_stays_in_region() {
+        let mut l = Layout::default();
+        let r = l.region(2);
+        for i in 0..10_000 {
+            let a = r.addr(i, 8);
+            assert!(a >= r.base && a < r.end());
+        }
+    }
+
+    #[test]
+    fn distinct_pages_counts() {
+        let mut l = Layout::default();
+        let r = l.region(8);
+        let ops = (0..8)
+            .map(|i| NmpOp {
+                pid: 1,
+                kind: OpKind::Add,
+                dest: r.page_addr(i),
+                src1: r.page_addr(i),
+                src2: None,
+            })
+            .collect();
+        let t = Trace { name: "t".into(), pid: 1, ops };
+        assert_eq!(t.distinct_pages(), 8);
+    }
+
+    #[test]
+    fn with_pid_rewrites_ops() {
+        let t = Trace {
+            name: "t".into(),
+            pid: 1,
+            ops: vec![NmpOp { pid: 1, kind: OpKind::Add, dest: 0, src1: 0, src2: None }],
+        };
+        let t2 = t.with_pid(9);
+        assert_eq!(t2.pid, 9);
+        assert!(t2.ops.iter().all(|o| o.pid == 9));
+    }
+}

@@ -1,0 +1,110 @@
+//! AOT artifact round-trip tests: rust ⇄ PJRT ⇄ compiled JAX/Pallas HLO.
+//! These run against real artifacts (`make artifacts`) and skip —
+//! loudly — when they are absent, so `cargo test` works pre-build.
+
+use aimm::agent::AimmAgent;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::System;
+use aimm::runtime::{artifacts_dir, PjrtQNet, QFunction, TrainBatch, BATCH, NUM_ACTIONS, STATE_DIM};
+use aimm::workloads::{generate, Benchmark};
+
+fn load() -> Option<PjrtQNet> {
+    let dir = artifacts_dir()?;
+    match PjrtQNet::load(&dir, 1e-3, 0.95) {
+        Ok(q) => Some(q),
+        Err(e) => panic!("artifacts present but failed to load: {e}"),
+    }
+}
+
+#[test]
+fn manifest_matches_crate_constants() {
+    let Some(q) = load() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    // 64→128→128→{1,8} dueling net.
+    let expect = 64 * 128 + 128 + 128 * 128 + 128 + 128 + 1 + 128 * 8 + 8;
+    assert_eq!(q.param_size(), expect);
+}
+
+#[test]
+fn greedy_action_stable_under_repeat() {
+    let Some(mut q) = load() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let s: Vec<f32> = (0..STATE_DIM).map(|i| (i as f32) / STATE_DIM as f32).collect();
+    let a = q.q_values(&s).unwrap();
+    for _ in 0..5 {
+        assert_eq!(q.q_values(&s).unwrap(), a);
+    }
+}
+
+#[test]
+fn dueling_structure_sane() {
+    // Q values differ across actions for a generic state (the advantage
+    // head is alive), and change when the state changes.
+    let Some(mut q) = load() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let s1 = vec![0.25f32; STATE_DIM];
+    let mut s2 = s1.clone();
+    s2[0] = 0.9;
+    let q1 = q.q_values(&s1).unwrap();
+    let q2 = q.q_values(&s2).unwrap();
+    let spread = q1.iter().cloned().fold(f32::MIN, f32::max)
+        - q1.iter().cloned().fold(f32::MAX, f32::min);
+    assert!(spread > 0.0, "all Q equal: dead advantage head?");
+    assert_ne!(q1, q2, "state change must change Q");
+    assert_eq!(q1.len(), NUM_ACTIONS);
+}
+
+#[test]
+fn online_learning_shifts_greedy_action() {
+    // Reward action 6 massively for a distinctive state: after training,
+    // greedy(s) should become 6.
+    let Some(mut q) = load() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let mut s = vec![0.0f32; STATE_DIM];
+    s[3] = 1.0;
+    let mut batch = TrainBatch {
+        s: s.iter().cycle().take(BATCH * STATE_DIM).copied().collect(),
+        a: vec![6; BATCH],
+        r: vec![5.0; BATCH],
+        s2: vec![0.0; BATCH * STATE_DIM],
+        done: vec![1.0; BATCH],
+    };
+    // Also push down a rival action.
+    for i in 0..BATCH / 2 {
+        batch.a[i] = 1;
+        batch.r[i] = -5.0;
+    }
+    for _ in 0..120 {
+        q.train_batch(&batch).unwrap();
+    }
+    let qv = q.q_values(&s).unwrap();
+    let best = (0..NUM_ACTIONS).max_by(|&a, &b| qv[a].total_cmp(&qv[b])).unwrap();
+    assert_eq!(best, 6, "q-values after training: {qv:?}");
+}
+
+#[test]
+fn full_system_episode_with_pjrt_agent() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let qnet = PjrtQNet::load(&dir, 1e-3, 0.95).unwrap();
+    let mut cfg = SystemConfig::default();
+    cfg.mapping = MappingScheme::Aimm;
+    let agent = AimmAgent::new(Box::new(qnet), cfg.agent.clone(), 42);
+    let trace = generate(Benchmark::Spmv, 1, 0.05, cfg.seed);
+    let n = trace.ops.len() as u64;
+    let mut sys = System::new(cfg, trace.ops, Some(agent));
+    let stats = sys.run().unwrap();
+    assert_eq!(stats.ops_completed, n);
+    assert!(stats.agent_invocations > 0);
+    assert!(stats.energy.aimm_hardware_nj > 0.0, "agent energy accounted");
+}

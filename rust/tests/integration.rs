@@ -1,0 +1,201 @@
+//! Integration tests: whole-system episodes across techniques, mappings,
+//! mesh sizes and program mixes, plus cross-module invariants that only
+//! show up when everything is wired together.
+
+use aimm::agent::AimmAgent;
+use aimm::config::{MappingScheme, SystemConfig, Technique};
+use aimm::coordinator::{run_single, run_stream, System};
+use aimm::nmp::{NmpOp, OpKind};
+use aimm::runtime::LinearQ;
+use aimm::workloads::{generate, interleave, Benchmark};
+
+fn cfg() -> SystemConfig {
+    SystemConfig::default()
+}
+
+fn small_trace(bench: Benchmark) -> Vec<NmpOp> {
+    generate(bench, 1, 0.03, 11).ops
+}
+
+#[test]
+fn every_technique_times_every_mapping_completes() {
+    for technique in Technique::ALL {
+        for mapping in MappingScheme::ALL {
+            let mut c = cfg();
+            c.technique = technique;
+            c.mapping = mapping;
+            let ops = small_trace(Benchmark::Spmv);
+            let n = ops.len() as u64;
+            // AIMM path uses the linear mock for test determinism/speed.
+            let agent = (mapping == MappingScheme::Aimm).then(|| {
+                AimmAgent::new(Box::new(LinearQ::new(1e-2, 0.95, 3)), c.agent.clone(), 5)
+            });
+            let mut sys = System::new(c, ops, agent);
+            let stats = sys.run().unwrap();
+            assert_eq!(stats.ops_completed, n, "{technique}/{mapping}");
+        }
+    }
+}
+
+#[test]
+fn all_benchmarks_complete_on_bnmp() {
+    for b in Benchmark::ALL {
+        let ops = small_trace(b);
+        let n = ops.len() as u64;
+        let mut sys = System::new(cfg(), ops, None);
+        let stats = sys.run().unwrap();
+        assert_eq!(stats.ops_completed, n, "{b:?}");
+        assert!(stats.cycles > 0);
+    }
+}
+
+#[test]
+fn mesh_8x8_completes() {
+    let mut c = cfg();
+    c.mesh_cols = 8;
+    c.mesh_rows = 8;
+    let ops = small_trace(Benchmark::Km);
+    let n = ops.len() as u64;
+    let mut sys = System::new(c, ops, None);
+    assert_eq!(sys.run().unwrap().ops_completed, n);
+}
+
+#[test]
+fn deterministic_baseline_runs() {
+    let ops = small_trace(Benchmark::Pr);
+    let a = System::new(cfg(), ops.clone(), None).run().unwrap();
+    let b = System::new(cfg(), ops, None).run().unwrap();
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.ops_completed, b.ops_completed);
+    assert_eq!(a.energy, b.energy);
+}
+
+#[test]
+fn multi_program_with_hoard_isolates_processes() {
+    let (ops, traces) = interleave(
+        vec![generate(Benchmark::Mac, 0, 0.02, 1), generate(Benchmark::Rd, 0, 0.02, 2)],
+        7,
+    );
+    let mut c = cfg();
+    c.hoard = true;
+    let n = ops.len() as u64;
+    let mut sys = System::new(c, ops, None);
+    let stats = sys.run().unwrap();
+    assert_eq!(stats.ops_completed, n);
+    // HOARD co-location: each process's pages should occupy few cubes.
+    for t in &traces {
+        let mut cubes: Vec<usize> =
+            sys.mmu.mappings(t.pid).iter().map(|(_, loc)| loc.cube).collect();
+        cubes.sort_unstable();
+        cubes.dedup();
+        assert!(
+            cubes.len() <= 8,
+            "pid {} spread over {} cubes under HOARD",
+            t.pid,
+            cubes.len()
+        );
+    }
+}
+
+#[test]
+fn aimm_agent_state_machine_over_runs() {
+    let mut c = cfg();
+    c.mapping = MappingScheme::Aimm;
+    let ops = small_trace(Benchmark::Rbm);
+    let mut agent = Some(AimmAgent::new(
+        Box::new(LinearQ::new(1e-2, 0.95, 3)),
+        c.agent.clone(),
+        5,
+    ));
+    let mut total_inv = 0;
+    for _ in 0..3 {
+        let mut sys = System::new(c.clone(), ops.clone(), agent.take());
+        sys.run().unwrap();
+        agent = sys.take_agent();
+        let a = agent.as_ref().unwrap();
+        assert!(a.stats.invocations >= total_inv, "invocations monotone");
+        total_inv = a.stats.invocations;
+    }
+    // Replay memory accumulated experience across runs.
+    assert!(agent.unwrap().replay.len() > 0);
+}
+
+#[test]
+fn migration_preserves_translation_correctness() {
+    // After an AIMM run with migrations, every trace page must still
+    // translate, and no two pages may share a (cube, frame).
+    let mut c = cfg();
+    c.mapping = MappingScheme::Aimm;
+    let ops = small_trace(Benchmark::Km);
+    let agent =
+        AimmAgent::new(Box::new(LinearQ::new(1e-2, 0.95, 3)), c.agent.clone(), 5);
+    let mut sys = System::new(c, ops.clone(), Some(agent));
+    sys.run().unwrap();
+    let mappings = sys.mmu.mappings(1);
+    let mut frames: Vec<(usize, u64)> =
+        mappings.iter().map(|(_, loc)| (loc.cube, loc.frame)).collect();
+    let before = frames.len();
+    frames.sort_unstable();
+    frames.dedup();
+    assert_eq!(frames.len(), before, "two vpages share a physical frame");
+    for op in &ops {
+        for p in op.vpages() {
+            assert!(
+                sys.mmu.translate(op.pid, p).is_some(),
+                "page {p:#x} lost its mapping"
+            );
+        }
+    }
+}
+
+#[test]
+fn runner_protocol_matches_paper() {
+    // §6.1: per-run stats independent for baseline; agent carried for AIMM.
+    let c = cfg();
+    let s = run_single(&c, Benchmark::Mac, 0.02, 3).unwrap();
+    assert_eq!(s.runs.len(), 3);
+    assert!(s.runs.windows(2).all(|w| w[0].cycles == w[1].cycles));
+
+    let mut ca = cfg();
+    ca.mapping = MappingScheme::Aimm;
+    let s = run_single(&ca, Benchmark::Mac, 0.02, 2).unwrap();
+    assert!(s.runs.iter().all(|r| r.agent_invocations > 0));
+}
+
+#[test]
+fn run_stream_handles_empty_guard() {
+    // A tiny stream still produces sane stats.
+    let c = cfg();
+    let ops = vec![NmpOp { pid: 1, kind: OpKind::Add, dest: 0x1000, src1: 0x2000, src2: None }];
+    let s = run_stream(&c, &ops, 1, "tiny").unwrap();
+    assert_eq!(s.last().ops_completed, 1);
+    assert!(s.last().opc() > 0.0);
+}
+
+#[test]
+fn energy_accumulates_and_aimm_adds_hardware_energy() {
+    let base = {
+        let mut sys = System::new(cfg(), small_trace(Benchmark::Km), None);
+        sys.run().unwrap()
+    };
+    let aimm = {
+        let mut c = cfg();
+        c.mapping = MappingScheme::Aimm;
+        let agent =
+            AimmAgent::new(Box::new(LinearQ::new(1e-2, 0.95, 3)), c.agent.clone(), 5);
+        let mut sys = System::new(c, small_trace(Benchmark::Km), Some(agent));
+        sys.run().unwrap()
+    };
+    assert!(base.energy.memory_nj > 0.0);
+    assert!(base.energy.network_nj > 0.0);
+    // The agent's weight/replay/state-buffer energy only shows up on AIMM.
+    assert!(aimm.energy.aimm_hardware_nj > base.energy.aimm_hardware_nj);
+}
+
+#[test]
+fn opc_timeline_covers_run() {
+    let mut sys = System::new(cfg(), small_trace(Benchmark::Sc), None);
+    let stats = sys.run().unwrap();
+    let expected = stats.cycles / SystemConfig::default().opc_sample_period;
+    assert!(stats.opc_timeline.len() as u64 >= expected.saturating_sub(1));
+}
