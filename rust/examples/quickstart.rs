@@ -12,6 +12,7 @@
 use aimm::bench::resample;
 use aimm::config::{MappingScheme, SystemConfig};
 use aimm::coordinator::{run_single, EpisodeSummary};
+#[cfg(feature = "pjrt")]
 use aimm::runtime::artifacts_dir;
 use aimm::workloads::Benchmark;
 
@@ -35,10 +36,13 @@ fn main() -> anyhow::Result<()> {
     let scale: f64 =
         std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(0.5);
 
+    #[cfg(feature = "pjrt")]
     match artifacts_dir() {
         Some(d) => println!("artifacts: {} (PJRT dueling DQN)", d.display()),
         None => println!("artifacts: NOT FOUND — falling back to linear-Q mock"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("built without the `pjrt` feature — linear-Q mock agent");
     println!("benchmark {} at scale {scale}\n", bench.name());
 
     let mut cfg = SystemConfig::default();

@@ -226,6 +226,39 @@ impl AimmAgent {
     }
 }
 
+/// PJRT seam: the same control loop driven by the AOT-compiled dueling
+/// network. Compiled only with `--features pjrt`; skips loudly when the
+/// artifacts are absent or the build links the offline `xla` API stub
+/// (whose client constructor errors instead of executing).
+#[cfg(all(test, feature = "pjrt"))]
+mod pjrt_tests {
+    use super::*;
+    use crate::config::AgentConfig;
+    use crate::runtime::{artifacts_dir, PjrtQNet, STATE_DIM};
+
+    #[test]
+    fn agent_control_loop_drives_pjrt_backend() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        };
+        let Ok(q) = PjrtQNet::load(&dir, 1e-3, 0.95) else {
+            eprintln!("SKIP: artifacts present but PJRT unavailable (API-stub build)");
+            return;
+        };
+        let mut a = AimmAgent::new(Box::new(q), AgentConfig::default(), 42);
+        assert_eq!(a.backend(), "pjrt");
+        for i in 0..48u64 {
+            let mut s = [0.0f32; STATE_DIM];
+            s[0] = (i % 8) as f32 / 8.0;
+            s[29] = 0.5;
+            a.invoke(s, 0.1 + (i % 3) as f64 * 0.1, i * 100).unwrap();
+        }
+        assert_eq!(a.stats.invocations, 48);
+        assert!(a.replay.len() > 0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -88,12 +88,15 @@ impl Placement for HoardAllocator {
         let n_cubes = free_frames.len();
         let heap = self.heap(pid, n_cubes);
 
-        // 1. Reuse hoarded (freed) frames: strongest locality.
+        // 1. Reuse hoarded (freed) frames: strongest locality. Ties break
+        // by lowest cube id, never by map-iteration order: hash order
+        // differs between threads, and sweep cells must produce identical
+        // stats on any worker.
         if let Some((&cube, _)) = heap
             .hoarded
             .iter()
             .filter(|(_, &n)| n > 0)
-            .max_by_key(|(_, &n)| n)
+            .max_by_key(|(k, n)| (**n, std::cmp::Reverse(**k)))
         {
             *heap.hoarded.get_mut(&cube).unwrap() -= 1;
             return cube;

@@ -5,15 +5,20 @@
 //! CLI (`aimm table --fig N`) and the `cargo bench` targets are thin
 //! wrappers over these. `scale` shrinks the workload (1.0 = the paper's
 //! "medium"), `runs` is the repeated-run count of §6.1.
+//!
+//! The grid-shaped figures (5, 6, 11, 12) fan their independent cells
+//! across worker threads through [`super::sweep`]; cell order — and
+//! therefore every table row — is fixed by the grid, not the scheduler.
 
 use crate::config::{MappingScheme, SystemConfig, Technique};
-use crate::coordinator::{run_multi, run_single, EpisodeSummary};
+use crate::coordinator::{run_single, EpisodeSummary};
 use crate::metrics::area_report;
 use crate::workloads::{
     affinity_quadrants, classify_pages, generate, mean_active_pages, Benchmark,
 };
 
 use super::harness::Table;
+use super::sweep::{default_threads, parallel_map, run_grid, workload_seed, SweepGrid};
 
 pub use crate::coordinator::runner::{MULTI_RUNS, SINGLE_RUNS};
 
@@ -73,66 +78,80 @@ pub fn table2() -> Table {
     t
 }
 
-/// Fig 5a: page-access-volume classification per benchmark.
+/// Fig 5a: page-access-volume classification per benchmark. Each
+/// benchmark's trace generation + analysis is independent, so the nine
+/// rows compute in parallel while keeping `Benchmark::ALL` order.
 pub fn fig5a(scale: f64, seed: u64) -> Table {
     let mut t = Table::new(
         "Fig 5a: page access classification (fraction of pages)",
         &["bench", "light(<=15)", "moderate(<=255)", "heavy(>255)", "pages"],
     );
-    for b in Benchmark::ALL {
+    let rows = parallel_map(&Benchmark::ALL, default_threads(), |&b| {
         let trace = generate(b, 1, scale, seed);
         let c = classify_pages(&trace);
-        t.row(vec![
+        vec![
             b.name().into(),
             f3(c.light_frac()),
             f3(c.moderate_frac()),
             f3(c.heavy_frac()),
             c.total().to_string(),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t
 }
 
-/// Fig 5b: mean active pages per epoch.
+/// Fig 5b: mean active pages per epoch (parallel over benchmarks).
 pub fn fig5b(scale: f64, seed: u64) -> Table {
     let epoch = 512;
     let mut t = Table::new(
         "Fig 5b: active page distribution (mean distinct pages / 512-op epoch)",
         &["bench", "active pages", "total pages"],
     );
-    for b in Benchmark::ALL {
+    let rows = parallel_map(&Benchmark::ALL, default_threads(), |&b| {
         let trace = generate(b, 1, scale, seed);
-        t.row(vec![
+        vec![
             b.name().into(),
             f2(mean_active_pages(&trace, epoch)),
             trace.distinct_pages().to_string(),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t
 }
 
-/// Fig 5c: affinity quadrants.
+/// Fig 5c: affinity quadrants (parallel over benchmarks).
 pub fn fig5c(scale: f64, seed: u64) -> Table {
     let mut t = Table::new(
         "Fig 5c: page affinity quadrants (fraction of pages)",
         &["bench", "loR-loW", "loR-hiW", "hiR-loW", "hiR-hiW"],
     );
-    for b in Benchmark::ALL {
+    let rows = parallel_map(&Benchmark::ALL, default_threads(), |&b| {
         let trace = generate(b, 1, scale, seed);
         let q = affinity_quadrants(&trace);
         let tot = q.total().max(1) as f64;
-        t.row(vec![
+        vec![
             b.name().into(),
             f3(q.low_radix_low_weight as f64 / tot),
             f3(q.low_radix_high_weight as f64 / tot),
             f3(q.high_radix_low_weight as f64 / tot),
             f3(q.high_radix_high_weight as f64 / tot),
-        ]);
+        ]
+    });
+    for row in rows {
+        t.row(row);
     }
     t
 }
 
-/// Run one (bench, technique, mapping) cell.
+/// Run one (bench, technique, mapping) cell serially, with the same
+/// workload seed the sweep grids assign — so a cell reports identical
+/// numbers whether a figure runs it here (Figs 7–10/14) or through a
+/// parallel grid (Figs 6/11/12).
 fn cell(
     bench: Benchmark,
     technique: Technique,
@@ -140,28 +159,44 @@ fn cell(
     scale: f64,
     runs: usize,
 ) -> anyhow::Result<EpisodeSummary> {
-    let cfg = cfg_with(technique, mapping);
+    let mut cfg = cfg_with(technique, mapping);
+    cfg.seed = workload_seed(cfg.seed, &[bench]);
     run_single(&cfg, bench, scale, runs)
 }
 
-/// Fig 6: execution time normalized to each technique's baseline.
+/// Fig 6: execution time normalized to each technique's baseline. The
+/// full 9 × 3 × 3 grid runs as one parallel sweep; the reader below
+/// consumes results in the grid's fixed nested order (bench → technique
+/// → mapping, with `MappingScheme::ALL` = [B, TOM, AIMM]).
 pub fn fig6(scale: f64, runs: usize) -> anyhow::Result<Table> {
+    let mut grid = SweepGrid::new(scale, runs);
+    grid.techniques = Technique::ALL.to_vec();
+    let cells = grid.cells();
+    let results = run_grid(&cells, default_threads())?;
     let mut t = Table::new(
         "Fig 6: normalized execution time (B = 1.00, lower is better)",
         &["bench", "technique", "B", "TOM", "AIMM"],
     );
+    let mut it = results.iter();
     for b in Benchmark::ALL {
         for technique in Technique::ALL {
-            let base = cell(b, technique, MappingScheme::Baseline, scale, runs)?;
-            let tom = cell(b, technique, MappingScheme::Tom, scale, runs)?;
-            let aimm = cell(b, technique, MappingScheme::Aimm, scale, runs)?;
-            let b_cycles = base.last().cycles as f64;
+            let base = it.next().expect("grid order");
+            let tom = it.next().expect("grid order");
+            let aimm = it.next().expect("grid order");
+            // Release-mode asserts: rows are paired to results by position,
+            // so a drift in SweepGrid's nesting must abort, not mislabel.
+            assert_eq!(base.cell.benches, vec![b], "fig6 grid order drift");
+            assert_eq!(base.cell.technique, technique, "fig6 grid order drift");
+            assert_eq!(base.cell.mapping, MappingScheme::Baseline, "fig6 grid order drift");
+            assert_eq!(tom.cell.mapping, MappingScheme::Tom, "fig6 grid order drift");
+            assert_eq!(aimm.cell.mapping, MappingScheme::Aimm, "fig6 grid order drift");
+            let b_cycles = base.summary.last().cycles as f64;
             t.row(vec![
                 b.name().into(),
                 technique.name().into(),
                 "1.00".into(),
-                f2(tom.last().cycles as f64 / b_cycles),
-                f2(aimm.last().cycles as f64 / b_cycles),
+                f2(tom.summary.last().cycles as f64 / b_cycles),
+                f2(aimm.summary.last().cycles as f64 / b_cycles),
             ]);
         }
     }
@@ -267,61 +302,85 @@ pub fn fig10(scale: f64, runs: usize) -> anyhow::Result<Table> {
     Ok(t)
 }
 
-/// Fig 11: 8×8 mesh, normalized execution time (BNMP family).
+/// Fig 11: 8×8 mesh, normalized execution time (BNMP family). One
+/// parallel sweep over 9 benchmarks × 3 mappings on the larger mesh.
 pub fn fig11(scale: f64, runs: usize) -> anyhow::Result<Table> {
+    let mut grid = SweepGrid::new(scale, runs);
+    grid.meshes = vec![(8, 8)];
+    let cells = grid.cells();
+    let results = run_grid(&cells, default_threads())?;
     let mut t = Table::new(
         "Fig 11: normalized execution time, 8x8 mesh (B = 1.00)",
         &["bench", "B", "TOM", "AIMM"],
     );
+    let mut it = results.iter();
     for b in Benchmark::ALL {
-        let mk = |mapping| -> anyhow::Result<EpisodeSummary> {
-            let mut cfg = cfg_with(Technique::Bnmp, mapping);
-            cfg.mesh_cols = 8;
-            cfg.mesh_rows = 8;
-            run_single(&cfg, b, scale, runs)
-        };
-        let base = mk(MappingScheme::Baseline)?;
-        let tom = mk(MappingScheme::Tom)?;
-        let aimm = mk(MappingScheme::Aimm)?;
-        let bc = base.last().cycles as f64;
+        let base = it.next().expect("grid order");
+        let tom = it.next().expect("grid order");
+        let aimm = it.next().expect("grid order");
+        assert_eq!(base.cell.benches, vec![b], "fig11 grid order drift");
+        assert_eq!(base.cell.mapping, MappingScheme::Baseline, "fig11 grid order drift");
+        assert_eq!(tom.cell.mapping, MappingScheme::Tom, "fig11 grid order drift");
+        assert_eq!(aimm.cell.mapping, MappingScheme::Aimm, "fig11 grid order drift");
+        let bc = base.summary.last().cycles as f64;
         t.row(vec![
             b.name().into(),
             "1.00".into(),
-            f2(tom.last().cycles as f64 / bc),
-            f2(aimm.last().cycles as f64 / bc),
+            f2(tom.summary.last().cycles as f64 / bc),
+            f2(aimm.summary.last().cycles as f64 / bc),
         ]);
     }
     Ok(t)
 }
 
 /// Fig 12: multi-program workloads (§7.5.2): BNMP, +HOARD, +AIMM,
-/// +HOARD+AIMM, normalized to plain BNMP.
+/// +HOARD+AIMM, normalized to plain BNMP. The 4-combo × {mapping ×
+/// HOARD} grid runs as one parallel sweep; within a combo the grid order
+/// is (B, no-hoard), (B, hoard), (AIMM, no-hoard), (AIMM, hoard).
 pub fn fig12(scale: f64, runs: usize) -> anyhow::Result<Table> {
     let combos: Vec<Vec<Benchmark>> = crate::workloads::multi::paper_combinations()
         .into_iter()
         .map(|names| names.iter().map(|n| Benchmark::from_name(n).unwrap()).collect())
         .collect();
+    let mut grid = SweepGrid::new(scale, runs);
+    grid.benches = combos;
+    grid.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    grid.hoard = vec![false, true];
+    let cells = grid.cells();
+    let results = run_grid(&cells, default_threads())?;
     let mut t = Table::new(
         "Fig 12: multi-program normalized execution time (BNMP = 1.00)",
         &["combo", "BNMP", "+HOARD", "+AIMM", "+HOARD+AIMM"],
     );
-    for combo in combos {
-        let mk = |hoard: bool, mapping| -> anyhow::Result<EpisodeSummary> {
-            let mut cfg = cfg_with(Technique::Bnmp, mapping);
-            cfg.hoard = hoard;
-            run_multi(&cfg, &combo, scale, runs)
-        };
-        let base = mk(false, MappingScheme::Baseline)?;
-        let hoard = mk(true, MappingScheme::Baseline)?;
-        let aimm = mk(false, MappingScheme::Aimm)?;
-        let both = mk(true, MappingScheme::Aimm)?;
-        let bc = base.last().cycles as f64;
+    let mut it = results.iter();
+    for _ in 0..grid.benches.len() {
+        let base = it.next().expect("grid order");
+        let hoard = it.next().expect("grid order");
+        let aimm = it.next().expect("grid order");
+        let both = it.next().expect("grid order");
+        assert!(
+            !base.cell.hoard && base.cell.mapping == MappingScheme::Baseline,
+            "fig12 grid order drift"
+        );
+        assert!(
+            hoard.cell.hoard && hoard.cell.mapping == MappingScheme::Baseline,
+            "fig12 grid order drift"
+        );
+        assert!(
+            !aimm.cell.hoard && aimm.cell.mapping == MappingScheme::Aimm,
+            "fig12 grid order drift"
+        );
+        assert!(
+            both.cell.hoard && both.cell.mapping == MappingScheme::Aimm,
+            "fig12 grid order drift"
+        );
+        let bc = base.summary.last().cycles as f64;
         t.row(vec![
-            base.name.clone(),
+            base.summary.name.clone(),
             "1.00".into(),
-            f2(hoard.last().cycles as f64 / bc),
-            f2(aimm.last().cycles as f64 / bc),
-            f2(both.last().cycles as f64 / bc),
+            f2(hoard.summary.last().cycles as f64 / bc),
+            f2(aimm.summary.last().cycles as f64 / bc),
+            f2(both.summary.last().cycles as f64 / bc),
         ]);
     }
     Ok(t)
@@ -339,12 +398,14 @@ pub fn fig13(scale: f64, runs: usize) -> anyhow::Result<Table> {
         for &e in &cache_sizes {
             let mut cfg = cfg_with(Technique::Bnmp, MappingScheme::Aimm);
             cfg.page_info_entries = e;
+            cfg.seed = workload_seed(cfg.seed, &[b]);
             let s = run_single(&cfg, b, scale, runs)?;
             t.row(vec![b.name().into(), "page-cache".into(), format!("E-{e}"), s.last().cycles.to_string()]);
         }
         for &e in &table_sizes {
             let mut cfg = cfg_with(Technique::Bnmp, MappingScheme::Aimm);
             cfg.nmp_table_entries = e;
+            cfg.seed = workload_seed(cfg.seed, &[b]);
             let s = run_single(&cfg, b, scale, runs)?;
             t.row(vec![b.name().into(), "nmp-table".into(), format!("E-{e}"), s.last().cycles.to_string()]);
         }
@@ -416,6 +477,17 @@ mod tests {
         for t in [fig5a(0.2, 1), fig5b(0.2, 1), fig5c(0.2, 1)] {
             assert_eq!(t.rows.len(), 9);
         }
+    }
+
+    #[test]
+    fn fig5_parallel_is_deterministic_and_ordered() {
+        // Same inputs ⇒ identical render regardless of worker scheduling,
+        // and rows stay in Benchmark::ALL order.
+        assert_eq!(fig5a(0.2, 7).render(), fig5a(0.2, 7).render());
+        let t = fig5b(0.2, 7);
+        let names: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+        let want: Vec<&str> = Benchmark::ALL.iter().map(|b| b.name()).collect();
+        assert_eq!(names, want);
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Self-contained measurement harness (the offline crate universe has no
-//! criterion) plus the paper-figure table generators shared by the CLI
-//! (`aimm table --fig N`) and the `cargo bench` targets.
+//! criterion), the paper-figure table generators shared by the CLI
+//! (`aimm table --fig N`) and the `cargo bench` targets, and the parallel
+//! design-space sweep harness behind `aimm sweep` ([`sweep`]).
 
 pub mod figures;
 pub mod harness;
+pub mod sweep;
 
 pub use figures::*;
 pub use harness::{bench_fn, BenchResult, Table};
+pub use sweep::{run_grid, CellResult, SweepCell, SweepGrid};

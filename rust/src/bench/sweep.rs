@@ -1,0 +1,451 @@
+//! Parallel design-space sweep harness (DESIGN.md §6.3).
+//!
+//! A sweep is a grid of [`SweepCell`]s — benchmark (or multi-program
+//! combination) × offloading technique × mapping scheme × mesh dims ×
+//! HOARD × seed — fanned across OS worker threads. Each cell builds its
+//! own [`SystemConfig`] from its own seed and runs the §6.1 episode
+//! protocol through [`crate::coordinator::run_cell`], so per-cell results
+//! are **byte-identical for any worker count**: the simulator holds no
+//! global state, and every map reduction on the simulation path breaks
+//! ties deterministically (never by hash-iteration order, which differs
+//! between threads).
+//!
+//! Results are collected through an mpsc channel tagged with the cell's
+//! grid index and re-ordered into grid order, then rendered either as a
+//! table (`aimm sweep`) or as a machine-readable `BENCH_sweep.json`
+//! report with a fixed key order ([`report_json`]). The figure harnesses
+//! for Figs 6, 11 and 12 are grids over this module; Fig 5's per-bench
+//! trace analysis fans out through [`parallel_map`].
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use crate::config::{MappingScheme, SystemConfig, Technique};
+use crate::coordinator::{run_cell, EpisodeSummary};
+use crate::metrics::RunStats;
+use crate::sim::Rng;
+use crate::workloads::Benchmark;
+
+/// One grid cell: everything needed to reproduce one episode family.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// One entry = single-program episode; several = multi-program.
+    pub benches: Vec<Benchmark>,
+    pub technique: Technique,
+    pub mapping: MappingScheme,
+    /// Mesh (cols, rows).
+    pub mesh: (usize, usize),
+    pub hoard: bool,
+    /// Master seed for this cell's config (trace + all RNG streams).
+    pub seed: u64,
+    pub scale: f64,
+    pub runs: usize,
+}
+
+impl SweepCell {
+    /// Human-readable cell label for tables and logs. Includes the seed
+    /// so replicate rows (`--seeds N,M`) stay distinguishable.
+    pub fn name(&self) -> String {
+        let combo =
+            self.benches.iter().map(|b| b.name()).collect::<Vec<_>>().join("-");
+        format!(
+            "{}/{}/{}/{}x{}{}/s{:x}",
+            combo,
+            self.technique,
+            self.mapping,
+            self.mesh.0,
+            self.mesh.1,
+            if self.hoard { "/HOARD" } else { "" },
+            self.seed,
+        )
+    }
+
+    /// The cell's full system configuration.
+    pub fn config(&self) -> anyhow::Result<SystemConfig> {
+        let mut cfg = SystemConfig::default();
+        cfg.technique = self.technique;
+        cfg.mapping = self.mapping;
+        cfg.mesh_cols = self.mesh.0;
+        cfg.mesh_rows = self.mesh.1;
+        cfg.hoard = self.hoard;
+        cfg.seed = self.seed;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Execute the cell (the worker-thread body).
+    pub fn run(&self) -> anyhow::Result<EpisodeSummary> {
+        let cfg = self.config()?;
+        run_cell(&cfg, &self.benches, self.scale, self.runs)
+    }
+}
+
+/// Decorrelate a seed by `index` with no dependence on execution order.
+/// The mixing core is [`sim::Rng`](crate::sim::Rng)'s splitmix64 — the
+/// crate's single PRNG — fed a golden-ratio-spread combination of the
+/// inputs.
+pub fn derive_seed(base: u64, index: u64) -> u64 {
+    Rng::new(base ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// The workload seed for a benchmark combination: a fold of the combo's
+/// identity into `base`. Depends only on *what* runs — never on grid
+/// position or scheduling — so a (bench, technique, mapping) cell reports
+/// identical numbers whether it came from a parallel grid (Figs 6/11/12),
+/// a serial figure loop (Figs 7–10/13/14), or `aimm sweep`.
+pub fn workload_seed(base: u64, benches: &[Benchmark]) -> u64 {
+    benches.iter().fold(base, |acc, &b| derive_seed(acc, b as u64 + 1))
+}
+
+/// Axes of a sweep grid. `cells()` takes the cartesian product.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    /// Workloads; an inner vec with several entries is one multi-program
+    /// combination.
+    pub benches: Vec<Vec<Benchmark>>,
+    pub techniques: Vec<Technique>,
+    pub mappings: Vec<MappingScheme>,
+    pub meshes: Vec<(usize, usize)>,
+    pub hoard: Vec<bool>,
+    /// Base seeds; each is a replicate of the whole grid.
+    pub seeds: Vec<u64>,
+    pub scale: f64,
+    pub runs: usize,
+}
+
+impl SweepGrid {
+    /// Default grid: all nine benchmarks under BNMP across the three
+    /// mapping schemes on the 4×4 mesh — 27 cells, the paper's Fig 6
+    /// BNMP slice.
+    pub fn new(scale: f64, runs: usize) -> Self {
+        Self {
+            benches: Benchmark::ALL.iter().map(|&b| vec![b]).collect(),
+            techniques: vec![Technique::Bnmp],
+            mappings: MappingScheme::ALL.to_vec(),
+            meshes: vec![(4, 4)],
+            hoard: vec![false],
+            seeds: vec![SystemConfig::default().seed],
+            scale,
+            runs,
+        }
+    }
+
+    /// Cartesian product in fixed nested order: bench → technique →
+    /// mapping → mesh → hoard → seed (innermost fastest).
+    ///
+    /// Cells that differ only in technique / mapping / mesh / hoard share
+    /// a workload seed so scheme comparisons hold the trace constant;
+    /// cells that differ in workload or base seed get decorrelated
+    /// streams via [`workload_seed`], which depends only on the combo's
+    /// identity — never on grid position or execution order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::new();
+        for benches in &self.benches {
+            for &technique in &self.techniques {
+                for &mapping in &self.mappings {
+                    for &mesh in &self.meshes {
+                        for &hoard in &self.hoard {
+                            for &seed in &self.seeds {
+                                out.push(SweepCell {
+                                    benches: benches.clone(),
+                                    technique,
+                                    mapping,
+                                    mesh,
+                                    hoard,
+                                    seed: workload_seed(seed, benches),
+                                    scale: self.scale,
+                                    runs: self.runs,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Worker count to use when the caller has no preference.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One executed cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub cell: SweepCell,
+    pub summary: EpisodeSummary,
+}
+
+/// Fan `cells` across up to `threads` scoped workers via [`parallel_map`]
+/// and pair each summary with its cell, in grid order. Every cell's
+/// config is validated up front, so a bad axis value (say a 1×1 mesh)
+/// fails in milliseconds instead of after hours of valid cells whose
+/// finished work an error return would discard. On a runtime failure the
+/// first failing cell by grid index wins.
+pub fn run_grid(cells: &[SweepCell], threads: usize) -> anyhow::Result<Vec<CellResult>> {
+    if cells.is_empty() {
+        return Ok(Vec::new());
+    }
+    for (i, cell) in cells.iter().enumerate() {
+        cell.config()
+            .map_err(|e| anyhow::anyhow!("sweep cell {i} ({}): {e}", cell.name()))?;
+    }
+    let summaries = parallel_map(cells, threads, SweepCell::run);
+    let mut out = Vec::with_capacity(cells.len());
+    for (i, res) in summaries.into_iter().enumerate() {
+        let summary = res
+            .map_err(|e| anyhow::anyhow!("sweep cell {i} ({}) failed: {e}", cells[i].name()))?;
+        out.push(CellResult { cell: cells[i].clone(), summary });
+    }
+    Ok(out)
+}
+
+/// Order-preserving parallel map over a slice — the one fan-out primitive
+/// in the crate. Workers claim indices through an atomic cursor and send
+/// `(index, result)` through an mpsc channel; item `i`'s result lands at
+/// index `i` whatever thread computed it. [`run_grid`] and the Fig 5
+/// analysis harnesses both sit on top of this.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, items.len());
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let slots: Vec<Option<R>> = std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                if tx.send((i, f(&items[i]))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        for (i, r) in rx {
+            slots[i] = Some(r);
+        }
+        slots
+    });
+    slots
+        .into_iter()
+        .map(|o| o.expect("worker sent every claimed index"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// JSON report (fixed key order — runtime/json.rs can parse it back, and
+// the determinism test compares these strings byte-for-byte).
+// ---------------------------------------------------------------------
+
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        // NaN/∞ (e.g. 0/0 on a degenerate cell) must stay distinguishable
+        // from a genuine zero; the in-crate parser handles null.
+        "null".to_string()
+    }
+}
+
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn jobj(fields: &[(&str, String)]) -> String {
+    let body: Vec<String> =
+        fields.iter().map(|(k, v)| format!("{}:{}", jstr(k), v)).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Serialize one run's statistics.
+pub fn stats_json(r: &RunStats) -> String {
+    jobj(&[
+        ("cycles", r.cycles.to_string()),
+        ("ops_completed", r.ops_completed.to_string()),
+        ("opc", jnum(r.opc())),
+        ("avg_hops", jnum(r.avg_hops)),
+        ("avg_packet_latency", jnum(r.avg_packet_latency)),
+        ("compute_utilization", jnum(r.compute_utilization)),
+        ("compute_balance", jnum(r.compute_balance)),
+        ("fraction_pages_migrated", jnum(r.fraction_pages_migrated)),
+        ("fraction_accesses_on_migrated", jnum(r.fraction_accesses_on_migrated)),
+        ("pages_migrated", r.pages_migrated.to_string()),
+        ("migrations", r.migrations.to_string()),
+        ("row_hit_rate", jnum(r.row_hit_rate)),
+        ("agent_invocations", r.agent_invocations.to_string()),
+        ("agent_train_steps", r.agent_train_steps.to_string()),
+        ("agent_avg_loss", jnum(r.agent_avg_loss)),
+        ("agent_cumulative_reward", jnum(r.agent_cumulative_reward)),
+        ("energy_aimm_nj", jnum(r.energy.aimm_hardware_nj)),
+        ("energy_network_nj", jnum(r.energy.network_nj)),
+        ("energy_memory_nj", jnum(r.energy.memory_nj)),
+        ("timeline_samples", r.opc_timeline.len().to_string()),
+    ])
+}
+
+/// Serialize one executed cell: descriptor + per-run stats.
+pub fn cell_json(res: &CellResult) -> String {
+    let c = &res.cell;
+    let benches: Vec<String> = c.benches.iter().map(|b| jstr(b.name())).collect();
+    let runs: Vec<String> = res.summary.runs.iter().map(stats_json).collect();
+    jobj(&[
+        ("name", jstr(&res.summary.name)),
+        ("benches", format!("[{}]", benches.join(","))),
+        ("technique", jstr(c.technique.name())),
+        ("mapping", jstr(c.mapping.name())),
+        ("mesh", jstr(&format!("{}x{}", c.mesh.0, c.mesh.1))),
+        ("hoard", c.hoard.to_string()),
+        // 0x-hex string, not a bare number: full 64-bit seeds exceed 2^53
+        // and would lose bits through any double-based JSON parser
+        // (including runtime/json.rs). `aimm run --seed` accepts this 0x
+        // form as-is — that is the reproduce-from-report path. Feeding it
+        // to `aimm sweep --seeds` would NOT reproduce the cell: grid
+        // seeds are base seeds that get re-folded per combo.
+        ("seed", jstr(&format!("{:#x}", c.seed))),
+        ("scale", jnum(c.scale)),
+        ("runs", format!("[{}]", runs.join(","))),
+    ])
+}
+
+/// The whole report. Deliberately excludes worker count and wall-clock so
+/// the file is reproducible byte-for-byte for a given grid.
+pub fn report_json(results: &[CellResult]) -> String {
+    let cells: Vec<String> = results.iter().map(cell_json).collect();
+    jobj(&[
+        ("schema", jstr("aimm-sweep-v1")),
+        ("cell_count", results.len().to_string()),
+        ("cells", format!("[{}]", cells.join(","))),
+    ])
+}
+
+/// Write the report to `path` (the `BENCH_sweep.json` artifact).
+pub fn write_report(path: &Path, results: &[CellResult]) -> anyhow::Result<()> {
+    std::fs::write(path, report_json(results))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_is_fig6_bnmp_slice() {
+        let grid = SweepGrid::new(0.1, 2);
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 27); // 9 benches × 1 technique × 3 mappings
+        // Mapping is the innermost populated axis.
+        assert_eq!(cells[0].mapping, MappingScheme::Baseline);
+        assert_eq!(cells[1].mapping, MappingScheme::Tom);
+        assert_eq!(cells[2].mapping, MappingScheme::Aimm);
+        // Same bench ⇒ same workload seed across mappings.
+        assert_eq!(cells[0].seed, cells[2].seed);
+        // Different bench ⇒ decorrelated seed.
+        assert_ne!(cells[0].seed, cells[3].seed);
+    }
+
+    #[test]
+    fn derive_seed_is_stable_and_spreads() {
+        assert_eq!(derive_seed(7, 3), derive_seed(7, 3));
+        assert_ne!(derive_seed(7, 3), derive_seed(7, 4));
+        assert_ne!(derive_seed(7, 0), derive_seed(8, 0));
+    }
+
+    #[test]
+    fn workload_seed_depends_on_combo_not_position() {
+        let base = SystemConfig::default().seed;
+        // Same combo ⇒ same seed, wherever it sits in a grid.
+        assert_eq!(
+            workload_seed(base, &[Benchmark::Spmv]),
+            workload_seed(base, &[Benchmark::Spmv])
+        );
+        // Different combo (or order) ⇒ different seed.
+        assert_ne!(
+            workload_seed(base, &[Benchmark::Spmv]),
+            workload_seed(base, &[Benchmark::Mac])
+        );
+        assert_ne!(
+            workload_seed(base, &[Benchmark::Mac, Benchmark::Rd]),
+            workload_seed(base, &[Benchmark::Rd, Benchmark::Mac])
+        );
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..40).collect();
+        let doubled = parallel_map(&items, 4, |&i| i * 2);
+        assert_eq!(doubled, (0..40).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(parallel_map(&[] as &[usize], 4, |&i| i).is_empty());
+    }
+
+    #[test]
+    fn json_escaping_and_shape() {
+        assert_eq!(jstr("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(jnum(0.25), "0.25");
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(f64::INFINITY), "null");
+        let o = jobj(&[("k", "1".to_string())]);
+        assert_eq!(o, "{\"k\":1}");
+    }
+
+    #[test]
+    fn invalid_cell_fails_fast() {
+        let mut grid = SweepGrid::new(0.03, 1);
+        grid.benches = vec![vec![Benchmark::Mac]];
+        grid.meshes = vec![(1, 1)]; // below the 2×2 minimum
+        let err = run_grid(&grid.cells(), 2).unwrap_err().to_string();
+        assert!(err.contains("sweep cell 0"), "{err}");
+    }
+
+    #[test]
+    fn tiny_grid_runs_in_parallel() {
+        let mut grid = SweepGrid::new(0.03, 1);
+        grid.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd]];
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 6);
+        let results = run_grid(&cells, 3).unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert!(r.summary.last().ops_completed > 0, "{}", r.cell.name());
+        }
+        // Report parses back through the in-crate JSON parser.
+        let parsed = crate::runtime::json::parse(&report_json(&results)).unwrap();
+        assert_eq!(parsed.get("cell_count").unwrap().as_usize(), Some(6));
+        assert_eq!(
+            parsed.get("cells").unwrap().as_arr().unwrap().len(),
+            6
+        );
+    }
+}

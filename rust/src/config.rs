@@ -48,6 +48,12 @@ impl Technique {
             Technique::Pei => "PEI",
         }
     }
+
+    /// Case-insensitive name lookup — the single parser shared by the
+    /// CLI flags and the TOML config loader.
+    pub fn from_name(s: &str) -> Option<Technique> {
+        Self::ALL.into_iter().find(|t| t.name().eq_ignore_ascii_case(s))
+    }
 }
 
 impl fmt::Display for Technique {
@@ -78,6 +84,16 @@ impl MappingScheme {
             MappingScheme::Tom => "TOM",
             MappingScheme::Aimm => "AIMM",
         }
+    }
+
+    /// Case-insensitive name lookup (accepts the figures' "B" shorthand
+    /// and the long form "BASELINE") — shared by the CLI flags and the
+    /// TOML config loader.
+    pub fn from_name(s: &str) -> Option<MappingScheme> {
+        if s.eq_ignore_ascii_case("BASELINE") {
+            return Some(MappingScheme::Baseline);
+        }
+        Self::ALL.into_iter().find(|m| m.name().eq_ignore_ascii_case(s))
     }
 }
 
@@ -355,20 +371,14 @@ impl SystemConfig {
                 "gamma" => cfg.agent.gamma = v.as_f64()? as f32,
                 "lr" => cfg.agent.lr = v.as_f64()? as f32,
                 "technique" => {
-                    cfg.technique = match v.as_str()?.to_ascii_uppercase().as_str() {
-                        "BNMP" => Technique::Bnmp,
-                        "LDB" => Technique::Ldb,
-                        "PEI" => Technique::Pei,
-                        other => anyhow::bail!("unknown technique {other:?}"),
-                    }
+                    let name = v.as_str()?;
+                    cfg.technique = Technique::from_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown technique {name:?}"))?;
                 }
                 "mapping" => {
-                    cfg.mapping = match v.as_str()?.to_ascii_uppercase().as_str() {
-                        "B" | "BASELINE" => MappingScheme::Baseline,
-                        "TOM" => MappingScheme::Tom,
-                        "AIMM" => MappingScheme::Aimm,
-                        other => anyhow::bail!("unknown mapping {other:?}"),
-                    }
+                    let name = v.as_str()?;
+                    cfg.mapping = MappingScheme::from_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown mapping {name:?}"))?;
                 }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
@@ -547,6 +557,21 @@ mod tests {
     #[test]
     fn parse_rejects_unknown_key() {
         assert!(SystemConfig::parse("bogus = 3").is_err());
+    }
+
+    #[test]
+    fn names_roundtrip_through_from_name() {
+        for t in Technique::ALL {
+            assert_eq!(Technique::from_name(t.name()), Some(t));
+        }
+        for m in MappingScheme::ALL {
+            assert_eq!(MappingScheme::from_name(m.name()), Some(m));
+        }
+        assert_eq!(MappingScheme::from_name("baseline"), Some(MappingScheme::Baseline));
+        assert_eq!(MappingScheme::from_name("b"), Some(MappingScheme::Baseline));
+        assert_eq!(Technique::from_name("ldb"), Some(Technique::Ldb));
+        assert_eq!(Technique::from_name("nope"), None);
+        assert_eq!(MappingScheme::from_name("nope"), None);
     }
 
     #[test]

@@ -6,5 +6,5 @@
 pub mod runner;
 pub mod system;
 
-pub use runner::{run_multi, run_single, run_stream, EpisodeSummary};
+pub use runner::{run_cell, run_multi, run_single, run_stream, EpisodeSummary};
 pub use system::System;

@@ -81,6 +81,25 @@ pub fn run_single(
     run_stream(cfg, &trace.ops, runs, bench.name())
 }
 
+/// One sweep-grid cell: a single benchmark runs the §6.1 single-program
+/// protocol, a combination the multi-program one. The outcome is fully
+/// determined by (`cfg`, `benches`, `scale`, `runs`) — the parallel
+/// sweep harness ([`crate::bench::sweep`]) relies on this to produce
+/// identical stats for a cell regardless of which worker thread runs it.
+pub fn run_cell(
+    cfg: &SystemConfig,
+    benches: &[Benchmark],
+    scale: f64,
+    runs: usize,
+) -> anyhow::Result<EpisodeSummary> {
+    anyhow::ensure!(!benches.is_empty(), "sweep cell needs at least one benchmark");
+    if benches.len() == 1 {
+        run_single(cfg, benches[0], scale, runs)
+    } else {
+        run_multi(cfg, benches, scale, runs)
+    }
+}
+
 /// Multi-program episode (§7.5.2).
 pub fn run_multi(
     cfg: &SystemConfig,
@@ -126,6 +145,16 @@ mod tests {
         // Agent invocations happen in both runs.
         assert!(s.runs[0].agent_invocations > 0);
         assert!(s.runs[1].agent_invocations > 0);
+    }
+
+    #[test]
+    fn run_cell_dispatches_single_and_multi() {
+        let c = cfg(MappingScheme::Baseline);
+        let s = run_cell(&c, &[Benchmark::Mac], 0.03, 1).unwrap();
+        assert_eq!(s.name, "MAC");
+        let m = run_cell(&c, &[Benchmark::Mac, Benchmark::Rd], 0.03, 1).unwrap();
+        assert_eq!(m.name, "MAC-RD");
+        assert!(run_cell(&c, &[], 0.03, 1).is_err());
     }
 
     #[test]

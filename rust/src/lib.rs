@@ -6,9 +6,11 @@
 //! The crate hosts the full three-layer stack's Layer 3: a cycle-level
 //! memory-cube-network NMP simulator (the paper's evaluation substrate), the
 //! NMP offloading techniques (BNMP / LDB / PEI), the mapping schemes
-//! (default / TOM / AIMM), and the AIMM reinforcement-learning coordinator
-//! whose dueling Q-network executes AOT-compiled JAX/Pallas HLO through the
-//! PJRT C API ([`runtime`]). Python never runs at simulation time.
+//! (default / TOM / AIMM), and the AIMM reinforcement-learning coordinator.
+//! When built with the `pjrt` cargo feature, the agent's dueling Q-network
+//! executes AOT-compiled JAX/Pallas HLO through the PJRT C API
+//! ([`runtime`]); the default build has no native dependency and uses the
+//! pure-rust linear-Q mock. Python never runs at simulation time.
 //!
 //! Module map (see DESIGN.md §4 for the full inventory):
 //!
@@ -22,12 +24,14 @@
 //! * [`nmp`] — NMP-op format and the BNMP/LDB/PEI offloading techniques
 //! * [`mapping`] — physical→DRAM hashing, TOM epoch remapping, remap tables
 //! * [`agent`] — AIMM RL agent: state, actions, reward, replay, ε-greedy
-//! * [`runtime`] — PJRT artifact loading + execution (`QFunction`)
+//! * [`runtime`] — `QFunction` backends: linear mock + manifest plumbing
+//!   by default, PJRT artifact execution behind the `pjrt` feature
 //! * [`workloads`] — the 9 benchmark trace generators + workload analysis
 //! * [`coordinator`] — episode runner wiring everything together
 //! * [`metrics`] — performance counters, energy/area model (paper §7.7)
 //! * [`config`] — hardware/agent configuration (paper Table 1 defaults)
-//! * [`bench`] — self-contained measurement harness used by `cargo bench`
+//! * [`bench`] — measurement harness, figure tables and the parallel
+//!   design-space sweep behind `cargo bench` / `aimm sweep`
 
 pub mod agent;
 pub mod alloc;

@@ -1,10 +1,13 @@
 //! `aimm` — the leader binary: run episodes, regenerate the paper's
-//! tables and figures, inspect workloads and configurations.
+//! tables and figures, sweep the design space, inspect workloads and
+//! configurations.
 //!
 //! ```text
 //! aimm run      --bench SPMV [--technique BNMP] [--mapping AIMM]
 //!               [--scale 0.5] [--runs 5] [--mesh 4x4] [--hoard]
 //!               [--config file.toml] [--seed N]
+//! aimm sweep    [--benches all] [--mappings all] [--meshes 4x4,8x8]
+//!               [--threads N] [--out BENCH_sweep.json]
 //! aimm analyze  --fig 5a|5b|5c [--scale 1.0]
 //! aimm table    --fig 6|7|8|9|10|11|12|13|14|area [--scale 0.25] [--runs 3]
 //! aimm table1 | aimm table2
@@ -15,25 +18,73 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use aimm::bench::figures;
+use aimm::bench::sweep::{self, SweepGrid};
+use aimm::bench::Table;
 use aimm::config::{MappingScheme, SystemConfig, Technique};
 use aimm::coordinator::{run_multi, run_single};
 use aimm::workloads::Benchmark;
 
-fn usage() -> &'static str {
-    "aimm — AIMM NMP mapping reproduction\n\
-     \n\
-     subcommands:\n\
-       run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
-                [--scale F] [--runs N] [--mesh CxR] [--hoard] [--seed N] [--config FILE]\n\
-       multi    --benches A,B,C (same options as run)\n\
-       analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
-       table    --fig 6|7|8|9|10|11|12|13|14|area [--scale F] [--runs N]\n\
-       table1   print the active hardware configuration (paper Table 1)\n\
-       table2   print the benchmark list (paper Table 2)\n\
-       config   print the default config as TOML\n\
-     \n\
-     Artifacts: set AIMM_ARTIFACTS or run from the repo root (artifacts/).\n\
-     Without artifacts the agent falls back to a pure-rust linear Q (noted in output)."
+/// Q-backend note for `--help`, matching what this binary was built with.
+#[cfg(feature = "pjrt")]
+const BACKEND_NOTE: &str =
+    "Artifacts: set AIMM_ARTIFACTS or run from the repo root (artifacts/).\n\
+     Without artifacts the agent falls back to a pure-rust linear Q (noted in output).";
+#[cfg(not(feature = "pjrt"))]
+const BACKEND_NOTE: &str =
+    "This binary was built without the `pjrt` feature: the agent always uses the\n\
+     pure-rust linear Q. Rebuild with `--features pjrt` to execute AOT artifacts.";
+
+fn usage() -> String {
+    format!(
+        "aimm — AIMM NMP mapping reproduction\n\
+         \n\
+         subcommands:\n\
+           run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
+                    [--scale F] [--runs N] [--mesh CxR] [--hoard] [--seed N] [--config FILE]\n\
+           multi    --benches A,B,C (same options as run)\n\
+           sweep    [--benches all|A,B,A+B (use + for a multi-program combo)]\n\
+                    [--techniques BNMP,LDB,PEI|all] [--mappings B,TOM,AIMM|all]\n\
+                    [--meshes 4x4,8x8] [--seeds N,M] [--scale F] [--runs N]\n\
+                    [--threads N] [--hoard] [--out BENCH_sweep.json]\n\
+           analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
+           table    --fig 6|7|8|9|10|11|12|13|14|area [--scale F] [--runs N]\n\
+           table1   print the active hardware configuration (paper Table 1)\n\
+           table2   print the benchmark list (paper Table 2)\n\
+           config   print the default config as TOML\n\
+         \n\
+         {BACKEND_NOTE}"
+    )
+}
+
+fn parse_technique(t: &str) -> Result<Technique, String> {
+    Technique::from_name(t).ok_or_else(|| format!("unknown technique {t}"))
+}
+
+fn parse_mapping(m: &str) -> Result<MappingScheme, String> {
+    MappingScheme::from_name(m).ok_or_else(|| format!("unknown mapping {m}"))
+}
+
+/// Seeds parse as decimal or `0x`-hex — the hex form is what
+/// `BENCH_sweep.json` records. A report cell reproduces via
+/// `aimm run --seed 0x…` (applied as-is); `sweep --seeds` instead takes
+/// base seeds that are re-folded with each cell's benchmark combo.
+fn parse_seed(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse::<u64>(),
+    };
+    parsed.map_err(|_| format!("bad seed {s:?} (expected decimal or 0x-hex)"))
+}
+
+fn parse_mesh(s: &str) -> Result<(usize, usize), String> {
+    let (c, r) = s
+        .trim()
+        .split_once('x')
+        .ok_or_else(|| format!("mesh expects CxR, got {s:?}"))?;
+    let c = c.parse().map_err(|_| format!("bad mesh cols {c:?}"))?;
+    let r = r.parse().map_err(|_| format!("bad mesh rows {r:?}"))?;
+    Ok((c, r))
 }
 
 /// Tiny flag parser: `--key value` pairs plus bare flags.
@@ -92,33 +143,21 @@ fn build_cfg(args: &Args) -> Result<SystemConfig, String> {
         None => SystemConfig::default(),
     };
     if let Some(t) = args.get("technique") {
-        cfg.technique = match t.to_ascii_uppercase().as_str() {
-            "BNMP" => Technique::Bnmp,
-            "LDB" => Technique::Ldb,
-            "PEI" => Technique::Pei,
-            other => return Err(format!("unknown technique {other}")),
-        };
+        cfg.technique = parse_technique(t)?;
     }
     if let Some(m) = args.get("mapping") {
-        cfg.mapping = match m.to_ascii_uppercase().as_str() {
-            "B" | "BASELINE" => MappingScheme::Baseline,
-            "TOM" => MappingScheme::Tom,
-            "AIMM" => MappingScheme::Aimm,
-            other => return Err(format!("unknown mapping {other}")),
-        };
+        cfg.mapping = parse_mapping(m)?;
     }
     if let Some(mesh) = args.get("mesh") {
-        let (c, r) = mesh
-            .split_once('x')
-            .ok_or_else(|| format!("--mesh expects CxR, got {mesh:?}"))?;
-        cfg.mesh_cols = c.parse().map_err(|_| "bad mesh cols".to_string())?;
-        cfg.mesh_rows = r.parse().map_err(|_| "bad mesh rows".to_string())?;
+        let (c, r) = parse_mesh(mesh)?;
+        cfg.mesh_cols = c;
+        cfg.mesh_rows = r;
     }
     if args.get("hoard").is_some() {
         cfg.hoard = true;
     }
     if let Some(s) = args.get("seed") {
-        cfg.seed = s.parse().map_err(|_| "bad seed".to_string())?;
+        cfg.seed = parse_seed(s)?;
     }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
@@ -172,7 +211,10 @@ fn real_main() -> Result<(), String> {
         return Ok(());
     }
     let scale = args.f64_or("scale", 0.25)?;
-    let seed = args.usize_or("seed", 7)? as u64;
+    let seed = match args.get("seed") {
+        Some(s) => parse_seed(s)?,
+        None => 7,
+    };
 
     match cmd.as_str() {
         "run" => {
@@ -197,6 +239,101 @@ fn real_main() -> Result<(), String> {
             let runs = args.usize_or("runs", figures::MULTI_RUNS)?;
             let s = run_multi(&cfg, &benches, scale, runs).map_err(|e| e.to_string())?;
             print_summary(&s, &cfg);
+        }
+        "sweep" => {
+            // The grid takes plural axis flags; catch the singular forms
+            // `run` accepts instead of silently ignoring them.
+            for (singular, plural) in [
+                ("bench", "benches"),
+                ("technique", "techniques"),
+                ("mapping", "mappings"),
+                ("mesh", "meshes"),
+                ("seed", "seeds"),
+            ] {
+                if args.get(singular).is_some() {
+                    return Err(format!("sweep takes --{plural}, not --{singular}"));
+                }
+            }
+            // Sweep defaults are calibrated like the bench targets
+            // (scale 0.12, 2 runs) so the default 27-cell grid finishes
+            // in minutes, not hours.
+            let scale = args.f64_or("scale", 0.12)?;
+            let runs = args.usize_or("runs", 2)?;
+            let mut grid = SweepGrid::new(scale, runs);
+            if let Some(list) = args.get("benches") {
+                if !list.eq_ignore_ascii_case("all") {
+                    grid.benches = list
+                        .split(',')
+                        .map(|combo| {
+                            combo
+                                .split('+')
+                                .map(|n| {
+                                    Benchmark::from_name(n.trim())
+                                        .ok_or_else(|| format!("unknown benchmark {n:?}"))
+                                })
+                                .collect::<Result<Vec<_>, _>>()
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                }
+            }
+            if let Some(list) = args.get("techniques") {
+                grid.techniques = if list.eq_ignore_ascii_case("all") {
+                    Technique::ALL.to_vec()
+                } else {
+                    list.split(',')
+                        .map(|t| parse_technique(t.trim()))
+                        .collect::<Result<_, _>>()?
+                };
+            }
+            if let Some(list) = args.get("mappings") {
+                if !list.eq_ignore_ascii_case("all") {
+                    grid.mappings = list
+                        .split(',')
+                        .map(|m| parse_mapping(m.trim()))
+                        .collect::<Result<_, _>>()?;
+                }
+            }
+            if let Some(list) = args.get("meshes") {
+                grid.meshes = list.split(',').map(parse_mesh).collect::<Result<_, _>>()?;
+            }
+            if let Some(list) = args.get("seeds") {
+                grid.seeds = list.split(',').map(parse_seed).collect::<Result<_, _>>()?;
+            }
+            if args.get("hoard").is_some() {
+                grid.hoard = vec![true];
+            }
+            let threads = args.usize_or("threads", sweep::default_threads())?.max(1);
+            let cells = grid.cells();
+            if cells.is_empty() {
+                return Err("sweep grid is empty".into());
+            }
+            println!(
+                "sweep: {} cells ({} runs each, scale {scale}) on {threads} thread(s)",
+                cells.len(),
+                runs
+            );
+            let t0 = std::time::Instant::now();
+            let results = sweep::run_grid(&cells, threads).map_err(|e| e.to_string())?;
+            let mut t = Table::new(
+                "Sweep results (steady-state run per cell)",
+                &["cell", "cycles", "opc", "hops", "util", "migrated"],
+            );
+            for r in &results {
+                let last = r.summary.last();
+                t.row(vec![
+                    r.cell.name(),
+                    last.cycles.to_string(),
+                    format!("{:.4}", last.opc()),
+                    format!("{:.2}", last.avg_hops),
+                    format!("{:.3}", last.compute_utilization),
+                    format!("{:.2}", last.fraction_pages_migrated),
+                ]);
+            }
+            println!("{}", t.render());
+            let out = args.get("out").unwrap_or("BENCH_sweep.json");
+            sweep::write_report(std::path::Path::new(out), &results)
+                .map_err(|e| e.to_string())?;
+            println!("wrote {out} ({} cells) in {:?}", results.len(), t0.elapsed());
         }
         "analyze" => {
             let fig = args.get("fig").ok_or("analyze needs --fig 5a|5b|5c")?;

@@ -88,11 +88,14 @@ impl PageInfoCache {
         self.touches += 1;
         if !self.entries.contains_key(&key) {
             if self.entries.len() >= self.capacity {
-                // LFU victim, content abandoned (§5.1).
+                // LFU victim, content abandoned (§5.1). Ties break by
+                // lowest key, never by map-iteration order: hash order
+                // differs between threads, and sweep cells must produce
+                // identical stats on any worker.
                 let victim = self
                     .entries
                     .iter()
-                    .min_by_key(|(_, e)| e.accesses)
+                    .min_by_key(|(k, e)| (e.accesses, **k))
                     .map(|(k, _)| *k)
                     .unwrap();
                 self.entries.remove(&victim);
@@ -217,6 +220,19 @@ mod tests {
         assert!(c.get(&(1, 2)).is_none());
         assert!(c.get(&(1, 3)).is_some());
         assert_eq!(c.evictions, 1);
+    }
+
+    #[test]
+    fn lfu_ties_break_by_lowest_key() {
+        let mut c = PageInfoCache::new(2);
+        c.on_dispatch((1, 5), 0, 0, 0);
+        c.on_dispatch((1, 2), 0, 0, 0);
+        // Both cached pages have one access; the insert below must evict
+        // the lowest key, (1, 2) — deterministically, on every thread.
+        c.on_dispatch((1, 9), 0, 0, 0);
+        assert!(c.get(&(1, 2)).is_none());
+        assert!(c.get(&(1, 5)).is_some());
+        assert!(c.get(&(1, 9)).is_some());
     }
 
     #[test]

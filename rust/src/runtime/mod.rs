@@ -1,10 +1,13 @@
-//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! Q-function backends. The PJRT runtime (behind the `pjrt` cargo
+//! feature) loads the AOT artifacts produced by `make artifacts`
 //! (python/compile/aot.py) and executes the AIMM Q-network from rust.
 //!
-//! This is the only place the three layers meet at run time: the L2 JAX
-//! model (with its L1 Pallas kernels already lowered inside) arrives as
-//! HLO text, is compiled once on the PJRT CPU client, and then serves the
-//! agent's inference and training calls with **no python anywhere**.
+//! That path is the only place the three layers meet at run time: the L2
+//! JAX model (with its L1 Pallas kernels already lowered inside) arrives
+//! as HLO text, is compiled once on the PJRT CPU client, and then serves
+//! the agent's inference and training calls with **no python anywhere**.
+//! The default build carries no native dependency and always uses the
+//! pure-rust [`LinearQ`] mock instead.
 //!
 //! The artifact contract (shapes, flat-parameter layout) is defined by
 //! python/compile/model.py and mirrored by the constants below; the
@@ -14,10 +17,12 @@
 pub mod json;
 pub mod mock;
 pub mod params;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use mock::LinearQ;
 pub use params::{Manifest, ParamStore};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtQNet;
 
 use std::path::PathBuf;
@@ -53,9 +58,10 @@ impl TrainBatch {
     }
 }
 
-/// The Q-function the agent consults. Implemented by [`PjrtQNet`] (the
-/// real AOT-compiled network) and [`LinearQ`] (a dependency-free mock for
-/// tests and artifact-less environments).
+/// The Q-function the agent consults. Implemented by `PjrtQNet` (the
+/// real AOT-compiled network, behind the `pjrt` cargo feature) and
+/// [`LinearQ`] (a dependency-free mock for tests and artifact-less
+/// environments).
 pub trait QFunction {
     /// Q(s, ·) for a single state.
     fn q_values(&mut self, s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]>;
@@ -88,13 +94,15 @@ pub fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-/// Build the best available Q-function: PJRT artifacts when present,
-/// otherwise the pure-rust mock (tests, CI without `make artifacts`).
+/// Build the best available Q-function: the PJRT backend when this build
+/// carries it (`--features pjrt`) *and* artifacts load, otherwise the
+/// pure-rust mock (tests, CI, offline builds without `make artifacts`).
 pub fn best_qfunction(lr: f32, gamma: f32, seed: u64) -> Box<dyn QFunction> {
-    match artifacts_dir().and_then(|d| PjrtQNet::load(&d, lr, gamma).ok()) {
-        Some(q) => Box::new(q),
-        None => Box::new(LinearQ::new(lr, gamma, seed)),
+    #[cfg(feature = "pjrt")]
+    if let Some(q) = artifacts_dir().and_then(|d| PjrtQNet::load(&d, lr, gamma).ok()) {
+        return Box::new(q);
     }
+    Box::new(LinearQ::new(lr, gamma, seed))
 }
 
 #[cfg(test)]

@@ -1,0 +1,65 @@
+//! Sweep determinism: a grid cell must produce byte-identical `RunStats`
+//! whatever the worker count (EXPERIMENTS.md §Sweep). This is the
+//! contract that makes `aimm sweep` results comparable across machines
+//! and the figure harnesses reproducible — the simulator must not leak
+//! thread identity (e.g. per-thread hash seeds) into any decision.
+
+use aimm::bench::sweep::{cell_json, report_json, run_grid, SweepGrid};
+use aimm::config::MappingScheme;
+use aimm::workloads::Benchmark;
+
+/// A small but representative grid: baseline + learning agent, single-
+/// and multi-program cells, two meshes. 8 cells, tiny traces.
+fn grid() -> SweepGrid {
+    let mut g = SweepGrid::new(0.04, 2);
+    g.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd, Benchmark::Spmv]];
+    g.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    g.meshes = vec![(4, 4), (8, 8)];
+    g
+}
+
+#[test]
+fn cells_identical_at_any_worker_count() {
+    let cells = grid().cells();
+    assert_eq!(cells.len(), 8);
+    let serial = run_grid(&cells, 1).expect("serial sweep");
+    let parallel = run_grid(&cells, 4).expect("parallel sweep");
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            cell_json(s),
+            cell_json(p),
+            "cell {} diverged between 1 and 4 workers",
+            s.cell.name()
+        );
+    }
+    // The whole report (fixed key order, no wall-clock) matches too.
+    assert_eq!(report_json(&serial), report_json(&parallel));
+}
+
+#[test]
+fn report_is_valid_json_with_expected_shape() {
+    let mut g = grid();
+    g.benches = vec![vec![Benchmark::Mac]];
+    g.meshes = vec![(4, 4)];
+    let results = run_grid(&g.cells(), 2).expect("sweep");
+    let report = report_json(&results);
+    let parsed = aimm::runtime::json::parse(&report).expect("report parses");
+    assert_eq!(parsed.get("schema").unwrap().as_str(), Some("aimm-sweep-v1"));
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 2); // MAC × {B, AIMM}
+    for cell in cells {
+        let runs = cell.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        for run in runs {
+            assert!(run.get("cycles").unwrap().as_f64().unwrap() > 0.0);
+            assert!(run.get("opc").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // The learning cells actually invoked the agent.
+        if cell.get("mapping").unwrap().as_str() == Some("AIMM") {
+            assert!(
+                runs[0].get("agent_invocations").unwrap().as_f64().unwrap() > 0.0
+            );
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! API-compatible stub of the `xla` crate (PJRT bindings), used by the
+//! `pjrt` cargo feature of the `aimm` crate in offline builds.
+//!
+//! The real dependency wraps `xla_extension`'s PJRT C API, a native
+//! library that cannot be vendored into this repository. This stub
+//! mirrors exactly the API surface `aimm::runtime::pjrt` uses, so
+//! `cargo build --features pjrt` type-checks the whole PJRT path with
+//! zero native dependencies. Failure is deferred to *runtime* (client
+//! construction returns an error); `aimm::runtime::best_qfunction`
+//! catches it and falls back to the linear mock, so a stub-linked build
+//! remains fully functional minus real artifact execution.
+//!
+//! To execute AOT artifacts, swap the `xla` path dependency in
+//! `rust/Cargo.toml` for a real PJRT-backed build of the crate.
+
+use std::fmt;
+
+/// Error raised by every runtime entry point of the stub.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} needs the real xla crate (PJRT runtime); this build links the offline API stub"
+    )))
+}
+
+/// An HLO module parsed from text form (path retained for diagnostics).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// "Parse" an HLO text file. The stub verifies the file exists so
+    /// artifact-path mistakes still fail with a useful message; actual
+    /// parsing is deferred to the (failing) client compile.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        if !std::path::Path::new(path).is_file() {
+            return Err(Error(format!("no such HLO file: {path}")));
+        }
+        Ok(Self { path: path.to_string() })
+    }
+}
+
+/// A computation handle built from an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { _path: proto.path.clone() }
+    }
+}
+
+/// PJRT client handle. The stub cannot construct one: `cpu()` is the
+/// single point of failure for the whole execution path.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu()")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile()")
+    }
+}
+
+/// A compiled executable (unreachable through the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute()")
+    }
+}
+
+/// A device buffer (unreachable through the stub client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync()")
+    }
+}
+
+/// A host-side literal. The stub keeps only the element count so shape
+/// mistakes surface even without a runtime.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    len: usize,
+}
+
+impl Literal {
+    pub fn vec1<T>(data: &[T]) -> Self {
+        Self { len: data.len() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.len {
+            return Err(Error(format!("cannot reshape {} elements to {dims:?}", self.len)));
+        }
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec()")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1()")
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        unavailable("Literal::to_tuple4()")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must not build a client");
+        assert!(err.to_string().contains("xla stub"));
+    }
+
+    #[test]
+    fn literal_shapes_checked() {
+        let l = Literal::vec1(&[0.0f32; 64]);
+        assert!(l.reshape(&[1, 64]).is_ok());
+        assert!(l.reshape(&[2, 64]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn missing_hlo_file_reported() {
+        assert!(HloModuleProto::from_text_file("/no/such/file.hlo.txt").is_err());
+    }
+}
