@@ -1,0 +1,54 @@
+//! Bench: polled vs next-event engine on the **default** `aimm sweep`
+//! grid (27 cells, scale 0.12, 2 runs) — the acceptance measurement for
+//! the event engine (EXPERIMENTS.md §Perf). Verifies the two engines'
+//! reports are byte-identical while timing them, then records the
+//! wall-clock ratio in `BENCH_engine.json` at the repository root.
+//!
+//! Run with `cargo bench --bench engine_speedup` (release; ignore debug
+//! numbers).
+
+use std::time::Instant;
+
+use aimm::bench::sweep::{default_threads, report_json, run_grid, SweepGrid};
+use aimm::config::Engine;
+
+fn time_default_grid(engine: Engine, threads: usize) -> (f64, String) {
+    let mut grid = SweepGrid::new(0.12, 2);
+    grid.engine = engine;
+    let cells = grid.cells();
+    let t0 = Instant::now();
+    let results = run_grid(&cells, threads).expect("default sweep grid");
+    (t0.elapsed().as_secs_f64(), report_json(&results))
+}
+
+fn main() {
+    let threads = default_threads();
+    println!("default sweep grid (27 cells, scale 0.12, 2 runs) on {threads} thread(s)");
+    let (polled_s, polled_report) = time_default_grid(Engine::Polled, threads);
+    println!("  polled: {polled_s:.2}s");
+    let (event_s, event_report) = time_default_grid(Engine::Event, threads);
+    println!("  event:  {event_s:.2}s");
+    assert_eq!(
+        polled_report, event_report,
+        "engines must produce byte-identical sweep reports"
+    );
+    let speedup = polled_s / event_s.max(1e-12);
+    println!("  speedup: {speedup:.2}x (reports byte-identical)");
+
+    let json = format!(
+        "{{\"schema\":\"aimm-engine-bench-v1\",\
+         \"grid\":\"default 27-cell sweep (scale 0.12, 2 runs)\",\
+         \"measured\":true,\
+         \"profile\":\"{}\",\
+         \"threads\":{threads},\
+         \"polled_wall_s\":{polled_s:.3},\
+         \"event_wall_s\":{event_s:.3},\
+         \"speedup\":{speedup:.3},\
+         \"reports_identical\":true,\
+         \"regenerate\":\"cargo bench --bench engine_speedup\"}}",
+        if cfg!(debug_assertions) { "debug" } else { "release" },
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    std::fs::write(path, &json).expect("write BENCH_engine.json");
+    println!("wrote {path}");
+}

@@ -1,37 +1,63 @@
 //! Bench: L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf) — the
-//! end-to-end episode runner plus the component-level hot loops.
+//! end-to-end episode runner under both simulation engines, plus the
+//! component-level hot loops.
 use aimm::bench::bench_fn;
-use aimm::config::{MappingScheme, SystemConfig};
+use aimm::config::{Engine, MappingScheme, SystemConfig};
 use aimm::coordinator::System;
+use aimm::cube::PhysAddr;
 use aimm::noc::packet::{NodeId, Packet, Payload};
 use aimm::noc::Mesh;
-use aimm::cube::PhysAddr;
 use aimm::workloads::{generate, Benchmark};
 
 fn main() {
-    // End-to-end episode (baseline, no PJRT) — the master hot loop.
+    // End-to-end episode (baseline, no PJRT) — the master hot loop,
+    // timed under the polled reference loop and the next-event engine
+    // (identical stats, DESIGN.md §8; the ratio is the engine speedup).
     let cfg = SystemConfig::default();
     let trace = generate(Benchmark::Spmv, 1, 0.12, cfg.seed);
-    let r = bench_fn("episode SPMV scale=0.12 (baseline)", 1, 5, || {
-        let mut sys = System::new(cfg.clone(), trace.ops.clone(), None);
-        sys.run().unwrap();
+    let mut polled_cfg = cfg.clone();
+    polled_cfg.engine = Engine::Polled;
+    let mut event_cfg = cfg.clone();
+    event_cfg.engine = Engine::Event;
+    let rp = bench_fn("episode SPMV scale=0.12 (baseline, polled)", 1, 5, || {
+        System::new(polled_cfg.clone(), trace.ops.clone(), None).run().unwrap();
     });
-    println!("{}", r.report());
+    println!("{}", rp.report());
+    let re = bench_fn("episode SPMV scale=0.12 (baseline, event)", 1, 5, || {
+        System::new(event_cfg.clone(), trace.ops.clone(), None).run().unwrap();
+    });
+    println!("{}", re.report());
     {
-        let mut sys = System::new(cfg.clone(), trace.ops.clone(), None);
+        let mut sys = System::new(polled_cfg.clone(), trace.ops.clone(), None);
         let stats = sys.run().unwrap();
-        let per_cycle = r.median.as_nanos() as f64 / stats.cycles as f64;
-        println!("  -> {} sim cycles, {:.1} ns/cycle", stats.cycles, per_cycle);
+        let per_cycle = rp.median.as_nanos() as f64 / stats.cycles as f64;
+        println!(
+            "  -> {} sim cycles, {:.1} ns/cycle polled, {:.1} ns/cycle event, \
+             event speedup {:.2}x",
+            stats.cycles,
+            per_cycle,
+            re.median.as_nanos() as f64 / stats.cycles as f64,
+            rp.median.as_secs_f64() / re.median.as_secs_f64().max(1e-12),
+        );
     }
 
-    // TOM variant (adds the remap machinery to the loop).
-    let mut tom_cfg = cfg.clone();
-    tom_cfg.mapping = MappingScheme::Tom;
-    let r = bench_fn("episode SPMV scale=0.12 (TOM)", 1, 5, || {
-        let mut sys = System::new(tom_cfg.clone(), trace.ops.clone(), None);
-        sys.run().unwrap();
+    // TOM variant (adds the remap machinery + epoch skips to the loop).
+    let mut tom_polled = polled_cfg.clone();
+    tom_polled.mapping = MappingScheme::Tom;
+    let mut tom_event = event_cfg.clone();
+    tom_event.mapping = MappingScheme::Tom;
+    let rp = bench_fn("episode SPMV scale=0.12 (TOM, polled)", 1, 5, || {
+        System::new(tom_polled.clone(), trace.ops.clone(), None).run().unwrap();
     });
-    println!("{}", r.report());
+    println!("{}", rp.report());
+    let re = bench_fn("episode SPMV scale=0.12 (TOM, event)", 1, 5, || {
+        System::new(tom_event.clone(), trace.ops.clone(), None).run().unwrap();
+    });
+    println!("{}", re.report());
+    println!(
+        "  -> TOM event speedup {:.2}x",
+        rp.median.as_secs_f64() / re.median.as_secs_f64().max(1e-12)
+    );
 
     // NoC saturation microbench: all-to-all packet storm.
     let r = bench_fn("mesh tick under storm (1000 cycles)", 1, 10, || {

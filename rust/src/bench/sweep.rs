@@ -21,7 +21,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use crate::config::{MappingScheme, SystemConfig, Technique};
+use crate::config::{Engine, MappingScheme, SystemConfig, Technique};
 use crate::coordinator::{run_cell, EpisodeSummary};
 use crate::metrics::RunStats;
 use crate::sim::Rng;
@@ -41,6 +41,11 @@ pub struct SweepCell {
     pub seed: u64,
     pub scale: f64,
     pub runs: usize,
+    /// Simulation engine. Deliberately excluded from [`SweepCell::name`]
+    /// and the JSON report: both engines produce bit-identical stats
+    /// (DESIGN.md §8), so polled and event sweeps of the same grid must
+    /// diff clean cell-by-cell.
+    pub engine: Engine,
 }
 
 impl SweepCell {
@@ -70,6 +75,7 @@ impl SweepCell {
         cfg.mesh_rows = self.mesh.1;
         cfg.hoard = self.hoard;
         cfg.seed = self.seed;
+        cfg.engine = self.engine;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -112,6 +118,10 @@ pub struct SweepGrid {
     pub seeds: Vec<u64>,
     pub scale: f64,
     pub runs: usize,
+    /// Simulation engine for every cell — a run-wide switch, not an
+    /// axis, because both engines yield identical stats (the per-cell
+    /// numbers would just duplicate).
+    pub engine: Engine,
 }
 
 impl SweepGrid {
@@ -128,6 +138,7 @@ impl SweepGrid {
             seeds: vec![SystemConfig::default().seed],
             scale,
             runs,
+            engine: SystemConfig::default().engine,
         }
     }
 
@@ -156,6 +167,7 @@ impl SweepGrid {
                                     seed: workload_seed(seed, benches),
                                     scale: self.scale,
                                     runs: self.runs,
+                                    engine: self.engine,
                                 });
                             }
                         }
@@ -374,6 +386,18 @@ mod tests {
         assert_eq!(cells[0].seed, cells[2].seed);
         // Different bench ⇒ decorrelated seed.
         assert_ne!(cells[0].seed, cells[3].seed);
+    }
+
+    #[test]
+    fn engine_is_a_switch_not_an_axis() {
+        let mut grid = SweepGrid::new(0.1, 1);
+        grid.engine = Engine::Polled;
+        let cells = grid.cells();
+        assert!(cells.iter().all(|c| c.engine == Engine::Polled));
+        assert_eq!(cells[0].config().unwrap().engine, Engine::Polled);
+        // The engine never leaks into cell names (nor the JSON report),
+        // so polled and event reports of the same grid diff clean.
+        assert!(!cells[0].name().to_lowercase().contains("polled"));
     }
 
     #[test]

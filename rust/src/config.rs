@@ -103,6 +103,44 @@ impl fmt::Display for MappingScheme {
     }
 }
 
+/// Simulation engine driving [`crate::coordinator::System::run`]. Both
+/// engines produce bit-identical `RunStats` — enforced by
+/// `rust/tests/engine_equivalence.rs` — so the choice is purely a
+/// wall-clock trade (DESIGN.md §8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// The original unconditional per-cycle polling loop. Kept as the
+    /// differential-testing reference.
+    Polled,
+    /// Next-event time skipping: components report their next
+    /// interesting cycle and the clock jumps straight to the earliest
+    /// one, bulk-applying the skipped span's occupancy accounting.
+    Event,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 2] = [Engine::Polled, Engine::Event];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Polled => "polled",
+            Engine::Event => "event",
+        }
+    }
+
+    /// Case-insensitive name lookup — shared by the `--engine` CLI flag
+    /// and the TOML config loader.
+    pub fn from_name(s: &str) -> Option<Engine> {
+        Self::ALL.into_iter().find(|e| e.name().eq_ignore_ascii_case(s))
+    }
+}
+
+impl fmt::Display for Engine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// DRAM / interconnect timing in memory-network cycles.
 #[derive(Debug, Clone)]
 pub struct TimingConfig {
@@ -218,6 +256,9 @@ pub struct SystemConfig {
     pub cpu_cache_lines: usize,
     pub technique: Technique,
     pub mapping: MappingScheme,
+    /// Simulation engine (next-event time skipping by default; the
+    /// polled reference loop stays available for differential testing).
+    pub engine: Engine,
     /// Use the NMP-aware HOARD frame allocator (multi-program baseline).
     pub hoard: bool,
     pub timing: TimingConfig,
@@ -247,6 +288,7 @@ impl Default for SystemConfig {
             cpu_cache_lines: 8192,
             technique: Technique::Bnmp,
             mapping: MappingScheme::Baseline,
+            engine: Engine::Event,
             hoard: false,
             timing: TimingConfig::default(),
             agent: AgentConfig::default(),
@@ -338,6 +380,7 @@ impl SystemConfig {
         kv(&mut s, "cpu_cache_lines", self.cpu_cache_lines.to_string());
         kv(&mut s, "technique", format!("\"{}\"", self.technique.name()));
         kv(&mut s, "mapping", format!("\"{}\"", self.mapping.name()));
+        kv(&mut s, "engine", format!("\"{}\"", self.engine.name()));
         kv(&mut s, "hoard", self.hoard.to_string());
         kv(&mut s, "seed", self.seed.to_string());
         kv(&mut s, "gamma", self.agent.gamma.to_string());
@@ -379,6 +422,11 @@ impl SystemConfig {
                     let name = v.as_str()?;
                     cfg.mapping = MappingScheme::from_name(name)
                         .ok_or_else(|| anyhow::anyhow!("unknown mapping {name:?}"))?;
+                }
+                "engine" => {
+                    let name = v.as_str()?;
+                    cfg.engine = Engine::from_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown engine {name:?}"))?;
                 }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
@@ -546,12 +594,26 @@ mod tests {
         c.mesh_rows = 8;
         c.technique = Technique::Pei;
         c.mapping = MappingScheme::Aimm;
+        c.engine = Engine::Polled;
         c.hoard = true;
         let parsed = SystemConfig::parse(&c.to_toml()).unwrap();
         assert_eq!(parsed.mesh_cols, 8);
         assert_eq!(parsed.technique, Technique::Pei);
         assert_eq!(parsed.mapping, MappingScheme::Aimm);
+        assert_eq!(parsed.engine, Engine::Polled);
         assert!(parsed.hoard);
+    }
+
+    #[test]
+    fn engine_names_roundtrip_and_default_is_event() {
+        for e in Engine::ALL {
+            assert_eq!(Engine::from_name(e.name()), Some(e));
+        }
+        assert_eq!(Engine::from_name("POLLED"), Some(Engine::Polled));
+        assert_eq!(Engine::from_name("Event"), Some(Engine::Event));
+        assert_eq!(Engine::from_name("nope"), None);
+        assert_eq!(SystemConfig::default().engine, Engine::Event);
+        assert!(SystemConfig::parse("engine = \"bogus\"").is_err());
     }
 
     #[test]

@@ -158,6 +158,33 @@ mod tests {
     }
 
     #[test]
+    fn engines_agree_across_the_episode_protocol() {
+        use crate::config::Engine;
+        // Run-to-run agent carry-over must not perturb equivalence: the
+        // same DNN/replay state feeds run N+1 under either engine.
+        for mapping in MappingScheme::ALL {
+            let mut polled_cfg = cfg(mapping);
+            polled_cfg.engine = Engine::Polled;
+            let mut event_cfg = cfg(mapping);
+            event_cfg.engine = Engine::Event;
+            let p = run_single(&polled_cfg, Benchmark::Spmv, 0.04, 2).unwrap();
+            let e = run_single(&event_cfg, Benchmark::Spmv, 0.04, 2).unwrap();
+            assert_eq!(p.runs.len(), e.runs.len());
+            for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+                assert_eq!(rp.cycles, re.cycles, "{mapping} run {i}");
+                assert_eq!(rp.ops_completed, re.ops_completed, "{mapping} run {i}");
+                assert_eq!(rp.migrations, re.migrations, "{mapping} run {i}");
+                assert_eq!(rp.agent_invocations, re.agent_invocations, "{mapping} run {i}");
+                assert_eq!(
+                    rp.avg_hops.to_bits(),
+                    re.avg_hops.to_bits(),
+                    "{mapping} run {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn multi_episode_composes() {
         let s = run_multi(
             &cfg(MappingScheme::Baseline),

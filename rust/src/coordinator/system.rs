@@ -6,7 +6,7 @@ use std::collections::HashSet;
 
 use crate::agent::{build_state, hist4, Action, AimmAgent, PageSignals, PerMcSignals, SysSignals};
 use crate::alloc::{HoardAllocator, Placement, StripePlacement};
-use crate::config::{MappingScheme, Pid, SystemConfig, VPage};
+use crate::config::{Engine, MappingScheme, Pid, SystemConfig, VPage};
 use crate::cube::Cube;
 use crate::mapping::{ComputeRemapTable, TomMapper, TomEvent};
 use crate::mc::{IssueDeps, Mc};
@@ -16,7 +16,7 @@ use crate::mmu::Mmu;
 use crate::nmp::{CpuCache, NmpOp};
 use crate::noc::packet::{Packet, Payload};
 use crate::noc::Mesh;
-use crate::sim::{Cycle, Rng};
+use crate::sim::{Cycle, EventWheel, Rng};
 
 /// How often cubes report occupancy / row-hit to their MC (§5.1
 /// "communicated to a cube's nearest memory controller periodically").
@@ -452,17 +452,16 @@ impl System {
     }
 
     /// Run to completion; returns the collected statistics.
+    ///
+    /// The configured [`Engine`] only chooses *how* the clock advances:
+    /// both engines produce bit-identical `RunStats` (DESIGN.md §8,
+    /// enforced by `rust/tests/engine_equivalence.rs`).
     pub fn run(&mut self) -> anyhow::Result<RunStats> {
         let max_cycles =
             MAX_CYCLES_FLOOR.max(self.ops.len() as u64 * MAX_CYCLES_PER_OP);
-        while !self.is_done() {
-            self.tick()?;
-            anyhow::ensure!(
-                self.now < max_cycles,
-                "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
-                self.completed,
-                self.ops.len()
-            );
+        match self.cfg.engine {
+            Engine::Polled => self.drive_polled(max_cycles)?,
+            Engine::Event => self.drive_event(max_cycles)?,
         }
         // Terminal agent transition.
         if self.agent.is_some() {
@@ -473,6 +472,142 @@ impl System {
             self.agent.as_mut().unwrap().finish_episode(state, opc);
         }
         Ok(self.stats())
+    }
+
+    /// The original reference loop: tick every cycle unconditionally.
+    fn drive_polled(&mut self, max_cycles: u64) -> anyhow::Result<()> {
+        while !self.is_done() {
+            self.tick()?;
+            anyhow::ensure!(
+                self.now < max_cycles,
+                "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
+                self.completed,
+                self.ops.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Next-event loop: every component files its next interesting cycle
+    /// into the [`EventWheel`]; the clock jumps straight to the earliest
+    /// one, bulk-applying the skipped span's accounting (DESIGN.md §8).
+    /// `tick` itself is untouched — event cycles replay the exact polled
+    /// semantics, which is what keeps the two engines bit-identical.
+    fn drive_event(&mut self, max_cycles: u64) -> anyhow::Result<()> {
+        let mut wheel = EventWheel::new(self.now);
+        while !self.is_done() {
+            wheel.reset(self.now);
+            self.schedule_events(&mut wheel);
+            match wheel.earliest() {
+                Some(at) if at < max_cycles => {
+                    if at > self.now {
+                        self.skip_to(at);
+                    }
+                }
+                _ => {
+                    // No component will ever act again (livelock), or the
+                    // next action lies beyond the cycle guard: the polled
+                    // loop would spin pure-accounting cycles up to the
+                    // guard and fail — fail identically without spinning.
+                    anyhow::bail!(
+                        "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
+                        self.completed,
+                        self.ops.len()
+                    );
+                }
+            }
+            self.tick()?;
+            anyhow::ensure!(
+                self.now < max_cycles,
+                "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
+                self.completed,
+                self.ops.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Collect every component's next-interesting cycle. A component
+    /// reports the earliest cycle at which its tick can change any state
+    /// (queues, stats, RNG draws, packets); cycles in between are pure
+    /// per-cycle accounting, which [`skip_to`](Self::skip_to) bulk-applies.
+    fn schedule_events(&self, wheel: &mut EventWheel) {
+        let now = self.now;
+        // CPU feed keeps trying while trace ops remain and the
+        // outstanding window has room. (A full MC queue also blocks the
+        // feed, but that same queue then issues every cycle — covered by
+        // the MC's own event below.)
+        if self.next_op < self.ops.len()
+            && self.outstanding() < self.cfg.max_outstanding as u64
+        {
+            wheel.schedule(now);
+        }
+        for mc in &self.mcs {
+            if let Some(at) = mc.next_event(now, &self.migration) {
+                wheel.schedule(at);
+            }
+        }
+        if let Some(at) = self.migration.next_event(now) {
+            wheel.schedule(at);
+        }
+        if let Some(at) = self.mesh.next_event(now) {
+            wheel.schedule(at);
+        }
+        for cube in &self.cubes {
+            if let Some(at) = cube.next_event(now) {
+                wheel.schedule(at);
+            }
+        }
+        if let Some(tom) = self.tom.as_ref() {
+            wheel.schedule(tom.next_boundary().max(now));
+        }
+        if self.agent.is_some() && self.completed < self.ops.len() as u64 {
+            wheel.schedule(self.next_agent_at.max(now));
+        }
+    }
+
+    /// Jump the clock from `self.now` to `target`, applying the per-cycle
+    /// accounting the polled loop would have performed for every cycle in
+    /// `[self.now, target)`. Legal only when no component can change
+    /// state in that span (which [`schedule_events`](Self::schedule_events)
+    /// guarantees by construction); every counter a polled tick touches
+    /// unconditionally is updated bit-identically:
+    ///
+    /// * queue / NMP-table occupancy integrals — integer bulk adds;
+    /// * cube → MC reports at skipped multiples of [`CUBE_REPORT_PERIOD`]
+    ///   — component state is frozen, but the running averages are still
+    ///   fed once per report cycle (an EWMA update is not closed-form
+    ///   reducible without changing the float rounding);
+    /// * OPC timeline samples at skipped sample points — `completed` is
+    ///   frozen, so the first skipped sample takes the pending delta and
+    ///   the rest record zero, exactly as the polled loop would.
+    fn skip_to(&mut self, target: Cycle) {
+        debug_assert!(target > self.now);
+        let span = target - self.now;
+        for mc in &mut self.mcs {
+            mc.observe_span(span);
+        }
+        self.migration.observe_span(span);
+        for cube in &mut self.cubes {
+            cube.observe_span(span);
+        }
+        let mut report_at = self.now.next_multiple_of(CUBE_REPORT_PERIOD);
+        while report_at < target {
+            for cube in &self.cubes {
+                let occ = cube.table.occupancy() as f64;
+                let rhr = cube.row_hit_rate();
+                let mc = self.cfg.cube_home_mc(cube.id);
+                self.mcs[mc].counters.report(cube.id, occ, rhr);
+            }
+            report_at += CUBE_REPORT_PERIOD;
+        }
+        while self.next_sample_at < target {
+            let delta = self.completed - self.ops_at_last_sample;
+            self.opc_timeline.push(delta as f32 / self.cfg.opc_sample_period as f32);
+            self.ops_at_last_sample = self.completed;
+            self.next_sample_at += self.cfg.opc_sample_period;
+        }
+        self.now = target;
     }
 
     /// Collect statistics for the run so far.
@@ -662,5 +797,69 @@ mod tests {
         let mut sys = System::new(small_cfg(), simple_ops(400), None);
         let stats = sys.run().unwrap();
         assert!(!stats.opc_timeline.is_empty());
+    }
+
+    /// Bit-identity helper for the engine-equivalence tests below: the
+    /// JSON digest covers every aggregate, the timeline is compared at
+    /// the bit level (the broader grid lives in
+    /// `rust/tests/engine_equivalence.rs`).
+    fn assert_identical(p: &RunStats, e: &RunStats, ctx: &str) {
+        assert_eq!(
+            crate::bench::sweep::stats_json(p),
+            crate::bench::sweep::stats_json(e),
+            "stats diverged: {ctx}"
+        );
+        let pt: Vec<u32> = p.opc_timeline.iter().map(|v| v.to_bits()).collect();
+        let et: Vec<u32> = e.opc_timeline.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(pt, et, "OPC timeline diverged: {ctx}");
+    }
+
+    fn run_both(cfg: &SystemConfig, ops: &[NmpOp]) -> (RunStats, RunStats) {
+        let mut polled_cfg = cfg.clone();
+        polled_cfg.engine = Engine::Polled;
+        let mut event_cfg = cfg.clone();
+        event_cfg.engine = Engine::Event;
+        let polled = System::new(polled_cfg, ops.to_vec(), None).run().unwrap();
+        let event = System::new(event_cfg, ops.to_vec(), None).run().unwrap();
+        (polled, event)
+    }
+
+    #[test]
+    fn event_engine_matches_polled_on_all_techniques() {
+        for technique in Technique::ALL {
+            let mut cfg = small_cfg();
+            cfg.technique = technique;
+            let (p, e) = run_both(&cfg, &simple_ops(300));
+            assert_identical(&p, &e, technique.name());
+        }
+    }
+
+    #[test]
+    fn event_engine_matches_polled_under_tom_epochs() {
+        let mut cfg = small_cfg();
+        cfg.mapping = MappingScheme::Tom;
+        let trace = generate(Benchmark::Spmv, 1, 0.08, 9);
+        let (p, e) = run_both(&cfg, &trace.ops);
+        assert_identical(&p, &e, "TOM");
+    }
+
+    #[test]
+    fn event_engine_matches_polled_with_learning_agent() {
+        let mut cfg = small_cfg();
+        cfg.mapping = MappingScheme::Aimm;
+        let trace = generate(Benchmark::Km, 1, 0.08, 4);
+        let mk_agent = |cfg: &SystemConfig| {
+            AimmAgent::new(Box::new(LinearQ::new(1e-2, 0.95, 5)), cfg.agent.clone(), 11)
+        };
+        let mut polled_cfg = cfg.clone();
+        polled_cfg.engine = Engine::Polled;
+        let agent = mk_agent(&polled_cfg);
+        let p = System::new(polled_cfg, trace.ops.clone(), Some(agent)).run().unwrap();
+        let mut event_cfg = cfg;
+        event_cfg.engine = Engine::Event;
+        let agent = mk_agent(&event_cfg);
+        let e = System::new(event_cfg, trace.ops.clone(), Some(agent)).run().unwrap();
+        assert_identical(&p, &e, "AIMM");
+        assert!(p.agent_invocations > 0, "agent must actually run");
     }
 }

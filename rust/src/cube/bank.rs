@@ -44,6 +44,13 @@ impl Bank {
         self.busy_until <= now
     }
 
+    /// Cycle at which the bank next accepts an access — the wakeup the
+    /// event engine files for a vault whose head access waits on this
+    /// bank (DESIGN.md §8).
+    pub fn free_at(&self) -> Cycle {
+        self.busy_until
+    }
+
     /// Start an access to `row`; returns its latency.
     pub fn access(&mut self, row: u64, now: Cycle, row_hit: u64, row_miss: u64) -> u64 {
         debug_assert!(self.is_free(now));

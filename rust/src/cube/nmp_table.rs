@@ -99,8 +99,15 @@ impl NmpTable {
 
     /// Record one per-cycle occupancy observation.
     pub fn observe(&mut self) {
-        self.occ_acc += self.entries.len() as u64;
-        self.observations += 1;
+        self.observe_n(1);
+    }
+
+    /// Record `n` identical observations at once (event-engine skip
+    /// spans). Integer arithmetic keeps the occupancy integral
+    /// bit-identical to `n` consecutive [`observe`](Self::observe)s.
+    pub fn observe_n(&mut self, n: u64) {
+        self.occ_acc += self.entries.len() as u64 * n;
+        self.observations += n;
     }
 
     pub fn avg_occupancy(&self) -> f64 {

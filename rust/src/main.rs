@@ -20,7 +20,7 @@ use std::process::ExitCode;
 use aimm::bench::figures;
 use aimm::bench::sweep::{self, SweepGrid};
 use aimm::bench::Table;
-use aimm::config::{MappingScheme, SystemConfig, Technique};
+use aimm::config::{Engine, MappingScheme, SystemConfig, Technique};
 use aimm::coordinator::{run_multi, run_single};
 use aimm::workloads::Benchmark;
 
@@ -41,11 +41,13 @@ fn usage() -> String {
          subcommands:\n\
            run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
                     [--scale F] [--runs N] [--mesh CxR] [--hoard] [--seed N] [--config FILE]\n\
+                    [--engine polled|event]\n\
            multi    --benches A,B,C (same options as run)\n\
            sweep    [--benches all|A,B,A+B (use + for a multi-program combo)]\n\
                     [--techniques BNMP,LDB,PEI|all] [--mappings B,TOM,AIMM|all]\n\
                     [--meshes 4x4,8x8] [--seeds N,M] [--scale F] [--runs N]\n\
-                    [--threads N] [--hoard] [--out BENCH_sweep.json]\n\
+                    [--threads N] [--hoard] [--engine polled|event]\n\
+                    [--out BENCH_sweep.json]\n\
            analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
            table    --fig 6|7|8|9|10|11|12|13|14|area [--scale F] [--runs N]\n\
            table1   print the active hardware configuration (paper Table 1)\n\
@@ -62,6 +64,10 @@ fn parse_technique(t: &str) -> Result<Technique, String> {
 
 fn parse_mapping(m: &str) -> Result<MappingScheme, String> {
     MappingScheme::from_name(m).ok_or_else(|| format!("unknown mapping {m}"))
+}
+
+fn parse_engine(e: &str) -> Result<Engine, String> {
+    Engine::from_name(e).ok_or_else(|| format!("unknown engine {e} (expected polled|event)"))
 }
 
 /// Seeds parse as decimal or `0x`-hex — the hex form is what
@@ -159,17 +165,23 @@ fn build_cfg(args: &Args) -> Result<SystemConfig, String> {
     if let Some(s) = args.get("seed") {
         cfg.seed = parse_seed(s)?;
     }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = parse_engine(e)?;
+    }
     cfg.validate().map_err(|e| e.to_string())?;
     Ok(cfg)
 }
 
 fn print_summary(s: &aimm::coordinator::EpisodeSummary, cfg: &SystemConfig) {
     println!(
-        "episode {} [{} + {}{}] — {} runs",
+        "episode {} [{} + {}{}{}] — {} runs",
         s.name,
         cfg.technique,
         cfg.mapping,
         if cfg.hoard { " + HOARD" } else { "" },
+        // The engine never changes the numbers (DESIGN.md §8); flag the
+        // slow reference loop so timing comparisons stay honest.
+        if cfg.engine == Engine::Polled { " | polled" } else { "" },
         s.runs.len()
     );
     for (i, r) in s.runs.iter().enumerate() {
@@ -301,6 +313,11 @@ fn real_main() -> Result<(), String> {
             }
             if args.get("hoard").is_some() {
                 grid.hoard = vec![true];
+            }
+            if let Some(e) = args.get("engine") {
+                // A run-wide switch, not a grid axis: both engines give
+                // identical stats, so reports diff clean either way.
+                grid.engine = parse_engine(e)?;
             }
             let threads = args.usize_or("threads", sweep::default_threads())?.max(1);
             let cells = grid.cells();

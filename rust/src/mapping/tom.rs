@@ -113,6 +113,17 @@ impl TomMapper {
         self.current
     }
 
+    /// The next phase boundary — the only cycle at which
+    /// [`tick`](Self::tick) can change state, and therefore the wakeup
+    /// the event engine files for TOM (DESIGN.md §8). Always in the
+    /// future at a tick boundary: crossing it immediately re-arms the
+    /// phase machine with a later deadline.
+    pub fn next_boundary(&self) -> Cycle {
+        match self.phase {
+            Phase::Profiling { until } | Phase::Steady { until } => until,
+        }
+    }
+
     /// Record a dispatched op: score the co-location every candidate
     /// WOULD achieve (virtual profiling — data does not move).
     pub fn record_op(&mut self, dest: (Pid, VPage), sources: &[(Pid, VPage)]) {
@@ -236,6 +247,25 @@ mod tests {
         }
         let chosen = candidates()[tom.current_candidate()];
         assert_eq!(chosen, candidates()[0], "shift-0 co-locates aligned pairs: {chosen:?}");
+    }
+
+    #[test]
+    fn next_boundary_is_exactly_where_tick_transitions() {
+        let mut tom = TomMapper::new(16);
+        assert_eq!(tom.next_boundary(), PROFILE_CYCLES);
+        // Ticking anywhere short of the boundary is a no-op…
+        assert!(tom.tick(tom.next_boundary() - 1).is_none());
+        assert_eq!(tom.adoptions, 0);
+        // …and the boundary cycle itself adopts and re-arms.
+        tom.tick(PROFILE_CYCLES);
+        assert_eq!(tom.adoptions, 1);
+        assert_eq!(tom.next_boundary(), PROFILE_CYCLES + EPOCH_CYCLES);
+        tom.tick(tom.next_boundary());
+        assert_eq!(
+            tom.next_boundary(),
+            PROFILE_CYCLES + EPOCH_CYCLES + PROFILE_CYCLES,
+            "steady phase returns to profiling"
+        );
     }
 
     #[test]

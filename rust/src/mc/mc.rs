@@ -112,6 +112,38 @@ impl Mc {
             && self.out.is_empty()
     }
 
+    /// Earliest cycle ≥ `now` at which [`tick_issue`](Self::tick_issue)
+    /// or the injection retry can change state (event engine, DESIGN.md
+    /// §8). A non-empty request queue issues (or parks blocked heads)
+    /// every non-stalled cycle; parked ops only matter once a migration
+    /// unlock makes one eligible — and the unlocking ACK is itself a
+    /// delivery event, after which this is re-evaluated. `None` means
+    /// the MC performs pure accounting until an external delivery.
+    pub fn next_event(&self, now: Cycle, migration: &MigrationSystem) -> Option<Cycle> {
+        let mut next = Cycle::MAX;
+        if !self.out.is_empty() {
+            next = now; // retry injection into the mesh
+        }
+        let issue_at = now.max(self.stall_until);
+        let parked_ready = || {
+            self.parked.iter().any(|op| {
+                let (pages, n) = op.vpages_arr();
+                !pages[..n].iter().any(|&v| migration.is_blocked(op.pid, v))
+            })
+        };
+        if !self.queue.is_empty() || parked_ready() {
+            next = next.min(issue_at);
+        }
+        (next != Cycle::MAX).then_some(next)
+    }
+
+    /// Bulk-apply `span` skipped cycles of per-cycle accounting (the
+    /// `queue.observe()` each polled `tick_issue` performs, stalled or
+    /// not) — bit-identical to `span` consecutive quiescent ticks.
+    pub fn observe_span(&mut self, span: u64) {
+        self.queue.observe_n(span);
+    }
+
     /// Translate one page, charging walk latency on a TLB miss and
     /// performing first-touch placement for unmapped pages.
     fn translate_page(
@@ -417,6 +449,29 @@ mod tests {
         }
         assert_eq!(mc.stats.ops_dispatched, 0);
         assert!(mc.stats.blocked_on_migration > 0);
+    }
+
+    #[test]
+    fn next_event_reflects_queue_and_parked_state() {
+        let (mut mc, mut c) = ctx();
+        assert_eq!(mc.next_event(0, &c.migration), None, "idle MC is quiescent");
+        mc.enqueue(op(0x1000, 0x2000, None)).unwrap();
+        assert_eq!(mc.next_event(0, &c.migration), Some(0), "queued op issues now");
+        // Park the op behind a blocking migration: the MC stays busy
+        // while the op is in the queue (it pops-and-parks), then goes
+        // quiescent once parked-and-blocked.
+        c.mmu.map_page(1, 1, 0).unwrap();
+        c.migration
+            .request(crate::migration::MigRequest { pid: 1, vpage: 1, to_cube: 3, blocking: true });
+        for now in 0..4 {
+            mc.tick_issue(now, &mut deps(&mut c)).unwrap();
+        }
+        assert!(mc.stats.blocked_on_migration > 0);
+        assert_eq!(
+            mc.next_event(9, &c.migration),
+            None,
+            "parked-blocked op waits for the migration ACK, not the clock"
+        );
     }
 
     #[test]

@@ -140,6 +140,24 @@ impl MigrationSystem {
         self.active.is_empty() && self.queue.is_empty() && self.out.is_empty()
     }
 
+    /// Earliest cycle ≥ `now` at which [`tick`](Self::tick) or the
+    /// injection retry can change state (event engine, DESIGN.md §8):
+    /// queued requests start as soon as an MDMA job slot is free, and
+    /// pending packets retry injection every cycle. With all slots busy
+    /// the engine waits on chunk ACKs, which are delivery events of
+    /// their own.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let starts_job = !self.queue.is_empty() && self.active.len() < MDMA_JOBS;
+        (starts_job || !self.out.is_empty()).then_some(now)
+    }
+
+    /// Bulk-apply `span` skipped cycles of per-cycle accounting (the
+    /// `queue.observe()` each polled `tick` performs) — bit-identical
+    /// to `span` consecutive quiescent ticks.
+    pub fn observe_span(&mut self, span: u64) {
+        self.queue.observe_n(span);
+    }
+
     /// Handle a chunk ACK delivered to the MDMA.
     pub fn receive_ack(&mut self, token: MigToken, now: Cycle, mmu: &mut Mmu) {
         let Some(idx) = self.active.iter().position(|j| j.token == token) else {
@@ -271,6 +289,19 @@ mod tests {
         assert_eq!(ms.completed.len(), 1);
         assert_eq!(ms.completed[0].from_cube, 0);
         assert_eq!(ms.completed[0].to_cube, 5);
+    }
+
+    #[test]
+    fn next_event_follows_queue_and_jobs() {
+        let (mut ms, mut mmu) = setup();
+        assert_eq!(ms.next_event(5), None, "idle MDMA is quiescent");
+        ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 5, blocking: true });
+        assert_eq!(ms.next_event(5), Some(5), "queued request starts a job now");
+        ms.tick(5, &mut mmu);
+        // Job active, queue drained: chunk reads await injection.
+        assert_eq!(ms.next_event(6), Some(6), "pending packets retry injection");
+        ms.out.clear(); // the system would inject these
+        assert_eq!(ms.next_event(7), None, "now waiting only on chunk ACK deliveries");
     }
 
     #[test]

@@ -356,6 +356,18 @@ impl Mesh {
         self.stats.total_latency += now.saturating_sub(pk.injected_at);
     }
 
+    /// Earliest cycle ≥ `now` at which [`tick`](Self::tick) can change
+    /// state (event engine, DESIGN.md §8). Any buffered packet
+    /// arbitrates — and rotates round-robin pointers — every cycle, so
+    /// a non-empty router forces the next cycle; otherwise the fabric
+    /// sleeps until the earliest in-flight wire arrival.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.routers.iter().any(|r| r.buffered_count > 0) {
+            return Some(now);
+        }
+        self.wire.peek().map(|r| now.max(r.0.arrival))
+    }
+
     /// True when no packet is buffered or in flight anywhere.
     pub fn is_idle(&self) -> bool {
         self.wire.is_empty() && self.routers.iter().all(|r| r.buffered() == 0)
@@ -461,6 +473,21 @@ mod tests {
         assert_eq!(mesh.neighbors(0).len(), 2); // corner
         assert_eq!(mesh.neighbors(1).len(), 3); // edge
         assert_eq!(mesh.neighbors(5).len(), 4); // interior
+    }
+
+    #[test]
+    fn next_event_sleeps_until_wire_arrival() {
+        let cfg = test_cfg();
+        let mut mesh = Mesh::new(&cfg);
+        assert_eq!(mesh.next_event(0), None, "idle fabric has no event");
+        let pk = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(15), 0);
+        mesh.inject(pk).unwrap();
+        assert_eq!(mesh.next_event(0), Some(0), "buffered packet arbitrates now");
+        mesh.tick(0); // forwards onto the wire (3-stage pipeline + serialization)
+        let at = mesh.next_event(1).expect("packet in flight");
+        assert!(at > 1, "wire arrival is in the future, got {at}");
+        run_until_idle(&mut mesh, 1, 1000);
+        assert_eq!(mesh.next_event(1000), None);
     }
 
     #[test]

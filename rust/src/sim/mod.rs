@@ -8,10 +8,12 @@
 pub mod history;
 pub mod queue;
 pub mod rng;
+pub mod wheel;
 
 pub use history::{History, RunningAvg};
 pub use queue::BoundedQueue;
 pub use rng::Rng;
+pub use wheel::EventWheel;
 
 /// Simulation time, in memory-network clock cycles.
 pub type Cycle = u64;

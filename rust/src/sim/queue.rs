@@ -70,8 +70,16 @@ impl<T> BoundedQueue<T> {
 
     /// Record one occupancy observation (call once per cycle).
     pub fn observe(&mut self) {
-        self.occupancy_acc += self.items.len() as u64;
-        self.observations += 1;
+        self.observe_n(1);
+    }
+
+    /// Record `n` identical occupancy observations at once — what the
+    /// event engine applies for a span of skipped cycles in which the
+    /// queue provably cannot change. Integer arithmetic, so the integral
+    /// is bit-identical to `n` consecutive [`observe`](Self::observe)s.
+    pub fn observe_n(&mut self, n: u64) {
+        self.occupancy_acc += self.items.len() as u64 * n;
+        self.observations += n;
     }
 
     pub fn avg_occupancy(&self) -> f64 {
@@ -130,6 +138,75 @@ mod tests {
         q.observe();
         assert!((q.avg_occupancy() - 0.5).abs() < 1e-9);
         assert!((q.occupancy() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn observe_n_matches_repeated_observe() {
+        let mut a = BoundedQueue::new(8);
+        let mut b = BoundedQueue::new(8);
+        for q in [&mut a, &mut b] {
+            q.push(1).unwrap();
+            q.push(2).unwrap();
+            q.push(3).unwrap();
+        }
+        for _ in 0..37 {
+            a.observe();
+        }
+        b.observe_n(37);
+        assert_eq!(a.observations, b.observations);
+        assert_eq!(a.occupancy_acc, b.occupancy_acc);
+        assert_eq!(a.avg_occupancy().to_bits(), b.avg_occupancy().to_bits());
+    }
+
+    /// Property test: drive the queue with random push/pop/observe
+    /// sequences against a plain model and check every invariant the
+    /// event engine depends on (DESIGN.md §8).
+    #[test]
+    fn random_op_sequences_match_model() {
+        use crate::sim::Rng;
+        let mut rng = Rng::new(0xB0B);
+        for round in 0..50 {
+            let cap = 1 + rng.index(16);
+            let mut q: BoundedQueue<u64> = BoundedQueue::new(cap);
+            let mut model: std::collections::VecDeque<u64> = Default::default();
+            let (mut rejected, mut observations, mut occ_acc) = (0u64, 0u64, 0u64);
+            for step in 0..400u64 {
+                match rng.index(4) {
+                    0 | 1 => {
+                        // Push: accepted iff the model is below capacity.
+                        let accepted = q.push(step).is_ok();
+                        if model.len() < cap {
+                            assert!(accepted, "round {round} step {step}");
+                            model.push_back(step);
+                        } else {
+                            assert!(!accepted, "round {round} step {step}");
+                            rejected += 1;
+                        }
+                    }
+                    2 => {
+                        // Pop: strict FIFO against the model.
+                        assert_eq!(q.pop(), model.pop_front());
+                    }
+                    _ => {
+                        let n = 1 + rng.below(5);
+                        q.observe_n(n);
+                        observations += n;
+                        occ_acc += model.len() as u64 * n;
+                    }
+                }
+                // Occupancy invariants hold after every operation.
+                assert_eq!(q.len(), model.len());
+                assert_eq!(q.is_empty(), model.is_empty());
+                assert_eq!(q.is_full(), model.len() >= cap);
+                assert!(q.len() <= q.capacity());
+                assert_eq!(q.peek(), model.front());
+                let occ = q.occupancy();
+                assert!((0.0..=1.0).contains(&occ));
+            }
+            assert_eq!(q.rejected(), rejected, "round {round}");
+            assert_eq!(q.observations, observations, "round {round}");
+            assert_eq!(q.occupancy_acc, occ_acc, "round {round}");
+        }
     }
 
     #[test]

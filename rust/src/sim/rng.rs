@@ -115,6 +115,52 @@ impl Rng {
 mod tests {
     use super::*;
 
+    /// Known-answer vectors pinning the generator across PRs: computed
+    /// with an independent splitmix64 implementation. `Rng::new` runs one
+    /// golden-ratio pre-advance on the seed, so `Rng::new(0)`'s first
+    /// output is the *second* output of the canonical reference stream
+    /// for seed 0 (0x6E789E6AA1B965F4 — Vigna's published sequence),
+    /// which cross-validates the constants.
+    #[test]
+    fn splitmix64_known_answer_vectors() {
+        let vectors: [(u64, [u64; 4]); 5] = [
+            (
+                0x0,
+                [0x6E789E6AA1B965F4, 0x06C45D188009454F, 0xF88BB8A8724C81EC, 0x1B39896A51A8749B],
+            ),
+            (
+                0x1,
+                [0xBEEB8DA1658EEC67, 0xF893A2EEFB32555E, 0x71C18690EE42C90B, 0x71BB54D8D101B5B9],
+            ),
+            (
+                0x2A,
+                [0x28EFE333B266F103, 0x47526757130F9F52, 0x581CE1FF0E4AE394, 0x09BC585A244823F2],
+            ),
+            (
+                0xA133,
+                [0x62F0BB75A0276F3C, 0x276E5F1A705C5ACE, 0x78634E4DE2CAD17E, 0x566A6C1A3F9C990B],
+            ),
+            (
+                0xDEADBEEF,
+                [0xDE586A3141A10922, 0x021FBC2F8E1CFC1D, 0x7466CE737BE16790, 0x3BFA8764F685BD1C],
+            ),
+        ];
+        for (seed, expected) in vectors {
+            let mut r = Rng::new(seed);
+            for (i, want) in expected.into_iter().enumerate() {
+                assert_eq!(r.next_u64(), want, "seed {seed:#x} output {i}");
+            }
+        }
+    }
+
+    /// The Lemire range mapping is part of the pinned contract too — a
+    /// change here would silently re-seed every workload and sweep cell.
+    #[test]
+    fn below_known_answers() {
+        let mut r = Rng::new(3);
+        assert_eq!([r.below(17), r.below(17), r.below(17)], [11, 10, 1]);
+    }
+
     #[test]
     fn deterministic_across_instances() {
         let mut a = Rng::new(42);

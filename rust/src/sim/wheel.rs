@@ -1,0 +1,203 @@
+//! Hierarchical timing wheel for the next-event simulation engine
+//! (DESIGN.md §8).
+//!
+//! Each loop iteration of the event engine collects every component's
+//! next-interesting cycle and asks for the earliest one; the clock then
+//! jumps straight there instead of polling the cycles in between. The
+//! wheel keeps three 64-slot levels of geometrically coarser resolution
+//! (1, 64 and 4096 cycles per slot) over the current base cycle, with an
+//! overflow minimum beyond the ~262k-cycle horizon. Occupancy is a bitmap
+//! per level and each occupied slot stores the exact minimum cycle filed
+//! into it, so [`EventWheel::earliest`] is exact — never rounded to slot
+//! granularity — in O(levels) time.
+
+use super::Cycle;
+
+/// Slots per level (one `u64` occupancy bitmap each).
+pub const SLOTS: usize = 64;
+/// Wheel levels; level `l` slots span `64^l` cycles.
+const LEVELS: usize = 3;
+
+/// A min-query timing wheel over cycles `>= base`.
+#[derive(Debug, Clone)]
+pub struct EventWheel {
+    base: Cycle,
+    /// Bitmap of occupied slots per level (bit `s` = slot `s`).
+    occupied: [u64; LEVELS],
+    /// Exact minimum cycle filed into each occupied slot. Stale values
+    /// from before the last [`EventWheel::reset`] are gated out by the
+    /// bitmap and never read.
+    slot_min: [[Cycle; SLOTS]; LEVELS],
+    /// Minimum scheduled cycle beyond the last level's horizon.
+    overflow: Option<Cycle>,
+    scheduled: u64,
+}
+
+impl EventWheel {
+    /// An empty wheel whose time origin is `base`.
+    pub fn new(base: Cycle) -> Self {
+        Self {
+            base,
+            occupied: [0; LEVELS],
+            slot_min: [[0; SLOTS]; LEVELS],
+            overflow: None,
+            scheduled: 0,
+        }
+    }
+
+    /// Drop every scheduled event and move the time origin to `base`.
+    pub fn reset(&mut self, base: Cycle) {
+        self.base = base;
+        self.occupied = [0; LEVELS];
+        self.overflow = None;
+        self.scheduled = 0;
+    }
+
+    /// First cycle past the finest-through-coarsest levels; events at or
+    /// beyond this land in the overflow minimum.
+    pub fn horizon(&self) -> Cycle {
+        self.base.saturating_add((SLOTS as u64).pow(LEVELS as u32))
+    }
+
+    /// Number of `schedule` calls since the last reset.
+    pub fn len(&self) -> u64 {
+        self.scheduled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scheduled == 0
+    }
+
+    /// File an event at cycle `at`. Cycles before the base clamp to the
+    /// base (an already-due event fires now, never in the past).
+    pub fn schedule(&mut self, at: Cycle) {
+        let at = at.max(self.base);
+        self.scheduled += 1;
+        let d = at - self.base;
+        // SLOTS = 64 = 2^6: level `l` covers d < 2^(6(l+1)) with slot
+        // index d >> 6l — shifts, not divisions, on the hot loop.
+        for level in 0..LEVELS {
+            if d < 1 << (6 * (level + 1)) {
+                let slot = (d >> (6 * level)) as usize;
+                let bit = 1u64 << slot;
+                if self.occupied[level] & bit == 0 {
+                    self.occupied[level] |= bit;
+                    self.slot_min[level][slot] = at;
+                } else if at < self.slot_min[level][slot] {
+                    self.slot_min[level][slot] = at;
+                }
+                return;
+            }
+        }
+        self.overflow = Some(self.overflow.map_or(at, |o| o.min(at)));
+    }
+
+    /// The exact earliest scheduled cycle, if any.
+    ///
+    /// Level `l` only ever holds distances in `[64^l, 64^(l+1))` (level 0
+    /// from zero), so levels partition the time axis in ascending order
+    /// and, within a level, lower slots cover strictly earlier spans: the
+    /// lowest occupied slot of the first non-empty level holds the global
+    /// minimum.
+    pub fn earliest(&self) -> Option<Cycle> {
+        for level in 0..LEVELS {
+            let occ = self.occupied[level];
+            if occ != 0 {
+                let slot = occ.trailing_zeros() as usize;
+                return Some(self.slot_min[level][slot]);
+            }
+        }
+        self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+
+    #[test]
+    fn empty_wheel_has_no_event() {
+        let w = EventWheel::new(100);
+        assert!(w.is_empty());
+        assert_eq!(w.earliest(), None);
+    }
+
+    #[test]
+    fn single_event_round_trips_exactly() {
+        for offset in [0u64, 1, 63, 64, 65, 4095, 4096, 262_143, 262_144, 10_000_000] {
+            let mut w = EventWheel::new(1000);
+            w.schedule(1000 + offset);
+            assert_eq!(w.earliest(), Some(1000 + offset), "offset {offset}");
+        }
+    }
+
+    #[test]
+    fn past_events_clamp_to_base() {
+        let mut w = EventWheel::new(500);
+        w.schedule(7);
+        assert_eq!(w.earliest(), Some(500));
+    }
+
+    #[test]
+    fn earliest_is_exact_minimum_not_slot_granular() {
+        let mut w = EventWheel::new(0);
+        // Same level-1 slot (d in [64, 128)): min must be exact.
+        w.schedule(100);
+        w.schedule(70);
+        w.schedule(127);
+        assert_eq!(w.earliest(), Some(70));
+    }
+
+    #[test]
+    fn finer_levels_win_over_coarser() {
+        let mut w = EventWheel::new(0);
+        w.schedule(300_000); // overflow
+        w.schedule(5000); // level 2
+        assert_eq!(w.earliest(), Some(5000));
+        w.schedule(200); // level 1
+        assert_eq!(w.earliest(), Some(200));
+        w.schedule(3); // level 0
+        assert_eq!(w.earliest(), Some(3));
+    }
+
+    #[test]
+    fn reset_clears_and_rebases() {
+        let mut w = EventWheel::new(0);
+        w.schedule(10);
+        w.schedule(999_999);
+        w.reset(2000);
+        assert!(w.is_empty());
+        assert_eq!(w.earliest(), None);
+        w.schedule(2048);
+        assert_eq!(w.earliest(), Some(2048));
+        // Slot minima from before the reset are never resurrected.
+        w.schedule(2100);
+        assert_eq!(w.earliest(), Some(2048));
+    }
+
+    #[test]
+    fn matches_naive_minimum_on_random_schedules() {
+        let mut rng = Rng::new(0xEE1);
+        for round in 0..200 {
+            let base = rng.below(1 << 20);
+            let mut w = EventWheel::new(base);
+            let n = 1 + rng.index(40);
+            let mut naive: Option<u64> = None;
+            for _ in 0..n {
+                // Mix short, medium, long and overflow horizons.
+                let offset = match rng.index(4) {
+                    0 => rng.below(64),
+                    1 => rng.below(4096),
+                    2 => rng.below(262_144),
+                    _ => rng.below(1 << 40),
+                };
+                let at = base + offset;
+                w.schedule(at);
+                naive = Some(naive.map_or(at, |m: u64| m.min(at)));
+            }
+            assert_eq!(w.earliest(), naive, "round {round} base {base}");
+            assert_eq!(w.len(), n as u64);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Differential equivalence of the two simulation engines (DESIGN.md
+//! §8): for a grid of (benchmark-combo × technique × seed) cells —
+//! mapping schemes cycled across cells so Baseline, TOM and AIMM are all
+//! exercised — the event engine's full `RunStats` must be **bit-
+//! identical** to the polled engine's on every run of every cell. This
+//! is the contract that lets every figure, sweep and RL experiment run
+//! on the fast engine while the polled loop remains the semantic
+//! reference.
+
+use aimm::bench::sweep::stats_json;
+use aimm::config::{Engine, MappingScheme, SystemConfig, Technique};
+use aimm::coordinator::run_cell;
+use aimm::metrics::RunStats;
+use aimm::workloads::Benchmark;
+
+/// Bit-level identity: the JSON digest covers every scalar aggregate
+/// (cycles, OPC, hops, utilization, migration and agent counters,
+/// energy); the OPC timeline and float fields are additionally compared
+/// through their raw bits, since formatting could in principle collapse
+/// distinct values.
+fn assert_identical(p: &RunStats, e: &RunStats, ctx: &str) {
+    assert_eq!(stats_json(p), stats_json(e), "stats diverged: {ctx}");
+    assert_eq!(p.opc_timeline.len(), e.opc_timeline.len(), "timeline length: {ctx}");
+    for (i, (a, b)) in p.opc_timeline.iter().zip(&e.opc_timeline).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "timeline[{i}]: {ctx}");
+    }
+    for (name, a, b) in [
+        ("avg_hops", p.avg_hops, e.avg_hops),
+        ("avg_packet_latency", p.avg_packet_latency, e.avg_packet_latency),
+        ("compute_utilization", p.compute_utilization, e.compute_utilization),
+        ("compute_balance", p.compute_balance, e.compute_balance),
+        ("row_hit_rate", p.row_hit_rate, e.row_hit_rate),
+        ("agent_avg_loss", p.agent_avg_loss, e.agent_avg_loss),
+        ("agent_cumulative_reward", p.agent_cumulative_reward, e.agent_cumulative_reward),
+        ("energy_aimm_nj", p.energy.aimm_hardware_nj, e.energy.aimm_hardware_nj),
+        ("energy_network_nj", p.energy.network_nj, e.energy.network_nj),
+        ("energy_memory_nj", p.energy.memory_nj, e.energy.memory_nj),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{name}: {ctx}");
+    }
+}
+
+fn cell_cfg(technique: Technique, mapping: MappingScheme, seed: u64) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.technique = technique;
+    cfg.mapping = mapping;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn engines_are_bit_identical_across_the_grid() {
+    // Single-program cells plus one multi-program combo; every offload
+    // technique; two seeds. Mapping schemes cycle with the cell index so
+    // all three are covered without cubing the grid.
+    let combos: [&[Benchmark]; 3] = [
+        &[Benchmark::Mac],
+        &[Benchmark::Spmv],
+        &[Benchmark::Rd, Benchmark::Km],
+    ];
+    let seeds = [3u64, 0xA133];
+    let runs = 2; // exercises agent carry-over between runs
+    let mut idx = 0usize;
+    for benches in combos {
+        for technique in Technique::ALL {
+            for seed in seeds {
+                let mapping = MappingScheme::ALL[idx % MappingScheme::ALL.len()];
+                idx += 1;
+                let mut polled_cfg = cell_cfg(technique, mapping, seed);
+                polled_cfg.engine = Engine::Polled;
+                let mut event_cfg = cell_cfg(technique, mapping, seed);
+                event_cfg.engine = Engine::Event;
+                let ctx = format!(
+                    "{:?}/{}/{}/seed {seed:#x}",
+                    benches.iter().map(|b| b.name()).collect::<Vec<_>>(),
+                    technique,
+                    mapping
+                );
+                let p = run_cell(&polled_cfg, benches, 0.03, runs)
+                    .unwrap_or_else(|e| panic!("polled {ctx}: {e}"));
+                let e = run_cell(&event_cfg, benches, 0.03, runs)
+                    .unwrap_or_else(|e| panic!("event {ctx}: {e}"));
+                assert_eq!(p.runs.len(), e.runs.len(), "{ctx}");
+                for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+                    assert_identical(rp, re, &format!("{ctx} run {i}"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engines_are_bit_identical_on_the_8x8_mesh_with_hoard() {
+    // The mesh-scaling + multi-program corner: 64 cubes, HOARD frame
+    // allocation, interleaved pids.
+    let mut polled_cfg = cell_cfg(Technique::Bnmp, MappingScheme::Aimm, 17);
+    polled_cfg.mesh_cols = 8;
+    polled_cfg.mesh_rows = 8;
+    polled_cfg.hoard = true;
+    let mut event_cfg = polled_cfg.clone();
+    polled_cfg.engine = Engine::Polled;
+    event_cfg.engine = Engine::Event;
+    let benches = [Benchmark::Sc, Benchmark::Mac];
+    let p = run_cell(&polled_cfg, &benches, 0.03, 1).expect("polled 8x8");
+    let e = run_cell(&event_cfg, &benches, 0.03, 1).expect("event 8x8");
+    assert_identical(p.last(), e.last(), "8x8 HOARD multi-program");
+}

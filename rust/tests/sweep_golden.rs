@@ -1,0 +1,71 @@
+//! Golden-fixture snapshot: the serialized sweep report for a small,
+//! fixed grid must stay byte-identical **across PRs**, extending
+//! `sweep_determinism.rs` (worker-count invariance within one build) to
+//! cross-build invariance. Any change to workload generation, the
+//! simulator, the RNG, the agent or the JSON writer shows up here as a
+//! byte diff.
+//!
+//! Bootstrapping: on a checkout without the fixture the test writes
+//! `tests/fixtures/sweep_golden.json` and passes — commit that file to
+//! arm the snapshot. To *intentionally* change simulator behaviour,
+//! delete the fixture, rerun the suite, and commit the regenerated file
+//! together with the behavioural change so the diff is reviewable.
+
+use std::path::PathBuf;
+
+use aimm::bench::sweep::{report_json, run_grid, SweepGrid};
+use aimm::config::MappingScheme;
+use aimm::workloads::Benchmark;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/sweep_golden.json")
+}
+
+/// Small but representative: single- and multi-program cells, baseline
+/// and learning agent — 6 cells, one run each, tiny traces.
+fn golden_grid() -> SweepGrid {
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![
+        vec![Benchmark::Mac],
+        vec![Benchmark::Spmv],
+        vec![Benchmark::Rd, Benchmark::Km],
+    ];
+    g.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    g
+}
+
+#[test]
+fn sweep_report_matches_committed_golden_fixture() {
+    let results = run_grid(&golden_grid().cells(), 2).expect("golden sweep");
+    let report = report_json(&results);
+    let path = fixture_path();
+    if !path.exists() {
+        // Never pin a one-engine artifact: before writing the fixture,
+        // require the polled reference engine to reproduce the report
+        // byte-for-byte, so even the bootstrap run asserts something.
+        let mut polled = golden_grid();
+        polled.engine = aimm::config::Engine::Polled;
+        let polled_results = run_grid(&polled.cells(), 2).expect("golden sweep (polled)");
+        assert_eq!(
+            report,
+            report_json(&polled_results),
+            "engines disagree on the golden grid — refusing to bootstrap the fixture"
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).expect("fixtures dir");
+        std::fs::write(&path, &report).expect("bootstrap golden fixture");
+        eprintln!(
+            "bootstrapped {} — commit it to pin cross-PR behaviour",
+            path.display()
+        );
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).expect("read golden fixture");
+    assert_eq!(
+        report,
+        golden,
+        "sweep report diverged from the committed golden fixture {} — if the \
+         behavioural change is intentional, delete the fixture, rerun, and \
+         commit the regenerated file",
+        path.display()
+    );
+}
