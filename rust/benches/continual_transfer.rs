@@ -1,0 +1,67 @@
+//! Bench: cross-program continual-learning transfer (EXPERIMENTS.md
+//! §Curriculum). Runs the two paper-benchmark curriculum sequences
+//! SC→KM→RD and LUD→RBM carrying one agent end-to-end, re-runs every
+//! stage cold as the baseline, and records the warm-start cells in
+//! `BENCH_continual.json` at the repository root (fixed key order, so
+//! re-runs on the same toolchain diff clean).
+//!
+//! Run with `cargo bench --bench continual_transfer` (release; ignore
+//! debug numbers).
+
+use std::time::Instant;
+
+use aimm::bench::sweep::{continual_report_json, ContinualSequence};
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::{run_curriculum, CurriculumStage};
+use aimm::workloads::Benchmark;
+
+/// Matches the engine-speedup bench grid: small enough for CI, big
+/// enough that the agent actually learns within a stage.
+const SCALE: f64 = 0.12;
+
+fn sequence(name: &str, stages: &[&[Benchmark]]) -> ContinualSequence {
+    let mut cfg = SystemConfig::default();
+    cfg.mapping = MappingScheme::Aimm;
+    let stages: Vec<CurriculumStage> =
+        stages.iter().map(|&b| CurriculumStage::new(b.to_vec())).collect();
+    let t0 = Instant::now();
+    let (report, agent) =
+        run_curriculum(&cfg, &stages, SCALE, None).expect("curriculum sequence");
+    let agent = agent.expect("AIMM curriculum carries an agent");
+    println!(
+        "{name}: {} stages in {:?} (agent: {} invocations, {} train steps)",
+        report.stages.len(),
+        t0.elapsed(),
+        agent.stats.invocations,
+        agent.stats.train_steps,
+    );
+    for s in &report.stages {
+        println!(
+            "  {:>12}: cold first {:.4} → warm first {:.4} ({:+.1}%), warm last {:.4}",
+            s.name,
+            s.cold_first_opc(),
+            s.warm_first_opc(),
+            s.transfer_gain() * 100.0,
+            s.warm.last().opc(),
+        );
+    }
+    ContinualSequence {
+        name: name.to_string(),
+        technique: cfg.technique,
+        mapping: cfg.mapping,
+        scale: SCALE,
+        seed: cfg.seed,
+        report,
+    }
+}
+
+fn main() {
+    let seqs = vec![
+        sequence("SC>KM>RD", &[&[Benchmark::Sc], &[Benchmark::Km], &[Benchmark::Rd]]),
+        sequence("LUD>RBM", &[&[Benchmark::Lud], &[Benchmark::Rbm]]),
+    ];
+    let json = continual_report_json(&seqs);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_continual.json");
+    std::fs::write(path, &json).expect("write BENCH_continual.json");
+    println!("wrote {path} ({} sequences)", seqs.len());
+}

@@ -8,8 +8,13 @@ use crate::runtime::QFunction;
 use crate::sim::{Cycle, History, Rng};
 
 use super::actions::Action;
+use super::checkpoint::{AgentCheckpoint, ReplaySnapshot};
 use super::replay::{ReplayBuffer, Transition};
 use super::state::StateVec;
+
+/// Capacity of the recent-global-actions history feeding the state
+/// histogram (a fixed hardware buffer in the paper's AIMM unit).
+const ACTION_HISTORY_CAP: usize = 16;
 
 /// What the system should do after an invocation.
 #[derive(Debug, Clone, Copy)]
@@ -20,7 +25,7 @@ pub struct Decision {
 }
 
 /// Agent bookkeeping surfaced in RunStats.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct AgentStats {
     pub invocations: u64,
     pub train_steps: u64,
@@ -53,12 +58,34 @@ pub struct AimmAgent {
 }
 
 impl AimmAgent {
-    pub fn new(qf: Box<dyn QFunction>, cfg: AgentConfig, seed: u64) -> Self {
+    /// Construct an agent, validating the configuration against the
+    /// backend. In particular a backend with a shape-specialized train
+    /// executable ([`QFunction::fixed_batch`], i.e. the PJRT artifacts)
+    /// rejects a contradicting `AgentConfig.batch_size` here — loudly,
+    /// instead of mis-batching or silently ignoring the knob.
+    pub fn try_new(qf: Box<dyn QFunction>, cfg: AgentConfig, seed: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(!cfg.intervals.is_empty(), "agent needs at least one interval");
+        anyhow::ensure!(cfg.batch_size > 0, "agent batch_size must be positive");
+        anyhow::ensure!(
+            cfg.replay_capacity >= cfg.batch_size,
+            "replay_capacity {} smaller than batch_size {}",
+            cfg.replay_capacity,
+            cfg.batch_size
+        );
+        if let Some(fixed) = qf.fixed_batch() {
+            anyhow::ensure!(
+                cfg.batch_size == fixed,
+                "backend {:?} trains a fixed batch of {fixed} (AOT artifact shape) but \
+                 AgentConfig.batch_size = {} — regenerate the artifacts or drop the override",
+                qf.backend(),
+                cfg.batch_size
+            );
+        }
         let eps = cfg.eps_start;
         let interval_idx = cfg.initial_interval.min(cfg.intervals.len() - 1);
-        Self {
+        Ok(Self {
             qf,
-            replay: ReplayBuffer::new(cfg.replay_capacity),
+            replay: ReplayBuffer::new(cfg.replay_capacity, cfg.batch_size),
             cfg,
             rng: Rng::new(seed),
             eps,
@@ -67,13 +94,26 @@ impl AimmAgent {
             prev_opc: None,
             invocations_since_train: 0,
             trains_since_sync: 0,
-            action_history: History::new(16),
+            action_history: History::new(ACTION_HISTORY_CAP),
             stats: AgentStats::default(),
-        }
+        })
+    }
+
+    /// [`AimmAgent::try_new`] for callers with a known-good config;
+    /// panics (loudly, with the validation message) on a bad one.
+    pub fn new(qf: Box<dyn QFunction>, cfg: AgentConfig, seed: u64) -> Self {
+        Self::try_new(qf, cfg, seed).expect("invalid agent configuration")
     }
 
     pub fn backend(&self) -> &'static str {
         self.qf.backend()
+    }
+
+    /// Direct Q-network probe for diagnostics and tests: evaluates
+    /// Q(s, ·) without counting an invocation, drawing randomness or
+    /// touching the control state.
+    pub fn probe_q(&mut self, s: &StateVec) -> anyhow::Result<[f32; 8]> {
+        self.qf.q_values(s)
     }
 
     pub fn current_interval(&self) -> u64 {
@@ -143,11 +183,12 @@ impl AimmAgent {
         if self.invocations_since_train >= self.cfg.train_every && self.replay.has_batch() {
             self.invocations_since_train = 0;
             if let Some(batch) = self.replay.sample(&mut self.rng) {
+                let rows = batch.batch_len() as u64;
                 let loss = self.qf.train_batch(&batch)?;
                 self.stats.train_steps += 1;
                 self.stats.loss_sum += loss as f64;
-                self.stats.weight_accesses += crate::runtime::BATCH as u64;
-                self.stats.replay_accesses += crate::runtime::BATCH as u64;
+                self.stats.weight_accesses += rows;
+                self.stats.replay_accesses += rows;
                 self.trains_since_sync += 1;
                 if self.trains_since_sync >= self.cfg.target_sync {
                     self.trains_since_sync = 0;
@@ -223,6 +264,105 @@ impl AimmAgent {
         } else {
             self.stats.loss_sum / self.stats.train_steps as f64
         }
+    }
+
+    /// Capture a continual-learning checkpoint (DESIGN.md §9). Only legal
+    /// at an episode boundary — after [`AimmAgent::finish_episode`] /
+    /// before the next run's first invocation — because an in-flight
+    /// `(s, a)` pair cannot be resumed bit-identically (its reward
+    /// depends on simulator state the checkpoint does not carry).
+    pub fn checkpoint(&self) -> anyhow::Result<AgentCheckpoint> {
+        anyhow::ensure!(
+            self.pending.is_none() && self.prev_opc.is_none(),
+            "checkpoint must be captured at an episode boundary \
+             (a transition is still in flight)"
+        );
+        let (transitions, head) = self.replay.export();
+        Ok(AgentCheckpoint {
+            cfg: self.cfg.clone(),
+            q: self.qf.snapshot()?,
+            eps: self.eps,
+            interval_idx: self.interval_idx,
+            invocations_since_train: self.invocations_since_train,
+            trains_since_sync: self.trains_since_sync,
+            rng_state: self.rng.state(),
+            action_history: self.action_history.iter().collect(),
+            replay: ReplaySnapshot {
+                capacity: self.replay.capacity(),
+                batch: self.replay.batch(),
+                head,
+                pushes: self.replay.pushes,
+                samples: self.replay.samples,
+                transitions,
+            },
+            stats: self.stats.clone(),
+        })
+    }
+
+    /// Rebuild an agent from a checkpoint. `qf` must already hold the
+    /// restored parameters (see `AgentCheckpoint::build_agent`, which
+    /// wires both steps); this validates the control state against `cfg`
+    /// and rehydrates it exactly — including the ε-greedy RNG stream —
+    /// so resuming reproduces the uninterrupted run bit-for-bit.
+    pub fn from_checkpoint(
+        qf: Box<dyn QFunction>,
+        cfg: AgentConfig,
+        ck: &AgentCheckpoint,
+    ) -> anyhow::Result<Self> {
+        let mut agent = Self::try_new(qf, cfg, 0)?;
+        // The whole config must match what the checkpoint was trained
+        // under: a drifted train_every / ε schedule / interval table
+        // would silently break bit-identical resume. Changing
+        // hyperparameters means starting a new agent, not resuming one.
+        anyhow::ensure!(
+            ck.cfg == agent.cfg,
+            "checkpoint was trained under a different agent configuration — resume \
+             requires the identical AgentConfig (saved: {:?}, given: {:?})",
+            ck.cfg,
+            agent.cfg
+        );
+        anyhow::ensure!(
+            ck.interval_idx < agent.cfg.intervals.len(),
+            "checkpoint interval_idx {} out of range for {} configured intervals",
+            ck.interval_idx,
+            agent.cfg.intervals.len()
+        );
+        anyhow::ensure!(
+            ck.replay.capacity == agent.cfg.replay_capacity,
+            "checkpoint replay capacity {} != configured replay_capacity {} — \
+             a resized ring cannot resume bit-identically",
+            ck.replay.capacity,
+            agent.cfg.replay_capacity
+        );
+        anyhow::ensure!(
+            ck.replay.batch == agent.cfg.batch_size,
+            "checkpoint batch size {} != configured batch_size {}",
+            ck.replay.batch,
+            agent.cfg.batch_size
+        );
+        anyhow::ensure!(
+            ck.action_history.len() <= ACTION_HISTORY_CAP,
+            "checkpoint action history has {} entries, capacity is {ACTION_HISTORY_CAP}",
+            ck.action_history.len()
+        );
+        agent.replay = ReplayBuffer::restore(
+            ck.replay.capacity,
+            ck.replay.batch,
+            ck.replay.transitions.clone(),
+            ck.replay.head,
+            ck.replay.pushes,
+            ck.replay.samples,
+        )?;
+        agent.rng = Rng::from_state(ck.rng_state);
+        agent.eps = ck.eps;
+        agent.interval_idx = ck.interval_idx;
+        agent.invocations_since_train = ck.invocations_since_train;
+        agent.trains_since_sync = ck.trains_since_sync;
+        for &a in &ck.action_history {
+            agent.action_history.push(a);
+        }
+        agent.stats = ck.stats.clone();
+        Ok(agent)
     }
 }
 
@@ -337,6 +477,105 @@ mod tests {
         a.start_episode();
         assert!(a.pending.is_none());
         assert_eq!(a.replay.len(), 1);
+    }
+
+    /// `AgentConfig.batch_size` is honored end-to-end: a smaller batch
+    /// unlocks training as soon as the replay holds that many rows.
+    #[test]
+    fn smaller_batch_size_trains_earlier() {
+        let mut small = AgentConfig::default();
+        small.batch_size = 8;
+        let mut a = agent(small);
+        let mut b = agent(AgentConfig::default()); // batch 32
+        for i in 0..12u64 {
+            let opc = 0.1 + (i % 3) as f64 * 0.1;
+            a.invoke(s(i as f32 / 12.0), opc, i * 100).unwrap();
+            b.invoke(s(i as f32 / 12.0), opc, i * 100).unwrap();
+        }
+        // 11 stored transitions: enough for a batch of 8, not of 32.
+        assert!(a.stats.train_steps > 0, "batch_size 8 must have trained");
+        assert_eq!(b.stats.train_steps, 0, "batch_size 32 must still be waiting");
+    }
+
+    #[test]
+    fn try_new_rejects_fixed_batch_mismatch() {
+        struct FixedBatchQ;
+        impl QFunction for FixedBatchQ {
+            fn q_values(&mut self, _s: &[f32]) -> anyhow::Result<[f32; 8]> {
+                Ok([0.0; 8])
+            }
+            fn train_batch(&mut self, _b: &crate::runtime::TrainBatch) -> anyhow::Result<f32> {
+                Ok(0.0)
+            }
+            fn sync_target(&mut self) {}
+            fn backend(&self) -> &'static str {
+                "fixed-batch-test"
+            }
+            fn fixed_batch(&self) -> Option<usize> {
+                Some(32)
+            }
+        }
+        let mut cfg = AgentConfig::default();
+        cfg.batch_size = 16;
+        let err = AimmAgent::try_new(Box::new(FixedBatchQ), cfg, 1).unwrap_err().to_string();
+        assert!(err.contains("fixed batch"), "{err}");
+        // The matching size constructs fine.
+        assert!(AimmAgent::try_new(Box::new(FixedBatchQ), AgentConfig::default(), 1).is_ok());
+        // And an oversized batch relative to the replay is rejected too.
+        let mut cfg = AgentConfig::default();
+        cfg.replay_capacity = 16;
+        cfg.batch_size = 32;
+        assert!(AimmAgent::try_new(Box::new(FixedBatchQ), cfg, 1).is_err());
+    }
+
+    #[test]
+    fn checkpoint_only_at_episode_boundary() {
+        let mut a = agent(AgentConfig::default());
+        assert!(a.checkpoint().is_ok(), "fresh agent is at a boundary");
+        a.invoke(s(0.1), 0.2, 0).unwrap();
+        assert!(a.checkpoint().is_err(), "transition in flight");
+        a.finish_episode(s(0.2), 0.3);
+        assert!(a.checkpoint().is_ok(), "boundary after finish_episode");
+    }
+
+    /// Capture → serialize → parse → rebuild → capture again must be
+    /// byte-identical: the checkpoint carries the *complete* agent.
+    #[test]
+    fn checkpoint_roundtrip_is_byte_identical() {
+        let mut cfg = AgentConfig::default();
+        cfg.train_every = 1;
+        let mut a = agent(cfg.clone());
+        for i in 0..60u64 {
+            let opc = 0.1 + (i % 5) as f64 * 0.05;
+            a.invoke(s(i as f32 / 60.0), opc, i * 100).unwrap();
+        }
+        a.finish_episode(s(0.9), 0.2);
+        assert!(a.stats.train_steps > 0, "test needs a trained network");
+        let text = a.checkpoint().unwrap().to_json();
+
+        let back = crate::agent::checkpoint::AgentCheckpoint::parse(&text).unwrap();
+        let mut qf = Box::new(LinearQ::new(0.9, 0.1, 777)); // overwritten by restore
+        qf.restore(&back.q).unwrap();
+        let b = AimmAgent::from_checkpoint(qf, cfg.clone(), &back).unwrap();
+        assert_eq!(b.checkpoint().unwrap().to_json(), text);
+        assert_eq!(b.epsilon(), a.epsilon());
+        assert_eq!(b.replay.len(), a.replay.len());
+        assert_eq!(b.stats, a.stats);
+        assert_eq!(b.current_interval(), a.current_interval());
+
+        // A config that cannot resume bit-identically is rejected loudly —
+        // capacity drift and dynamics drift (train_every) alike.
+        let mut resized = cfg.clone();
+        resized.replay_capacity = cfg.replay_capacity * 2;
+        let mut qf = Box::new(LinearQ::new(0.9, 0.1, 777));
+        qf.restore(&back.q).unwrap();
+        assert!(AimmAgent::from_checkpoint(qf, resized, &back).is_err());
+        let mut drifted = cfg.clone();
+        drifted.train_every = cfg.train_every + 1;
+        let mut qf = Box::new(LinearQ::new(0.9, 0.1, 777));
+        qf.restore(&back.q).unwrap();
+        let err = AimmAgent::from_checkpoint(qf, drifted, &back).unwrap_err().to_string();
+        assert!(err.contains("different agent configuration"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! Versioned continual-learning checkpoints (DESIGN.md §9).
+//!
+//! The paper's headline claim is that the DNN *persists*: episodes clear
+//! every simulation state except the model (§6.1), and §7.4 warm-starts
+//! new programs from a network trained on others. This module gives that
+//! persistence a durable form: everything the agent needs to resume —
+//! Q-parameters, target network, optimizer moments, replay memory,
+//! ε/interval schedule, RNG stream and lifetime stats — round-trips
+//! through a single JSON document written with the fixed-key-order
+//! writer in [`crate::runtime::json::write`].
+//!
+//! ## Bit-identity
+//!
+//! The format is engineered so that *save at an episode boundary → load →
+//! finish the protocol* produces byte-identical `RunStats` to the
+//! uninterrupted run (enforced by `rust/tests/continual.rs`, under both
+//! engines):
+//!
+//! * every `f32` is stored as its IEEE-754 bit pattern in a JSON integer
+//!   (≤ 2^32, exact in a double), every `f64` and `u64` as a `0x`-hex
+//!   *string* (doubles only carry 53 bits) — no decimal round-tripping
+//!   anywhere;
+//! * the replay ring is captured in **physical** order plus its head
+//!   index — sampling indexes the ring directly, so logical order alone
+//!   would perturb later draws;
+//! * the agent's ε-greedy RNG resumes via [`crate::sim::Rng::from_state`].
+//!
+//! Checkpoints are only captured at episode boundaries (no transition in
+//! flight); [`AimmAgent::checkpoint`] rejects anything else.
+
+use std::path::Path;
+
+use crate::config::AgentConfig;
+use crate::runtime::json::{self, parse_hex_u64, write, Json};
+use crate::runtime::{best_qfunction, QSnapshot};
+
+use super::aimm::{AgentStats, AimmAgent};
+use super::replay::Transition;
+
+/// Format identifier; bump on any layout change.
+pub const SCHEMA: &str = "aimm-checkpoint-v1";
+/// Numeric format version carried alongside [`SCHEMA`].
+pub const VERSION: u64 = 1;
+
+/// Exact physical state of the replay ring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplaySnapshot {
+    pub capacity: usize,
+    pub batch: usize,
+    pub head: usize,
+    pub pushes: u64,
+    pub samples: u64,
+    /// Ring contents in physical (slot) order.
+    pub transitions: Vec<Transition>,
+}
+
+/// Everything needed to resume the agent bit-identically at an episode
+/// boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AgentCheckpoint {
+    /// The full agent configuration the checkpoint was trained under.
+    /// Resume validates the live config against this field-by-field and
+    /// fails loudly on any drift (`AimmAgent::from_checkpoint`): a
+    /// changed `train_every`, ε schedule or interval table would
+    /// silently break the bit-identical-resume guarantee otherwise.
+    pub cfg: AgentConfig,
+    pub q: QSnapshot,
+    pub eps: f32,
+    pub interval_idx: usize,
+    pub invocations_since_train: u32,
+    pub trains_since_sync: u32,
+    /// Raw ε-greedy RNG state ([`crate::sim::Rng::state`]).
+    pub rng_state: u64,
+    /// Recent global actions, oldest → newest (capacity 16 in the agent).
+    pub action_history: Vec<f32>,
+    pub replay: ReplaySnapshot,
+    pub stats: AgentStats,
+}
+
+// ---------------------------------------------------------------------
+// Serialization (fixed key order — the file is reproducible
+// byte-for-byte for a given agent state).
+// ---------------------------------------------------------------------
+
+fn f32_bits(x: f32) -> String {
+    x.to_bits().to_string()
+}
+
+fn f32_arr(xs: &[f32]) -> String {
+    write::arr(&xs.iter().map(|&x| f32_bits(x)).collect::<Vec<_>>())
+}
+
+fn f64_bits(x: f64) -> String {
+    write::hex_u64(x.to_bits())
+}
+
+fn transition_json(t: &Transition) -> String {
+    write::obj(&[
+        ("s", f32_arr(&t.s)),
+        ("a", t.a.to_string()),
+        ("r", f32_bits(t.r)),
+        ("s2", f32_arr(&t.s2)),
+        ("done", t.done.to_string()),
+    ])
+}
+
+fn cfg_json(c: &AgentConfig) -> String {
+    let intervals: Vec<String> = c.intervals.iter().map(|&v| write::hex_u64(v)).collect();
+    write::obj(&[
+        ("intervals", write::arr(&intervals)),
+        ("initial_interval", c.initial_interval.to_string()),
+        ("gamma", f32_bits(c.gamma)),
+        ("lr", f32_bits(c.lr)),
+        ("eps_start", f32_bits(c.eps_start)),
+        ("eps_end", f32_bits(c.eps_end)),
+        ("eps_decay", f32_bits(c.eps_decay)),
+        ("replay_capacity", c.replay_capacity.to_string()),
+        ("batch_size", c.batch_size.to_string()),
+        ("train_every", c.train_every.to_string()),
+        ("target_sync", c.target_sync.to_string()),
+        ("reward_deadband", f64_bits(c.reward_deadband)),
+    ])
+}
+
+fn q_json(q: &QSnapshot) -> String {
+    write::obj(&[
+        ("backend", write::string(&q.backend)),
+        ("lr", f32_bits(q.lr)),
+        ("gamma", f32_bits(q.gamma)),
+        ("t", write::hex_u64(q.t)),
+        ("train_steps", write::hex_u64(q.train_steps)),
+        ("theta", f32_arr(&q.theta)),
+        ("target_theta", f32_arr(&q.target_theta)),
+        ("m", f32_arr(&q.m)),
+        ("v", f32_arr(&q.v)),
+    ])
+}
+
+fn replay_json(r: &ReplaySnapshot) -> String {
+    let ts: Vec<String> = r.transitions.iter().map(transition_json).collect();
+    write::obj(&[
+        ("capacity", r.capacity.to_string()),
+        ("batch", r.batch.to_string()),
+        ("head", r.head.to_string()),
+        ("pushes", write::hex_u64(r.pushes)),
+        ("samples", write::hex_u64(r.samples)),
+        ("transitions", write::arr(&ts)),
+    ])
+}
+
+fn stats_json(s: &AgentStats) -> String {
+    let counts: Vec<String> = s.action_counts.iter().map(|&c| write::hex_u64(c)).collect();
+    let rewards: Vec<String> = s.action_reward_sum.iter().map(|&x| f64_bits(x)).collect();
+    write::obj(&[
+        ("invocations", write::hex_u64(s.invocations)),
+        ("train_steps", write::hex_u64(s.train_steps)),
+        ("loss_sum", f64_bits(s.loss_sum)),
+        ("cumulative_reward", f64_bits(s.cumulative_reward)),
+        ("action_counts", write::arr(&counts)),
+        ("action_reward_sum", write::arr(&rewards)),
+        ("weight_accesses", write::hex_u64(s.weight_accesses)),
+        ("replay_accesses", write::hex_u64(s.replay_accesses)),
+        ("state_buf_accesses", write::hex_u64(s.state_buf_accesses)),
+    ])
+}
+
+impl AgentCheckpoint {
+    /// Serialize with fixed key order.
+    pub fn to_json(&self) -> String {
+        write::obj(&[
+            ("schema", write::string(SCHEMA)),
+            ("version", VERSION.to_string()),
+            ("agent_config", cfg_json(&self.cfg)),
+            ("q", q_json(&self.q)),
+            ("eps", f32_bits(self.eps)),
+            ("interval_idx", self.interval_idx.to_string()),
+            ("invocations_since_train", self.invocations_since_train.to_string()),
+            ("trains_since_sync", self.trains_since_sync.to_string()),
+            ("rng_state", write::hex_u64(self.rng_state)),
+            ("action_history", f32_arr(&self.action_history)),
+            ("replay", replay_json(&self.replay)),
+            ("stats", stats_json(&self.stats)),
+        ])
+    }
+
+    /// Parse a checkpoint document, verifying the schema version.
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = json::parse(text)?;
+        let schema = str_field(&j, "schema")?;
+        anyhow::ensure!(
+            schema == SCHEMA,
+            "unsupported checkpoint schema {schema:?} (this build reads {SCHEMA:?})"
+        );
+        let version = num_field(&j, "version")? as u64;
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads {VERSION})"
+        );
+        Ok(Self {
+            cfg: parse_cfg(field(&j, "agent_config")?)?,
+            q: parse_q(field(&j, "q")?)?,
+            eps: f32_field(&j, "eps")?,
+            interval_idx: usize_field(&j, "interval_idx")?,
+            invocations_since_train: usize_field(&j, "invocations_since_train")? as u32,
+            trains_since_sync: usize_field(&j, "trains_since_sync")? as u32,
+            rng_state: u64_field(&j, "rng_state")?,
+            action_history: f32_vec(field(&j, "action_history")?)?,
+            replay: parse_replay(field(&j, "replay")?)?,
+            stats: parse_stats(field(&j, "stats")?)?,
+        })
+    }
+
+    /// Write to `path` (creating parent directories is the caller's job).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))
+    }
+
+    /// Load from `path`.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+
+    /// Rebuild a live agent: construct the best available Q-backend,
+    /// restore the snapshotted parameters into it, and rehydrate the
+    /// control state. Fails loudly when the checkpoint does not fit the
+    /// backend (name and parameter layout) or when `cfg` differs in any
+    /// field from the configuration the checkpoint was trained under —
+    /// resume never silently mixes old and new hyperparameters.
+    pub fn build_agent(&self, cfg: &AgentConfig) -> anyhow::Result<AimmAgent> {
+        let mut qf = best_qfunction(self.q.lr, self.q.gamma, 0);
+        qf.restore(&self.q)?;
+        AimmAgent::from_checkpoint(qf, cfg.clone(), self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parsing helpers (bit-exact inverses of the writers above).
+// ---------------------------------------------------------------------
+
+fn field<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a Json> {
+    j.get(k).ok_or_else(|| anyhow::anyhow!("checkpoint missing key {k:?}"))
+}
+
+fn str_field<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a str> {
+    field(j, k)?.as_str().ok_or_else(|| anyhow::anyhow!("checkpoint key {k:?} not a string"))
+}
+
+fn num_field(j: &Json, k: &str) -> anyhow::Result<f64> {
+    field(j, k)?.as_f64().ok_or_else(|| anyhow::anyhow!("checkpoint key {k:?} not a number"))
+}
+
+fn usize_field(j: &Json, k: &str) -> anyhow::Result<usize> {
+    let f = num_field(j, k)?;
+    anyhow::ensure!(
+        f >= 0.0 && f.fract() == 0.0 && f <= u32::MAX as f64,
+        "checkpoint key {k:?} is not a small non-negative integer: {f}"
+    );
+    Ok(f as usize)
+}
+
+fn u64_field(j: &Json, k: &str) -> anyhow::Result<u64> {
+    parse_hex_u64(str_field(j, k)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint key {k:?}: {e}"))
+}
+
+fn f64_field(j: &Json, k: &str) -> anyhow::Result<f64> {
+    Ok(f64::from_bits(u64_field(j, k)?))
+}
+
+fn f32_of(j: &Json) -> anyhow::Result<f32> {
+    let f = j.as_f64().ok_or_else(|| anyhow::anyhow!("expected f32 bit pattern"))?;
+    anyhow::ensure!(
+        f >= 0.0 && f.fract() == 0.0 && f <= u32::MAX as f64,
+        "bad f32 bit pattern {f}"
+    );
+    Ok(f32::from_bits(f as u32))
+}
+
+fn f32_field(j: &Json, k: &str) -> anyhow::Result<f32> {
+    f32_of(field(j, k)?).map_err(|e| anyhow::anyhow!("checkpoint key {k:?}: {e}"))
+}
+
+fn f32_vec(j: &Json) -> anyhow::Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected f32 array"))?
+        .iter()
+        .map(f32_of)
+        .collect()
+}
+
+fn hex_vec(j: &Json, k: &str) -> anyhow::Result<Vec<u64>> {
+    field(j, k)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{k:?} not an array"))?
+        .iter()
+        .map(|v| {
+            parse_hex_u64(
+                v.as_str().ok_or_else(|| anyhow::anyhow!("{k:?} entry not a hex string"))?,
+            )
+        })
+        .collect()
+}
+
+fn parse_cfg(j: &Json) -> anyhow::Result<AgentConfig> {
+    Ok(AgentConfig {
+        intervals: hex_vec(j, "intervals")?,
+        initial_interval: usize_field(j, "initial_interval")?,
+        gamma: f32_field(j, "gamma")?,
+        lr: f32_field(j, "lr")?,
+        eps_start: f32_field(j, "eps_start")?,
+        eps_end: f32_field(j, "eps_end")?,
+        eps_decay: f32_field(j, "eps_decay")?,
+        replay_capacity: usize_field(j, "replay_capacity")?,
+        batch_size: usize_field(j, "batch_size")?,
+        train_every: usize_field(j, "train_every")? as u32,
+        target_sync: usize_field(j, "target_sync")? as u32,
+        reward_deadband: f64_field(j, "reward_deadband")?,
+    })
+}
+
+fn parse_q(j: &Json) -> anyhow::Result<QSnapshot> {
+    Ok(QSnapshot {
+        backend: str_field(j, "backend")?.to_string(),
+        lr: f32_field(j, "lr")?,
+        gamma: f32_field(j, "gamma")?,
+        t: u64_field(j, "t")?,
+        train_steps: u64_field(j, "train_steps")?,
+        theta: f32_vec(field(j, "theta")?)?,
+        target_theta: f32_vec(field(j, "target_theta")?)?,
+        m: f32_vec(field(j, "m")?)?,
+        v: f32_vec(field(j, "v")?)?,
+    })
+}
+
+fn parse_transition(j: &Json) -> anyhow::Result<Transition> {
+    let s = f32_vec(field(j, "s")?)?;
+    let s2 = f32_vec(field(j, "s2")?)?;
+    let dim = crate::runtime::STATE_DIM;
+    anyhow::ensure!(
+        s.len() == dim && s2.len() == dim,
+        "transition state has {} / {} entries, expected {dim}",
+        s.len(),
+        s2.len()
+    );
+    let mut sa = [0.0f32; crate::runtime::STATE_DIM];
+    sa.copy_from_slice(&s);
+    let mut s2a = [0.0f32; crate::runtime::STATE_DIM];
+    s2a.copy_from_slice(&s2);
+    let a = usize_field(j, "a")?;
+    anyhow::ensure!(a < crate::runtime::NUM_ACTIONS, "transition action {a} out of range");
+    let done = match field(j, "done")? {
+        Json::Bool(b) => *b,
+        other => anyhow::bail!("transition done is not a bool: {other:?}"),
+    };
+    Ok(Transition { s: sa, a: a as u8, r: f32_field(j, "r")?, s2: s2a, done })
+}
+
+fn parse_replay(j: &Json) -> anyhow::Result<ReplaySnapshot> {
+    let transitions = field(j, "transitions")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("replay transitions not an array"))?
+        .iter()
+        .map(parse_transition)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(ReplaySnapshot {
+        capacity: usize_field(j, "capacity")?,
+        batch: usize_field(j, "batch")?,
+        head: usize_field(j, "head")?,
+        pushes: u64_field(j, "pushes")?,
+        samples: u64_field(j, "samples")?,
+        transitions,
+    })
+}
+
+fn hex_arr(j: &Json, k: &str, n: usize) -> anyhow::Result<Vec<u64>> {
+    let out = hex_vec(j, k)?;
+    anyhow::ensure!(out.len() == n, "{k:?} has {} entries, expected {n}", out.len());
+    Ok(out)
+}
+
+fn parse_stats(j: &Json) -> anyhow::Result<AgentStats> {
+    let counts = hex_arr(j, "action_counts", 8)?;
+    let rewards = hex_arr(j, "action_reward_sum", 8)?;
+    let mut action_counts = [0u64; 8];
+    action_counts.copy_from_slice(&counts);
+    let mut action_reward_sum = [0.0f64; 8];
+    for (out, bits) in action_reward_sum.iter_mut().zip(rewards) {
+        *out = f64::from_bits(bits);
+    }
+    Ok(AgentStats {
+        invocations: u64_field(j, "invocations")?,
+        train_steps: u64_field(j, "train_steps")?,
+        loss_sum: f64_field(j, "loss_sum")?,
+        cumulative_reward: f64_field(j, "cumulative_reward")?,
+        action_counts,
+        action_reward_sum,
+        weight_accesses: u64_field(j, "weight_accesses")?,
+        replay_accesses: u64_field(j, "replay_accesses")?,
+        state_buf_accesses: u64_field(j, "state_buf_accesses")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::STATE_DIM;
+
+    fn probe_transition(k: u32) -> Transition {
+        let mut s = [0.0f32; STATE_DIM];
+        let mut s2 = [0.0f32; STATE_DIM];
+        // Deliberately nasty values: NaN, -0.0, subnormals, infinities.
+        s[0] = f32::NAN;
+        s[1] = -0.0;
+        s[2] = f32::MIN_POSITIVE / 2.0;
+        s[3] = k as f32 * 0.1;
+        s2[0] = f32::NEG_INFINITY;
+        s2[1] = f32::MAX;
+        Transition { s, a: (k % 8) as u8, r: -1.5e-8, s2, done: k % 2 == 0 }
+    }
+
+    fn sample_checkpoint() -> AgentCheckpoint {
+        let mut cfg = AgentConfig::default();
+        cfg.eps_decay = 0.7251; // non-default, exercises f32-bit round trip
+        cfg.replay_capacity = 64;
+        AgentCheckpoint {
+            cfg,
+            q: QSnapshot {
+                backend: "linear-mock".to_string(),
+                lr: 5e-4,
+                gamma: 0.95,
+                theta: vec![f32::NAN, -0.0, 1.0, f32::INFINITY],
+                target_theta: vec![0.25, -3.5, f32::MIN_POSITIVE, 0.0],
+                m: vec![],
+                v: vec![],
+                t: 0,
+                train_steps: u64::MAX,
+            },
+            eps: 0.123456,
+            interval_idx: 3,
+            invocations_since_train: 2,
+            trains_since_sync: 61,
+            rng_state: 0xDEAD_BEEF_DEAD_BEEF,
+            action_history: vec![0.0, 7.0, 3.0],
+            replay: ReplaySnapshot {
+                capacity: 64,
+                batch: 32,
+                head: 0,
+                pushes: 3,
+                samples: 0,
+                transitions: (0..3).map(probe_transition).collect(),
+            },
+            stats: AgentStats {
+                invocations: 100,
+                train_steps: 40,
+                loss_sum: 1.25e-300,
+                cumulative_reward: -7.0,
+                action_counts: [1, 2, 3, 4, 5, 6, 7, u64::MAX],
+                action_reward_sum: [0.0, -0.0, f64::NAN, 1.5, -2.5, 0.1, 0.2, 0.3],
+                weight_accesses: 9,
+                replay_accesses: 8,
+                state_buf_accesses: 7,
+            },
+        }
+    }
+
+    /// Bit-level equality that treats NaN by pattern, not by PartialEq.
+    fn assert_bits_eq(a: &AgentCheckpoint, b: &AgentCheckpoint) {
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let ck = sample_checkpoint();
+        let text = ck.to_json();
+        let back = AgentCheckpoint::parse(&text).unwrap();
+        assert_bits_eq(&ck, &back);
+        // Fixed key order: serialization is deterministic.
+        assert_eq!(text, AgentCheckpoint::parse(&text).unwrap().to_json());
+        assert!(text.starts_with(&format!("{{\"schema\":\"{SCHEMA}\"")));
+    }
+
+    #[test]
+    fn parse_rejects_wrong_schema_or_version() {
+        let ck = sample_checkpoint();
+        let text = ck.to_json();
+        let wrong = text.replace(SCHEMA, "aimm-checkpoint-v0");
+        assert!(AgentCheckpoint::parse(&wrong).is_err());
+        let wrong = text.replace("\"version\":1", "\"version\":2");
+        assert!(AgentCheckpoint::parse(&wrong).is_err());
+        assert!(AgentCheckpoint::parse("{}").is_err());
+        assert!(AgentCheckpoint::parse("not json").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let ck = sample_checkpoint();
+        let path = std::env::temp_dir().join("aimm_ckpt_unit_test.json");
+        ck.save(&path).unwrap();
+        let back = AgentCheckpoint::load(&path).unwrap();
+        assert_bits_eq(&ck, &back);
+        std::fs::remove_file(&path).ok();
+        assert!(AgentCheckpoint::load(Path::new("/nonexistent/ckpt.json")).is_err());
+    }
+}

@@ -1,14 +1,18 @@
 //! The AIMM reinforcement-learning agent (paper §4, §5.2): state
 //! assembly, the eight-action space, the OPC reward, experience replay
 //! and the ε-greedy deep-Q control loop driving page and computation
-//! remapping.
+//! remapping — plus the versioned [`checkpoint`] format that carries
+//! the learned model across programs and processes (the continual-
+//! learning premise, §6.1).
 
 pub mod actions;
 pub mod aimm;
+pub mod checkpoint;
 pub mod replay;
 pub mod state;
 
 pub use actions::Action;
 pub use aimm::{AgentStats, AimmAgent, Decision};
+pub use checkpoint::{AgentCheckpoint, ReplaySnapshot};
 pub use replay::ReplayBuffer;
 pub use state::{build_state, hist4, PageSignals, PerMcSignals, StateVec, SysSignals};

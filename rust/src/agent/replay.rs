@@ -1,14 +1,19 @@
 //! Experience replay (paper §4.3 / §5.2): a ring buffer of transitions
 //! `(s, a, r, s')` sampled uniformly at random into training batches,
 //! consolidating past experience for a robust learning process.
+//!
+//! The batch size is the configured `AgentConfig.batch_size` — not the
+//! compiled-in [`crate::runtime::BATCH`], which only pins the PJRT
+//! artifact shapes (an agent on that backend is constructed with the
+//! matching size or rejected, see `AimmAgent::try_new`).
 
-use crate::runtime::{TrainBatch, BATCH, STATE_DIM};
+use crate::runtime::{TrainBatch, STATE_DIM};
 use crate::sim::Rng;
 
 use super::state::StateVec;
 
 /// One transition.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Transition {
     pub s: StateVec,
     pub a: u8,
@@ -21,6 +26,8 @@ pub struct Transition {
 pub struct ReplayBuffer {
     buf: Vec<Transition>,
     capacity: usize,
+    /// Rows per sampled training batch.
+    batch: usize,
     head: usize,
     /// Total pushes (energy accounting: one replay-buffer access each).
     pub pushes: u64,
@@ -29,9 +36,13 @@ pub struct ReplayBuffer {
 }
 
 impl ReplayBuffer {
-    pub fn new(capacity: usize) -> Self {
-        assert!(capacity >= BATCH);
-        Self { buf: Vec::with_capacity(capacity), capacity, head: 0, pushes: 0, samples: 0 }
+    pub fn new(capacity: usize, batch: usize) -> Self {
+        assert!(batch > 0, "replay batch size must be positive");
+        assert!(
+            capacity >= batch,
+            "replay capacity {capacity} smaller than batch size {batch}"
+        );
+        Self { buf: Vec::with_capacity(capacity), capacity, batch, head: 0, pushes: 0, samples: 0 }
     }
 
     pub fn push(&mut self, t: Transition) {
@@ -52,8 +63,16 @@ impl ReplayBuffer {
         self.buf.is_empty()
     }
 
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
     pub fn has_batch(&self) -> bool {
-        self.buf.len() >= BATCH
+        self.buf.len() >= self.batch
     }
 
     /// Draw a uniform batch (with replacement across draws, without
@@ -62,13 +81,14 @@ impl ReplayBuffer {
         if !self.has_batch() {
             return None;
         }
-        self.samples += BATCH as u64;
-        let mut s = Vec::with_capacity(BATCH * STATE_DIM);
-        let mut a = Vec::with_capacity(BATCH);
-        let mut r = Vec::with_capacity(BATCH);
-        let mut s2 = Vec::with_capacity(BATCH * STATE_DIM);
-        let mut done = Vec::with_capacity(BATCH);
-        for _ in 0..BATCH {
+        self.samples += self.batch as u64;
+        let n = self.batch;
+        let mut s = Vec::with_capacity(n * STATE_DIM);
+        let mut a = Vec::with_capacity(n);
+        let mut r = Vec::with_capacity(n);
+        let mut s2 = Vec::with_capacity(n * STATE_DIM);
+        let mut done = Vec::with_capacity(n);
+        for _ in 0..n {
             let t = &self.buf[rng.index(self.buf.len())];
             s.extend_from_slice(&t.s);
             a.push(t.a as i32);
@@ -78,11 +98,54 @@ impl ReplayBuffer {
         }
         Some(TrainBatch { s, a, r, s2, done })
     }
+
+    /// Checkpoint export: the ring's *physical* layout. Sampling indexes
+    /// `buf` directly and overwrites advance from `head`, so restoring
+    /// the logical order alone would perturb every later RNG-indexed
+    /// draw — bit-identical resume needs the exact physical state.
+    pub fn export(&self) -> (Vec<Transition>, usize) {
+        (self.buf.clone(), self.head)
+    }
+
+    /// Rebuild a buffer from checkpoint state. Validates the invariants
+    /// `push` maintains: `head` stays 0 until the ring is full, and the
+    /// buffer never exceeds its capacity.
+    pub fn restore(
+        capacity: usize,
+        batch: usize,
+        buf: Vec<Transition>,
+        head: usize,
+        pushes: u64,
+        samples: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(batch > 0, "replay batch size must be positive");
+        anyhow::ensure!(
+            capacity >= batch,
+            "replay capacity {capacity} smaller than batch size {batch}"
+        );
+        anyhow::ensure!(
+            buf.len() <= capacity,
+            "checkpoint holds {} transitions but capacity is {capacity}",
+            buf.len()
+        );
+        anyhow::ensure!(
+            if buf.len() < capacity { head == 0 } else { head < capacity },
+            "checkpoint replay head {head} inconsistent with {} / {capacity} entries",
+            buf.len()
+        );
+        let mut out = Self::new(capacity, batch);
+        out.buf = buf;
+        out.head = head;
+        out.pushes = pushes;
+        out.samples = samples;
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::BATCH;
 
     fn t(r: f32) -> Transition {
         Transition { s: [0.0; STATE_DIM], a: 1, r, s2: [0.0; STATE_DIM], done: false }
@@ -90,7 +153,7 @@ mod tests {
 
     #[test]
     fn ring_overwrites_oldest() {
-        let mut rb = ReplayBuffer::new(BATCH);
+        let mut rb = ReplayBuffer::new(BATCH, BATCH);
         for i in 0..BATCH + 5 {
             rb.push(t(i as f32));
         }
@@ -104,7 +167,7 @@ mod tests {
 
     #[test]
     fn sample_requires_batch() {
-        let mut rb = ReplayBuffer::new(64);
+        let mut rb = ReplayBuffer::new(64, BATCH);
         let mut rng = Rng::new(4);
         assert!(rb.sample(&mut rng).is_none());
         for i in 0..BATCH {
@@ -117,12 +180,78 @@ mod tests {
 
     #[test]
     fn sampled_values_come_from_buffer() {
-        let mut rb = ReplayBuffer::new(64);
+        let mut rb = ReplayBuffer::new(64, BATCH);
         let mut rng = Rng::new(5);
         for i in 0..40 {
             rb.push(t(i as f32));
         }
         let b = rb.sample(&mut rng).unwrap();
         assert!(b.r.iter().all(|&r| (0.0..40.0).contains(&r)));
+    }
+
+    /// `batch_size` is honored: a non-default batch changes when sampling
+    /// unlocks and how many rows come back.
+    #[test]
+    fn configured_batch_size_drives_sampling() {
+        let mut rb = ReplayBuffer::new(64, 8);
+        let mut rng = Rng::new(6);
+        for i in 0..7 {
+            rb.push(t(i as f32));
+        }
+        assert!(!rb.has_batch());
+        assert!(rb.sample(&mut rng).is_none());
+        rb.push(t(7.0));
+        assert!(rb.has_batch());
+        let b = rb.sample(&mut rng).unwrap();
+        assert_eq!(b.batch_len(), 8);
+        assert!(b.validate().is_ok());
+        assert_eq!(rb.samples, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "smaller than batch size")]
+    fn capacity_below_batch_rejected() {
+        ReplayBuffer::new(4, 8);
+    }
+
+    #[test]
+    fn export_restore_is_physically_exact() {
+        let mut rb = ReplayBuffer::new(8, 4);
+        for i in 0..11 {
+            rb.push(t(i as f32)); // wraps: head advances 3 slots
+        }
+        let (buf, head) = rb.export();
+        assert_eq!(head, 3);
+        let mut restored =
+            ReplayBuffer::restore(8, 4, buf, head, rb.pushes, rb.samples).unwrap();
+        assert_eq!(restored.buf, rb.buf);
+        // Identical RNG draws after restore: same physical indexing.
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let b1 = rb.sample(&mut r1).unwrap();
+        let b2 = restored.sample(&mut r2).unwrap();
+        assert_eq!(b1.r, b2.r);
+        assert_eq!(b1.a, b2.a);
+        // Further pushes overwrite the same slots.
+        rb.push(t(99.0));
+        restored.push(t(99.0));
+        assert_eq!(rb.buf, restored.buf);
+        assert_eq!(rb.head, restored.head);
+    }
+
+    #[test]
+    fn restore_rejects_inconsistent_state() {
+        // More transitions than capacity.
+        assert!(ReplayBuffer::restore(4, 4, (0..5).map(|i| t(i as f32)).collect(), 0, 5, 0)
+            .is_err());
+        // Non-zero head on a partially-filled ring.
+        assert!(ReplayBuffer::restore(8, 4, (0..3).map(|i| t(i as f32)).collect(), 1, 3, 0)
+            .is_err());
+        // Head out of range on a full ring.
+        assert!(ReplayBuffer::restore(4, 4, (0..4).map(|i| t(i as f32)).collect(), 4, 4, 0)
+            .is_err());
+        // Valid full ring.
+        assert!(ReplayBuffer::restore(4, 4, (0..4).map(|i| t(i as f32)).collect(), 2, 9, 4)
+            .is_ok());
     }
 }

@@ -9,4 +9,6 @@ pub mod sweep;
 
 pub use figures::*;
 pub use harness::{bench_fn, BenchResult, Table};
-pub use sweep::{run_grid, CellResult, SweepCell, SweepGrid};
+pub use sweep::{
+    run_grid, CellResult, ContinualSequence, SweepCell, SweepGrid,
+};

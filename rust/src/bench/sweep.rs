@@ -265,41 +265,24 @@ where
 
 // ---------------------------------------------------------------------
 // JSON report (fixed key order — runtime/json.rs can parse it back, and
-// the determinism test compares these strings byte-for-byte).
+// the determinism test compares these strings byte-for-byte). The
+// writer primitives live in runtime/json.rs (`json::write`) and are
+// shared with the agent-checkpoint format; these thin aliases keep the
+// report code readable and the emitted bytes unchanged.
 // ---------------------------------------------------------------------
 
+use crate::runtime::json::write as jw;
+
 fn jnum(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x}")
-    } else {
-        // NaN/∞ (e.g. 0/0 on a degenerate cell) must stay distinguishable
-        // from a genuine zero; the in-crate parser handles null.
-        "null".to_string()
-    }
+    jw::num(x)
 }
 
 fn jstr(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
+    jw::string(s)
 }
 
 fn jobj(fields: &[(&str, String)]) -> String {
-    let body: Vec<String> =
-        fields.iter().map(|(k, v)| format!("{}:{}", jstr(k), v)).collect();
-    format!("{{{}}}", body.join(","))
+    jw::obj(fields)
 }
 
 /// Serialize one run's statistics.
@@ -366,6 +349,73 @@ pub fn report_json(results: &[CellResult]) -> String {
 /// Write the report to `path` (the `BENCH_sweep.json` artifact).
 pub fn write_report(path: &Path, results: &[CellResult]) -> anyhow::Result<()> {
     std::fs::write(path, report_json(results))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------------
+// Continual-learning report (`BENCH_continual.json`): warm-start cells.
+// Same fixed-key-order discipline as the sweep report — the file is
+// byte-reproducible for a given grid and parses back through
+// runtime/json.rs.
+// ---------------------------------------------------------------------
+
+/// One executed curriculum sequence plus the context needed to
+/// reproduce it (`aimm curriculum --stages … --seed 0x…`).
+#[derive(Debug, Clone)]
+pub struct ContinualSequence {
+    /// Stage names joined with `>` (e.g. `SC>KM>RD`).
+    pub name: String,
+    pub technique: Technique,
+    pub mapping: MappingScheme,
+    pub scale: f64,
+    /// The config's master seed (0x-hex in the report, like sweep cells).
+    pub seed: u64,
+    pub report: crate::coordinator::CurriculumReport,
+}
+
+fn stage_json(s: &crate::coordinator::StageOutcome) -> String {
+    let warm: Vec<String> = s.warm.runs.iter().map(stats_json).collect();
+    let cold: Vec<String> = s.cold.runs.iter().map(stats_json).collect();
+    jobj(&[
+        ("name", jstr(&s.name)),
+        ("runs", s.warm.runs.len().to_string()),
+        // The headline transfer numbers, then the full per-run stats.
+        ("cold_first_opc", jnum(s.cold_first_opc())),
+        ("warm_first_opc", jnum(s.warm_first_opc())),
+        ("transfer_gain", jnum(s.transfer_gain())),
+        ("cold_last_opc", jnum(s.cold.last().opc())),
+        ("warm_last_opc", jnum(s.warm.last().opc())),
+        ("cold", format!("[{}]", cold.join(","))),
+        ("warm", format!("[{}]", warm.join(","))),
+    ])
+}
+
+/// Serialize one curriculum sequence.
+pub fn sequence_json(seq: &ContinualSequence) -> String {
+    let stages: Vec<String> = seq.report.stages.iter().map(stage_json).collect();
+    jobj(&[
+        ("name", jstr(&seq.name)),
+        ("technique", jstr(seq.technique.name())),
+        ("mapping", jstr(seq.mapping.name())),
+        ("scale", jnum(seq.scale)),
+        ("seed", jstr(&format!("{:#x}", seq.seed))),
+        ("stages", format!("[{}]", stages.join(","))),
+    ])
+}
+
+/// The whole continual-learning report.
+pub fn continual_report_json(seqs: &[ContinualSequence]) -> String {
+    let body: Vec<String> = seqs.iter().map(sequence_json).collect();
+    jobj(&[
+        ("schema", jstr("aimm-continual-v1")),
+        ("sequence_count", seqs.len().to_string()),
+        ("sequences", format!("[{}]", body.join(","))),
+    ])
+}
+
+/// Write the report to `path` (the `BENCH_continual.json` artifact).
+pub fn write_continual_report(path: &Path, seqs: &[ContinualSequence]) -> anyhow::Result<()> {
+    std::fs::write(path, continual_report_json(seqs))
         .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
 }
 
@@ -442,6 +492,41 @@ mod tests {
         assert_eq!(jnum(f64::INFINITY), "null");
         let o = jobj(&[("k", "1".to_string())]);
         assert_eq!(o, "{\"k\":1}");
+    }
+
+    #[test]
+    fn continual_report_is_deterministic_and_parses_back() {
+        use crate::coordinator::{run_curriculum, CurriculumStage};
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = MappingScheme::Aimm;
+        let stages = vec![
+            CurriculumStage { benches: vec![Benchmark::Mac], runs: 1 },
+            CurriculumStage { benches: vec![Benchmark::Rd], runs: 1 },
+        ];
+        let (report, _) = run_curriculum(&cfg, &stages, 0.03, None).unwrap();
+        let seq = ContinualSequence {
+            name: "MAC>RD".to_string(),
+            technique: cfg.technique,
+            mapping: cfg.mapping,
+            scale: 0.03,
+            seed: cfg.seed,
+            report,
+        };
+        let text = continual_report_json(std::slice::from_ref(&seq));
+        assert_eq!(text, continual_report_json(&[seq]), "fixed key order");
+        let parsed = crate::runtime::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("aimm-continual-v1"));
+        assert_eq!(parsed.get("sequence_count").unwrap().as_usize(), Some(1));
+        let seqs = parsed.get("sequences").unwrap().as_arr().unwrap();
+        let stages = seqs[0].get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        for s in stages {
+            assert!(s.get("cold_first_opc").is_some());
+            assert!(s.get("warm_first_opc").is_some());
+            assert!(s.get("transfer_gain").is_some());
+            assert_eq!(s.get("cold").unwrap().as_arr().unwrap().len(), 1);
+            assert_eq!(s.get("warm").unwrap().as_arr().unwrap().len(), 1);
+        }
     }
 
     #[test]

@@ -172,8 +172,10 @@ impl Default for TimingConfig {
 }
 
 /// RL agent hyperparameters (paper §4.2/§4.3; network dims must match the
-/// AOT artifacts — see python/compile/model.py).
-#[derive(Debug, Clone)]
+/// AOT artifacts — see python/compile/model.py). `PartialEq` because the
+/// continual-learning checkpoints record the config they were trained
+/// under and resume refuses a drifted one (agent/checkpoint.rs).
+#[derive(Debug, Clone, PartialEq)]
 pub struct AgentConfig {
     /// Discrete agent invocation intervals in cycles (§4.2).
     pub intervals: Vec<u64>,
@@ -187,8 +189,13 @@ pub struct AgentConfig {
     pub eps_start: f32,
     pub eps_end: f32,
     pub eps_decay: f32,
-    /// Replay buffer capacity and training batch size.
+    /// Replay buffer capacity (transitions in the ring).
     pub replay_capacity: usize,
+    /// Rows per DQN training batch. Honored end-to-end by the replay
+    /// buffer and the `LinearQ` backend; the PJRT artifacts are
+    /// shape-specialized to `runtime::BATCH`, so an agent on that
+    /// backend rejects any other value at construction
+    /// (`AimmAgent::try_new`) rather than silently ignoring the knob.
     pub batch_size: usize,
     /// Train every N agent invocations once the buffer holds a batch.
     pub train_every: u32,
@@ -385,6 +392,8 @@ impl SystemConfig {
         kv(&mut s, "seed", self.seed.to_string());
         kv(&mut s, "gamma", self.agent.gamma.to_string());
         kv(&mut s, "lr", self.agent.lr.to_string());
+        kv(&mut s, "batch_size", self.agent.batch_size.to_string());
+        kv(&mut s, "replay_capacity", self.agent.replay_capacity.to_string());
         s
     }
 
@@ -413,6 +422,8 @@ impl SystemConfig {
                 "hoard" => cfg.hoard = v.as_bool()?,
                 "gamma" => cfg.agent.gamma = v.as_f64()? as f32,
                 "lr" => cfg.agent.lr = v.as_f64()? as f32,
+                "batch_size" => cfg.agent.batch_size = v.as_usize()?,
+                "replay_capacity" => cfg.agent.replay_capacity = v.as_usize()?,
                 "technique" => {
                     let name = v.as_str()?;
                     cfg.technique = Technique::from_name(name)
@@ -446,6 +457,13 @@ impl SystemConfig {
         anyhow::ensure!(self.nmp_table_entries > 0, "nmp table must be non-empty");
         anyhow::ensure!(self.page_info_entries > 0, "page info cache must be non-empty");
         anyhow::ensure!(!self.agent.intervals.is_empty(), "agent needs at least one interval");
+        anyhow::ensure!(self.agent.batch_size > 0, "agent batch_size must be positive");
+        anyhow::ensure!(
+            self.agent.replay_capacity >= self.agent.batch_size,
+            "replay_capacity {} smaller than batch_size {}",
+            self.agent.replay_capacity,
+            self.agent.batch_size
+        );
         Ok(())
     }
 }
@@ -619,6 +637,21 @@ mod tests {
     #[test]
     fn parse_rejects_unknown_key() {
         assert!(SystemConfig::parse("bogus = 3").is_err());
+    }
+
+    /// `batch_size` is a live knob, not a silently-ignored field: it
+    /// round-trips through TOML and bad values are rejected.
+    #[test]
+    fn batch_size_roundtrips_and_validates() {
+        let mut c = SystemConfig::default();
+        c.agent.batch_size = 16;
+        c.agent.replay_capacity = 4096;
+        let parsed = SystemConfig::parse(&c.to_toml()).unwrap();
+        assert_eq!(parsed.agent.batch_size, 16);
+        assert_eq!(parsed.agent.replay_capacity, 4096);
+        assert!(SystemConfig::parse("batch_size = 0").is_err());
+        // A batch larger than the replay ring can never be sampled.
+        assert!(SystemConfig::parse("batch_size = 64\nreplay_capacity = 32").is_err());
     }
 
     #[test]

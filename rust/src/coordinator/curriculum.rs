@@ -1,0 +1,240 @@
+//! Cross-program curriculum driver — the continual-learning experiment
+//! the paper headlines (§6.1, §7.4 / Fig 10's pretrained-AIMM results):
+//! run an ordered sequence of episodes (single- or multi-program) while
+//! **one agent persists end-to-end**, and measure what the inherited
+//! model is worth by re-running every stage cold (fresh agent) as the
+//! baseline.
+//!
+//! The interesting number per stage is the *first-run* OPC: later runs
+//! converge with or without transfer, but the first run of a stage is
+//! where a warm-started network either pays off or interferes. The
+//! driver reports cold vs warm first-run OPC (and the steady-state last
+//! run for context) as a transfer table, rendered by `aimm curriculum`
+//! and serialized into `BENCH_continual.json`
+//! (`crate::bench::sweep::write_continual_report`).
+//!
+//! Determinism: a stage's trace depends only on (combo, `cfg.seed`) via
+//! [`episode_ops`], and cold agents are built through the same
+//! [`fresh_agent`] path as plain episodes — so the cold column of a
+//! curriculum equals the standalone episode numbers, and the whole table
+//! is reproducible under either simulation engine.
+
+use crate::agent::AimmAgent;
+use crate::config::{MappingScheme, SystemConfig};
+use crate::workloads::Benchmark;
+
+use super::runner::{
+    episode_ops, fresh_agent, run_stream_with, EpisodeSummary, MULTI_RUNS, SINGLE_RUNS,
+};
+
+/// One curriculum stage: a benchmark combination and its repeat count.
+#[derive(Debug, Clone)]
+pub struct CurriculumStage {
+    /// One entry = single-program episode, several = multi-program.
+    pub benches: Vec<Benchmark>,
+    /// Repeated runs within the stage (0 = the §6.1 default for the
+    /// combination arity: 5 single-program, 10 multi-program).
+    pub runs: usize,
+}
+
+impl CurriculumStage {
+    pub fn new(benches: Vec<Benchmark>) -> Self {
+        Self { benches, runs: 0 }
+    }
+
+    /// The effective repeat count (§6.1 defaults when unset).
+    pub fn effective_runs(&self) -> usize {
+        if self.runs > 0 {
+            self.runs
+        } else if self.benches.len() > 1 {
+            MULTI_RUNS
+        } else {
+            SINGLE_RUNS
+        }
+    }
+}
+
+/// One executed stage: the warm episode (agent inherited from the
+/// previous stages) and the cold baseline (fresh agent).
+#[derive(Debug, Clone)]
+pub struct StageOutcome {
+    pub name: String,
+    pub warm: EpisodeSummary,
+    pub cold: EpisodeSummary,
+}
+
+impl StageOutcome {
+    /// First-run OPC with the inherited model.
+    pub fn warm_first_opc(&self) -> f64 {
+        self.warm.first().opc()
+    }
+
+    /// First-run OPC of the cold baseline.
+    pub fn cold_first_opc(&self) -> f64 {
+        self.cold.first().opc()
+    }
+
+    /// Relative first-run gain of warm over cold (+0.05 = 5% better).
+    /// 0 when the cold baseline produced no throughput (degenerate cell).
+    pub fn transfer_gain(&self) -> f64 {
+        let cold = self.cold_first_opc();
+        if cold > 0.0 {
+            self.warm_first_opc() / cold - 1.0
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The executed curriculum.
+#[derive(Debug, Clone)]
+pub struct CurriculumReport {
+    pub stages: Vec<StageOutcome>,
+}
+
+/// Run `stages` in order, threading one agent end-to-end (warm), and a
+/// fresh agent per stage as the cold baseline. `initial` seeds the warm
+/// lineage — pass a checkpoint-restored agent to continue a previous
+/// curriculum, or `None` to start cold (stage 0's warm column then
+/// equals its cold column, a useful self-check). Returns the report and
+/// the final agent for checkpointing.
+///
+/// For non-AIMM mappings there is no agent to carry; the driver still
+/// runs (warm == cold) so schemes stay comparable, but the transfer
+/// column is definitionally zero.
+pub fn run_curriculum(
+    cfg: &SystemConfig,
+    stages: &[CurriculumStage],
+    scale: f64,
+    initial: Option<AimmAgent>,
+) -> anyhow::Result<(CurriculumReport, Option<AimmAgent>)> {
+    anyhow::ensure!(!stages.is_empty(), "curriculum needs at least one stage");
+    let aimm = cfg.mapping == MappingScheme::Aimm;
+    anyhow::ensure!(
+        initial.is_none() || aimm,
+        "an initial agent only makes sense with --mapping AIMM"
+    );
+    let mut agent = match initial {
+        Some(a) => Some(a),
+        None if aimm => Some(fresh_agent(cfg)?),
+        None => None,
+    };
+    let mut outcomes = Vec::with_capacity(stages.len());
+    for stage in stages {
+        let runs = stage.effective_runs();
+        let (ops, name) = episode_ops(cfg, &stage.benches, scale)?;
+        let cold_agent = if aimm { Some(fresh_agent(cfg)?) } else { None };
+        let (cold, _) = run_stream_with(cfg, &ops, runs, &name, cold_agent)?;
+        let (warm, carried) = run_stream_with(cfg, &ops, runs, &name, agent.take())?;
+        agent = carried;
+        outcomes.push(StageOutcome { name, warm, cold });
+    }
+    Ok((CurriculumReport { stages: outcomes }, agent))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Technique;
+
+    fn cfg(mapping: MappingScheme) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.mapping = mapping;
+        c.technique = Technique::Bnmp;
+        c
+    }
+
+    fn stages(combos: &[&[Benchmark]], runs: usize) -> Vec<CurriculumStage> {
+        combos
+            .iter()
+            .map(|&b| CurriculumStage { benches: b.to_vec(), runs })
+            .collect()
+    }
+
+    #[test]
+    fn effective_runs_follow_the_protocol() {
+        assert_eq!(CurriculumStage::new(vec![Benchmark::Sc]).effective_runs(), SINGLE_RUNS);
+        assert_eq!(
+            CurriculumStage::new(vec![Benchmark::Sc, Benchmark::Km]).effective_runs(),
+            MULTI_RUNS
+        );
+        let mut s = CurriculumStage::new(vec![Benchmark::Sc]);
+        s.runs = 2;
+        assert_eq!(s.effective_runs(), 2);
+    }
+
+    #[test]
+    fn curriculum_carries_one_agent_across_stages() {
+        let c = cfg(MappingScheme::Aimm);
+        let st = stages(&[&[Benchmark::Sc], &[Benchmark::Km]], 2);
+        let (report, agent) = run_curriculum(&c, &st, 0.04, None).unwrap();
+        assert_eq!(report.stages.len(), 2);
+        let agent = agent.expect("agent survives the curriculum");
+        // The carried agent saw every warm run of every stage; a single
+        // stage's cold agent saw only its own. Lifetime invocation
+        // totals are cumulative in RunStats, so the warm lineage's
+        // stage-1 totals must exceed stage-1's cold totals.
+        let s1 = &report.stages[1];
+        assert!(
+            s1.warm.last().agent_invocations > s1.cold.last().agent_invocations,
+            "warm {} <= cold {}",
+            s1.warm.last().agent_invocations,
+            s1.cold.last().agent_invocations
+        );
+        assert!(agent.stats.invocations >= s1.warm.last().agent_invocations);
+        // Stage 0 started cold, so its warm lineage == its cold baseline.
+        let s0 = &report.stages[0];
+        assert_eq!(s0.warm.first().cycles, s0.cold.first().cycles);
+        assert_eq!(s0.warm.last().cycles, s0.cold.last().cycles);
+    }
+
+    #[test]
+    fn baseline_curriculum_has_no_transfer() {
+        let c = cfg(MappingScheme::Baseline);
+        let st = stages(&[&[Benchmark::Mac], &[Benchmark::Rd]], 1);
+        let (report, agent) = run_curriculum(&c, &st, 0.03, None).unwrap();
+        assert!(agent.is_none());
+        for s in &report.stages {
+            assert_eq!(s.warm.first().cycles, s.cold.first().cycles);
+            assert_eq!(s.transfer_gain(), 0.0);
+        }
+    }
+
+    #[test]
+    fn curriculum_rejects_bad_inputs() {
+        let c = cfg(MappingScheme::Aimm);
+        assert!(run_curriculum(&c, &[], 0.03, None).is_err());
+        let b = cfg(MappingScheme::Baseline);
+        let agent = fresh_agent(&cfg(MappingScheme::Aimm)).unwrap();
+        let st = stages(&[&[Benchmark::Mac]], 1);
+        assert!(run_curriculum(&b, &st, 0.03, Some(agent)).is_err());
+    }
+
+    #[test]
+    fn engines_agree_on_the_whole_curriculum() {
+        use crate::config::Engine;
+        let st = stages(&[&[Benchmark::Sc], &[Benchmark::Sc, Benchmark::Km]], 1);
+        let mut polled = cfg(MappingScheme::Aimm);
+        polled.engine = Engine::Polled;
+        let mut event = cfg(MappingScheme::Aimm);
+        event.engine = Engine::Event;
+        let (p, _) = run_curriculum(&polled, &st, 0.03, None).unwrap();
+        let (e, _) = run_curriculum(&event, &st, 0.03, None).unwrap();
+        for (sp, se) in p.stages.iter().zip(&e.stages) {
+            for (rp, re) in sp
+                .warm
+                .runs
+                .iter()
+                .chain(&sp.cold.runs)
+                .zip(se.warm.runs.iter().chain(&se.cold.runs))
+            {
+                assert_eq!(
+                    crate::bench::sweep::stats_json(rp),
+                    crate::bench::sweep::stats_json(re),
+                    "stage {}",
+                    sp.name
+                );
+            }
+        }
+    }
+}

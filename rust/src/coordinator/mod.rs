@@ -1,10 +1,17 @@
 //! The coordinator: wires the substrates into a running NMP system and
 //! orchestrates the paper's episode protocol (§6.1 — 5 repeated runs for
 //! single-program workloads, 10 for multi-program, clearing simulation
-//! state but retaining the DNN between runs).
+//! state but retaining the DNN between runs), plus the cross-program
+//! [`curriculum`] driver that carries one agent through an ordered
+//! sequence of episodes and measures cold-vs-warm transfer.
 
+pub mod curriculum;
 pub mod runner;
 pub mod system;
 
-pub use runner::{run_cell, run_multi, run_single, run_stream, EpisodeSummary};
+pub use curriculum::{run_curriculum, CurriculumReport, CurriculumStage, StageOutcome};
+pub use runner::{
+    episode_ops, fresh_agent, run_cell, run_episode_with, run_multi, run_single, run_stream,
+    run_stream_with, EpisodeSummary,
+};
 pub use system::System;

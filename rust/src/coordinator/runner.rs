@@ -43,12 +43,45 @@ impl EpisodeSummary {
     }
 }
 
-fn fresh_agent(cfg: &SystemConfig) -> AimmAgent {
-    AimmAgent::new(
+/// A cold agent for `cfg` — the §6.1 episode start. Public so the
+/// curriculum driver and the CLI's checkpoint plumbing build agents
+/// through the exact same path the plain episode runner uses.
+pub fn fresh_agent(cfg: &SystemConfig) -> anyhow::Result<AimmAgent> {
+    AimmAgent::try_new(
         best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed),
         cfg.agent.clone(),
         cfg.seed ^ 0xA6E7,
     )
+}
+
+/// The agent an episode starts with under `cfg`: a cold one for AIMM,
+/// none for the other mapping schemes.
+fn default_agent(cfg: &SystemConfig) -> anyhow::Result<Option<AimmAgent>> {
+    if cfg.mapping == MappingScheme::Aimm {
+        Ok(Some(fresh_agent(cfg)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Run one op stream `runs` times, threading `agent` through every run
+/// (the continual-learning premise) and handing it back afterwards so
+/// callers can carry it into the *next* episode (curriculum stages,
+/// checkpoint files). Pass `None` to run agent-less schemes.
+pub fn run_stream_with(
+    cfg: &SystemConfig,
+    ops: &[NmpOp],
+    runs: usize,
+    name: &str,
+    mut agent: Option<AimmAgent>,
+) -> anyhow::Result<(EpisodeSummary, Option<AimmAgent>)> {
+    let mut stats = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let mut sys = System::new(cfg.clone(), ops.to_vec(), agent.take());
+        stats.push(sys.run()?);
+        agent = sys.take_agent();
+    }
+    Ok((EpisodeSummary { name: name.to_string(), runs: stats }, agent))
 }
 
 /// Run one op stream `runs` times with the configured mapping scheme,
@@ -59,15 +92,49 @@ pub fn run_stream(
     runs: usize,
     name: &str,
 ) -> anyhow::Result<EpisodeSummary> {
-    let mut agent =
-        (cfg.mapping == MappingScheme::Aimm).then(|| fresh_agent(cfg));
-    let mut stats = Vec::with_capacity(runs);
-    for _ in 0..runs {
-        let mut sys = System::new(cfg.clone(), ops.to_vec(), agent.take());
-        stats.push(sys.run()?);
-        agent = sys.take_agent();
+    let agent = default_agent(cfg)?;
+    Ok(run_stream_with(cfg, ops, runs, name, agent)?.0)
+}
+
+/// Build the op stream for a benchmark combination: one entry is the
+/// §6.1 single-program trace, several are interleaved multi-program
+/// (§7.5.2). The (combo, `cfg.seed`) pair fully determines the stream —
+/// `run_single`, `run_multi`, `run_cell` and the curriculum driver all
+/// come through here, so a stage's trace is identical wherever it runs
+/// (which is what makes cold-vs-warm comparisons meaningful).
+pub fn episode_ops(
+    cfg: &SystemConfig,
+    benches: &[Benchmark],
+    scale: f64,
+) -> anyhow::Result<(Vec<NmpOp>, String)> {
+    anyhow::ensure!(!benches.is_empty(), "episode needs at least one benchmark");
+    if benches.len() == 1 {
+        let trace = generate(benches[0], 1, scale, cfg.seed);
+        Ok((trace.ops, benches[0].name().to_string()))
+    } else {
+        let traces = benches
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| generate(b, i as u32 + 1, scale, cfg.seed + i as u64))
+            .collect();
+        let (ops, _) = interleave(traces, cfg.seed ^ 0x3117);
+        let name = benches.iter().map(|b| b.name()).collect::<Vec<_>>().join("-");
+        Ok((ops, name))
     }
-    Ok(EpisodeSummary { name: name.to_string(), runs: stats })
+}
+
+/// [`run_stream_with`] over a benchmark combination's episode stream:
+/// the seam the checkpoint-carrying CLI paths and the curriculum driver
+/// share with the plain runners.
+pub fn run_episode_with(
+    cfg: &SystemConfig,
+    benches: &[Benchmark],
+    scale: f64,
+    runs: usize,
+    agent: Option<AimmAgent>,
+) -> anyhow::Result<(EpisodeSummary, Option<AimmAgent>)> {
+    let (ops, name) = episode_ops(cfg, benches, scale)?;
+    run_stream_with(cfg, &ops, runs, &name, agent)
 }
 
 /// Single-program episode (§6.1: 5 runs, scale = paper's "medium").
@@ -77,8 +144,7 @@ pub fn run_single(
     scale: f64,
     runs: usize,
 ) -> anyhow::Result<EpisodeSummary> {
-    let trace = generate(bench, 1, scale, cfg.seed);
-    run_stream(cfg, &trace.ops, runs, bench.name())
+    Ok(run_episode_with(cfg, &[bench], scale, runs, default_agent(cfg)?)?.0)
 }
 
 /// One sweep-grid cell: a single benchmark runs the §6.1 single-program
@@ -93,11 +159,7 @@ pub fn run_cell(
     runs: usize,
 ) -> anyhow::Result<EpisodeSummary> {
     anyhow::ensure!(!benches.is_empty(), "sweep cell needs at least one benchmark");
-    if benches.len() == 1 {
-        run_single(cfg, benches[0], scale, runs)
-    } else {
-        run_multi(cfg, benches, scale, runs)
-    }
+    Ok(run_episode_with(cfg, benches, scale, runs, default_agent(cfg)?)?.0)
 }
 
 /// Multi-program episode (§7.5.2).
@@ -107,14 +169,8 @@ pub fn run_multi(
     scale: f64,
     runs: usize,
 ) -> anyhow::Result<EpisodeSummary> {
-    let traces = benches
-        .iter()
-        .enumerate()
-        .map(|(i, &b)| generate(b, i as u32 + 1, scale, cfg.seed + i as u64))
-        .collect();
-    let (ops, _) = interleave(traces, cfg.seed ^ 0x3117);
-    let name = benches.iter().map(|b| b.name()).collect::<Vec<_>>().join("-");
-    run_stream(cfg, &ops, runs, &name)
+    anyhow::ensure!(benches.len() >= 2, "multi-program episode needs at least two benchmarks");
+    Ok(run_episode_with(cfg, benches, scale, runs, default_agent(cfg)?)?.0)
 }
 
 #[cfg(test)]
@@ -182,6 +238,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn run_episode_with_returns_the_carried_agent() {
+        let c = cfg(MappingScheme::Aimm);
+        let agent = Some(fresh_agent(&c).unwrap());
+        let (s, carried) =
+            run_episode_with(&c, &[Benchmark::Mac], 0.04, 2, agent).unwrap();
+        assert_eq!(s.runs.len(), 2);
+        let carried = carried.expect("agent survives the episode");
+        assert!(carried.stats.invocations > 0);
+        // Baseline episodes thread no agent.
+        let c = cfg(MappingScheme::Baseline);
+        let (_, none) = run_episode_with(&c, &[Benchmark::Mac], 0.04, 1, None).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn episode_ops_is_stable_and_matches_the_runners() {
+        let c = cfg(MappingScheme::Baseline);
+        let (a, name_a) = episode_ops(&c, &[Benchmark::Mac, Benchmark::Rd], 0.03).unwrap();
+        let (b, name_b) = episode_ops(&c, &[Benchmark::Mac, Benchmark::Rd], 0.03).unwrap();
+        assert_eq!(name_a, "MAC-RD");
+        assert_eq!(name_a, name_b);
+        assert_eq!(a.len(), b.len());
+        assert!(episode_ops(&c, &[], 0.03).is_err());
+        // run_multi now rejects a single-benchmark "multi" episode
+        // (previously it silently built a different stream than
+        // run_single for the same benchmark).
+        assert!(run_multi(&c, &[Benchmark::Mac], 0.03, 1).is_err());
     }
 
     #[test]

@@ -23,11 +23,13 @@
 //! * [`migration`] — migration queue + MDMA engine (blocking/non-blocking)
 //! * [`nmp`] — NMP-op format and the BNMP/LDB/PEI offloading techniques
 //! * [`mapping`] — physical→DRAM hashing, TOM epoch remapping, remap tables
-//! * [`agent`] — AIMM RL agent: state, actions, reward, replay, ε-greedy
+//! * [`agent`] — AIMM RL agent: state, actions, reward, replay, ε-greedy,
+//!   and the versioned continual-learning checkpoint format
 //! * [`runtime`] — `QFunction` backends: linear mock + manifest plumbing
 //!   by default, PJRT artifact execution behind the `pjrt` feature
 //! * [`workloads`] — the 9 benchmark trace generators + workload analysis
-//! * [`coordinator`] — episode runner wiring everything together
+//! * [`coordinator`] — episode runner wiring everything together, plus
+//!   the cross-program curriculum driver (cold-vs-warm transfer)
 //! * [`metrics`] — performance counters, energy/area model (paper §7.7)
 //! * [`config`] — hardware/agent configuration (paper Table 1 defaults)
 //! * [`bench`] — measurement harness, figure tables and the parallel

@@ -6,22 +6,26 @@
 //! aimm run      --bench SPMV [--technique BNMP] [--mapping AIMM]
 //!               [--scale 0.5] [--runs 5] [--mesh 4x4] [--hoard]
 //!               [--config file.toml] [--seed N]
+//!               [--checkpoint out.json] [--resume in.json]
 //! aimm sweep    [--benches all] [--mappings all] [--meshes 4x4,8x8]
 //!               [--threads N] [--out BENCH_sweep.json]
 //! aimm analyze  --fig 5a|5b|5c [--scale 1.0]
 //! aimm table    --fig 6|7|8|9|10|11|12|13|14|area [--scale 0.25] [--runs 3]
 //! aimm table1 | aimm table2
 //! aimm multi    --benches SC,KM,RD,MAC [--hoard] [--mapping AIMM] ...
+//! aimm curriculum --stages SC,KM,RD [--out BENCH_continual.json] ...
 //! ```
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::process::ExitCode;
 
+use aimm::agent::{AgentCheckpoint, AimmAgent};
 use aimm::bench::figures;
-use aimm::bench::sweep::{self, SweepGrid};
+use aimm::bench::sweep::{self, ContinualSequence, SweepGrid};
 use aimm::bench::Table;
 use aimm::config::{Engine, MappingScheme, SystemConfig, Technique};
-use aimm::coordinator::{run_multi, run_single};
+use aimm::coordinator::{fresh_agent, run_curriculum, run_episode_with, CurriculumStage};
 use aimm::workloads::Benchmark;
 
 /// Q-backend note for `--help`, matching what this binary was built with.
@@ -42,7 +46,15 @@ fn usage() -> String {
            run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
                     [--scale F] [--runs N] [--mesh CxR] [--hoard] [--seed N] [--config FILE]\n\
                     [--engine polled|event]\n\
+                    [--checkpoint OUT.json] save the agent at the episode boundary\n\
+                    [--resume IN.json] warm-start from a saved checkpoint\n\
            multi    --benches A,B,C (same options as run)\n\
+           curriculum --stages A,B+C,D (ordered; + joins a multi-program stage)\n\
+                    [--runs N (0 = paper default per stage)] [--scale F]\n\
+                    [--resume IN.json] [--checkpoint OUT.json]\n\
+                    [--out BENCH_continual.json]\n\
+                    runs the stages carrying ONE agent end-to-end and prints the\n\
+                    cold-vs-warm first-run transfer table (defaults to --mapping AIMM)\n\
            sweep    [--benches all|A,B,A+B (use + for a multi-program combo)]\n\
                     [--techniques BNMP,LDB,PEI|all] [--mappings B,TOM,AIMM|all]\n\
                     [--meshes 4x4,8x8] [--seeds N,M] [--scale F] [--runs N]\n\
@@ -91,6 +103,73 @@ fn parse_mesh(s: &str) -> Result<(usize, usize), String> {
     let c = c.parse().map_err(|_| format!("bad mesh cols {c:?}"))?;
     let r = r.parse().map_err(|_| format!("bad mesh rows {r:?}"))?;
     Ok((c, r))
+}
+
+/// Comma-separated benchmark combos; `+` joins a multi-program combo
+/// (`SC,KM+RD` = [SC] then [KM, RD]). Shared by `sweep --benches` and
+/// `curriculum --stages`.
+fn parse_combos(list: &str) -> Result<Vec<Vec<Benchmark>>, String> {
+    list.split(',')
+        .map(|combo| {
+            combo
+                .split('+')
+                .map(|n| {
+                    Benchmark::from_name(n.trim())
+                        .ok_or_else(|| format!("unknown benchmark {n:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+        })
+        .collect()
+}
+
+/// The agent an episode-running subcommand starts with: a checkpoint
+/// when `--resume` was given, a fresh one for AIMM, none otherwise.
+/// `--checkpoint`/`--resume` demand the AIMM mapping — there is no agent
+/// to persist under B/TOM, and silently ignoring the flag would be the
+/// exact bug class this PR removes.
+fn initial_agent(args: &Args, cfg: &SystemConfig) -> Result<Option<AimmAgent>, String> {
+    let wants_ckpt = args.get("checkpoint").is_some() || args.get("resume").is_some();
+    if wants_ckpt && cfg.mapping != MappingScheme::Aimm {
+        return Err("--checkpoint/--resume require --mapping AIMM".to_string());
+    }
+    match args.get("resume") {
+        Some(path) => {
+            let ck = AgentCheckpoint::load(Path::new(path)).map_err(|e| e.to_string())?;
+            let agent = ck
+                .build_agent(&cfg.agent)
+                .map_err(|e| format!("resume {path}: {e}"))?;
+            println!(
+                "resumed agent from {path} ({} backend, ε={:.4}, {} replay transitions, \
+                 {} train steps)",
+                ck.q.backend,
+                ck.eps,
+                ck.replay.transitions.len(),
+                ck.q.train_steps
+            );
+            Ok(Some(agent))
+        }
+        None if cfg.mapping == MappingScheme::Aimm => {
+            Ok(Some(fresh_agent(cfg).map_err(|e| e.to_string())?))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Honor `--checkpoint PATH`: save the carried agent at the episode
+/// boundary the run just reached.
+fn save_checkpoint(args: &Args, agent: Option<&AimmAgent>) -> Result<(), String> {
+    let Some(path) = args.get("checkpoint") else { return Ok(()) };
+    let agent = agent.ok_or("no agent to checkpoint (is --mapping AIMM?)")?;
+    let ck = agent.checkpoint().map_err(|e| e.to_string())?;
+    ck.save(Path::new(path)).map_err(|e| e.to_string())?;
+    println!(
+        "wrote checkpoint {path} ({} backend, ε={:.4}, {} replay transitions, {} train steps)",
+        ck.q.backend,
+        ck.eps,
+        ck.replay.transitions.len(),
+        ck.q.train_steps
+    );
+    Ok(())
 }
 
 /// Tiny flag parser: `--key value` pairs plus bare flags.
@@ -235,8 +314,11 @@ fn real_main() -> Result<(), String> {
             let bench = Benchmark::from_name(name)
                 .ok_or_else(|| format!("unknown benchmark {name:?}"))?;
             let runs = args.usize_or("runs", figures::SINGLE_RUNS)?;
-            let s = run_single(&cfg, bench, scale, runs).map_err(|e| e.to_string())?;
+            let agent = initial_agent(&args, &cfg)?;
+            let (s, agent) = run_episode_with(&cfg, &[bench], scale, runs, agent)
+                .map_err(|e| e.to_string())?;
             print_summary(&s, &cfg);
+            save_checkpoint(&args, agent.as_ref())?;
         }
         "multi" => {
             let cfg = build_cfg(&args)?;
@@ -248,9 +330,88 @@ fn real_main() -> Result<(), String> {
                         .ok_or_else(|| format!("unknown benchmark {n:?}"))
                 })
                 .collect::<Result<_, _>>()?;
+            if benches.len() < 2 {
+                return Err("multi needs at least two benchmarks (use run for one)".into());
+            }
             let runs = args.usize_or("runs", figures::MULTI_RUNS)?;
-            let s = run_multi(&cfg, &benches, scale, runs).map_err(|e| e.to_string())?;
+            let agent = initial_agent(&args, &cfg)?;
+            let (s, agent) = run_episode_with(&cfg, &benches, scale, runs, agent)
+                .map_err(|e| e.to_string())?;
             print_summary(&s, &cfg);
+            save_checkpoint(&args, agent.as_ref())?;
+        }
+        "curriculum" => {
+            let mut cfg = build_cfg(&args)?;
+            // Transfer only exists for the learned mapping; default to
+            // AIMM unless the user chose a scheme explicitly — via the
+            // flag or a `mapping` key in their config file. A config
+            // that only tunes hardware knobs must not silently drop the
+            // curriculum to Baseline (all-zero transfer, doubled work).
+            let explicit_mapping = args.get("mapping").is_some()
+                || args.get("config").is_some_and(|path| {
+                    std::fs::read_to_string(path)
+                        .ok()
+                        .and_then(|text| aimm::config::parse_kv(&text).ok())
+                        .is_some_and(|kv| kv.contains_key("mapping"))
+                });
+            if !explicit_mapping {
+                cfg.mapping = MappingScheme::Aimm;
+            }
+            let list = args
+                .get("stages")
+                .ok_or("curriculum needs --stages A,B+C,… (e.g. SC,KM,RD)")?;
+            let combos = parse_combos(list)?;
+            // 0 = per-stage §6.1 default (5 single-program, 10 multi).
+            let runs = args.usize_or("runs", 0)?;
+            let stages: Vec<CurriculumStage> = combos
+                .into_iter()
+                .map(|benches| CurriculumStage { benches, runs })
+                .collect();
+            let initial = initial_agent(&args, &cfg)?;
+            let t0 = std::time::Instant::now();
+            let (report, agent) =
+                run_curriculum(&cfg, &stages, scale, initial).map_err(|e| e.to_string())?;
+            println!(
+                "curriculum: {} stage(s) × cold+warm in {:?}",
+                report.stages.len(),
+                t0.elapsed()
+            );
+            let mut t = Table::new(
+                "Curriculum transfer (first-run OPC: cold start vs inherited model)",
+                &["stage", "runs", "cold first", "warm first", "transfer", "cold last", "warm last"],
+            );
+            for s in &report.stages {
+                t.row(vec![
+                    s.name.clone(),
+                    s.warm.runs.len().to_string(),
+                    format!("{:.4}", s.cold_first_opc()),
+                    format!("{:.4}", s.warm_first_opc()),
+                    format!("{:+.1}%", s.transfer_gain() * 100.0),
+                    format!("{:.4}", s.cold.last().opc()),
+                    format!("{:.4}", s.warm.last().opc()),
+                ]);
+            }
+            println!("{}", t.render());
+            if let Some(out) = args.get("out") {
+                let name: String = report
+                    .stages
+                    .iter()
+                    .map(|s| s.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(">");
+                let seq = ContinualSequence {
+                    name,
+                    technique: cfg.technique,
+                    mapping: cfg.mapping,
+                    scale,
+                    seed: cfg.seed,
+                    report: report.clone(),
+                };
+                sweep::write_continual_report(Path::new(out), &[seq])
+                    .map_err(|e| e.to_string())?;
+                println!("wrote {out}");
+            }
+            save_checkpoint(&args, agent.as_ref())?;
         }
         "sweep" => {
             // The grid takes plural axis flags; catch the singular forms
@@ -274,18 +435,7 @@ fn real_main() -> Result<(), String> {
             let mut grid = SweepGrid::new(scale, runs);
             if let Some(list) = args.get("benches") {
                 if !list.eq_ignore_ascii_case("all") {
-                    grid.benches = list
-                        .split(',')
-                        .map(|combo| {
-                            combo
-                                .split('+')
-                                .map(|n| {
-                                    Benchmark::from_name(n.trim())
-                                        .ok_or_else(|| format!("unknown benchmark {n:?}"))
-                                })
-                                .collect::<Result<Vec<_>, _>>()
-                        })
-                        .collect::<Result<Vec<_>, _>>()?;
+                    grid.benches = parse_combos(list)?;
                 }
             }
             if let Some(list) = args.get("techniques") {

@@ -1,8 +1,80 @@
 //! Minimal JSON parser for the artifact manifest (the offline crate
 //! universe has no serde_json). Supports the full JSON grammar except
 //! exotic number forms; good enough for machine-generated manifests.
+//!
+//! The [`write`] half is the matching fixed-key-order writer: callers
+//! pass fields in the order they want them emitted, so byte-pinned
+//! artifacts (`BENCH_sweep.json`, `BENCH_continual.json`, the agent
+//! checkpoints) are reproducible byte-for-byte. Everything this module
+//! writes parses back through [`parse`].
 
 use std::collections::HashMap;
+
+/// Fixed-key-order JSON writer helpers, shared by the sweep report
+/// (bench/sweep.rs) and the continual-learning checkpoint format
+/// (agent/checkpoint.rs). No reflection, no trait magic: callers build
+/// value strings bottom-up and list object fields in emission order.
+pub mod write {
+    /// Finite numbers print via Rust's shortest-roundtrip formatting;
+    /// NaN/∞ (e.g. 0/0 on a degenerate cell) become `null` so they stay
+    /// distinguishable from a genuine zero — the in-crate parser handles
+    /// null.
+    pub fn num(x: f64) -> String {
+        if x.is_finite() {
+            format!("{x}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    /// A JSON string literal with the escapes [`super::parse`] understands.
+    pub fn string(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+        out
+    }
+
+    /// An array from already-serialized element strings.
+    pub fn arr(items: &[String]) -> String {
+        format!("[{}]", items.join(","))
+    }
+
+    /// An object whose keys appear exactly in the given order.
+    pub fn obj(fields: &[(&str, String)]) -> String {
+        let body: Vec<String> =
+            fields.iter().map(|(k, v)| format!("{}:{}", string(k), v)).collect();
+        format!("{{{}}}", body.join(","))
+    }
+
+    /// A `u64` as a `0x`-hex JSON *string*. Full 64-bit values exceed
+    /// 2^53 and would lose bits through any double-based JSON number
+    /// path (including [`super::parse`]); the hex-string form is exact
+    /// and matches what `BENCH_sweep.json` records for seeds.
+    pub fn hex_u64(v: u64) -> String {
+        string(&format!("{v:#x}"))
+    }
+}
+
+/// Parse the `0x`-hex string form emitted by [`write::hex_u64`].
+pub fn parse_hex_u64(s: &str) -> anyhow::Result<u64> {
+    let hex = s
+        .strip_prefix("0x")
+        .or_else(|| s.strip_prefix("0X"))
+        .ok_or_else(|| anyhow::anyhow!("expected 0x-hex string, got {s:?}"))?;
+    Ok(u64::from_str_radix(hex, 16)?)
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -234,6 +306,38 @@ mod tests {
         assert!(parse("{} x").is_err());
         assert!(parse("[1,]").is_err());
         assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn writer_output_parses_back() {
+        let text = write::obj(&[
+            ("name", write::string("a\"b\nc")),
+            ("n", write::num(0.25)),
+            ("bad", write::num(f64::NAN)),
+            ("seed", write::hex_u64(u64::MAX)),
+            ("xs", write::arr(&[write::num(1.0), write::num(2.0)])),
+        ]);
+        let j = parse(&text).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("a\"b\nc"));
+        assert_eq!(j.get("n").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("bad"), Some(&Json::Null));
+        assert_eq!(
+            parse_hex_u64(j.get("seed").unwrap().as_str().unwrap()).unwrap(),
+            u64::MAX
+        );
+        assert_eq!(j.get("xs").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn hex_u64_roundtrip_and_rejects_decimal() {
+        for v in [0u64, 1, 0xA133, u64::MAX] {
+            let lit = write::hex_u64(v);
+            // Strip the surrounding quotes to get the raw string payload.
+            let inner = lit.trim_matches('"');
+            assert_eq!(parse_hex_u64(inner).unwrap(), v);
+        }
+        assert!(parse_hex_u64("123").is_err());
+        assert!(parse_hex_u64("0xzz").is_err());
     }
 
     #[test]

@@ -5,7 +5,12 @@
 
 use crate::sim::Rng;
 
-use super::{QFunction, TrainBatch, NUM_ACTIONS, STATE_DIM};
+use super::{QFunction, QSnapshot, TrainBatch, NUM_ACTIONS, STATE_DIM};
+
+/// Flat parameter count of [`LinearQ`]: per-action weight rows plus the
+/// bias vector. This is the `theta` layout its [`QFunction::snapshot`]
+/// exports: `w` (row-major, `NUM_ACTIONS × STATE_DIM`) then `b`.
+pub const LINEAR_PARAMS: usize = NUM_ACTIONS * STATE_DIM + NUM_ACTIONS;
 
 /// Q(s, a) = w_a · s + b_a.
 pub struct LinearQ {
@@ -41,6 +46,25 @@ impl LinearQ {
             *out_a += row.iter().zip(s).map(|(wi, si)| wi * si).sum::<f32>();
         }
         out
+    }
+
+    fn flatten(w: &[f32], b: &[f32; NUM_ACTIONS]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(LINEAR_PARAMS);
+        out.extend_from_slice(w);
+        out.extend_from_slice(b);
+        out
+    }
+
+    fn unflatten(flat: &[f32]) -> anyhow::Result<(Vec<f32>, [f32; NUM_ACTIONS])> {
+        anyhow::ensure!(
+            flat.len() == LINEAR_PARAMS,
+            "linear-mock parameter vector has {} entries, expected {LINEAR_PARAMS}",
+            flat.len()
+        );
+        let w = flat[..NUM_ACTIONS * STATE_DIM].to_vec();
+        let mut b = [0.0f32; NUM_ACTIONS];
+        b.copy_from_slice(&flat[NUM_ACTIONS * STATE_DIM..]);
+        Ok((w, b))
     }
 }
 
@@ -83,6 +107,47 @@ impl QFunction for LinearQ {
 
     fn backend(&self) -> &'static str {
         "linear-mock"
+    }
+
+    fn snapshot(&self) -> anyhow::Result<QSnapshot> {
+        Ok(QSnapshot {
+            backend: self.backend().to_string(),
+            lr: self.lr,
+            gamma: self.gamma,
+            theta: Self::flatten(&self.w, &self.b),
+            target_theta: Self::flatten(&self.tw, &self.tb),
+            // SGD backend: no Adam moments.
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+            train_steps: self.train_steps,
+        })
+    }
+
+    fn restore(&mut self, snap: &QSnapshot) -> anyhow::Result<()> {
+        // Backend check first: a same-sized parameter vector from a
+        // different network would "restore" into garbage Q-values.
+        anyhow::ensure!(
+            snap.backend == self.backend(),
+            "checkpoint was produced by backend {:?}, this agent runs {:?} — \
+             cross-backend restores are not meaningful",
+            snap.backend,
+            self.backend()
+        );
+        let (w, b) = Self::unflatten(&snap.theta).map_err(|e| {
+            anyhow::anyhow!("restoring a {:?} snapshot into linear-mock: {e}", snap.backend)
+        })?;
+        let (tw, tb) = Self::unflatten(&snap.target_theta).map_err(|e| {
+            anyhow::anyhow!("restoring a {:?} snapshot into linear-mock: {e}", snap.backend)
+        })?;
+        self.w = w;
+        self.b = b;
+        self.tw = tw;
+        self.tb = tb;
+        self.lr = snap.lr;
+        self.gamma = snap.gamma;
+        self.train_steps = snap.train_steps;
+        Ok(())
     }
 }
 
@@ -129,6 +194,44 @@ mod tests {
         }
         let last = q.train_batch(&b).unwrap();
         assert!(last < first);
+    }
+
+    /// The continual-learning seam: a restored network answers exactly
+    /// like the one that was snapshotted — including the lagging target
+    /// (training after restore uses the same targets, hence identical
+    /// weight updates).
+    #[test]
+    fn snapshot_restore_roundtrip_is_exact() {
+        let mut q = LinearQ::new(0.05, 0.9, 21);
+        for _ in 0..7 {
+            q.train_batch(&batch_for_action(2, 1.0)).unwrap();
+        }
+        let snap = q.snapshot().unwrap();
+        assert_eq!(snap.backend, "linear-mock");
+        assert_eq!(snap.theta.len(), LINEAR_PARAMS);
+        assert_eq!(snap.train_steps, 7);
+
+        // Restore into a differently-seeded, differently-tuned instance.
+        let mut r = LinearQ::new(0.9, 0.1, 99);
+        r.restore(&snap).unwrap();
+        let mut s = vec![0.0; STATE_DIM];
+        s[0] = 1.0;
+        s[5] = -0.25;
+        assert_eq!(q.q_values(&s).unwrap(), r.q_values(&s).unwrap());
+        // Training continues identically (same lr/gamma/targets).
+        let b = batch_for_action(2, 1.0);
+        assert_eq!(q.train_batch(&b).unwrap().to_bits(), r.train_batch(&b).unwrap().to_bits());
+        assert_eq!(q.q_values(&s).unwrap(), r.q_values(&s).unwrap());
+        assert_eq!(r.train_steps, 8);
+    }
+
+    #[test]
+    fn restore_rejects_wrong_layout() {
+        let mut q = LinearQ::new(0.05, 0.9, 1);
+        let mut snap = q.snapshot().unwrap();
+        snap.theta.pop();
+        let err = q.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("linear-mock"), "{err}");
     }
 
     #[test]

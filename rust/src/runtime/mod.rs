@@ -36,7 +36,12 @@ pub const BATCH: usize = 32;
 /// Hidden width (for energy accounting of weight-matrix touches).
 pub const HIDDEN: usize = 128;
 
-/// One training batch in flat layout (`s`/`s2` are `BATCH × STATE_DIM`).
+/// One training batch in flat layout (`s`/`s2` are `batch_len × STATE_DIM`).
+///
+/// The row count is whatever the replay buffer sampled
+/// (`AgentConfig.batch_size`); backends that can only execute a fixed
+/// batch (the AOT-compiled PJRT artifacts, pinned to [`BATCH`]) advertise
+/// it through [`QFunction::fixed_batch`] and reject other sizes.
 #[derive(Debug, Clone)]
 pub struct TrainBatch {
     pub s: Vec<f32>,
@@ -47,15 +52,55 @@ pub struct TrainBatch {
 }
 
 impl TrainBatch {
+    /// Number of rows in the batch.
+    pub fn batch_len(&self) -> usize {
+        self.a.len()
+    }
+
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.s.len() == BATCH * STATE_DIM, "bad s len {}", self.s.len());
-        anyhow::ensure!(self.s2.len() == BATCH * STATE_DIM, "bad s2 len");
-        anyhow::ensure!(self.a.len() == BATCH, "bad a len");
-        anyhow::ensure!(self.r.len() == BATCH, "bad r len");
-        anyhow::ensure!(self.done.len() == BATCH, "bad done len");
+        let n = self.a.len();
+        anyhow::ensure!(n > 0, "empty training batch");
+        anyhow::ensure!(
+            self.s.len() == n * STATE_DIM,
+            "bad s len {} for batch of {n}",
+            self.s.len()
+        );
+        anyhow::ensure!(
+            self.s2.len() == n * STATE_DIM,
+            "bad s2 len {} for batch of {n}",
+            self.s2.len()
+        );
+        anyhow::ensure!(self.r.len() == n, "bad r len {}", self.r.len());
+        anyhow::ensure!(self.done.len() == n, "bad done len {}", self.done.len());
         anyhow::ensure!(self.a.iter().all(|&a| (a as usize) < NUM_ACTIONS), "action out of range");
         Ok(())
     }
+}
+
+/// A backend-agnostic export of a Q-function's learned parameters — the
+/// payload the continual-learning checkpoints (agent/checkpoint.rs)
+/// carry between processes. Everything is flat `f32`/`u64` so the format
+/// needs no knowledge of layer structure; the backend that produced the
+/// snapshot is recorded so a mismatched restore fails with a useful
+/// message instead of a bare length error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QSnapshot {
+    /// [`QFunction::backend`] of the producer.
+    pub backend: String,
+    pub lr: f32,
+    pub gamma: f32,
+    /// Online parameters, flat (backend-defined layout).
+    pub theta: Vec<f32>,
+    /// Target-network parameters, same layout as `theta`.
+    pub target_theta: Vec<f32>,
+    /// Adam first/second moments (empty for backends without Adam state,
+    /// e.g. the SGD-trained [`LinearQ`]).
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Adam step count.
+    pub t: u64,
+    /// Training steps performed so far.
+    pub train_steps: u64,
 }
 
 /// The Q-function the agent consults. Implemented by `PjrtQNet` (the
@@ -71,6 +116,29 @@ pub trait QFunction {
     fn sync_target(&mut self);
     /// Human-readable backend name (diagnostics).
     fn backend(&self) -> &'static str;
+
+    /// Export the learned parameters for a continual-learning checkpoint.
+    /// Backends that cannot round-trip their parameters (hand-coded
+    /// oracle policies and the like) keep the erroring default.
+    fn snapshot(&self) -> anyhow::Result<QSnapshot> {
+        anyhow::bail!("backend {:?} does not support parameter snapshots", self.backend())
+    }
+
+    /// Import parameters previously exported by [`QFunction::snapshot`].
+    /// Must fail loudly on any layout mismatch (wrong backend, wrong
+    /// parameter count) — never truncate or zero-fill.
+    fn restore(&mut self, snap: &QSnapshot) -> anyhow::Result<()> {
+        let _ = snap;
+        anyhow::bail!("backend {:?} does not support parameter restore", self.backend())
+    }
+
+    /// `Some(n)` when the backend can only train batches of exactly `n`
+    /// rows (AOT-compiled artifacts are shape-specialized); `None` when
+    /// any row count works. Agent construction rejects an
+    /// `AgentConfig.batch_size` that contradicts this.
+    fn fixed_batch(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Locate the artifacts directory: `$AIMM_ARTIFACTS`, then `artifacts/`
@@ -125,5 +193,23 @@ mod tests {
         let mut short = good;
         short.s.pop();
         assert!(short.validate().is_err());
+    }
+
+    /// `AgentConfig.batch_size` is honored: validation keys off the
+    /// actual row count, not the compiled-in [`BATCH`].
+    #[test]
+    fn train_batch_validates_any_row_count() {
+        let n = 7;
+        let b = TrainBatch {
+            s: vec![0.0; n * STATE_DIM],
+            a: vec![0; n],
+            r: vec![0.0; n],
+            s2: vec![0.0; n * STATE_DIM],
+            done: vec![0.0; n],
+        };
+        assert!(b.validate().is_ok());
+        assert_eq!(b.batch_len(), n);
+        let empty = TrainBatch { s: vec![], a: vec![], r: vec![], s2: vec![], done: vec![] };
+        assert!(empty.validate().is_err());
     }
 }

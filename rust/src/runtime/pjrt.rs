@@ -5,7 +5,7 @@
 use std::path::Path;
 
 use super::params::{Manifest, ParamStore};
-use super::{QFunction, TrainBatch, NUM_ACTIONS, STATE_DIM};
+use super::{QFunction, QSnapshot, TrainBatch, NUM_ACTIONS, STATE_DIM};
 
 /// Energy-relevant event counters (folded into Fig 14 by the metrics
 /// module: weight-matrix / state-buffer accesses per §7.7).
@@ -89,6 +89,15 @@ impl QFunction for PjrtQNet {
 
     fn train_batch(&mut self, batch: &TrainBatch) -> anyhow::Result<f32> {
         batch.validate()?;
+        // The AOT train executable is shape-specialized: a batch of any
+        // other size would mis-execute, so reject it loudly.
+        anyhow::ensure!(
+            batch.batch_len() == self.manifest.batch,
+            "pjrt artifacts are compiled for batch {} but got a batch of {} \
+             (AgentConfig.batch_size must equal the artifact batch)",
+            self.manifest.batch,
+            batch.batch_len()
+        );
         self.counters.train_steps += 1;
         let b = self.manifest.batch as i64;
         let sdim = STATE_DIM as i64;
@@ -123,6 +132,61 @@ impl QFunction for PjrtQNet {
 
     fn backend(&self) -> &'static str {
         "pjrt"
+    }
+
+    fn snapshot(&self) -> anyhow::Result<QSnapshot> {
+        Ok(QSnapshot {
+            backend: self.backend().to_string(),
+            lr: self.lr,
+            gamma: self.gamma,
+            theta: self.store.theta.clone(),
+            target_theta: self.store.target_theta.clone(),
+            m: self.store.m.clone(),
+            v: self.store.v.clone(),
+            t: self.store.t,
+            train_steps: self.counters.train_steps,
+        })
+    }
+
+    fn restore(&mut self, snap: &QSnapshot) -> anyhow::Result<()> {
+        // Backend check first: a same-sized flat vector from another
+        // network layout would execute silently and compute garbage.
+        anyhow::ensure!(
+            snap.backend == self.backend(),
+            "checkpoint was produced by backend {:?}, this agent runs {:?} — \
+             cross-backend restores are not meaningful",
+            snap.backend,
+            self.backend()
+        );
+        let n = self.manifest.param_size;
+        for (name, len) in [
+            ("theta", snap.theta.len()),
+            ("target_theta", snap.target_theta.len()),
+            ("m", snap.m.len()),
+            ("v", snap.v.len()),
+        ] {
+            anyhow::ensure!(
+                len == n,
+                "restoring a {:?} snapshot into pjrt: {name} has {len} entries, \
+                 artifact expects {n}",
+                snap.backend
+            );
+        }
+        self.store.theta = snap.theta.clone();
+        self.store.target_theta = snap.target_theta.clone();
+        self.store.m = snap.m.clone();
+        self.store.v = snap.v.clone();
+        self.store.t = snap.t;
+        self.lr = snap.lr;
+        self.gamma = snap.gamma;
+        self.counters.train_steps = snap.train_steps;
+        self.theta_lit = xla::Literal::vec1(&self.store.theta);
+        Ok(())
+    }
+
+    /// The train executable only accepts the artifact's compiled batch.
+    fn fixed_batch(&self) -> Option<usize> {
+        Some(self.manifest.batch)
     }
 }
 
@@ -178,6 +242,36 @@ mod tests {
         }
         assert!(last.is_finite() && first.is_finite());
         assert!(last < first, "loss should fall: first={first} last={last}");
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_param_store() {
+        let Some(mut q) = load() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let batch = TrainBatch {
+            s: vec![0.2; super::super::BATCH * STATE_DIM],
+            a: vec![1; super::super::BATCH],
+            r: vec![0.5; super::super::BATCH],
+            s2: vec![0.2; super::super::BATCH * STATE_DIM],
+            done: vec![0.0; super::super::BATCH],
+        };
+        q.train_batch(&batch).unwrap();
+        let snap = q.snapshot().unwrap();
+        assert_eq!(snap.backend, "pjrt");
+        assert_eq!(snap.theta.len(), q.param_size());
+        assert_eq!(snap.t, 1);
+
+        let Some(mut r) = load() else { return };
+        r.restore(&snap).unwrap();
+        let s = vec![0.1f32; STATE_DIM];
+        assert_eq!(q.q_values(&s).unwrap(), r.q_values(&s).unwrap());
+        // A wrong-layout snapshot is rejected loudly.
+        let mut bad = snap.clone();
+        bad.m.pop();
+        assert!(r.restore(&bad).is_err());
+        assert_eq!(r.fixed_batch(), Some(super::super::BATCH));
     }
 
     #[test]

@@ -4,6 +4,13 @@
 //! well-understood generator that is more than adequate for workload
 //! synthesis and ε-greedy exploration. Streams can be `split` so that
 //! subsystems draw from independent sequences regardless of call order.
+//!
+//! Contract violations — an empty range (`below(0)`, `range(5, 5)`), an
+//! empty slice (`choice(&[])`), `zipf(0, _)` — panic with a named message
+//! in **every** build profile. They used to be `debug_assert`s, which let
+//! release builds silently return 0 or fail with an anonymous
+//! index-out-of-bounds; a simulator that feeds garbage into a seed
+//! derivation must stop, not keep running.
 
 /// Splitmix64 PRNG. `Copy` is deliberately not derived: accidental copies
 /// would silently fork the stream.
@@ -16,9 +23,29 @@ impl Rng {
     /// Create a generator from a seed. Two generators with the same seed
     /// produce identical sequences.
     pub fn new(seed: u64) -> Self {
-        // Avoid the all-zeros fixed point of a raw xorshift by running one
-        // splitmix round on the seed itself.
+        // Pre-advance the state by one golden-ratio increment — no mixing
+        // happens here (this is NOT a splitmix output round). The effect,
+        // pinned by the known-answer tests below, is that `Rng::new(s)`'s
+        // first output equals the *second* output of the canonical
+        // splitmix64 stream whose initial state is `s`, and that seed 0
+        // does not start from the all-zeros state.
         Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// The raw internal state. Together with [`Rng::from_state`] this is
+    /// the checkpoint seam: `Rng::from_state(rng.state())` resumes the
+    /// stream exactly where `rng` stands, which the continual-learning
+    /// checkpoints (agent/checkpoint.rs) rely on for bit-identical
+    /// save/resume. NOT interchangeable with `Rng::new(seed)`, which
+    /// pre-advances.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild a generator from a previously captured [`Rng::state`]
+    /// value, continuing the stream with no pre-advance.
+    pub fn from_state(state: u64) -> Self {
+        Self { state }
     }
 
     /// Derive an independent stream (e.g. one per subsystem).
@@ -35,22 +62,23 @@ impl Rng {
         z ^ (z >> 31)
     }
 
-    /// Uniform in `[0, n)`. `n` must be > 0.
+    /// Uniform in `[0, n)`. Panics (all profiles) when `n == 0`.
     pub fn below(&mut self, n: u64) -> u64 {
-        debug_assert!(n > 0);
+        assert!(n > 0, "Rng::below called with an empty range (n = 0)");
         // Lemire-style rejection-free mapping is fine here; modulo bias is
         // negligible for the magnitudes the simulator uses (< 2^32).
         ((self.next_u64() as u128 * n as u128) >> 64) as u64
     }
 
-    /// Uniform usize in `[0, n)`.
+    /// Uniform usize in `[0, n)`. Panics (all profiles) when `n == 0`.
     pub fn index(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::index called with an empty range (n = 0)");
         self.below(n as u64) as usize
     }
 
-    /// Uniform in `[lo, hi)`.
+    /// Uniform in `[lo, hi)`. Panics (all profiles) when `hi <= lo`.
     pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
-        debug_assert!(hi > lo);
+        assert!(hi > lo, "Rng::range called with an empty range [{lo}, {hi})");
         lo + self.below(hi - lo)
     }
 
@@ -69,8 +97,10 @@ impl Rng {
         self.f64() < p
     }
 
-    /// Pick a uniform element of a non-empty slice.
+    /// Pick a uniform element of a non-empty slice. Panics (all
+    /// profiles) when the slice is empty.
     pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Rng::choice called with an empty slice");
         &xs[self.index(xs.len())]
     }
 
@@ -89,7 +119,7 @@ impl Rng {
         // Inverse-CDF over the (truncated) harmonic weights. n is at most
         // a few thousand in the generators; a linear scan is fine because
         // generators run once per episode, not per cycle.
-        debug_assert!(n > 0);
+        assert!(n > 0, "Rng::zipf called with an empty range (n = 0)");
         let h: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
         let mut u = self.f64() * h;
         for k in 1..=n {
@@ -116,11 +146,12 @@ mod tests {
     use super::*;
 
     /// Known-answer vectors pinning the generator across PRs: computed
-    /// with an independent splitmix64 implementation. `Rng::new` runs one
-    /// golden-ratio pre-advance on the seed, so `Rng::new(0)`'s first
-    /// output is the *second* output of the canonical reference stream
-    /// for seed 0 (0x6E789E6AA1B965F4 — Vigna's published sequence),
-    /// which cross-validates the constants.
+    /// with an independent splitmix64 implementation. `Rng::new`
+    /// pre-advances the state by one golden-ratio increment with no
+    /// mixing (see its comment), so `Rng::new(0)`'s first output is the
+    /// *second* output of the canonical reference stream for seed 0
+    /// (0x6E789E6AA1B965F4 — Vigna's published sequence), which
+    /// cross-validates the constants.
     #[test]
     fn splitmix64_known_answer_vectors() {
         let vectors: [(u64, [u64; 4]); 5] = [
@@ -213,6 +244,56 @@ mod tests {
         }
         assert!(counts[0] > counts[4]);
         assert!(counts[4] > counts[9]);
+    }
+
+    /// `state`/`from_state` is the checkpoint seam: resuming from a
+    /// captured state must continue the stream exactly, with no
+    /// pre-advance, unlike `new`.
+    #[test]
+    fn state_roundtrip_resumes_stream_exactly() {
+        let mut a = Rng::new(0xA133);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // from_state is NOT new: new pre-advances.
+        let s = 42u64;
+        assert_ne!(Rng::new(s).next_u64(), Rng::from_state(s).next_u64());
+    }
+
+    // The empty-range contract holds in every profile (plain assert!,
+    // not debug_assert!), so these panic under `--release` too.
+    #[test]
+    #[should_panic(expected = "Rng::below called with an empty range")]
+    fn below_zero_panics() {
+        Rng::new(1).below(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::index called with an empty range")]
+    fn index_zero_panics() {
+        Rng::new(1).index(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::range called with an empty range")]
+    fn empty_range_panics() {
+        Rng::new(1).range(5, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::choice called with an empty slice")]
+    fn empty_choice_panics() {
+        Rng::new(1).choice::<u32>(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "Rng::zipf called with an empty range")]
+    fn zipf_zero_panics() {
+        Rng::new(1).zipf(0, 1.0);
     }
 
     #[test]

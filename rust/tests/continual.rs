@@ -1,0 +1,179 @@
+//! Continual-learning integration tests: the premise (one agent carried
+//! across an episode's repeated runs, §6.1), the checkpoint round trip
+//! (save → load → identical Q-values), and the bit-identity guarantee
+//! (save at an episode boundary, resume, finish → `RunStats` identical
+//! to the uninterrupted protocol, under both engines).
+//!
+//! Agents are built on the `LinearQ` mock explicitly (not
+//! `best_qfunction`) so the tests are deterministic in every build
+//! flavor, including one with real PJRT artifacts on disk.
+
+use aimm::agent::{AgentCheckpoint, AimmAgent};
+use aimm::bench::sweep::stats_json;
+use aimm::config::{Engine, MappingScheme, SystemConfig};
+use aimm::coordinator::{run_stream_with, System};
+use aimm::metrics::RunStats;
+use aimm::nmp::NmpOp;
+use aimm::runtime::{LinearQ, QFunction, STATE_DIM};
+use aimm::workloads::{generate, Benchmark};
+
+fn aimm_cfg(engine: Engine) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.mapping = MappingScheme::Aimm;
+    c.engine = engine;
+    // Slow, floor-less ε decay so "keeps decaying" is strict across runs,
+    // and a ring big enough that replay growth stays strict too.
+    c.agent.eps_decay = 0.999;
+    c.agent.eps_end = 0.0;
+    c.agent.replay_capacity = 65_536;
+    c
+}
+
+fn mk_agent(cfg: &SystemConfig) -> AimmAgent {
+    AimmAgent::new(
+        Box::new(LinearQ::new(cfg.agent.lr, cfg.agent.gamma, 7)),
+        cfg.agent.clone(),
+        cfg.seed ^ 0xA6E7,
+    )
+}
+
+fn trace(cfg: &SystemConfig) -> Vec<NmpOp> {
+    generate(Benchmark::Spmv, 1, 0.05, cfg.seed).ops
+}
+
+/// Resume-from-checkpoint: rebuild the agent the way `--resume` does,
+/// but pinned to the LinearQ backend.
+fn rebuild(ck_text: &str, cfg: &SystemConfig) -> AimmAgent {
+    let ck = AgentCheckpoint::parse(ck_text).expect("checkpoint parses");
+    let mut qf = Box::new(LinearQ::new(0.5, 0.5, 999)); // overwritten by restore
+    qf.restore(&ck.q).expect("snapshot restores into linear-mock");
+    AimmAgent::from_checkpoint(qf, cfg.agent.clone(), &ck).expect("agent rebuilds")
+}
+
+/// The continual premise: `run_stream` really carries ONE agent across
+/// the episode's repeated runs — replay memory strictly grows, ε keeps
+/// decaying, train steps and invocations are monotone.
+#[test]
+fn run_stream_carries_the_agent_across_runs() {
+    let cfg = aimm_cfg(Engine::Event);
+    let ops = trace(&cfg);
+    let mut agent = Some(mk_agent(&cfg));
+    let mut prev_replay = 0usize;
+    let mut prev_eps = f32::INFINITY;
+    let mut prev_trains = 0u64;
+    let mut prev_inv = 0u64;
+    for run in 0..3 {
+        let mut sys = System::new(cfg.clone(), ops.clone(), agent.take());
+        sys.run().unwrap();
+        agent = sys.take_agent();
+        let a = agent.as_ref().expect("agent survives the run");
+        assert!(
+            a.replay.len() > prev_replay,
+            "run {run}: replay stuck at {} (was {prev_replay})",
+            a.replay.len()
+        );
+        assert!(
+            a.epsilon() < prev_eps,
+            "run {run}: ε stopped decaying ({} !< {prev_eps})",
+            a.epsilon()
+        );
+        assert!(a.stats.train_steps >= prev_trains, "run {run}: train steps went backwards");
+        assert!(a.stats.invocations > prev_inv, "run {run}: no invocations this run");
+        prev_replay = a.replay.len();
+        prev_eps = a.epsilon();
+        prev_trains = a.stats.train_steps;
+        prev_inv = a.stats.invocations;
+    }
+    let a = agent.unwrap();
+    assert!(a.stats.train_steps > 0, "three runs must produce training");
+}
+
+/// Save → file → load → identical Q-values on a probe batch of states.
+#[test]
+fn checkpoint_file_roundtrip_preserves_q_values() {
+    let cfg = aimm_cfg(Engine::Event);
+    let ops = trace(&cfg);
+    let (_, agent) =
+        run_stream_with(&cfg, &ops, 2, "SPMV", Some(mk_agent(&cfg))).unwrap();
+    let mut agent = agent.expect("agent survives");
+    assert!(agent.stats.train_steps > 0, "test needs a trained network");
+
+    let ck = agent.checkpoint().unwrap();
+    let path = std::env::temp_dir().join("aimm_continual_roundtrip.json");
+    ck.save(&path).unwrap();
+    let loaded = AgentCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.to_json(), ck.to_json(), "file round trip is byte-exact");
+
+    let mut restored = rebuild(&ck.to_json(), &cfg);
+    // Probe batch: a spread of synthetic states.
+    for k in 0..32 {
+        let mut s = [0.0f32; STATE_DIM];
+        for (i, slot) in s.iter_mut().enumerate() {
+            *slot = ((i * 7 + k * 13) % 29) as f32 / 29.0;
+        }
+        let a = agent.probe_q(&s).unwrap();
+        let b = restored.probe_q(&s).unwrap();
+        let a_bits: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let b_bits: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a_bits, b_bits, "probe state {k}: Q-values diverged");
+    }
+}
+
+fn assert_runs_identical(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(stats_json(a), stats_json(b), "stats diverged: {ctx}");
+    let ta: Vec<u32> = a.opc_timeline.iter().map(|v| v.to_bits()).collect();
+    let tb: Vec<u32> = b.opc_timeline.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ta, tb, "OPC timeline diverged: {ctx}");
+}
+
+/// The acceptance invariant: saving at an episode boundary, reloading,
+/// and finishing the protocol yields the same `RunStats` as the
+/// uninterrupted run — under both engines.
+#[test]
+fn resume_is_bit_identical_under_both_engines() {
+    for engine in Engine::ALL {
+        let cfg = aimm_cfg(engine);
+        let ops = trace(&cfg);
+
+        // Uninterrupted: 3 runs straight through.
+        let (full, _) =
+            run_stream_with(&cfg, &ops, 3, "SPMV", Some(mk_agent(&cfg))).unwrap();
+
+        // Interrupted: 2 runs, checkpoint at the boundary, rebuild from
+        // the serialized form, finish the third run.
+        let (head, agent) =
+            run_stream_with(&cfg, &ops, 2, "SPMV", Some(mk_agent(&cfg))).unwrap();
+        let text = agent.unwrap().checkpoint().unwrap().to_json();
+        let resumed = rebuild(&text, &cfg);
+        let (tail, _) =
+            run_stream_with(&cfg, &ops, 1, "SPMV", Some(resumed)).unwrap();
+
+        // The first two runs were unaffected by the save.
+        for i in 0..2 {
+            assert_runs_identical(&full.runs[i], &head.runs[i], &format!("{engine} run {i}"));
+        }
+        // And the resumed third run equals the uninterrupted third.
+        assert_runs_identical(&full.runs[2], &tail.runs[0], &format!("{engine} resumed run"));
+    }
+}
+
+/// Cross-engine: a checkpoint written under one engine resumes
+/// bit-identically under the other (the engine is a clock strategy, not
+/// simulation state — DESIGN.md §8).
+#[test]
+fn checkpoint_crosses_engines() {
+    let polled = aimm_cfg(Engine::Polled);
+    let event = aimm_cfg(Engine::Event);
+    let ops = trace(&polled);
+
+    let (_, agent) =
+        run_stream_with(&polled, &ops, 2, "SPMV", Some(mk_agent(&polled))).unwrap();
+    let text = agent.unwrap().checkpoint().unwrap().to_json();
+
+    let (on_polled, _) =
+        run_stream_with(&polled, &ops, 1, "SPMV", Some(rebuild(&text, &polled))).unwrap();
+    let (on_event, _) =
+        run_stream_with(&event, &ops, 1, "SPMV", Some(rebuild(&text, &event))).unwrap();
+    assert_runs_identical(on_polled.last(), on_event.last(), "cross-engine resume");
+}
