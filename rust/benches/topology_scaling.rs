@@ -1,0 +1,111 @@
+//! Bench: cube-network topology scaling study (EXPERIMENTS.md
+//! §Topology). Sweeps {mesh, torus, ring} × {4x4, 8x8, 16x16} ×
+//! {B, TOM, AIMM} on one workload (SPMV under BNMP), checks the
+//! structural invariant — average hop count strictly orders
+//! ring > mesh > torus on the 8x8 baseline cells, where the topologies
+//! share node count and workload and differ only in their link sets —
+//! and records `BENCH_topology.json` at the repository root (fixed key
+//! order, so re-runs diff clean).
+//!
+//! Run with `cargo bench --bench topology_scaling` (release; ignore
+//! debug numbers). CI's serial job executes this on every push.
+
+use std::time::Instant;
+
+use aimm::bench::sweep::{cell_json, default_threads, run_grid, CellResult, SweepGrid};
+use aimm::bench::Table;
+use aimm::config::TopologyKind;
+use aimm::runtime::json::write as jw;
+use aimm::workloads::Benchmark;
+
+/// Small enough that the 16x16 ring cells (diameter 128) stay in CI
+/// range, big enough that hop statistics are stable.
+const SCALE: f64 = 0.03;
+
+/// Mean steady-state average hop count over the cells matching a
+/// (topology, mesh, baseline-mapping) slice.
+fn mean_hops(results: &[CellResult], topology: TopologyKind, mesh: (usize, usize)) -> f64 {
+    let picked: Vec<f64> = results
+        .iter()
+        .filter(|r| {
+            r.cell.topology == topology
+                && r.cell.mesh == mesh
+                && r.cell.mapping == aimm::config::MappingScheme::Baseline
+        })
+        .map(|r| r.summary.last().avg_hops)
+        .collect();
+    assert!(!picked.is_empty(), "no {topology:?} {mesh:?} baseline cells in the grid");
+    picked.iter().sum::<f64>() / picked.len() as f64
+}
+
+fn main() {
+    let mut grid = SweepGrid::new(SCALE, 1);
+    grid.benches = vec![vec![Benchmark::Spmv]];
+    grid.meshes = vec![(4, 4), (8, 8), (16, 16)];
+    grid.topologies = TopologyKind::ALL.to_vec();
+    let cells = grid.cells();
+    assert_eq!(cells.len(), 27, "3 mappings x 3 meshes x 3 topologies");
+    let threads = default_threads();
+    println!("topology scaling study: {} cells (scale {SCALE}) on {threads} thread(s)", cells.len());
+    let t0 = Instant::now();
+    let results = run_grid(&cells, threads).expect("topology scaling grid");
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(
+        "Topology scaling (steady-state run per cell)",
+        &["cell", "cycles", "opc", "avg hops", "avg pkt latency"],
+    );
+    for r in &results {
+        let last = r.summary.last();
+        t.row(vec![
+            r.cell.name(),
+            last.cycles.to_string(),
+            format!("{:.4}", last.opc()),
+            format!("{:.2}", last.avg_hops),
+            format!("{:.1}", last.avg_packet_latency),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The acceptance invariant: on the 8x8 baseline slice the link sets
+    // alone order the hop counts — the ring's n/2 diameter dominates the
+    // mesh, and the torus wraps undercut it.
+    let mesh_hops = mean_hops(&results, TopologyKind::Mesh, (8, 8));
+    let torus_hops = mean_hops(&results, TopologyKind::Torus, (8, 8));
+    let ring_hops = mean_hops(&results, TopologyKind::Ring, (8, 8));
+    println!(
+        "8x8 baseline average hops: ring {ring_hops:.3} > mesh {mesh_hops:.3} > torus {torus_hops:.3}"
+    );
+    assert!(
+        ring_hops > mesh_hops && mesh_hops > torus_hops,
+        "expected strict hop ordering ring > mesh > torus at 8x8, got \
+         ring {ring_hops:.3}, mesh {mesh_hops:.3}, torus {torus_hops:.3}"
+    );
+
+    let cells_json: Vec<String> = results.iter().map(cell_json).collect();
+    let json = jw::obj(&[
+        ("schema", jw::string("aimm-topology-v1")),
+        (
+            "grid",
+            jw::string(&format!(
+                "SPMV/BNMP x {{B,TOM,AIMM}} x {{4x4,8x8,16x16}} x \
+                 {{mesh,torus,ring}} (scale {SCALE}, 1 run)"
+            )),
+        ),
+        ("measured", "true".to_string()),
+        (
+            "avg_hops_8x8_baseline",
+            jw::obj(&[
+                ("mesh", jw::num(mesh_hops)),
+                ("torus", jw::num(torus_hops)),
+                ("ring", jw::num(ring_hops)),
+            ]),
+        ),
+        ("hop_order_ring_gt_mesh_gt_torus", "true".to_string()),
+        ("cells", format!("[{}]", cells_json.join(","))),
+        ("regenerate", jw::string("cargo bench --bench topology_scaling")),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_topology.json");
+    std::fs::write(path, &json).expect("write BENCH_topology.json");
+    println!("wrote {path} ({} cells) in {wall:?}", results.len());
+}

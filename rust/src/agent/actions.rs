@@ -12,11 +12,14 @@ pub enum Action {
     Default = 0,
     /// (ii) Remap the page to a random neighbour of the compute cube.
     NearData = 1,
-    /// (iii) Remap the page to the compute cube's diagonal opposite.
+    /// (iii) Remap the page to the topology's most distant cube from the
+    /// compute cube (the mesh's diagonal opposite, generalized —
+    /// [`crate::noc::topology::Topology::distant_cube`]).
     FarData = 2,
     /// (iv) Remap the computation to a neighbour of the compute cube.
     NearCompute = 3,
-    /// (v) Remap the computation to the compute cube's diagonal opposite.
+    /// (v) Remap the computation to the topology's most distant cube
+    /// from the compute cube.
     FarCompute = 4,
     /// (vi) Remap the computation to the first source's host cube.
     SourceCompute = 5,
@@ -88,7 +91,7 @@ impl Action {
                 let n = mesh.neighbors(compute_cube);
                 Some(*rng.choice(&n))
             }
-            Action::FarData | Action::FarCompute => Some(mesh.diagonal_opposite(compute_cube)),
+            Action::FarData | Action::FarCompute => Some(mesh.distant_cube(compute_cube)),
             Action::SourceCompute => Some(src1_cube),
             _ => None,
         }
@@ -133,6 +136,26 @@ mod tests {
         let mut rng = Rng::new(1);
         assert_eq!(Action::FarCompute.target_cube(&mesh, 0, 0, &mut rng), Some(15));
         assert_eq!(Action::FarData.target_cube(&mesh, 5, 0, &mut rng), Some(10));
+    }
+
+    #[test]
+    fn far_target_follows_the_topology() {
+        use crate::config::TopologyKind;
+        let mut cfg = SystemConfig::default();
+        cfg.topology = TopologyKind::Torus;
+        let torus = Mesh::new(&cfg);
+        let mut rng = Rng::new(1);
+        // Half a wrap in each dimension on the 4x4 torus.
+        assert_eq!(Action::FarData.target_cube(&torus, 0, 0, &mut rng), Some(10));
+        cfg.topology = TopologyKind::Ring;
+        let ring = Mesh::new(&cfg);
+        // Halfway around the 16-ring.
+        assert_eq!(Action::FarCompute.target_cube(&ring, 3, 0, &mut rng), Some(11));
+        // Near targets still come from the topology's link set.
+        for _ in 0..10 {
+            let t = Action::NearData.target_cube(&ring, 0, 0, &mut rng).unwrap();
+            assert!([15, 1].contains(&t), "ring neighbours of 0, got {t}");
+        }
     }
 
     #[test]

@@ -15,4 +15,4 @@ pub use actions::Action;
 pub use aimm::{AgentStats, AimmAgent, Decision};
 pub use checkpoint::{AgentCheckpoint, ReplaySnapshot};
 pub use replay::ReplayBuffer;
-pub use state::{build_state, hist4, PageSignals, PerMcSignals, StateVec, SysSignals};
+pub use state::{build_state, hist4, hop_scale, PageSignals, PerMcSignals, StateVec, SysSignals};

@@ -17,7 +17,25 @@ pub type StateVec = [f32; STATE_DIM];
 /// Normalisation scales for unbounded signals.
 const LAT_SCALE: f32 = 1.0 / 512.0;
 const MIG_LAT_SCALE: f32 = 1.0 / 4096.0;
-const HOP_SCALE: f32 = 1.0 / 16.0;
+
+/// Hop-history scale floor. The pre-topology simulator normalised hop
+/// counts by a fixed 16, which comfortably covers the paper's meshes
+/// (diameters 6 at 4×4, 14 at 8×8). Networks with larger diameters —
+/// a 16×16 mesh (30) or a 16×16 ring (128) — would saturate every far
+/// page at 1.0 under that constant, blinding the agent exactly where
+/// hop-sensitive placement matters most, so [`hop_scale`] derives the
+/// scale from the topology diameter instead. It never drops below this
+/// legacy floor, keeping 4×4/8×8 mesh state vectors (and the golden
+/// fixture pinned to them) bit-identical to the pre-topology
+/// simulator.
+pub const LEGACY_HOP_RANGE: u32 = 16;
+
+/// The hop-history normalisation factor for a network of the given
+/// diameter (see [`LEGACY_HOP_RANGE`]); pass the fabric's
+/// `Mesh::diameter()`, as `System::assemble_state` does.
+pub fn hop_scale(diameter: u32) -> f32 {
+    1.0 / diameter.max(LEGACY_HOP_RANGE) as f32
+}
 
 /// Aggregated signals from one MC's system counters.
 #[derive(Debug, Clone, Copy, Default)]
@@ -67,7 +85,9 @@ fn clamp01(x: f32) -> f32 {
 /// Assemble the 64-wide state vector. Layout (DESIGN.md §5):
 /// `[0..20)` per-MC (4×5), `[20..28)` action histogram, `[28..33)`
 /// globals, `[33..53)` page info, `[53..64)` reserved zeros.
-pub fn build_state(sys: &SysSignals, page: &PageSignals) -> StateVec {
+/// `hop_scale` normalises the raw hop histories — compute it with
+/// [`hop_scale`] from the active topology's diameter.
+pub fn build_state(sys: &SysSignals, page: &PageSignals, hop_scale: f32) -> StateVec {
     let mut s = [0.0f32; STATE_DIM];
     let mut i = 0;
     for mc in 0..4 {
@@ -92,7 +112,7 @@ pub fn build_state(sys: &SysSignals, page: &PageSignals) -> StateVec {
     s[33] = clamp01(page.access_rate);
     s[34] = clamp01(page.migrations_per_access);
     for j in 0..4 {
-        s[35 + j] = clamp01(page.hop_hist[j] * HOP_SCALE);
+        s[35 + j] = clamp01(page.hop_hist[j] * hop_scale);
         s[39 + j] = clamp01(page.lat_hist[j] * LAT_SCALE);
         s[43 + j] = clamp01(page.mig_lat_hist[j] * MIG_LAT_SCALE);
         s[47 + j] = clamp01(page.action_hist[j] / 8.0);
@@ -127,7 +147,7 @@ mod tests {
         let mut page = PageSignals::default();
         page.access_rate = 0.33;
         page.hop_hist = [0.0, 0.0, 4.0, 8.0];
-        let s = build_state(&sys, &page);
+        let s = build_state(&sys, &page, hop_scale(6)); // 4x4 mesh diameter
         assert_eq!(s[0], 0.5);
         assert_eq!(s[1], 0.9);
         assert_eq!(s[23], 0.25);
@@ -147,8 +167,24 @@ mod tests {
         ];
         let mut page = PageSignals::default();
         page.lat_hist = [1e9; 4];
-        let s = build_state(&sys, &page);
+        let s = build_state(&sys, &page, hop_scale(6));
         assert!(s.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    /// Small diameters keep the legacy 1/16 scale (bit-identity with the
+    /// pre-topology simulator on 4×4/8×8 meshes); large ones stretch the
+    /// scale so far pages stay rankable instead of all saturating at 1.
+    #[test]
+    fn hop_scale_tracks_large_diameters() {
+        assert_eq!(hop_scale(6), 1.0 / 16.0);
+        assert_eq!(hop_scale(14), 1.0 / 16.0);
+        assert_eq!(hop_scale(30), 1.0 / 30.0);
+        assert_eq!(hop_scale(128), 1.0 / 128.0);
+        let mut page = PageSignals::default();
+        page.hop_hist = [0.0, 0.0, 17.0, 128.0];
+        let s = build_state(&SysSignals::default(), &page, hop_scale(128));
+        assert!(s[37] < s[38], "a 128-hop page must rank above a 17-hop page");
+        assert!(s[38] <= 1.0);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! A sweep is a grid of [`SweepCell`]s — benchmark (or multi-program
 //! combination) × offloading technique × mapping scheme × mesh dims ×
-//! HOARD × seed — fanned across OS worker threads. Each cell builds its
+//! cube-network topology × HOARD × seed — fanned across OS worker
+//! threads. Each cell builds its
 //! own [`SystemConfig`] from its own seed and runs the §6.1 episode
 //! protocol through [`crate::coordinator::run_cell`], so per-cell results
 //! are **byte-identical for any worker count**: the simulator holds no
@@ -21,7 +22,7 @@ use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
-use crate::config::{Engine, MappingScheme, SystemConfig, Technique};
+use crate::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
 use crate::coordinator::{run_cell, EpisodeSummary};
 use crate::metrics::RunStats;
 use crate::sim::Rng;
@@ -34,8 +35,13 @@ pub struct SweepCell {
     pub benches: Vec<Benchmark>,
     pub technique: Technique,
     pub mapping: MappingScheme,
-    /// Mesh (cols, rows).
+    /// Grid dimensions (cols, rows).
     pub mesh: (usize, usize),
+    /// Cube-network topology. `Mesh` is the default and keeps the cell's
+    /// name and JSON byte-identical to pre-topology reports (the golden
+    /// fixture); torus/ring cells carry an extra name segment and a
+    /// `topology` JSON field.
+    pub topology: TopologyKind,
     pub hoard: bool,
     /// Master seed for this cell's config (trace + all RNG streams).
     pub seed: u64,
@@ -54,13 +60,20 @@ impl SweepCell {
     pub fn name(&self) -> String {
         let combo =
             self.benches.iter().map(|b| b.name()).collect::<Vec<_>>().join("-");
+        // The topology segment appears only off-default, so mesh cell
+        // names (and the golden fixture pinning them) never change.
+        let topology = match self.topology {
+            TopologyKind::Mesh => String::new(),
+            other => format!("/{}", other.name()),
+        };
         format!(
-            "{}/{}/{}/{}x{}{}/s{:x}",
+            "{}/{}/{}/{}x{}{}{}/s{:x}",
             combo,
             self.technique,
             self.mapping,
             self.mesh.0,
             self.mesh.1,
+            topology,
             if self.hoard { "/HOARD" } else { "" },
             self.seed,
         )
@@ -73,6 +86,7 @@ impl SweepCell {
         cfg.mapping = self.mapping;
         cfg.mesh_cols = self.mesh.0;
         cfg.mesh_rows = self.mesh.1;
+        cfg.topology = self.topology;
         cfg.hoard = self.hoard;
         cfg.seed = self.seed;
         cfg.engine = self.engine;
@@ -113,6 +127,9 @@ pub struct SweepGrid {
     pub techniques: Vec<Technique>,
     pub mappings: Vec<MappingScheme>,
     pub meshes: Vec<(usize, usize)>,
+    /// Cube-network topologies (EXPERIMENTS.md §Topology). Defaults to
+    /// the paper's mesh only.
+    pub topologies: Vec<TopologyKind>,
     pub hoard: Vec<bool>,
     /// Base seeds; each is a replicate of the whole grid.
     pub seeds: Vec<u64>,
@@ -134,6 +151,7 @@ impl SweepGrid {
             techniques: vec![Technique::Bnmp],
             mappings: MappingScheme::ALL.to_vec(),
             meshes: vec![(4, 4)],
+            topologies: vec![TopologyKind::Mesh],
             hoard: vec![false],
             seeds: vec![SystemConfig::default().seed],
             scale,
@@ -143,32 +161,35 @@ impl SweepGrid {
     }
 
     /// Cartesian product in fixed nested order: bench → technique →
-    /// mapping → mesh → hoard → seed (innermost fastest).
+    /// mapping → mesh → topology → hoard → seed (innermost fastest).
     ///
-    /// Cells that differ only in technique / mapping / mesh / hoard share
-    /// a workload seed so scheme comparisons hold the trace constant;
-    /// cells that differ in workload or base seed get decorrelated
-    /// streams via [`workload_seed`], which depends only on the combo's
-    /// identity — never on grid position or execution order.
+    /// Cells that differ only in technique / mapping / mesh / topology /
+    /// hoard share a workload seed so scheme comparisons hold the trace
+    /// constant; cells that differ in workload or base seed get
+    /// decorrelated streams via [`workload_seed`], which depends only on
+    /// the combo's identity — never on grid position or execution order.
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::new();
         for benches in &self.benches {
             for &technique in &self.techniques {
                 for &mapping in &self.mappings {
                     for &mesh in &self.meshes {
-                        for &hoard in &self.hoard {
-                            for &seed in &self.seeds {
-                                out.push(SweepCell {
-                                    benches: benches.clone(),
-                                    technique,
-                                    mapping,
-                                    mesh,
-                                    hoard,
-                                    seed: workload_seed(seed, benches),
-                                    scale: self.scale,
-                                    runs: self.runs,
-                                    engine: self.engine,
-                                });
+                        for &topology in &self.topologies {
+                            for &hoard in &self.hoard {
+                                for &seed in &self.seeds {
+                                    out.push(SweepCell {
+                                        benches: benches.clone(),
+                                        technique,
+                                        mapping,
+                                        mesh,
+                                        topology,
+                                        hoard,
+                                        seed: workload_seed(seed, benches),
+                                        scale: self.scale,
+                                        runs: self.runs,
+                                        engine: self.engine,
+                                    });
+                                }
                             }
                         }
                     }
@@ -316,23 +337,30 @@ pub fn cell_json(res: &CellResult) -> String {
     let c = &res.cell;
     let benches: Vec<String> = c.benches.iter().map(|b| jstr(b.name())).collect();
     let runs: Vec<String> = res.summary.runs.iter().map(stats_json).collect();
-    jobj(&[
+    let mut fields: Vec<(&str, String)> = vec![
         ("name", jstr(&res.summary.name)),
         ("benches", format!("[{}]", benches.join(","))),
         ("technique", jstr(c.technique.name())),
         ("mapping", jstr(c.mapping.name())),
         ("mesh", jstr(&format!("{}x{}", c.mesh.0, c.mesh.1))),
-        ("hoard", c.hoard.to_string()),
-        // 0x-hex string, not a bare number: full 64-bit seeds exceed 2^53
-        // and would lose bits through any double-based JSON parser
-        // (including runtime/json.rs). `aimm run --seed` accepts this 0x
-        // form as-is — that is the reproduce-from-report path. Feeding it
-        // to `aimm sweep --seeds` would NOT reproduce the cell: grid
-        // seeds are base seeds that get re-folded per combo.
-        ("seed", jstr(&format!("{:#x}", c.seed))),
-        ("scale", jnum(c.scale)),
-        ("runs", format!("[{}]", runs.join(","))),
-    ])
+    ];
+    // Like the cell name's topology segment: emitted only off-default,
+    // so pre-topology reports — and the committed golden fixture — stay
+    // byte-identical for mesh grids.
+    if c.topology != TopologyKind::Mesh {
+        fields.push(("topology", jstr(c.topology.name())));
+    }
+    fields.push(("hoard", c.hoard.to_string()));
+    // 0x-hex string, not a bare number: full 64-bit seeds exceed 2^53
+    // and would lose bits through any double-based JSON parser
+    // (including runtime/json.rs). `aimm run --seed` accepts this 0x
+    // form as-is — that is the reproduce-from-report path. Feeding it
+    // to `aimm sweep --seeds` would NOT reproduce the cell: grid
+    // seeds are base seeds that get re-folded per combo.
+    fields.push(("seed", jstr(&format!("{:#x}", c.seed))));
+    fields.push(("scale", jnum(c.scale)));
+    fields.push(("runs", format!("[{}]", runs.join(","))));
+    jobj(&fields)
 }
 
 /// The whole report. Deliberately excludes worker count and wall-clock so
@@ -448,6 +476,48 @@ mod tests {
         // The engine never leaks into cell names (nor the JSON report),
         // so polled and event reports of the same grid diff clean.
         assert!(!cells[0].name().to_lowercase().contains("polled"));
+    }
+
+    #[test]
+    fn topology_is_an_axis_with_mesh_default_unchanged() {
+        // Default grids carry only the mesh, and a mesh cell's name and
+        // JSON never mention topology — pre-topology reports (and the
+        // golden fixture) must stay byte-identical.
+        let grid = SweepGrid::new(0.1, 1);
+        assert_eq!(grid.topologies, vec![TopologyKind::Mesh]);
+        let cells = grid.cells();
+        assert!(cells.iter().all(|c| c.topology == TopologyKind::Mesh));
+        assert!(!cells[0].name().contains("mesh"), "{}", cells[0].name());
+
+        let mut grid = SweepGrid::new(0.1, 1);
+        grid.benches = vec![vec![Benchmark::Mac]];
+        grid.topologies = vec![TopologyKind::Torus, TopologyKind::Ring];
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 6); // 1 bench × 3 mappings × 2 topologies
+        assert!(cells[0].name().ends_with(&format!("/torus/s{:x}", cells[0].seed)));
+        assert!(cells[1].name().contains("/ring/"));
+        assert_eq!(cells[0].config().unwrap().topology, TopologyKind::Torus);
+        // Same combo ⇒ same workload seed across topologies, so the
+        // comparison holds the trace constant.
+        assert_eq!(cells[0].seed, cells[1].seed);
+    }
+
+    #[test]
+    fn cell_json_carries_topology_only_off_default() {
+        let mut grid = SweepGrid::new(0.03, 1);
+        grid.benches = vec![vec![Benchmark::Mac]];
+        grid.mappings = vec![MappingScheme::Baseline];
+        grid.topologies = vec![TopologyKind::Mesh, TopologyKind::Ring];
+        let results = run_grid(&grid.cells(), 2).unwrap();
+        let mesh_json = cell_json(&results[0]);
+        let ring_json = cell_json(&results[1]);
+        assert!(!mesh_json.contains("\"topology\""), "{mesh_json}");
+        assert!(ring_json.contains("\"topology\":\"ring\""), "{ring_json}");
+        // And the report still parses through the in-crate JSON parser.
+        let parsed = crate::runtime::json::parse(&report_json(&results)).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("topology").is_none());
+        assert_eq!(cells[1].get("topology").unwrap().as_str(), Some("ring"));
     }
 
     #[test]

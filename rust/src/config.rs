@@ -9,6 +9,11 @@ use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
 
+// Geometry delegation target of the MC-placement helpers below. An
+// intra-crate module cycle (noc depends on config's vocabulary types) —
+// fine in Rust, and it keeps every topology fact in one place.
+use crate::noc::topology::{AnyTopology, Topology as _};
+
 /// Index of a memory cube in the mesh (row-major: `y * cols + x`).
 pub type CubeId = usize;
 /// Index of a memory controller (4, one per CMP corner — Table 1).
@@ -141,6 +146,48 @@ impl fmt::Display for Engine {
     }
 }
 
+/// Interconnect topology of the memory-cube network. The geometry itself
+/// lives in [`crate::noc::topology`]; this enum is the configuration
+/// selector, threaded through the `topology` TOML key, the `--topology`
+/// CLI flag and the sweep grid's topology axis. The default (`Mesh`) is
+/// bit-identical to the pre-topology simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// The paper's 2D mesh: 4 corner-attached MCs, XY routing (Table 1).
+    Mesh,
+    /// 2D torus: the mesh plus wraparound links — per-dimension diameter
+    /// halves, the gentlest hop-distance structure.
+    Torus,
+    /// 1D ring over all cubes — the worst-case diameter stress topology
+    /// for scale-out studies.
+    Ring,
+}
+
+impl TopologyKind {
+    pub const ALL: [TopologyKind; 3] =
+        [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::Ring];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+            TopologyKind::Ring => "ring",
+        }
+    }
+
+    /// Case-insensitive name lookup — shared by the `--topology` CLI
+    /// flag and the TOML config loader.
+    pub fn from_name(s: &str) -> Option<TopologyKind> {
+        Self::ALL.into_iter().find(|t| t.name().eq_ignore_ascii_case(s))
+    }
+}
+
+impl fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// DRAM / interconnect timing in memory-network cycles.
 #[derive(Debug, Clone)]
 pub struct TimingConfig {
@@ -227,9 +274,14 @@ impl Default for AgentConfig {
 /// Full system configuration (paper Table 1 defaults).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
-    /// Mesh dimensions (Table 1: 4×4; §7.5.1 scales to 8×8).
+    /// Grid dimensions (Table 1: 4×4; §7.5.1 scales to 8×8). Under the
+    /// `Ring` topology the product is the cycle length; the names keep
+    /// their `mesh_` prefix for config-file compatibility.
     pub mesh_cols: usize,
     pub mesh_rows: usize,
+    /// Cube-network topology ([`TopologyKind`]; geometry in
+    /// [`crate::noc::topology`]).
+    pub topology: TopologyKind,
     /// Memory cube internals (Table 1: 1 GB, 32 vaults, 8 banks/vault).
     pub vaults_per_cube: usize,
     pub banks_per_vault: usize,
@@ -281,6 +333,7 @@ impl Default for SystemConfig {
         Self {
             mesh_cols: 4,
             mesh_rows: 4,
+            topology: TopologyKind::Mesh,
             vaults_per_cube: 32,
             banks_per_vault: 8,
             frames_per_cube: 262_144,
@@ -310,56 +363,35 @@ impl SystemConfig {
         self.mesh_cols * self.mesh_rows
     }
 
-    /// 4 MCs at the CMP corners, attached to the mesh corner cubes.
+    /// 4 MCs at the CMP corners; their attach cubes depend on the
+    /// topology (corners on mesh/torus, quarter points on the ring).
     pub fn num_mcs(&self) -> usize {
-        4
+        crate::noc::topology::NUM_MCS
     }
 
-    /// The corner cube each MC attaches to.
+    /// The geometry object this config describes ([`crate::noc::topology`]).
+    /// `Copy`-cheap: delegating per call allocates nothing.
+    pub fn topology_obj(&self) -> AnyTopology {
+        AnyTopology::of(self)
+    }
+
+    /// The cube each MC attaches to (topology-defined).
     pub fn mc_attach_cube(&self, mc: McId) -> CubeId {
-        let (c, r) = (self.mesh_cols, self.mesh_rows);
-        match mc {
-            0 => 0,
-            1 => c - 1,
-            2 => (r - 1) * c,
-            3 => r * c - 1,
-            _ => panic!("mc index out of range: {mc}"),
-        }
+        self.topology_obj().mc_attach_cube(mc)
     }
 
-    /// Cubes "nearest" to an MC: its attach quadrant of the mesh. Each MC
-    /// aggregates occupancy/row-hit counters over these (paper §5.1).
+    /// Cubes "nearest" to an MC. Each MC aggregates occupancy/row-hit
+    /// counters over these (paper §5.1). Always an exact partition of the
+    /// cubes — including odd and rectangular grids, where the seed
+    /// simulator's standalone quadrant rectangles silently overlapped.
     pub fn mc_nearest_cubes(&self, mc: McId) -> Vec<CubeId> {
-        let (c, r) = (self.mesh_cols, self.mesh_rows);
-        let (hx, hy) = ((c + 1) / 2, (r + 1) / 2);
-        let (x0, y0) = match mc {
-            0 => (0, 0),
-            1 => (c - hx, 0),
-            2 => (0, r - hy),
-            3 => (c - hx, r - hy),
-            _ => panic!("mc index out of range: {mc}"),
-        };
-        let mut cubes = Vec::with_capacity(hx * hy);
-        for y in y0..y0 + hy {
-            for x in x0..x0 + hx {
-                cubes.push(y * c + x);
-            }
-        }
-        cubes
+        self.topology_obj().mc_nearest_cubes(mc)
     }
 
-    /// The MC whose quadrant contains `cube` (used to route ACKs).
+    /// The MC whose partition contains `cube` (the target of its
+    /// periodic occupancy reports).
     pub fn cube_home_mc(&self, cube: CubeId) -> McId {
-        let (c, r) = (self.mesh_cols, self.mesh_rows);
-        let (x, y) = (cube % c, cube / c);
-        let right = x >= c / 2;
-        let bottom = y >= r / 2;
-        match (right, bottom) {
-            (false, false) => 0,
-            (true, false) => 1,
-            (false, true) => 2,
-            (true, true) => 3,
-        }
+        self.topology_obj().cube_home_mc(cube)
     }
 
     /// Render as a TOML-subset document (round-trips through `parse`).
@@ -373,6 +405,7 @@ impl SystemConfig {
         };
         kv(&mut s, "mesh_cols", self.mesh_cols.to_string());
         kv(&mut s, "mesh_rows", self.mesh_rows.to_string());
+        kv(&mut s, "topology", format!("\"{}\"", self.topology.name()));
         kv(&mut s, "vaults_per_cube", self.vaults_per_cube.to_string());
         kv(&mut s, "banks_per_vault", self.banks_per_vault.to_string());
         kv(&mut s, "frames_per_cube", self.frames_per_cube.to_string());
@@ -439,6 +472,11 @@ impl SystemConfig {
                     cfg.engine = Engine::from_name(name)
                         .ok_or_else(|| anyhow::anyhow!("unknown engine {name:?}"))?;
                 }
+                "topology" => {
+                    let name = v.as_str()?;
+                    cfg.topology = TopologyKind::from_name(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown topology {name:?}"))?;
+                }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
         }
@@ -452,6 +490,41 @@ impl SystemConfig {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.mesh_cols >= 2 && self.mesh_rows >= 2, "mesh must be at least 2x2");
+        // Topology sanity, checked loudly instead of producing wrong
+        // quadrants/arcs at runtime: every MC needs its own attach cube
+        // and a non-empty nearest-cubes partition (exact partitioning for
+        // odd/rectangular grids is guaranteed by construction and tested
+        // in noc/topology.rs).
+        let topo = self.topology_obj();
+        for mc in 0..self.num_mcs() {
+            for other in mc + 1..self.num_mcs() {
+                anyhow::ensure!(
+                    topo.mc_attach_cube(mc) != topo.mc_attach_cube(other),
+                    "{}x{} {} gives MCs {mc} and {other} the same attach cube {}",
+                    self.mesh_cols,
+                    self.mesh_rows,
+                    self.topology,
+                    topo.mc_attach_cube(mc)
+                );
+            }
+            anyhow::ensure!(
+                !topo.mc_nearest_cubes(mc).is_empty(),
+                "{}x{} {} leaves MC {mc} with no nearest cubes",
+                self.mesh_cols,
+                self.mesh_rows,
+                self.topology
+            );
+        }
+        // Wraparound topologies run bubble flow control (noc/topology.rs
+        // module docs): a packet entering a dimension ring must leave one
+        // buffer slot free, which is impossible with single-slot buffers.
+        anyhow::ensure!(
+            !topo.wraparound() || self.router_buf_cap >= 2,
+            "topology {} has wraparound links and needs router_buf_cap >= 2 \
+             (bubble flow control), got {}",
+            self.topology,
+            self.router_buf_cap
+        );
         anyhow::ensure!(self.vaults_per_cube.is_power_of_two(), "vaults must be a power of two");
         anyhow::ensure!(self.banks_per_vault.is_power_of_two(), "banks must be a power of two");
         anyhow::ensure!(self.nmp_table_entries > 0, "nmp table must be non-empty");
@@ -680,5 +753,63 @@ mod tests {
         let mut c = SystemConfig::default();
         c.mesh_rows = 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn topology_roundtrips_and_defaults_to_mesh() {
+        assert_eq!(SystemConfig::default().topology, TopologyKind::Mesh);
+        for t in TopologyKind::ALL {
+            assert_eq!(TopologyKind::from_name(t.name()), Some(t));
+            let mut c = SystemConfig::default();
+            c.topology = t;
+            assert_eq!(SystemConfig::parse(&c.to_toml()).unwrap().topology, t);
+        }
+        assert_eq!(TopologyKind::from_name("TORUS"), Some(TopologyKind::Torus));
+        assert_eq!(TopologyKind::from_name("nope"), None);
+        assert!(SystemConfig::parse("topology = \"hypercube\"").is_err());
+    }
+
+    /// The PR-4 bugfix: odd and rectangular grids used to get silently
+    /// overlapping quadrant rectangles; through the topology path the MC
+    /// partitions are exact for every shape, on every topology.
+    #[test]
+    fn odd_and_rectangular_grids_partition_exactly() {
+        for topology in TopologyKind::ALL {
+            for (cols, rows) in [(5, 5), (4, 2), (3, 5), (2, 7)] {
+                let mut c = SystemConfig::default();
+                c.mesh_cols = cols;
+                c.mesh_rows = rows;
+                c.topology = topology;
+                c.validate().unwrap_or_else(|e| panic!("{topology} {cols}x{rows}: {e}"));
+                let mut all: Vec<CubeId> =
+                    (0..c.num_mcs()).flat_map(|m| c.mc_nearest_cubes(m)).collect();
+                all.sort_unstable();
+                assert_eq!(all, (0..cols * rows).collect::<Vec<_>>(), "{topology} {cols}x{rows}");
+                for mc in 0..c.num_mcs() {
+                    for cube in c.mc_nearest_cubes(mc) {
+                        assert_eq!(c.cube_home_mc(cube), mc, "{topology} {cols}x{rows} cube {cube}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bubble flow control (wraparound deadlock avoidance) needs a spare
+    /// buffer slot; single-slot routers are rejected loudly on torus and
+    /// ring, and stay legal on the mesh.
+    #[test]
+    fn wraparound_requires_two_buffer_slots() {
+        for topology in [TopologyKind::Torus, TopologyKind::Ring] {
+            let mut c = SystemConfig::default();
+            c.topology = topology;
+            c.router_buf_cap = 1;
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains("bubble flow control"), "{topology}: {err}");
+            c.router_buf_cap = 2;
+            c.validate().unwrap();
+        }
+        let mut mesh = SystemConfig::default();
+        mesh.router_buf_cap = 1;
+        mesh.validate().unwrap();
     }
 }

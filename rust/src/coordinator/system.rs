@@ -1,10 +1,16 @@
-//! The simulated NMP system: CPU-side op feed → MCs → mesh → cubes, with
-//! the migration system, TOM remapper and the AIMM agent plugged in per
-//! the configuration. One `tick` = one memory-network cycle.
+//! The simulated NMP system: CPU-side op feed → MCs → cube network →
+//! cubes, with the migration system, TOM remapper and the AIMM agent
+//! plugged in per the configuration. One `tick` = one memory-network
+//! cycle. The interconnect geometry (mesh / torus / ring) is entirely
+//! the fabric's business ([`crate::noc::topology`]); this module only
+//! ever asks it topology-neutral questions (routing happens inside
+//! `mesh.tick`, MC homing via `cfg.cube_home_mc`).
 
 use std::collections::HashSet;
 
-use crate::agent::{build_state, hist4, Action, AimmAgent, PageSignals, PerMcSignals, SysSignals};
+use crate::agent::{
+    build_state, hist4, hop_scale, Action, AimmAgent, PageSignals, PerMcSignals, SysSignals,
+};
 use crate::alloc::{HoardAllocator, Placement, StripePlacement};
 use crate::config::{Engine, MappingScheme, Pid, SystemConfig, VPage};
 use crate::cube::Cube;
@@ -438,7 +444,7 @@ impl System {
             }
             None => PageSignals::default(),
         };
-        build_state(&sys, &page_sig)
+        build_state(&sys, &page_sig, hop_scale(self.mesh.diameter()))
     }
 
     /// Everything drained?
@@ -531,6 +537,10 @@ impl System {
     /// reports the earliest cycle at which its tick can change any state
     /// (queues, stats, RNG draws, packets); cycles in between are pure
     /// per-cycle accounting, which [`skip_to`](Self::skip_to) bulk-applies.
+    /// The hooks are topology-independent: the fabric's event is keyed on
+    /// buffer occupancy and the earliest in-flight wire arrival, whatever
+    /// links (including torus/ring wraparounds) the packets ride — so the
+    /// skip stays legal on every `SystemConfig::topology`.
     fn schedule_events(&self, wheel: &mut EventWheel) {
         let now = self.now;
         // CPU feed keeps trying while trace ops remain and the

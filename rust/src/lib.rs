@@ -15,7 +15,8 @@
 //! Module map (see DESIGN.md §4 for the full inventory):
 //!
 //! * [`sim`] — deterministic cycle-level simulation core (clock, RNG, stats)
-//! * [`noc`] — mesh memory-cube network: routers, links, XY routing, VCs
+//! * [`noc`] — memory-cube network: routers, links, VCs, deterministic
+//!   minimal routing over a pluggable topology (mesh / torus / ring)
 //! * [`cube`] — 3D memory cube: vaults, banks, row buffer, NMP-op table
 //! * [`mc`] — memory controllers: queues, page-info cache, system counters
 //! * [`mmu`] — 4-level page table, V→P translation, per-cube frame pools

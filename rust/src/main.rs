@@ -4,11 +4,12 @@
 //!
 //! ```text
 //! aimm run      --bench SPMV [--technique BNMP] [--mapping AIMM]
-//!               [--scale 0.5] [--runs 5] [--mesh 4x4] [--hoard]
-//!               [--config file.toml] [--seed N]
+//!               [--scale 0.5] [--runs 5] [--mesh 4x4] [--topology torus]
+//!               [--hoard] [--config file.toml] [--seed N]
 //!               [--checkpoint out.json] [--resume in.json]
 //! aimm sweep    [--benches all] [--mappings all] [--meshes 4x4,8x8]
-//!               [--threads N] [--out BENCH_sweep.json]
+//!               [--topologies mesh,torus,ring] [--threads N]
+//!               [--out BENCH_sweep.json]
 //! aimm analyze  --fig 5a|5b|5c [--scale 1.0]
 //! aimm table    --fig 6|7|8|9|10|11|12|13|14|area [--scale 0.25] [--runs 3]
 //! aimm table1 | aimm table2
@@ -24,7 +25,7 @@ use aimm::agent::{AgentCheckpoint, AimmAgent};
 use aimm::bench::figures;
 use aimm::bench::sweep::{self, ContinualSequence, SweepGrid};
 use aimm::bench::Table;
-use aimm::config::{Engine, MappingScheme, SystemConfig, Technique};
+use aimm::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
 use aimm::coordinator::{fresh_agent, run_curriculum, run_episode_with, CurriculumStage};
 use aimm::workloads::Benchmark;
 
@@ -44,8 +45,8 @@ fn usage() -> String {
          \n\
          subcommands:\n\
            run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
-                    [--scale F] [--runs N] [--mesh CxR] [--hoard] [--seed N] [--config FILE]\n\
-                    [--engine polled|event]\n\
+                    [--scale F] [--runs N] [--mesh CxR] [--topology mesh|torus|ring]\n\
+                    [--hoard] [--seed N] [--config FILE] [--engine polled|event]\n\
                     [--checkpoint OUT.json] save the agent at the episode boundary\n\
                     [--resume IN.json] warm-start from a saved checkpoint\n\
            multi    --benches A,B,C (same options as run)\n\
@@ -57,7 +58,9 @@ fn usage() -> String {
                     cold-vs-warm first-run transfer table (defaults to --mapping AIMM)\n\
            sweep    [--benches all|A,B,A+B (use + for a multi-program combo)]\n\
                     [--techniques BNMP,LDB,PEI|all] [--mappings B,TOM,AIMM|all]\n\
-                    [--meshes 4x4,8x8] [--seeds N,M] [--scale F] [--runs N]\n\
+                    [--meshes 4x4,8x8] [--topologies mesh,torus,ring|all]\n\
+                    [--topology X (single-topology shorthand)]\n\
+                    [--seeds N,M] [--scale F] [--runs N]\n\
                     [--threads N] [--hoard] [--engine polled|event]\n\
                     [--out BENCH_sweep.json]\n\
            analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
@@ -80,6 +83,11 @@ fn parse_mapping(m: &str) -> Result<MappingScheme, String> {
 
 fn parse_engine(e: &str) -> Result<Engine, String> {
     Engine::from_name(e).ok_or_else(|| format!("unknown engine {e} (expected polled|event)"))
+}
+
+fn parse_topology(t: &str) -> Result<TopologyKind, String> {
+    TopologyKind::from_name(t)
+        .ok_or_else(|| format!("unknown topology {t} (expected mesh|torus|ring)"))
 }
 
 /// Seeds parse as decimal or `0x`-hex — the hex form is what
@@ -106,8 +114,8 @@ fn parse_mesh(s: &str) -> Result<(usize, usize), String> {
 }
 
 /// Comma-separated benchmark combos; `+` joins a multi-program combo
-/// (`SC,KM+RD` = [SC] then [KM, RD]). Shared by `sweep --benches` and
-/// `curriculum --stages`.
+/// (`SC,KM+RD` = `[SC]` then `[KM, RD]`). Shared by `sweep --benches`
+/// and `curriculum --stages`.
 fn parse_combos(list: &str) -> Result<Vec<Vec<Benchmark>>, String> {
     list.split(',')
         .map(|combo| {
@@ -238,6 +246,9 @@ fn build_cfg(args: &Args) -> Result<SystemConfig, String> {
         cfg.mesh_cols = c;
         cfg.mesh_rows = r;
     }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = parse_topology(t)?;
+    }
     if args.get("hoard").is_some() {
         cfg.hoard = true;
     }
@@ -253,11 +264,16 @@ fn build_cfg(args: &Args) -> Result<SystemConfig, String> {
 
 fn print_summary(s: &aimm::coordinator::EpisodeSummary, cfg: &SystemConfig) {
     println!(
-        "episode {} [{} + {}{}{}] — {} runs",
+        "episode {} [{} + {}{}{}{}] — {} runs",
         s.name,
         cfg.technique,
         cfg.mapping,
         if cfg.hoard { " + HOARD" } else { "" },
+        // Off-default topology is worth flagging: it changes the numbers.
+        match cfg.topology {
+            TopologyKind::Mesh => String::new(),
+            other => format!(" | {other}"),
+        },
         // The engine never changes the numbers (DESIGN.md §8); flag the
         // slow reference loop so timing comparisons stay honest.
         if cfg.engine == Engine::Polled { " | polled" } else { "" },
@@ -457,6 +473,23 @@ fn real_main() -> Result<(), String> {
             }
             if let Some(list) = args.get("meshes") {
                 grid.meshes = list.split(',').map(parse_mesh).collect::<Result<_, _>>()?;
+            }
+            // Topology accepts both spellings: `--topologies a,b|all` for
+            // a multi-value axis, `--topology x` (the same flag run/multi
+            // take) for a single-topology sweep.
+            if let Some(list) = args.get("topologies") {
+                if args.get("topology").is_some() {
+                    return Err("pass either --topology or --topologies, not both".into());
+                }
+                grid.topologies = if list.eq_ignore_ascii_case("all") {
+                    TopologyKind::ALL.to_vec()
+                } else {
+                    list.split(',')
+                        .map(|t| parse_topology(t.trim()))
+                        .collect::<Result<_, _>>()?
+                };
+            } else if let Some(t) = args.get("topology") {
+                grid.topologies = vec![parse_topology(t)?];
             }
             if let Some(list) = args.get("seeds") {
                 grid.seeds = list.split(',').map(parse_seed).collect::<Result<_, _>>()?;

@@ -1,7 +1,28 @@
-//! Mapping schemes: the TOM physical-address remapper and the AIMM
-//! compute-remap table (§5.3, §6.3). Together with the placement policies
-//! in [`crate::alloc`], these implement the "B / TOM / AIMM" columns of
-//! the paper's evaluation.
+//! Mapping schemes — who decides where a page's data lives and where its
+//! computation runs. Together with the placement policies in
+//! [`crate::alloc`], these implement the "B / TOM / AIMM" columns of the
+//! paper's evaluation (§6.3):
+//!
+//! * **B** (baseline) is the *absence* of a scheme: pages stay where the
+//!   frame allocator put them, computation follows the offloading
+//!   technique's static rule.
+//! * **TOM** ([`tom::TomMapper`]) profiles each epoch's NMP-op stream,
+//!   scores a fixed candidate set of page→cube hashes on the co-location
+//!   they *would* have achieved, and bulk-adopts the winner at the epoch
+//!   boundary. It is a pure function of page numbers — cube ids come out
+//!   of a hash mod `num_cubes` — so it is topology-agnostic by
+//!   construction: it optimizes co-location (zero-hop operand fetches),
+//!   not hop distance, on mesh, torus and ring alike.
+//! * **AIMM** writes the [`remap_table::ComputeRemapTable`]: the RL
+//!   agent's per-page *computation* placement overrides, resolved at MC
+//!   dispatch time. Its data-side counterpart is page migration
+//!   ([`crate::migration`]), and its far targets are topology-aware
+//!   through [`crate::noc::topology::Topology::distant_cube`].
+//!
+//! What is deliberately *not* here: V→P translation ([`crate::mmu`]) and
+//! frame allocation ([`crate::alloc`]). A mapping scheme only redirects —
+//! the MMU stays the single source of truth for where a page physically
+//! is.
 
 pub mod remap_table;
 pub mod tom;

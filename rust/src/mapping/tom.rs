@@ -16,6 +16,13 @@
 //! the bulk remap without network traffic (unlike AIMM page migration,
 //! which pays for every byte moved — exactly the trade-off §3.1
 //! discusses).
+//!
+//! TOM is topology-agnostic: candidates hash a page number to a cube id
+//! mod `n_cubes` and are scored purely on *co-location* (operands on the
+//! compute cube, i.e. zero-hop fetches), which is worth the same on
+//! mesh, torus and ring. Hop-distance-aware placement is exactly what
+//! AIMM adds on top (its far targets route through
+//! [`crate::noc::topology::Topology::distant_cube`]).
 
 use std::collections::HashSet;
 

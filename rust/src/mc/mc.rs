@@ -164,7 +164,7 @@ impl Mc {
                 let cube = match deps.tom.as_deref() {
                     Some(tom) => tom.target_cube(pid, vpage),
                     None => {
-                        let n = deps.mesh.cols * deps.mesh.rows;
+                        let n = deps.mesh.num_cubes();
                         let free: Vec<usize> =
                             (0..n).map(|c| deps.mmu.free_frames(c)).collect();
                         deps.placement.place(pid, vpage, &free)

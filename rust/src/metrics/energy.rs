@@ -1,6 +1,6 @@
 //! Dynamic-energy model — the constants are the paper's own Cacti-derived
-//! per-access energies (§7.7) plus the published network (5 pJ/bit/hop
-//! [Poremba et al.]) and memory (12 pJ/bit/access [HMC]) figures, so Fig 14
+//! per-access energies (§7.7) plus the published network (5 pJ/bit/hop,
+//! Poremba et al.) and memory (12 pJ/bit/access, HMC) figures, so Fig 14
 //! is regenerated from event counts exactly the way the paper computes it.
 
 /// Per-access energies in nanojoules (§7.7).

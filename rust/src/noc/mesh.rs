@@ -1,5 +1,7 @@
-//! The mesh fabric: topology, XY routing, credit flow control, link
-//! serialization and per-node delivery queues.
+//! The network fabric: routers, credit flow control, link serialization
+//! and per-node delivery queues over any cube topology
+//! ([`super::topology`] — mesh, torus or ring, per
+//! `SystemConfig::topology`).
 //!
 //! Model granularity: packets (not individual flits) are the switched
 //! unit; a packet occupies an output link for `ceil(size/link_bits)`
@@ -7,6 +9,14 @@
 //! buffer after the 3-cycle router pipeline. Finite input buffers plus
 //! credit checks create the backpressure and congestion the paper's
 //! hop-count/latency analysis (§7.4) depends on.
+//!
+//! Routing is the topology's deterministic minimal function; on
+//! wraparound topologies (torus/ring) the fabric additionally applies
+//! **bubble flow control**: a packet entering a dimension ring must
+//! leave one free slot in the downstream buffer, so the ring can never
+//! fill into a circular wait (packets already travelling within the
+//! dimension are exempt and keep draining). The mesh path skips the rule
+//! entirely and stays bit-identical to the pre-topology fabric.
 
 use crate::config::{CubeId, McId, SystemConfig};
 use crate::sim::Cycle;
@@ -15,6 +25,7 @@ use std::collections::BinaryHeap;
 
 use super::packet::{NodeId, Packet, NUM_CLASSES};
 use super::router::{Dir, Router, NUM_PORTS};
+use super::topology::{AnyTopology, Topology};
 
 /// A packet traversing a link, due to arrive at `arrival`.
 #[derive(Debug)]
@@ -79,10 +90,12 @@ impl NocStats {
     }
 }
 
-/// The mesh network connecting memory cubes and (at the corners) MCs.
+/// The network connecting memory cubes and MCs. Despite the historical
+/// name it runs any [`AnyTopology`] — the mesh is just the default.
+/// All geometry questions (dimensions, links, routes) go through
+/// [`Mesh::topology`]; the fabric itself holds no duplicate geometry.
 pub struct Mesh {
-    pub cols: usize,
-    pub rows: usize,
+    topo: AnyTopology,
     routers: Vec<Router>,
     wire: BinaryHeap<Reverse<InFlight>>,
     seq: u64,
@@ -103,8 +116,7 @@ impl Mesh {
         let routers = (0..n).map(|c| Router::new(c, cfg.router_buf_cap)).collect();
         let mc_attach = (0..cfg.num_mcs()).map(|m| cfg.mc_attach_cube(m)).collect();
         Self {
-            cols: cfg.mesh_cols,
-            rows: cfg.mesh_rows,
+            topo: cfg.topology_obj(),
             routers,
             wire: BinaryHeap::new(),
             seq: 0,
@@ -118,46 +130,44 @@ impl Mesh {
         }
     }
 
+    /// The geometry this fabric is switching over.
+    pub fn topology(&self) -> &AnyTopology {
+        &self.topo
+    }
+
+    pub fn num_cubes(&self) -> usize {
+        self.topo.num_nodes()
+    }
+
+    /// Largest hop distance in the network ([`Topology::diameter`]) —
+    /// the agent's hop-history normaliser derives from this.
+    pub fn diameter(&self) -> u32 {
+        self.topo.diameter()
+    }
+
     pub fn xy(&self, cube: CubeId) -> (usize, usize) {
-        (cube % self.cols, cube / self.cols)
+        self.topo.coords(cube)
     }
 
     pub fn cube_at(&self, x: usize, y: usize) -> CubeId {
-        y * self.cols + x
+        self.topo.node_at(x, y)
     }
 
-    /// Mesh neighbours of a cube (2–4 of them).
+    /// Link neighbours of a cube (2–4, in fixed N/S/W/E port order —
+    /// see [`Topology::neighbors`]).
     pub fn neighbors(&self, cube: CubeId) -> Vec<CubeId> {
-        let (x, y) = self.xy(cube);
-        let mut out = Vec::with_capacity(4);
-        if y > 0 {
-            out.push(self.cube_at(x, y - 1));
-        }
-        if y + 1 < self.rows {
-            out.push(self.cube_at(x, y + 1));
-        }
-        if x > 0 {
-            out.push(self.cube_at(x - 1, y));
-        }
-        if x + 1 < self.cols {
-            out.push(self.cube_at(x + 1, y));
-        }
-        out
+        self.topo.neighbors(cube)
     }
 
-    /// Diagonal-opposite cube in the 2D array (the paper's "far" target).
-    pub fn diagonal_opposite(&self, cube: CubeId) -> CubeId {
-        let (x, y) = self.xy(cube);
-        self.cube_at(self.cols - 1 - x, self.rows - 1 - y)
+    /// The topology's "far" cube (the paper's mesh diagonal opposite,
+    /// generalized — [`Topology::distant_cube`]).
+    pub fn distant_cube(&self, cube: CubeId) -> CubeId {
+        self.topo.distant_cube(cube)
     }
 
-    /// Manhattan hop distance between two nodes' routers.
+    /// Minimal hop distance between two nodes' routers.
     pub fn hop_distance(&self, a: NodeId, b: NodeId) -> u32 {
-        let ra = self.router_of(a);
-        let rb = self.router_of(b);
-        let (ax, ay) = self.xy(ra);
-        let (bx, by) = self.xy(rb);
-        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+        self.topo.hop_distance(self.router_of(a), self.router_of(b))
     }
 
     pub fn router_of(&self, node: NodeId) -> CubeId {
@@ -176,7 +186,9 @@ impl Mesh {
         self.next_packet_id
     }
 
-    /// XY output port at router `at` toward destination router `dst`.
+    /// Output port at router `at` toward destination router `dst`:
+    /// ejection at the destination, else the topology's deterministic
+    /// minimal route ([`Topology::route`]).
     fn route(&self, at: CubeId, dst_router: CubeId, dst: NodeId) -> Dir {
         if at == dst_router {
             return match dst {
@@ -184,17 +196,7 @@ impl Mesh {
                 NodeId::Mc(_) => Dir::Mc,
             };
         }
-        let (x, y) = self.xy(at);
-        let (dx, dy) = self.xy(dst_router);
-        if x < dx {
-            Dir::East
-        } else if x > dx {
-            Dir::West
-        } else if y < dy {
-            Dir::South
-        } else {
-            Dir::North
-        }
+        self.topo.route(at, dst_router)
     }
 
     /// Inject a packet at its source node. Fails (backpressure) when the
@@ -310,20 +312,26 @@ impl Mesh {
                 self.delivered_mc[mc].push(pk);
             }
             dir => {
-                // Mesh hop: check link availability + downstream credit.
+                // Network hop: check link availability + downstream credit.
                 if self.routers[ri].link_busy_until[out_idx] > now {
                     return;
                 }
-                let (x, y) = self.xy(at);
-                let next = match dir {
-                    Dir::North => self.cube_at(x, y - 1),
-                    Dir::South => self.cube_at(x, y + 1),
-                    Dir::East => self.cube_at(x + 1, y),
-                    Dir::West => self.cube_at(x - 1, y),
-                    _ => unreachable!(),
-                };
+                let next = self
+                    .topo
+                    .neighbor(at, dir)
+                    .expect("minimal route follows an existing link");
                 let in_port = dir.opposite() as usize;
-                if self.routers[next].free_slots(in_port, class) == 0 {
+                // Bubble flow control on wraparound topologies: a packet
+                // *entering* a dimension ring (from the Local/Mc port or
+                // after a dimension turn) must leave one slot free, so
+                // the ring's buffers can never fill into a circular
+                // wait; packets continuing within the dimension keep the
+                // ordinary one-slot credit check and drain the ring. On
+                // the mesh (no wraparound) this is exactly the original
+                // credit check — bit-identical behavior.
+                let entering = Dir::from_index(port).dimension() != dir.dimension();
+                let needed = if self.topo.wraparound() && entering { 2 } else { 1 };
+                if self.routers[next].free_slots(in_port, class) < needed {
                     return;
                 }
                 let mut pk = self.routers[ri].in_q[port][class].pop().unwrap();
@@ -360,7 +368,10 @@ impl Mesh {
     /// state (event engine, DESIGN.md §8). Any buffered packet
     /// arbitrates — and rotates round-robin pointers — every cycle, so
     /// a non-empty router forces the next cycle; otherwise the fabric
-    /// sleeps until the earliest in-flight wire arrival.
+    /// sleeps until the earliest in-flight wire arrival. This argument
+    /// is purely occupancy-based — which links packets ride (including
+    /// torus/ring wraparound wires) never enters it — so the skip stays
+    /// legal on every topology.
     pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
         if self.routers.iter().any(|r| r.buffered_count > 0) {
             return Some(now);
@@ -455,15 +466,15 @@ mod tests {
     }
 
     #[test]
-    fn diagonal_opposite_involution() {
+    fn distant_cube_is_diagonal_involution_on_mesh() {
         let cfg = test_cfg();
         let mesh = Mesh::new(&cfg);
         for cube in 0..16 {
-            let opp = mesh.diagonal_opposite(cube);
-            assert_eq!(mesh.diagonal_opposite(opp), cube);
+            let opp = mesh.distant_cube(cube);
+            assert_eq!(mesh.distant_cube(opp), cube);
         }
-        assert_eq!(mesh.diagonal_opposite(0), 15);
-        assert_eq!(mesh.diagonal_opposite(5), 10);
+        assert_eq!(mesh.distant_cube(0), 15);
+        assert_eq!(mesh.distant_cube(5), 10);
     }
 
     #[test]
@@ -550,5 +561,104 @@ mod tests {
         mesh.inject(pk).unwrap();
         run_until_idle(&mut mesh, 0, 1000);
         assert_eq!(mesh.stats.bit_hops, bits * 3);
+    }
+
+    // ----- non-mesh topologies through the same fabric -----
+
+    use crate::config::TopologyKind;
+
+    fn topo_cfg(kind: TopologyKind) -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.topology = kind;
+        cfg
+    }
+
+    #[test]
+    fn torus_delivers_corner_to_corner_over_wraparound() {
+        let mut mesh = Mesh::new(&topo_cfg(TopologyKind::Torus));
+        let pk = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(15), 0);
+        mesh.inject(pk).unwrap();
+        run_until_idle(&mut mesh, 0, 1000);
+        assert_eq!(mesh.delivered_cube[15].len(), 1);
+        // (0,0) → (3,3) on a 4x4 torus: one West wrap + one North wrap.
+        assert_eq!(mesh.delivered_cube[15][0].hops, 2);
+    }
+
+    #[test]
+    fn ring_delivers_along_the_shorter_arc() {
+        let mut mesh = Mesh::new(&topo_cfg(TopologyKind::Ring));
+        let near = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(15), 0);
+        mesh.inject(near).unwrap();
+        run_until_idle(&mut mesh, 0, 1000);
+        assert_eq!(mesh.delivered_cube[15].len(), 1);
+        assert_eq!(mesh.delivered_cube[15][0].hops, 1, "0 → 15 wraps West");
+        let far = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(8), 0);
+        mesh.inject(far).unwrap();
+        run_until_idle(&mut mesh, 0, 2000);
+        assert_eq!(mesh.delivered_cube[8].len(), 1);
+        assert_eq!(mesh.delivered_cube[8][0].hops, 8, "0 → 8 is the diameter");
+    }
+
+    #[test]
+    fn ring_mc_ports_sit_at_quarter_points() {
+        let mut mesh = Mesh::new(&topo_cfg(TopologyKind::Ring));
+        assert_eq!(mesh.mc_attach_cube(2), 8);
+        let pk = mk_packet(&mut mesh, NodeId::Cube(5), NodeId::Mc(2), 0);
+        mesh.inject(pk).unwrap();
+        run_until_idle(&mut mesh, 0, 1000);
+        assert_eq!(mesh.delivered_mc[2].len(), 1);
+        assert_eq!(mesh.delivered_mc[2][0].hops, 3);
+    }
+
+    /// Storm test under minimal legal buffering: bubble flow control must
+    /// keep the wraparound dimension rings draining (a full circular wait
+    /// would show up here as a never-idle fabric).
+    #[test]
+    fn wraparound_storms_drain_with_min_buffers() {
+        for kind in [TopologyKind::Torus, TopologyKind::Ring] {
+            let mut cfg = topo_cfg(kind);
+            cfg.router_buf_cap = 2;
+            cfg.validate().unwrap();
+            let mut mesh = Mesh::new(&cfg);
+            let mut to_send: Vec<Packet> = (0..96)
+                .map(|i| {
+                    let src = NodeId::Cube((i * 5) % 16);
+                    let dst = NodeId::Cube((i * 11 + 7) % 16);
+                    mk_packet(&mut mesh, src, dst, 0)
+                })
+                .collect();
+            let mut now: Cycle = 0;
+            let mut sent = 0u64;
+            while sent < 96 || !mesh.is_idle() {
+                while let Some(pk) = to_send.pop() {
+                    match mesh.inject(pk) {
+                        Ok(()) => sent += 1,
+                        Err(pk) => {
+                            to_send.push(pk);
+                            break;
+                        }
+                    }
+                }
+                mesh.tick(now);
+                now += 1;
+                assert!(now < 200_000, "{kind:?} network did not drain");
+            }
+            assert_eq!(mesh.stats.delivered, 96, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn next_event_sleeps_on_wraparound_wire_arrivals() {
+        let mut mesh = Mesh::new(&topo_cfg(TopologyKind::Torus));
+        let pk = mk_packet(&mut mesh, NodeId::Cube(0), NodeId::Cube(12), 0);
+        mesh.inject(pk).unwrap();
+        assert_eq!(mesh.next_event(0), Some(0), "buffered packet arbitrates now");
+        mesh.tick(0); // forwards onto the North wraparound wire
+        let at = mesh.next_event(1).expect("packet in flight on a wrap link");
+        assert!(at > 1, "wire arrival is in the future, got {at}");
+        run_until_idle(&mut mesh, 1, 1000);
+        assert_eq!(mesh.delivered_cube[12].len(), 1);
+        assert_eq!(mesh.delivered_cube[12][0].hops, 1);
+        assert_eq!(mesh.next_event(1000), None);
     }
 }

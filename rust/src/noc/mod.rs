@@ -1,15 +1,40 @@
-//! Memory-cube network: a 2D mesh of 6-port, 3-stage-pipeline routers with
-//! virtual-channel buffering, credit (token) flow control and static XY
-//! routing — Table 1's "4×4 mesh, 3 stage router, 128 bit link bandwidth".
+//! The memory-cube network: 6-port, 3-stage-pipeline routers with
+//! per-class buffering, credit (token) flow control, link serialization
+//! and deterministic minimal routing over a **pluggable topology** —
+//! Table 1's "4×4 mesh, 3 stage router, 128 bit link bandwidth" by
+//! default, with torus and ring alternatives for scale-out studies
+//! (`SystemConfig::topology`, EXPERIMENTS.md §Topology).
+//!
+//! Layout of the module:
+//!
+//! * [`topology`] — the geometric contract ([`topology::Topology`]):
+//!   coordinates, link sets, minimal routing, hop distances, MC
+//!   placement and the agent's "far cube". Three implementations:
+//!   [`topology::Mesh2D`] (the paper's network, bit-identical to the
+//!   pre-topology simulator), [`topology::Torus2D`] (wraparound links,
+//!   half the diameter) and [`topology::Ring`] (worst-case diameter).
+//! * [`router`] — per-router state: input queues per (port, class),
+//!   link-serialization bookkeeping, round-robin arbitration pointer.
+//! * [`packet`] — the protocol vocabulary: NMP dispatch, operand
+//!   fetch/response, write-back, ACKs and migration DMA, with per-payload
+//!   sizes feeding serialization and the §7.7 energy model.
+//! * [`mesh`] — the fabric itself: injection, switch allocation,
+//!   in-flight wires, delivery queues and [`mesh::NocStats`] (hops,
+//!   latency, queue wait, bit-hops for Fig 7 and the energy model).
 //!
 //! Two traffic classes (request / response) ride disjoint buffer pools,
 //! which is how the real design uses its 5 VCs to rule out protocol
-//! deadlock (§6.2); within a class, XY routing is deadlock-free.
+//! deadlock (§6.2). Within a class, dimension-ordered routing is
+//! deadlock-free on the mesh; the wraparound topologies additionally run
+//! bubble flow control (see [`mesh`]'s module docs) so their dimension
+//! rings can never fill into a circular wait.
 
 pub mod mesh;
 pub mod packet;
 pub mod router;
+pub mod topology;
 
 pub use mesh::{Mesh, NocStats};
 pub use packet::{NodeId, Packet, Payload, TrafficClass};
 pub use router::{Dir, Router};
+pub use topology::{AnyTopology, Mesh2D, Ring, Topology, Torus2D};

@@ -3,14 +3,18 @@
 //! Packets are the unit of switching; serialization over the 128-bit links
 //! is charged as `ceil(size_bits / link_bits)` cycles of link occupancy per
 //! hop. Payloads carry the simulation-level protocol: NMP-op dispatch,
-//! operand fetches, write-backs, ACKs, and migration DMA traffic.
+//! operand fetches, write-backs, ACKs, and migration DMA traffic. The
+//! vocabulary is topology-neutral — a packet names endpoints
+//! ([`NodeId`]), never links; which wires it rides is decided hop by hop
+//! by the fabric's routing function ([`super::topology`]).
 
 use crate::config::{CubeId, McId, VAddr};
 use crate::cube::PhysAddr;
 use crate::sim::Cycle;
 
 /// Endpoint of the network: a memory cube or a memory controller (MCs hang
-/// off their corner cube's router through a dedicated port).
+/// off their attach cube's router through a dedicated port — corners on
+/// mesh/torus, quarter points on the ring).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum NodeId {
     Cube(CubeId),

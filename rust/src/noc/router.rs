@@ -1,6 +1,9 @@
-//! 6-port mesh router: 4 mesh directions, a local (cube) port and an MC
-//! port. Three-stage pipeline per hop, per-class input buffering, credit
-//! flow control handled by the owning [`Mesh`](super::mesh::Mesh).
+//! 6-port cube router: 4 network directions, a local (cube) port and an
+//! MC port. Three-stage pipeline per hop, per-class input buffering,
+//! credit flow control handled by the owning [`Mesh`](super::mesh::Mesh).
+//! The same router serves every topology: the torus reuses all four
+//! direction ports for its wraparound links, the ring uses only
+//! East/West (see [`super::topology`]).
 
 use crate::config::CubeId;
 use crate::sim::{BoundedQueue, Cycle};
@@ -42,6 +45,19 @@ impl Dir {
             Dir::East => Dir::West,
             Dir::West => Dir::East,
             d => d,
+        }
+    }
+
+    /// Which network dimension the port belongs to: `Some(0)` for X
+    /// (East/West), `Some(1)` for Y (North/South), `None` for the
+    /// Local/Mc endpoint ports. Bubble flow control compares the input
+    /// and output dimensions to detect packets *entering* a wraparound
+    /// ring (see `Mesh::try_forward` in [`super::mesh`]).
+    pub fn dimension(self) -> Option<usize> {
+        match self {
+            Dir::East | Dir::West => Some(0),
+            Dir::North | Dir::South => Some(1),
+            Dir::Local | Dir::Mc => None,
         }
     }
 }
@@ -117,6 +133,16 @@ mod tests {
         assert_eq!(Dir::North.opposite(), Dir::South);
         assert_eq!(Dir::East.opposite(), Dir::West);
         assert_eq!(Dir::Local.opposite(), Dir::Local);
+    }
+
+    #[test]
+    fn dimensions_partition_the_ports() {
+        assert_eq!(Dir::East.dimension(), Some(0));
+        assert_eq!(Dir::West.dimension(), Some(0));
+        assert_eq!(Dir::North.dimension(), Some(1));
+        assert_eq!(Dir::South.dimension(), Some(1));
+        assert_eq!(Dir::Local.dimension(), None);
+        assert_eq!(Dir::Mc.dimension(), None);
     }
 
     #[test]

@@ -1,0 +1,782 @@
+//! Pluggable cube-network topologies.
+//!
+//! The paper evaluates AIMM on one fixed interconnect — a 2D mesh with
+//! four corner-attached memory controllers (Table 1) — but its premise
+//! is a *scalable memory-cube network*, and the learned remapping only
+//! becomes interesting where hop-distance structure varies. This module
+//! owns every geometric fact the rest of the simulator needs, behind the
+//! [`Topology`] trait:
+//!
+//! * node coordinates and labels ([`Topology::coords`] / [`Topology::node_at`]),
+//! * the physical link set ([`Topology::neighbor`] / [`Topology::neighbors`]),
+//! * deterministic minimal routing ([`Topology::route`]) and
+//!   [`Topology::hop_distance`],
+//! * the "far" target of the agent's FarData/FarCompute actions
+//!   ([`Topology::distant_cube`] — the mesh's diagonal opposite,
+//!   generalized),
+//! * MC placement: attach points ([`Topology::mc_attach_cube`]), the
+//!   "nearest cubes" partition each MC aggregates counters over
+//!   ([`Topology::mc_nearest_cubes`], paper §5.1), and the inverse map
+//!   ([`Topology::cube_home_mc`]).
+//!
+//! Three implementations ship:
+//!
+//! * [`Mesh2D`] — the paper's network, bit-identical to the pre-topology
+//!   simulator (the sweep golden fixture and the engine-equivalence grid
+//!   both pin this),
+//! * [`Torus2D`] — the mesh plus wraparound links: per-dimension diameter
+//!   halves, so remapping pressure drops,
+//! * [`Ring`] — all cubes on one cycle: the worst-case-diameter stress
+//!   topology for scale-out studies.
+//!
+//! [`AnyTopology`] is the `Copy` enum the fabric and the config carry;
+//! construction goes through [`AnyTopology::of`] /
+//! [`SystemConfig::topology_obj`](crate::config::SystemConfig::topology_obj).
+//!
+//! ## Determinism
+//!
+//! Every method is a pure function of (kind, cols, rows) and its
+//! arguments. Tie-breaks are fixed: torus routing prefers East/South when
+//! both orientations of a dimension are equidistant, the ring prefers its
+//! East (increasing-id) orientation. No RNG, no iteration over hash maps
+//! — the sweep-determinism and golden-fixture tests depend on this.
+//!
+//! ## Deadlock freedom
+//!
+//! Dimension-ordered (XY) routing on the mesh is deadlock-free as is.
+//! Wraparound links add cyclic channel dependencies *within* a dimension,
+//! which the fabric breaks with bubble flow control (a packet may only
+//! enter a dimension ring if it leaves a free slot behind — see
+//! `Mesh::try_forward` in [`super::mesh`]); [`Topology::wraparound`]
+//! tells the fabric whether that rule is needed, and
+//! [`crate::config::SystemConfig::validate`] enforces the
+//! `router_buf_cap >= 2` it requires.
+
+use crate::config::{CubeId, McId, SystemConfig, TopologyKind};
+
+use super::router::Dir;
+
+/// Number of memory controllers — fixed at the paper's 4 CMP corners for
+/// every topology (the *placement* of those 4 varies per topology).
+pub const NUM_MCS: usize = 4;
+
+/// Geometric contract of a cube network. Implementations must be pure:
+/// same inputs, same outputs, forever (see the module docs on
+/// determinism).
+pub trait Topology {
+    /// Which variant this is (for labels, reports and dispatch).
+    fn kind(&self) -> TopologyKind;
+
+    /// Total number of cubes (= routers).
+    fn num_nodes(&self) -> usize;
+
+    /// Grid label of a node: `(x, y)` with `id = y * cols + x`. The ring
+    /// keeps the same row-major labelling; only its *links* differ.
+    fn coords(&self, node: CubeId) -> (usize, usize);
+
+    /// Inverse of [`coords`](Self::coords).
+    fn node_at(&self, x: usize, y: usize) -> CubeId;
+
+    /// The node reached by leaving `node` through port `dir`, if that
+    /// physical link exists. `Local`/`Mc` ports never lead anywhere.
+    fn neighbor(&self, node: CubeId, dir: Dir) -> Option<CubeId>;
+
+    /// All link neighbours of `node`, in fixed North, South, West, East
+    /// port order (matching the pre-topology mesh helper — the agent's
+    /// NearData action draws from this list by index, so the order is
+    /// part of the determinism contract). Duplicates collapse: on a
+    /// 2-wide torus dimension both orientations reach the same node.
+    fn neighbors(&self, node: CubeId) -> Vec<CubeId> {
+        let mut out = Vec::with_capacity(4);
+        for dir in [Dir::North, Dir::South, Dir::West, Dir::East] {
+            if let Some(n) = self.neighbor(node, dir) {
+                if !out.contains(&n) {
+                    out.push(n);
+                }
+            }
+        }
+        out
+    }
+
+    /// Output port at `at` for a packet headed to `dst`, `at != dst`.
+    /// Must be minimal (following it from any `at` reaches `dst` in
+    /// exactly [`hop_distance`](Self::hop_distance) hops) and
+    /// deterministic.
+    fn route(&self, at: CubeId, dst: CubeId) -> Dir;
+
+    /// Minimal hop count between two routers.
+    fn hop_distance(&self, a: CubeId, b: CubeId) -> u32;
+
+    /// Largest [`hop_distance`](Self::hop_distance) over all node pairs.
+    fn diameter(&self) -> u32;
+
+    /// The "far" cube the agent's FarData/FarCompute actions target. On
+    /// the mesh this is the paper's definition — the diagonal opposite
+    /// of the 2D array (diameter-distant from the corners, the
+    /// array-wide reflection elsewhere); on the vertex-transitive torus
+    /// and ring it is a diameter-distant cube from every node.
+    fn distant_cube(&self, from: CubeId) -> CubeId;
+
+    /// Whether any link wraps around (torus/ring): the fabric then
+    /// applies bubble flow control (module docs).
+    fn wraparound(&self) -> bool;
+
+    /// Number of memory controllers (fixed at [`NUM_MCS`]).
+    fn num_mcs(&self) -> usize {
+        NUM_MCS
+    }
+
+    /// The cube whose router MC `mc` hangs off.
+    fn mc_attach_cube(&self, mc: McId) -> CubeId;
+
+    /// The MC that owns `cube`: the target of its periodic occupancy /
+    /// row-hit reports (paper §5.1 "communicated to a cube's nearest
+    /// memory controller periodically").
+    fn cube_home_mc(&self, cube: CubeId) -> McId;
+
+    /// The cubes MC `mc` aggregates counters over, in ascending cube-id
+    /// order. Derived from [`cube_home_mc`](Self::cube_home_mc), so it is
+    /// an exact partition for *any* dimensions — including odd and
+    /// rectangular ones, where the seed simulator's standalone quadrant
+    /// rectangles silently overlapped.
+    fn mc_nearest_cubes(&self, mc: McId) -> Vec<CubeId> {
+        (0..self.num_nodes()).filter(|&c| self.cube_home_mc(c) == mc).collect()
+    }
+}
+
+/// The paper's 2D mesh: bounds-checked links, XY routing, MCs on the four
+/// corner cubes, quadrant "nearest cubes" partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh2D {
+    cols: usize,
+    rows: usize,
+}
+
+impl Mesh2D {
+    pub fn new(cols: usize, rows: usize) -> Self {
+        Self { cols, rows }
+    }
+}
+
+impl Topology for Mesh2D {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Mesh
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    fn coords(&self, node: CubeId) -> (usize, usize) {
+        (node % self.cols, node / self.cols)
+    }
+
+    fn node_at(&self, x: usize, y: usize) -> CubeId {
+        y * self.cols + x
+    }
+
+    fn neighbor(&self, node: CubeId, dir: Dir) -> Option<CubeId> {
+        let (x, y) = self.coords(node);
+        match dir {
+            Dir::North if y > 0 => Some(self.node_at(x, y - 1)),
+            Dir::South if y + 1 < self.rows => Some(self.node_at(x, y + 1)),
+            Dir::West if x > 0 => Some(self.node_at(x - 1, y)),
+            Dir::East if x + 1 < self.cols => Some(self.node_at(x + 1, y)),
+            _ => None,
+        }
+    }
+
+    /// Dimension-ordered XY: resolve the X offset first, then Y —
+    /// byte-identical to the pre-topology `Mesh::route`.
+    fn route(&self, at: CubeId, dst: CubeId) -> Dir {
+        debug_assert_ne!(at, dst, "route called at the destination router");
+        let (x, y) = self.coords(at);
+        let (dx, dy) = self.coords(dst);
+        if x < dx {
+            Dir::East
+        } else if x > dx {
+            Dir::West
+        } else if y < dy {
+            Dir::South
+        } else {
+            Dir::North
+        }
+    }
+
+    fn hop_distance(&self, a: CubeId, b: CubeId) -> u32 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+    }
+
+    fn diameter(&self) -> u32 {
+        (self.cols - 1 + self.rows - 1) as u32
+    }
+
+    /// Diagonal opposite in the 2D array (the paper's "far" target).
+    fn distant_cube(&self, from: CubeId) -> CubeId {
+        let (x, y) = self.coords(from);
+        self.node_at(self.cols - 1 - x, self.rows - 1 - y)
+    }
+
+    fn wraparound(&self) -> bool {
+        false
+    }
+
+    /// MCs at the four corner cubes (Table 1).
+    fn mc_attach_cube(&self, mc: McId) -> CubeId {
+        let (c, r) = (self.cols, self.rows);
+        match mc {
+            0 => 0,
+            1 => c - 1,
+            2 => (r - 1) * c,
+            3 => r * c - 1,
+            _ => panic!("mc index out of range: {mc}"),
+        }
+    }
+
+    /// Quadrant of the attach corner: left/right split at `cols / 2`,
+    /// top/bottom at `rows / 2` (for even dimensions this reproduces the
+    /// seed simulator's rectangles exactly; for odd dimensions the
+    /// right/bottom quadrants take the middle row/column).
+    fn cube_home_mc(&self, cube: CubeId) -> McId {
+        let (x, y) = self.coords(cube);
+        let right = x >= self.cols / 2;
+        let bottom = y >= self.rows / 2;
+        match (right, bottom) {
+            (false, false) => 0,
+            (true, false) => 1,
+            (false, true) => 2,
+            (true, true) => 3,
+        }
+    }
+}
+
+/// The mesh plus wraparound links in both dimensions: every router has
+/// all four neighbours, per-dimension distance wraps, diameter halves.
+/// MC placement and quadrant partitions match [`Mesh2D`] so mesh↔torus
+/// comparisons isolate the link set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Torus2D {
+    /// MC placement and labelling are shared with the mesh.
+    grid: Mesh2D,
+}
+
+impl Torus2D {
+    pub fn new(cols: usize, rows: usize) -> Self {
+        Self { grid: Mesh2D::new(cols, rows) }
+    }
+
+    fn cols(&self) -> usize {
+        self.grid.cols
+    }
+
+    fn rows(&self) -> usize {
+        self.grid.rows
+    }
+}
+
+impl Topology for Torus2D {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Torus
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.grid.num_nodes()
+    }
+
+    fn coords(&self, node: CubeId) -> (usize, usize) {
+        self.grid.coords(node)
+    }
+
+    fn node_at(&self, x: usize, y: usize) -> CubeId {
+        self.grid.node_at(x, y)
+    }
+
+    fn neighbor(&self, node: CubeId, dir: Dir) -> Option<CubeId> {
+        let (c, r) = (self.cols(), self.rows());
+        let (x, y) = self.coords(node);
+        match dir {
+            Dir::North => Some(self.node_at(x, (y + r - 1) % r)),
+            Dir::South => Some(self.node_at(x, (y + 1) % r)),
+            Dir::West => Some(self.node_at((x + c - 1) % c, y)),
+            Dir::East => Some(self.node_at((x + 1) % c, y)),
+            _ => None,
+        }
+    }
+
+    /// Dimension-ordered XY with per-dimension shortest orientation;
+    /// equidistant wraps tie-break East/South (fixed, so routes are
+    /// deterministic).
+    fn route(&self, at: CubeId, dst: CubeId) -> Dir {
+        debug_assert_ne!(at, dst, "route called at the destination router");
+        let (c, r) = (self.cols(), self.rows());
+        let (x, y) = self.coords(at);
+        let (dx, dy) = self.coords(dst);
+        if x != dx {
+            let east = (dx + c - x) % c;
+            let west = (x + c - dx) % c;
+            if east <= west {
+                Dir::East
+            } else {
+                Dir::West
+            }
+        } else {
+            let south = (dy + r - y) % r;
+            let north = (y + r - dy) % r;
+            if south <= north {
+                Dir::South
+            } else {
+                Dir::North
+            }
+        }
+    }
+
+    fn hop_distance(&self, a: CubeId, b: CubeId) -> u32 {
+        let (c, r) = (self.cols(), self.rows());
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        let dx = ax.abs_diff(bx);
+        let dy = ay.abs_diff(by);
+        (dx.min(c - dx) + dy.min(r - dy)) as u32
+    }
+
+    fn diameter(&self) -> u32 {
+        (self.cols() / 2 + self.rows() / 2) as u32
+    }
+
+    /// Half a wrap in each dimension — a maximally distant node.
+    fn distant_cube(&self, from: CubeId) -> CubeId {
+        let (c, r) = (self.cols(), self.rows());
+        let (x, y) = self.coords(from);
+        self.node_at((x + c / 2) % c, (y + r / 2) % r)
+    }
+
+    fn wraparound(&self) -> bool {
+        true
+    }
+
+    fn mc_attach_cube(&self, mc: McId) -> CubeId {
+        self.grid.mc_attach_cube(mc)
+    }
+
+    fn cube_home_mc(&self, cube: CubeId) -> McId {
+        self.grid.cube_home_mc(cube)
+    }
+}
+
+/// All cubes on a single cycle in id order: node `i` links East to
+/// `i + 1 (mod n)` and West to `i - 1 (mod n)`. The diameter grows as
+/// `n / 2` — the stress case for hop-sensitive mapping. MCs sit at the
+/// four quarter points and own the contiguous arc of cubes *nearest*
+/// their attach point (ring distance, ties to the lower MC id) — the
+/// §5.1 "nearest memory controller" contract, literally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ring {
+    nodes: usize,
+    /// Retained only for the row-major `coords` labelling.
+    cols: usize,
+}
+
+impl Ring {
+    pub fn new(cols: usize, rows: usize) -> Self {
+        Self { nodes: cols * rows, cols }
+    }
+
+    /// MC `mc`'s attach cube: the quarter points `mc * n / 4`, rounded
+    /// down — distinct for every `n >= 4`, which
+    /// `SystemConfig::validate` guarantees via the 2×2 minimum.
+    fn attach(&self, mc: McId) -> CubeId {
+        assert!(mc < NUM_MCS, "mc index out of range: {mc}");
+        mc * self.nodes / NUM_MCS
+    }
+}
+
+impl Topology for Ring {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Ring
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn coords(&self, node: CubeId) -> (usize, usize) {
+        (node % self.cols, node / self.cols)
+    }
+
+    fn node_at(&self, x: usize, y: usize) -> CubeId {
+        y * self.cols + x
+    }
+
+    fn neighbor(&self, node: CubeId, dir: Dir) -> Option<CubeId> {
+        let n = self.nodes;
+        match dir {
+            Dir::East => Some((node + 1) % n),
+            Dir::West => Some((node + n - 1) % n),
+            _ => None,
+        }
+    }
+
+    /// Shortest way around; equidistant (diametrically opposite on an
+    /// even ring) tie-breaks East.
+    fn route(&self, at: CubeId, dst: CubeId) -> Dir {
+        debug_assert_ne!(at, dst, "route called at the destination router");
+        let n = self.nodes;
+        let east = (dst + n - at) % n;
+        let west = n - east;
+        if east <= west {
+            Dir::East
+        } else {
+            Dir::West
+        }
+    }
+
+    fn hop_distance(&self, a: CubeId, b: CubeId) -> u32 {
+        let n = self.nodes;
+        let d = (b + n - a) % n;
+        d.min(n - d) as u32
+    }
+
+    fn diameter(&self) -> u32 {
+        (self.nodes / 2) as u32
+    }
+
+    /// Halfway around the cycle.
+    fn distant_cube(&self, from: CubeId) -> CubeId {
+        (from + self.nodes / 2) % self.nodes
+    }
+
+    fn wraparound(&self) -> bool {
+        true
+    }
+
+    fn mc_attach_cube(&self, mc: McId) -> CubeId {
+        self.attach(mc)
+    }
+
+    /// The MC with the smallest ring distance to its attach cube; an
+    /// equidistant tie (exactly between two quarter points) goes to the
+    /// lower MC id. Each MC's set is a contiguous arc centred on its
+    /// attach, so reports travel at most ~n/8 hops instead of up to
+    /// n/4 − 1 under a start-of-arc assignment.
+    fn cube_home_mc(&self, cube: CubeId) -> McId {
+        let mut best = 0;
+        let mut best_d = u32::MAX;
+        for mc in 0..NUM_MCS {
+            let d = self.hop_distance(cube, self.attach(mc));
+            if d < best_d {
+                best = mc;
+                best_d = d;
+            }
+        }
+        best
+    }
+}
+
+/// The topology object carried by the fabric and the config: a `Copy`
+/// enum (no allocation on construction) dispatching to the three
+/// implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnyTopology {
+    Mesh(Mesh2D),
+    Torus(Torus2D),
+    Ring(Ring),
+}
+
+impl AnyTopology {
+    pub fn new(kind: TopologyKind, cols: usize, rows: usize) -> Self {
+        match kind {
+            TopologyKind::Mesh => AnyTopology::Mesh(Mesh2D::new(cols, rows)),
+            TopologyKind::Torus => AnyTopology::Torus(Torus2D::new(cols, rows)),
+            TopologyKind::Ring => AnyTopology::Ring(Ring::new(cols, rows)),
+        }
+    }
+
+    /// The topology a configuration describes.
+    pub fn of(cfg: &SystemConfig) -> Self {
+        Self::new(cfg.topology, cfg.mesh_cols, cfg.mesh_rows)
+    }
+
+}
+
+/// Static dispatch to the concrete variant — `route`/`neighbor`/
+/// `wraparound` sit on the per-packet forwarding hot path, so the match
+/// (fully inlinable) beats a `&dyn Topology` vtable hop.
+macro_rules! dispatch {
+    ($self:ident . $($call:tt)*) => {
+        match $self {
+            AnyTopology::Mesh(t) => t.$($call)*,
+            AnyTopology::Torus(t) => t.$($call)*,
+            AnyTopology::Ring(t) => t.$($call)*,
+        }
+    };
+}
+
+impl Topology for AnyTopology {
+    fn kind(&self) -> TopologyKind {
+        dispatch!(self.kind())
+    }
+
+    fn num_nodes(&self) -> usize {
+        dispatch!(self.num_nodes())
+    }
+
+    fn coords(&self, node: CubeId) -> (usize, usize) {
+        dispatch!(self.coords(node))
+    }
+
+    fn node_at(&self, x: usize, y: usize) -> CubeId {
+        dispatch!(self.node_at(x, y))
+    }
+
+    fn neighbor(&self, node: CubeId, dir: Dir) -> Option<CubeId> {
+        dispatch!(self.neighbor(node, dir))
+    }
+
+    fn neighbors(&self, node: CubeId) -> Vec<CubeId> {
+        dispatch!(self.neighbors(node))
+    }
+
+    fn route(&self, at: CubeId, dst: CubeId) -> Dir {
+        dispatch!(self.route(at, dst))
+    }
+
+    fn hop_distance(&self, a: CubeId, b: CubeId) -> u32 {
+        dispatch!(self.hop_distance(a, b))
+    }
+
+    fn diameter(&self) -> u32 {
+        dispatch!(self.diameter())
+    }
+
+    fn distant_cube(&self, from: CubeId) -> CubeId {
+        dispatch!(self.distant_cube(from))
+    }
+
+    fn wraparound(&self) -> bool {
+        dispatch!(self.wraparound())
+    }
+
+    fn mc_attach_cube(&self, mc: McId) -> CubeId {
+        dispatch!(self.mc_attach_cube(mc))
+    }
+
+    fn cube_home_mc(&self, cube: CubeId) -> McId {
+        dispatch!(self.cube_home_mc(cube))
+    }
+
+    fn mc_nearest_cubes(&self, mc: McId) -> Vec<CubeId> {
+        dispatch!(self.mc_nearest_cubes(mc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_kinds(cols: usize, rows: usize) -> [AnyTopology; 3] {
+        [
+            AnyTopology::new(TopologyKind::Mesh, cols, rows),
+            AnyTopology::new(TopologyKind::Torus, cols, rows),
+            AnyTopology::new(TopologyKind::Ring, cols, rows),
+        ]
+    }
+
+    /// Walk `route` from `a` to `b`, asserting minimality.
+    fn walk(t: &AnyTopology, a: CubeId, b: CubeId) -> u32 {
+        let mut at = a;
+        let mut hops = 0;
+        while at != b {
+            let dir = t.route(at, b);
+            at = t.neighbor(at, dir).expect("route must follow an existing link");
+            hops += 1;
+            assert!(hops <= t.diameter(), "{:?}: {a}->{b} not minimal", t.kind());
+        }
+        hops
+    }
+
+    #[test]
+    fn routing_is_minimal_on_every_kind_and_shape() {
+        for (c, r) in [(4, 4), (3, 5), (8, 8), (2, 2)] {
+            for t in all_kinds(c, r) {
+                for a in 0..t.num_nodes() {
+                    for b in 0..t.num_nodes() {
+                        if a != b {
+                            assert_eq!(
+                                walk(&t, a, b),
+                                t.hop_distance(a, b),
+                                "{:?} {c}x{r}: {a}->{b}",
+                                t.kind()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_matches_pre_refactor_helpers_on_4x4() {
+        let t = AnyTopology::new(TopologyKind::Mesh, 4, 4);
+        // Corner-to-corner Manhattan distance and the diagonal opposite,
+        // as pinned by the seed simulator's tests.
+        assert_eq!(t.hop_distance(0, 15), 6);
+        assert_eq!(t.distant_cube(0), 15);
+        assert_eq!(t.distant_cube(5), 10);
+        // Neighbour sets in N, S, W, E order.
+        assert_eq!(t.neighbors(0), vec![4, 1]);
+        assert_eq!(t.neighbors(1), vec![5, 0, 2]);
+        assert_eq!(t.neighbors(5), vec![1, 9, 4, 6]);
+        // Corner MC attach + quadrants.
+        assert_eq!((0..4).map(|m| t.mc_attach_cube(m)).collect::<Vec<_>>(), vec![0, 3, 12, 15]);
+        assert_eq!(t.mc_nearest_cubes(0), vec![0, 1, 4, 5]);
+        assert_eq!(t.mc_nearest_cubes(3), vec![10, 11, 14, 15]);
+        assert_eq!(t.diameter(), 6);
+        assert!(!t.wraparound());
+    }
+
+    #[test]
+    fn torus_wraps_and_halves_the_diameter() {
+        let t = AnyTopology::new(TopologyKind::Torus, 4, 4);
+        // Corner to corner is two wraparound hops, not six.
+        assert_eq!(t.hop_distance(0, 15), 2);
+        assert_eq!(t.diameter(), 4);
+        assert!(t.wraparound());
+        // Every router has all four neighbours.
+        for n in 0..16 {
+            assert_eq!(t.neighbors(n).len(), 4, "node {n}");
+        }
+        // Wraparound links exist.
+        assert_eq!(t.neighbor(0, Dir::West), Some(3));
+        assert_eq!(t.neighbor(0, Dir::North), Some(12));
+        // The far target is half a wrap in each dimension.
+        assert_eq!(t.distant_cube(0), 10);
+        assert_eq!(t.distant_cube(10), 0, "even torus: distant is an involution");
+    }
+
+    #[test]
+    fn ring_is_a_single_cycle() {
+        let t = AnyTopology::new(TopologyKind::Ring, 4, 4);
+        assert_eq!(t.neighbor(15, Dir::East), Some(0));
+        assert_eq!(t.neighbor(0, Dir::West), Some(15));
+        assert_eq!(t.neighbor(0, Dir::North), None, "ring has no Y links");
+        assert_eq!(t.neighbors(0), vec![15, 1]);
+        assert_eq!(t.hop_distance(0, 15), 1);
+        assert_eq!(t.hop_distance(0, 8), 8);
+        assert_eq!(t.diameter(), 8);
+        assert_eq!(t.distant_cube(0), 8);
+        assert_eq!(t.distant_cube(3), 11);
+        assert!(t.wraparound());
+        // MCs at the quarter points, owning the contiguous arc centred
+        // on their attach cube (equidistant ties → lower MC id: cube 2
+        // sits 2 hops from both attach 0 and attach 4 and goes to MC 0).
+        assert_eq!((0..4).map(|m| t.mc_attach_cube(m)).collect::<Vec<_>>(), vec![0, 4, 8, 12]);
+        assert_eq!(t.mc_nearest_cubes(0), vec![0, 1, 2, 14, 15]);
+        assert_eq!(t.mc_nearest_cubes(1), vec![3, 4, 5, 6]);
+        assert_eq!(t.mc_nearest_cubes(3), vec![11, 12, 13]);
+    }
+
+    /// The §5.1 contract, literally: a ring cube reports to the MC whose
+    /// attach point is at minimal ring distance.
+    #[test]
+    fn ring_homes_cubes_to_their_nearest_attach() {
+        for (c, r) in [(4, 4), (3, 5), (8, 8)] {
+            let t = AnyTopology::new(TopologyKind::Ring, c, r);
+            for cube in 0..t.num_nodes() {
+                let home_d =
+                    t.hop_distance(cube, t.mc_attach_cube(t.cube_home_mc(cube)));
+                let min_d = (0..4)
+                    .map(|m| t.hop_distance(cube, t.mc_attach_cube(m)))
+                    .min()
+                    .unwrap();
+                assert_eq!(home_d, min_d, "{c}x{r} cube {cube}");
+            }
+        }
+    }
+
+    #[test]
+    fn route_tiebreaks_are_fixed() {
+        // Torus 4 wide: x offset of exactly 2 can go either way — East wins.
+        let t = AnyTopology::new(TopologyKind::Torus, 4, 4);
+        assert_eq!(t.route(0, 2), Dir::East);
+        assert_eq!(t.route(0, 8), Dir::South);
+        // Even ring: the diametric opposite tie-breaks East.
+        let r = AnyTopology::new(TopologyKind::Ring, 4, 4);
+        assert_eq!(r.route(0, 8), Dir::East);
+        assert_eq!(r.route(0, 9), Dir::West);
+    }
+
+    #[test]
+    fn nearest_cubes_partition_every_kind_and_shape() {
+        // Includes the odd and rectangular shapes whose pre-topology
+        // quadrant rectangles overlapped (the PR-4 bugfix).
+        for (c, r) in [(4, 4), (5, 5), (4, 2), (3, 5), (2, 7), (8, 8)] {
+            for t in all_kinds(c, r) {
+                let mut all: Vec<CubeId> =
+                    (0..4).flat_map(|m| t.mc_nearest_cubes(m)).collect();
+                all.sort_unstable();
+                assert_eq!(
+                    all,
+                    (0..c * r).collect::<Vec<_>>(),
+                    "{:?} {c}x{r}: nearest sets must partition the cubes",
+                    t.kind()
+                );
+                for mc in 0..4 {
+                    for cube in t.mc_nearest_cubes(mc) {
+                        assert_eq!(t.cube_home_mc(cube), mc, "{:?} {c}x{r} cube {cube}", t.kind());
+                    }
+                    assert!(
+                        t.mc_nearest_cubes(mc).contains(&t.mc_attach_cube(mc)),
+                        "{:?} {c}x{r}: MC {mc} must own its attach cube",
+                        t.kind()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distant_cube_reaches_far() {
+        // Torus and ring are vertex-transitive: the far target attains
+        // the diameter from *every* node.
+        for kind in [TopologyKind::Torus, TopologyKind::Ring] {
+            let t = AnyTopology::new(kind, 4, 4);
+            for n in 0..t.num_nodes() {
+                assert_eq!(
+                    t.hop_distance(n, t.distant_cube(n)),
+                    t.diameter(),
+                    "{kind:?} node {n}"
+                );
+            }
+        }
+        // The mesh's far target is the array-wide diagonal reflection
+        // (the paper's definition): it attains the diameter from the
+        // corners, and from an interior node it is the reflection, not
+        // a diameter-distance node.
+        let m = AnyTopology::new(TopologyKind::Mesh, 4, 4);
+        for corner in [0, 3, 12, 15] {
+            assert_eq!(m.hop_distance(corner, m.distant_cube(corner)), m.diameter());
+        }
+        assert_eq!(m.distant_cube(5), 10);
+    }
+
+    #[test]
+    fn coords_roundtrip_on_all_kinds() {
+        for t in all_kinds(3, 5) {
+            for n in 0..t.num_nodes() {
+                let (x, y) = t.coords(n);
+                assert_eq!(t.node_at(x, y), n, "{:?}", t.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn neighbors_deduplicate_on_two_wide_wraps() {
+        // 2-wide torus dimensions: East/West (and North/South) reach the
+        // same node, which must appear once, not twice.
+        let t = AnyTopology::new(TopologyKind::Torus, 2, 2);
+        assert_eq!(t.neighbors(0), vec![2, 1]);
+        assert_eq!(t.neighbors(3), vec![1, 2]);
+    }
+}

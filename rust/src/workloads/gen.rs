@@ -225,7 +225,7 @@ fn gen_km(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
     ops
 }
 
-/// MAC: dest[i] += a[i] * b[i] over two long sequential vectors —
+/// MAC: `dest[i] += a[i] * b[i]` over two long sequential vectors —
 /// pure streaming, three pages active at a time, no affinity structure
 /// beyond the aligned triple.
 fn gen_mac(pid: Pid, scale: f64, _rng: &mut Rng) -> Vec<NmpOp> {
@@ -377,7 +377,7 @@ fn gen_sc(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
     ops
 }
 
-/// SPMV: y[r] += A[r, c] * x[c] with power-law column reuse — result and
+/// SPMV: `y[r] += A[r, c] * x[c]` with power-law column reuse — result and
 /// value pages stream, x pages hit irregularly; ≈10 pages active per
 /// window with the highest compute spread (paper §7.6).
 fn gen_spmv(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {

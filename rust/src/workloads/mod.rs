@@ -9,6 +9,26 @@
 //! classification (Fig 5a), active-page working set (Fig 5b) and page
 //! affinity (Fig 5c). The RL mapping problem only sees this page-granular
 //! structure, so matching it preserves the experiment.
+//!
+//! Layout of the module:
+//!
+//! * [`gen`] — the nine per-kernel generators behind
+//!   [`gen::generate`] / [`gen::Benchmark`], each documented with the
+//!   access shape it reproduces (streaming MAC, power-law SPMV, blocked
+//!   LUD, …). Traces depend only on `(benchmark, pid, scale, seed)` —
+//!   never on topology, mapping scheme or engine — which is what lets
+//!   sweep cells hold the workload constant while varying everything
+//!   else.
+//! * [`trace`] — the [`trace::Trace`] container (one application's
+//!   episode, §6.1): the op stream, its pid, and footprint helpers like
+//!   [`trace::Trace::distinct_pages`].
+//! * [`multi`] — [`multi::interleave`]: deterministic multi-program
+//!   composition with per-pid relabeling (the §7.5.2 mixes, and the
+//!   `A+B` combos of `aimm sweep`/`curriculum`).
+//! * [`analysis`] — the Fig 5 measurement functions
+//!   ([`analysis::classify_pages`], [`analysis::mean_active_pages`],
+//!   [`analysis::affinity_quadrants`]) that validate the generators
+//!   against the paper's §2 characterisation table.
 
 pub mod analysis;
 pub mod gen;

@@ -8,7 +8,7 @@
 //! reference.
 
 use aimm::bench::sweep::stats_json;
-use aimm::config::{Engine, MappingScheme, SystemConfig, Technique};
+use aimm::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
 use aimm::coordinator::run_cell;
 use aimm::metrics::RunStats;
 use aimm::workloads::Benchmark;
@@ -86,6 +86,34 @@ fn engines_are_bit_identical_across_the_grid() {
                 }
             }
         }
+    }
+}
+
+/// The non-mesh topologies keep the same polled/event contract: the
+/// fabric's event hook is occupancy-based and never looks at which links
+/// (including torus/ring wraparounds) packets ride, so the time skip is
+/// legal — proven here bit-for-bit on one torus and one ring cell, with
+/// the learning agent in the loop.
+#[test]
+fn engines_are_bit_identical_on_torus_and_ring() {
+    for (topology, bench) in
+        [(TopologyKind::Torus, Benchmark::Spmv), (TopologyKind::Ring, Benchmark::Mac)]
+    {
+        let mut polled_cfg = cell_cfg(Technique::Bnmp, MappingScheme::Aimm, 23);
+        polled_cfg.topology = topology;
+        let mut event_cfg = polled_cfg.clone();
+        polled_cfg.engine = Engine::Polled;
+        event_cfg.engine = Engine::Event;
+        let ctx = format!("{}/{}", topology, bench.name());
+        let p = run_cell(&polled_cfg, &[bench], 0.03, 2)
+            .unwrap_or_else(|e| panic!("polled {ctx}: {e}"));
+        let e = run_cell(&event_cfg, &[bench], 0.03, 2)
+            .unwrap_or_else(|e| panic!("event {ctx}: {e}"));
+        assert_eq!(p.runs.len(), e.runs.len(), "{ctx}");
+        for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+            assert_identical(rp, re, &format!("{ctx} run {i}"));
+        }
+        assert!(p.last().avg_hops > 0.0, "{ctx}: packets must actually travel");
     }
 }
 

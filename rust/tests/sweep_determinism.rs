@@ -5,7 +5,7 @@
 //! thread identity (e.g. per-thread hash seeds) into any decision.
 
 use aimm::bench::sweep::{cell_json, report_json, run_grid, SweepGrid};
-use aimm::config::MappingScheme;
+use aimm::config::{MappingScheme, TopologyKind};
 use aimm::workloads::Benchmark;
 
 /// A small but representative grid: baseline + learning agent, single-
@@ -35,6 +35,37 @@ fn cells_identical_at_any_worker_count() {
     }
     // The whole report (fixed key order, no wall-clock) matches too.
     assert_eq!(report_json(&serial), report_json(&parallel));
+}
+
+/// The topology axis obeys the same contract: torus and ring cells are
+/// byte-identical at any worker count (wraparound routing, bubble flow
+/// control and the ring MC arcs are all deterministic — EXPERIMENTS.md
+/// §Topology).
+#[test]
+fn topology_cells_identical_at_any_worker_count() {
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd, Benchmark::Spmv]];
+    g.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    g.topologies = vec![TopologyKind::Torus, TopologyKind::Ring];
+    let cells = g.cells();
+    assert_eq!(cells.len(), 8);
+    let serial = run_grid(&cells, 1).expect("serial topology sweep");
+    let parallel = run_grid(&cells, 4).expect("parallel topology sweep");
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            cell_json(s),
+            cell_json(p),
+            "cell {} diverged between 1 and 4 workers",
+            s.cell.name()
+        );
+    }
+    assert_eq!(report_json(&serial), report_json(&parallel));
+    // The off-default cells advertise their topology in name and JSON.
+    for r in &serial {
+        let topo = r.cell.topology.name();
+        assert!(r.cell.name().contains(&format!("/{topo}/")), "{}", r.cell.name());
+        assert!(cell_json(r).contains(&format!("\"topology\":\"{topo}\"")));
+    }
 }
 
 #[test]
