@@ -1,0 +1,124 @@
+//! Bench: mapping-policy face-off (EXPERIMENTS.md §Policy face-off).
+//! The head-to-head comparison the paper's Fig 11-style plots imply but
+//! never show: all five policies — {B, TOM, AIMM, CODA, ORACLE} —
+//! across three benchmarks and all three cube-network topologies on
+//! the 4×4 grid, holding the trace constant within each
+//! (benchmark, topology) slice so the mapping policy is the only
+//! variable. Writes `BENCH_policy.json` at the repository root (fixed
+//! key order, so re-runs diff clean).
+//!
+//! Run with `cargo bench --bench policy_faceoff` (release; ignore
+//! debug numbers). CI's serial job executes this on every push.
+
+use std::time::Instant;
+
+use aimm::bench::sweep::{cell_json, default_threads, run_grid, CellResult, SweepGrid};
+use aimm::bench::Table;
+use aimm::config::{MappingScheme, TopologyKind};
+use aimm::runtime::json::write as jw;
+use aimm::workloads::Benchmark;
+
+/// Big enough for migration/remap decisions to matter, small enough
+/// that 45 cells × 2 runs stay in CI range.
+const SCALE: f64 = 0.04;
+/// Two runs per cell: AIMM's second run reflects a warmed network; the
+/// face-off reads the steady-state (last) run everywhere.
+const RUNS: usize = 2;
+
+const BENCHES: [Benchmark; 3] = [Benchmark::Spmv, Benchmark::Km, Benchmark::Mac];
+
+fn slice<'a>(
+    results: &'a [CellResult],
+    bench: Benchmark,
+    topology: TopologyKind,
+) -> Vec<&'a CellResult> {
+    results
+        .iter()
+        .filter(|r| r.cell.benches == [bench] && r.cell.topology == topology)
+        .collect()
+}
+
+fn main() {
+    let mut grid = SweepGrid::new(SCALE, RUNS);
+    grid.benches = BENCHES.iter().map(|&b| vec![b]).collect();
+    grid.mappings = MappingScheme::ALL.to_vec();
+    grid.topologies = TopologyKind::ALL.to_vec();
+    let cells = grid.cells();
+    assert_eq!(cells.len(), 45, "3 benches x 5 policies x 3 topologies");
+    let threads = default_threads();
+    println!(
+        "policy face-off: {} cells ({RUNS} runs each, scale {SCALE}) on {threads} thread(s)",
+        cells.len()
+    );
+    let t0 = Instant::now();
+    let results = run_grid(&cells, threads).expect("policy face-off grid");
+    let wall = t0.elapsed();
+
+    let mut t = Table::new(
+        "Policy face-off (steady-state run per cell)",
+        &["cell", "cycles", "opc", "avg hops", "util", "migrated"],
+    );
+    for r in &results {
+        let last = r.summary.last();
+        t.row(vec![
+            r.cell.name(),
+            last.cycles.to_string(),
+            format!("{:.4}", last.opc()),
+            format!("{:.2}", last.avg_hops),
+            format!("{:.3}", last.compute_utilization),
+            format!("{:.2}", last.fraction_pages_migrated),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Structural invariant: within a (benchmark, topology) slice every
+    // policy ran the SAME trace (the workload seed ignores the mapping
+    // axis), so all five cells must complete the same op count — the
+    // property that makes the OPC columns comparable at all.
+    let mut opc_rows: Vec<(String, String)> = Vec::new();
+    for &bench in &BENCHES {
+        for topology in TopologyKind::ALL {
+            let cells = slice(&results, bench, topology);
+            assert_eq!(cells.len(), 5, "{}/{topology}", bench.name());
+            let ops0 = cells[0].summary.last().ops_completed;
+            for c in &cells {
+                assert_eq!(
+                    c.summary.last().ops_completed,
+                    ops0,
+                    "trace drift inside the {}/{topology} slice ({})",
+                    bench.name(),
+                    c.cell.name()
+                );
+            }
+            let fields: Vec<(&str, String)> = cells
+                .iter()
+                .map(|c| (c.cell.mapping.name(), jw::num(c.summary.last().opc())))
+                .collect();
+            opc_rows.push((
+                format!("{}/{}", bench.name(), topology.name()),
+                jw::obj(&fields),
+            ));
+        }
+    }
+
+    let cells_json: Vec<String> = results.iter().map(cell_json).collect();
+    let opc_fields: Vec<(&str, String)> =
+        opc_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let json = jw::obj(&[
+        ("schema", jw::string("aimm-policy-v1")),
+        (
+            "grid",
+            jw::string(&format!(
+                "{{SPMV,KM,MAC}}/BNMP x {{B,TOM,AIMM,CODA,ORACLE}} x 4x4 x \
+                 {{mesh,torus,ring}} (scale {SCALE}, {RUNS} runs)"
+            )),
+        ),
+        ("measured", "true".to_string()),
+        ("opc_by_slice", jw::obj(&opc_fields)),
+        ("cells", format!("[{}]", cells_json.join(","))),
+        ("regenerate", jw::string("cargo bench --bench policy_faceoff")),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_policy.json");
+    std::fs::write(path, &json).expect("write BENCH_policy.json");
+    println!("wrote {path} ({} cells) in {wall:?}", results.len());
+}

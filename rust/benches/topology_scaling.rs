@@ -46,7 +46,10 @@ fn main() {
     let cells = grid.cells();
     assert_eq!(cells.len(), 27, "3 mappings x 3 meshes x 3 topologies");
     let threads = default_threads();
-    println!("topology scaling study: {} cells (scale {SCALE}) on {threads} thread(s)", cells.len());
+    println!(
+        "topology scaling study: {} cells (scale {SCALE}) on {threads} thread(s)",
+        cells.len()
+    );
     let t0 = Instant::now();
     let results = run_grid(&cells, threads).expect("topology scaling grid");
     let wall = t0.elapsed();
@@ -74,7 +77,8 @@ fn main() {
     let torus_hops = mean_hops(&results, TopologyKind::Torus, (8, 8));
     let ring_hops = mean_hops(&results, TopologyKind::Ring, (8, 8));
     println!(
-        "8x8 baseline average hops: ring {ring_hops:.3} > mesh {mesh_hops:.3} > torus {torus_hops:.3}"
+        "8x8 baseline average hops: ring {ring_hops:.3} > mesh {mesh_hops:.3} > \
+         torus {torus_hops:.3}"
     );
     assert!(
         ring_hops > mesh_hops && mesh_hops > torus_hops,

@@ -68,7 +68,8 @@ fn main() {
     let (base, _) = run_policy(bench, Box::new(FixedQ(0)), 1);
     let (oracle, frac) = run_policy(bench, Box::new(OracleQ), 1);
     println!(
-        "{bench_name}: default={base} oracle(migrate-once-when-far)={oracle} ({:+.1}%) migrated={frac:.2}",
+        "{bench_name}: default={base} oracle(migrate-once-when-far)={oracle} ({:+.1}%) \
+         migrated={frac:.2}",
         (oracle as f64 / base as f64 - 1.0) * 100.0
     );
 }

@@ -19,7 +19,8 @@ fn main() {
     let bench = Benchmark::Spmv;
     let trace = generate(bench, 1, 0.25, cfg.seed);
     let mut agent = aimm_mode.then(|| {
-        AimmAgent::new(best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed), cfg.agent.clone(), 42)
+        let qf = best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed);
+        AimmAgent::new(qf, cfg.agent.clone(), 42)
     });
     if let Some(a) = agent.as_ref() {
         println!("agent backend: {}", a.backend());

@@ -109,6 +109,12 @@ impl AimmAgent {
         self.qf.backend()
     }
 
+    /// The hyperparameter configuration this agent runs under (the
+    /// checkpoint plumbing validates resumes against it).
+    pub fn config(&self) -> &AgentConfig {
+        &self.cfg
+    }
+
     /// Direct Q-network probe for diagnostics and tests: evaluates
     /// Q(s, ·) without counting an invocation, drawing randomness or
     /// touching the control state.
@@ -159,7 +165,12 @@ impl AimmAgent {
 
     /// One agent invocation. `state` is the freshly assembled state,
     /// `opc_now` the OPC observed over the elapsed interval.
-    pub fn invoke(&mut self, state: StateVec, opc_now: f64, _now: Cycle) -> anyhow::Result<Decision> {
+    pub fn invoke(
+        &mut self,
+        state: StateVec,
+        opc_now: f64,
+        _now: Cycle,
+    ) -> anyhow::Result<Decision> {
         self.stats.invocations += 1;
         self.stats.state_buf_accesses += 1;
 

@@ -139,7 +139,13 @@ mod tests {
     fn layout_slots() {
         let mut sys = SysSignals::default();
         sys.per_mc = vec![
-            PerMcSignals { occ_mean: 0.5, occ_max: 0.9, row_hit_mean: 0.7, row_hit_min: 0.2, queue_occ: 0.1 };
+            PerMcSignals {
+                occ_mean: 0.5,
+                occ_max: 0.9,
+                row_hit_mean: 0.7,
+                row_hit_min: 0.2,
+                queue_occ: 0.1,
+            };
             4
         ];
         sys.action_histogram[3] = 0.25;
@@ -162,7 +168,13 @@ mod tests {
     fn everything_clamped() {
         let mut sys = SysSignals::default();
         sys.per_mc = vec![
-            PerMcSignals { occ_mean: 7.0, occ_max: -3.0, row_hit_mean: 2.0, row_hit_min: 0.5, queue_occ: 1.5 };
+            PerMcSignals {
+                occ_mean: 7.0,
+                occ_max: -3.0,
+                row_hit_mean: 2.0,
+                row_hit_min: 0.5,
+                queue_occ: 1.5,
+            };
             4
         ];
         let mut page = PageSignals::default();

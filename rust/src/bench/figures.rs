@@ -167,7 +167,7 @@ fn cell(
 /// Fig 6: execution time normalized to each technique's baseline. The
 /// full 9 × 3 × 3 grid runs as one parallel sweep; the reader below
 /// consumes results in the grid's fixed nested order (bench → technique
-/// → mapping, with `MappingScheme::ALL` = [B, TOM, AIMM]).
+/// → mapping, with the default `MappingScheme::PAPER` = [B, TOM, AIMM]).
 pub fn fig6(scale: f64, runs: usize) -> anyhow::Result<Table> {
     let mut grid = SweepGrid::new(scale, runs);
     grid.techniques = Technique::ALL.to_vec();
@@ -400,14 +400,16 @@ pub fn fig13(scale: f64, runs: usize) -> anyhow::Result<Table> {
             cfg.page_info_entries = e;
             cfg.seed = workload_seed(cfg.seed, &[b]);
             let s = run_single(&cfg, b, scale, runs)?;
-            t.row(vec![b.name().into(), "page-cache".into(), format!("E-{e}"), s.last().cycles.to_string()]);
+            let cycles = s.last().cycles.to_string();
+            t.row(vec![b.name().into(), "page-cache".into(), format!("E-{e}"), cycles]);
         }
         for &e in &table_sizes {
             let mut cfg = cfg_with(Technique::Bnmp, MappingScheme::Aimm);
             cfg.nmp_table_entries = e;
             cfg.seed = workload_seed(cfg.seed, &[b]);
             let s = run_single(&cfg, b, scale, runs)?;
-            t.row(vec![b.name().into(), "nmp-table".into(), format!("E-{e}"), s.last().cycles.to_string()]);
+            let cycles = s.last().cycles.to_string();
+            t.row(vec![b.name().into(), "nmp-table".into(), format!("E-{e}"), cycles]);
         }
     }
     Ok(t)

@@ -59,6 +59,13 @@ impl Technique {
     pub fn from_name(s: &str) -> Option<Technique> {
         Self::ALL.into_iter().find(|t| t.name().eq_ignore_ascii_case(s))
     }
+
+    /// `BNMP|LDB|PEI` — the valid-value list for parse-error messages,
+    /// derived from [`Technique::ALL`] so it can never drift from what
+    /// [`Technique::from_name`] actually accepts.
+    pub fn name_list() -> String {
+        Self::ALL.map(Self::name).join("|")
+    }
 }
 
 impl fmt::Display for Technique {
@@ -67,7 +74,10 @@ impl fmt::Display for Technique {
     }
 }
 
-/// Remapping scheme layered on top of a technique (paper §6.3).
+/// Remapping scheme layered on top of a technique (paper §6.3) — the
+/// configuration selector for a [`crate::mapping::MappingPolicy`]. The
+/// decision logic itself lives in `mapping::policy`; this enum only
+/// names the policy and parses it from flags and config files.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MappingScheme {
     /// "B" in the figures: the technique alone, no remapping support.
@@ -77,10 +87,32 @@ pub enum MappingScheme {
     Tom,
     /// The paper's contribution: RL-driven page + computation remapping.
     Aimm,
+    /// CODA-style greedy co-location (Kim et al.): windowed per-page
+    /// compute counters, hysteresis-gated migration toward the cube
+    /// issuing the majority of a page's NMP ops. No learning.
+    Coda,
+    /// Perfect-knowledge upper bound: dry-run the op stream, derive the
+    /// best static page→cube assignment, replay with it via first-touch
+    /// placement.
+    Oracle,
 }
 
 impl MappingScheme {
-    pub const ALL: [MappingScheme; 3] =
+    /// Every selectable policy, in registry order — the source of truth
+    /// for `from_name`, CLI error messages and `--mappings all`.
+    pub const ALL: [MappingScheme; 5] = [
+        MappingScheme::Baseline,
+        MappingScheme::Tom,
+        MappingScheme::Aimm,
+        MappingScheme::Coda,
+        MappingScheme::Oracle,
+    ];
+
+    /// The paper's evaluated trio (Fig 6's B / TOM / AIMM columns) — the
+    /// default sweep axis. Kept separate from [`MappingScheme::ALL`] so
+    /// adding policies never silently grows the default grids (or the
+    /// golden fixture pinned to them).
+    pub const PAPER: [MappingScheme; 3] =
         [MappingScheme::Baseline, MappingScheme::Tom, MappingScheme::Aimm];
 
     pub fn name(self) -> &'static str {
@@ -88,6 +120,8 @@ impl MappingScheme {
             MappingScheme::Baseline => "B",
             MappingScheme::Tom => "TOM",
             MappingScheme::Aimm => "AIMM",
+            MappingScheme::Coda => "CODA",
+            MappingScheme::Oracle => "ORACLE",
         }
     }
 
@@ -99,6 +133,26 @@ impl MappingScheme {
             return Some(MappingScheme::Baseline);
         }
         Self::ALL.into_iter().find(|m| m.name().eq_ignore_ascii_case(s))
+    }
+
+    /// `B|TOM|AIMM|CODA|ORACLE` — the valid-value list for parse-error
+    /// messages, derived from [`MappingScheme::ALL`] so new policies show
+    /// up in CLI errors automatically.
+    pub fn name_list() -> String {
+        Self::ALL.map(Self::name).join("|")
+    }
+
+    /// Does this policy carry a learning agent across runs? Only AIMM
+    /// does; the others are stateless between episodes.
+    pub fn uses_agent(self) -> bool {
+        self == MappingScheme::Aimm
+    }
+
+    /// Can this policy be saved/resumed through the continual-learning
+    /// checkpoint format? Only AIMM has learned state worth persisting —
+    /// `--checkpoint`/`--resume` reject every other policy loudly.
+    pub fn checkpointable(self) -> bool {
+        self == MappingScheme::Aimm
     }
 }
 
@@ -137,6 +191,11 @@ impl Engine {
     /// and the TOML config loader.
     pub fn from_name(s: &str) -> Option<Engine> {
         Self::ALL.into_iter().find(|e| e.name().eq_ignore_ascii_case(s))
+    }
+
+    /// `polled|event` — the valid-value list for parse-error messages.
+    pub fn name_list() -> String {
+        Self::ALL.map(Self::name).join("|")
     }
 }
 
@@ -179,6 +238,11 @@ impl TopologyKind {
     /// flag and the TOML config loader.
     pub fn from_name(s: &str) -> Option<TopologyKind> {
         Self::ALL.into_iter().find(|t| t.name().eq_ignore_ascii_case(s))
+    }
+
+    /// `mesh|torus|ring` — the valid-value list for parse-error messages.
+    pub fn name_list() -> String {
+        Self::ALL.map(Self::name).join("|")
     }
 }
 
@@ -459,23 +523,39 @@ impl SystemConfig {
                 "replay_capacity" => cfg.agent.replay_capacity = v.as_usize()?,
                 "technique" => {
                     let name = v.as_str()?;
-                    cfg.technique = Technique::from_name(name)
-                        .ok_or_else(|| anyhow::anyhow!("unknown technique {name:?}"))?;
+                    cfg.technique = Technique::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown technique {name:?} (expected one of {})",
+                            Technique::name_list()
+                        )
+                    })?;
                 }
                 "mapping" => {
                     let name = v.as_str()?;
-                    cfg.mapping = MappingScheme::from_name(name)
-                        .ok_or_else(|| anyhow::anyhow!("unknown mapping {name:?}"))?;
+                    cfg.mapping = MappingScheme::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown mapping {name:?} (expected one of {}, or BASELINE)",
+                            MappingScheme::name_list()
+                        )
+                    })?;
                 }
                 "engine" => {
                     let name = v.as_str()?;
-                    cfg.engine = Engine::from_name(name)
-                        .ok_or_else(|| anyhow::anyhow!("unknown engine {name:?}"))?;
+                    cfg.engine = Engine::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown engine {name:?} (expected one of {})",
+                            Engine::name_list()
+                        )
+                    })?;
                 }
                 "topology" => {
                     let name = v.as_str()?;
-                    cfg.topology = TopologyKind::from_name(name)
-                        .ok_or_else(|| anyhow::anyhow!("unknown topology {name:?}"))?;
+                    cfg.topology = TopologyKind::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown topology {name:?} (expected one of {})",
+                            TopologyKind::name_list()
+                        )
+                    })?;
                 }
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
@@ -737,14 +817,59 @@ mod tests {
         }
         assert_eq!(MappingScheme::from_name("baseline"), Some(MappingScheme::Baseline));
         assert_eq!(MappingScheme::from_name("b"), Some(MappingScheme::Baseline));
+        assert_eq!(MappingScheme::from_name("coda"), Some(MappingScheme::Coda));
+        assert_eq!(MappingScheme::from_name("oracle"), Some(MappingScheme::Oracle));
         assert_eq!(Technique::from_name("ldb"), Some(Technique::Ldb));
         assert_eq!(Technique::from_name("nope"), None);
         assert_eq!(MappingScheme::from_name("nope"), None);
     }
 
+    /// The registry split: ALL is the CLI-facing list (five policies),
+    /// PAPER the default-grid trio — and every PAPER entry is in ALL.
+    #[test]
+    fn mapping_registries_are_consistent() {
+        assert_eq!(MappingScheme::ALL.len(), 5);
+        assert_eq!(
+            MappingScheme::PAPER,
+            [MappingScheme::Baseline, MappingScheme::Tom, MappingScheme::Aimm]
+        );
+        for m in MappingScheme::PAPER {
+            assert!(MappingScheme::ALL.contains(&m));
+        }
+        assert!(MappingScheme::Aimm.uses_agent() && MappingScheme::Aimm.checkpointable());
+        for m in [
+            MappingScheme::Baseline,
+            MappingScheme::Tom,
+            MappingScheme::Coda,
+            MappingScheme::Oracle,
+        ] {
+            assert!(!m.uses_agent(), "{m}");
+            assert!(!m.checkpointable(), "{m}");
+        }
+    }
+
+    /// Parse errors list the valid names, derived from the same ALL
+    /// registries from_name reads — new values show up automatically.
+    #[test]
+    fn parse_errors_list_valid_names() {
+        assert_eq!(MappingScheme::name_list(), "B|TOM|AIMM|CODA|ORACLE");
+        assert_eq!(Technique::name_list(), "BNMP|LDB|PEI");
+        assert_eq!(Engine::name_list(), "polled|event");
+        assert_eq!(TopologyKind::name_list(), "mesh|torus|ring");
+        let err = SystemConfig::parse("mapping = \"bogus\"").unwrap_err().to_string();
+        assert!(err.contains("B|TOM|AIMM|CODA|ORACLE"), "{err}");
+        let err = SystemConfig::parse("technique = \"bogus\"").unwrap_err().to_string();
+        assert!(err.contains("BNMP|LDB|PEI"), "{err}");
+        let err = SystemConfig::parse("engine = \"bogus\"").unwrap_err().to_string();
+        assert!(err.contains("polled|event"), "{err}");
+        let err = SystemConfig::parse("topology = \"bogus\"").unwrap_err().to_string();
+        assert!(err.contains("mesh|torus|ring"), "{err}");
+    }
+
     #[test]
     fn parse_comments_and_blanks() {
-        let cfg = SystemConfig::parse("# comment\n\nmesh_cols = 8 # inline\nmesh_rows = 8\n").unwrap();
+        let text = "# comment\n\nmesh_cols = 8 # inline\nmesh_rows = 8\n";
+        let cfg = SystemConfig::parse(text).unwrap();
         assert_eq!(cfg.mesh_cols, 8);
     }
 
@@ -787,7 +912,8 @@ mod tests {
                 assert_eq!(all, (0..cols * rows).collect::<Vec<_>>(), "{topology} {cols}x{rows}");
                 for mc in 0..c.num_mcs() {
                     for cube in c.mc_nearest_cubes(mc) {
-                        assert_eq!(c.cube_home_mc(cube), mc, "{topology} {cols}x{rows} cube {cube}");
+                        let home = c.cube_home_mc(cube);
+                        assert_eq!(home, mc, "{topology} {cols}x{rows} cube {cube}");
                     }
                 }
             }

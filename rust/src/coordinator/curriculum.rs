@@ -20,7 +20,7 @@
 //! is reproducible under either simulation engine.
 
 use crate::agent::AimmAgent;
-use crate::config::{MappingScheme, SystemConfig};
+use crate::config::SystemConfig;
 use crate::workloads::Benchmark;
 
 use super::runner::{
@@ -109,10 +109,11 @@ pub fn run_curriculum(
     initial: Option<AimmAgent>,
 ) -> anyhow::Result<(CurriculumReport, Option<AimmAgent>)> {
     anyhow::ensure!(!stages.is_empty(), "curriculum needs at least one stage");
-    let aimm = cfg.mapping == MappingScheme::Aimm;
+    let aimm = cfg.mapping.uses_agent();
     anyhow::ensure!(
         initial.is_none() || aimm,
-        "an initial agent only makes sense with --mapping AIMM"
+        "an initial agent only makes sense with --mapping AIMM (got {})",
+        cfg.mapping
     );
     let mut agent = match initial {
         Some(a) => Some(a),
@@ -135,7 +136,7 @@ pub fn run_curriculum(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Technique;
+    use crate::config::{MappingScheme, Technique};
 
     fn cfg(mapping: MappingScheme) -> SystemConfig {
         let mut c = SystemConfig::default();

@@ -4,7 +4,8 @@
 //! memory) persists — the continual-learning premise.
 
 use crate::agent::AimmAgent;
-use crate::config::{MappingScheme, SystemConfig};
+use crate::config::SystemConfig;
+use crate::mapping::AnyPolicy;
 use crate::metrics::RunStats;
 use crate::nmp::NmpOp;
 use crate::runtime::best_qfunction;
@@ -55,33 +56,38 @@ pub fn fresh_agent(cfg: &SystemConfig) -> anyhow::Result<AimmAgent> {
 }
 
 /// The agent an episode starts with under `cfg`: a cold one for AIMM,
-/// none for the other mapping schemes.
+/// none for the agent-less policies.
 fn default_agent(cfg: &SystemConfig) -> anyhow::Result<Option<AimmAgent>> {
-    if cfg.mapping == MappingScheme::Aimm {
+    if cfg.mapping.uses_agent() {
         Ok(Some(fresh_agent(cfg)?))
     } else {
         Ok(None)
     }
 }
 
-/// Run one op stream `runs` times, threading `agent` through every run
-/// (the continual-learning premise) and handing it back afterwards so
-/// callers can carry it into the *next* episode (curriculum stages,
-/// checkpoint files). Pass `None` to run agent-less schemes.
+/// Run one op stream `runs` times, threading the mapping policy through
+/// every run via the episode-boundary carryover seam
+/// (`System::with_policy` / `System::take_policy`): per-run control
+/// state resets at each construction, carried learning state — AIMM's
+/// network and replay, the continual-learning premise — survives. The
+/// agent (if the policy holds one) is handed back afterwards so callers
+/// can carry it into the *next* episode (curriculum stages, checkpoint
+/// files). Pass `None` to run agent-less schemes.
 pub fn run_stream_with(
     cfg: &SystemConfig,
     ops: &[NmpOp],
     runs: usize,
     name: &str,
-    mut agent: Option<AimmAgent>,
+    agent: Option<AimmAgent>,
 ) -> anyhow::Result<(EpisodeSummary, Option<AimmAgent>)> {
+    let mut policy = AnyPolicy::new(cfg, ops, agent);
     let mut stats = Vec::with_capacity(runs);
     for _ in 0..runs {
-        let mut sys = System::new(cfg.clone(), ops.to_vec(), agent.take());
+        let mut sys = System::with_policy(cfg.clone(), ops.to_vec(), policy);
         stats.push(sys.run()?);
-        agent = sys.take_agent();
+        policy = sys.take_policy();
     }
-    Ok((EpisodeSummary { name: name.to_string(), runs: stats }, agent))
+    Ok((EpisodeSummary { name: name.to_string(), runs: stats }, policy.take_agent()))
 }
 
 /// Run one op stream `runs` times with the configured mapping scheme,
@@ -176,7 +182,7 @@ pub fn run_multi(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Technique;
+    use crate::config::{MappingScheme, Technique};
 
     fn cfg(mapping: MappingScheme) -> SystemConfig {
         let mut c = SystemConfig::default();

@@ -1,20 +1,23 @@
 //! The simulated NMP system: CPU-side op feed → MCs → cube network →
-//! cubes, with the migration system, TOM remapper and the AIMM agent
-//! plugged in per the configuration. One `tick` = one memory-network
-//! cycle. The interconnect geometry (mesh / torus / ring) is entirely
-//! the fabric's business ([`crate::noc::topology`]); this module only
-//! ever asks it topology-neutral questions (routing happens inside
-//! `mesh.tick`, MC homing via `cfg.cube_home_mc`).
+//! cubes, with the migration system and the configured
+//! [`MappingPolicy`] plugged in. One `tick` = one memory-network
+//! cycle. The system is **policy-agnostic**: it owns the actuators
+//! (MMU, compute-remap table, migration engine), forwards events to
+//! the policy (dispatched ops via the MCs, clock ticks), and applies
+//! whatever [`MappingAction`]s come back — it never asks *which*
+//! scheme is configured. Likewise the interconnect geometry (mesh /
+//! torus / ring) is entirely the fabric's business
+//! ([`crate::noc::topology`]); this module only ever asks it
+//! topology-neutral questions (routing happens inside `mesh.tick`, MC
+//! homing via `cfg.cube_home_mc`).
 
 use std::collections::HashSet;
 
-use crate::agent::{
-    build_state, hist4, hop_scale, Action, AimmAgent, PageSignals, PerMcSignals, SysSignals,
-};
+use crate::agent::AimmAgent;
 use crate::alloc::{HoardAllocator, Placement, StripePlacement};
-use crate::config::{Engine, MappingScheme, Pid, SystemConfig, VPage};
+use crate::config::{Engine, Pid, SystemConfig, VPage};
 use crate::cube::Cube;
-use crate::mapping::{ComputeRemapTable, TomMapper, TomEvent};
+use crate::mapping::{AnyPolicy, ComputeRemapTable, MappingAction, MappingPolicy, PolicyCtx};
 use crate::mc::{IssueDeps, Mc};
 use crate::metrics::{EnergyCounts, EnergyModel, RunStats};
 use crate::migration::{MigRequest, MigrationSystem};
@@ -22,7 +25,7 @@ use crate::mmu::Mmu;
 use crate::nmp::{CpuCache, NmpOp};
 use crate::noc::packet::{Packet, Payload};
 use crate::noc::Mesh;
-use crate::sim::{Cycle, EventWheel, Rng};
+use crate::sim::{Cycle, EventWheel};
 
 /// How often cubes report occupancy / row-hit to their MC (§5.1
 /// "communicated to a cube's nearest memory controller periodically").
@@ -40,12 +43,11 @@ pub struct System {
     pub mcs: Vec<Mc>,
     pub mmu: Mmu,
     placement: Box<dyn Placement>,
-    tom: Option<TomMapper>,
+    /// The configured mapping policy — the whole decision layer.
+    policy: AnyPolicy,
     pub remap_table: ComputeRemapTable,
     cpu_cache: CpuCache,
     pub migration: MigrationSystem,
-    pub agent: Option<AimmAgent>,
-    rng: Rng,
 
     // Trace feed.
     ops: Vec<NmpOp>,
@@ -53,12 +55,7 @@ pub struct System {
     issued: u64,
     completed: u64,
 
-    // Agent scheduling.
     now: Cycle,
-    next_agent_at: Cycle,
-    ops_at_last_invoke: u64,
-    /// Which MC provides the page info next (round-robin, §5.1).
-    page_mc_rr: usize,
 
     // Migration bookkeeping (Fig 10).
     migrated_pages: HashSet<(Pid, VPage)>,
@@ -78,9 +75,23 @@ pub struct System {
 }
 
 impl System {
-    /// Build a system for `ops` (single- or multi-program stream). Pids
-    /// appearing in the stream get address spaces.
+    /// Build a system for `ops` (single- or multi-program stream) with
+    /// the policy `cfg.mapping` describes — `agent` drives AIMM;
+    /// passing one with any other mapping panics (see
+    /// [`AnyPolicy::new`]). Pids appearing in the stream get address
+    /// spaces. Convenience wrapper over
+    /// [`with_policy`](Self::with_policy).
     pub fn new(cfg: SystemConfig, ops: Vec<NmpOp>, agent: Option<AimmAgent>) -> Self {
+        let policy = AnyPolicy::new(&cfg, &ops, agent);
+        Self::with_policy(cfg, ops, policy)
+    }
+
+    /// Build a system around an explicit mapping policy (the carryover
+    /// path: [`take_policy`](Self::take_policy) from the previous run
+    /// feeds the next run's construction). Calls the policy's
+    /// episode-start hook — per-run control state resets, carried
+    /// learning state survives (§6.1).
+    pub fn with_policy(cfg: SystemConfig, ops: Vec<NmpOp>, mut policy: AnyPolicy) -> Self {
         let mut mmu = Mmu::new(&cfg);
         let mut pids: Vec<Pid> = ops.iter().map(|o| o.pid).collect();
         pids.sort_unstable();
@@ -93,35 +104,25 @@ impl System {
         } else {
             Box::new(StripePlacement::default())
         };
-        let tom = (cfg.mapping == MappingScheme::Tom).then(|| TomMapper::new(cfg.num_cubes()));
         let mesh = Mesh::new(&cfg);
         let cubes = (0..cfg.num_cubes()).map(|i| Cube::new(i, &cfg)).collect();
         let mcs = (0..cfg.num_mcs()).map(|i| Mc::new(i, &cfg)).collect();
-        let mut agent = agent;
-        if let Some(a) = agent.as_mut() {
-            a.start_episode();
-        }
-        let next_agent_at = agent.as_ref().map(|a| a.current_interval()).unwrap_or(u64::MAX);
+        policy.start_episode();
         Self {
             migration: MigrationSystem::new(&cfg),
             remap_table: ComputeRemapTable::new(4096),
             cpu_cache: CpuCache::new(cfg.cpu_cache_lines),
-            rng: Rng::new(cfg.seed ^ 0x5157),
             mesh,
             cubes,
             mcs,
             mmu,
             placement,
-            tom,
-            agent,
+            policy,
             ops,
             next_op: 0,
             issued: 0,
             completed: 0,
             now: 0,
-            next_agent_at,
-            ops_at_last_invoke: 0,
-            page_mc_rr: 0,
             migrated_pages: HashSet::new(),
             accesses_on_migrated: 0,
             page_accesses_total: 0,
@@ -143,9 +144,21 @@ impl System {
         self.completed
     }
 
+    /// The active mapping policy.
+    pub fn policy(&self) -> &AnyPolicy {
+        &self.policy
+    }
+
+    /// Reclaim the policy for the next run (episode-boundary carryover;
+    /// leaves the no-op baseline behind).
+    pub fn take_policy(&mut self) -> AnyPolicy {
+        std::mem::replace(&mut self.policy, AnyPolicy::baseline())
+    }
+
     /// Reclaim the agent (to carry the DNN into the next run, §6.1).
+    /// Agent-less policies yield `None`.
     pub fn take_agent(&mut self) -> Option<AimmAgent> {
-        self.agent.take()
+        self.policy.take_agent()
     }
 
     fn outstanding(&self) -> u64 {
@@ -205,7 +218,7 @@ impl System {
             let mut deps = IssueDeps {
                 mmu: &mut self.mmu,
                 placement: self.placement.as_mut(),
-                tom: self.tom.as_mut(),
+                policy: &mut self.policy,
                 cpu_cache: &mut self.cpu_cache,
                 remap: &mut self.remap_table,
                 migration: &self.migration,
@@ -278,34 +291,25 @@ impl System {
             }
         }
 
-        // 9. TOM phase machine → bulk re-layouts.
-        if let Some(tom) = self.tom.as_mut() {
-            if let Some(TomEvent::Apply(_)) = tom.tick(now) {
-                let pids = self.mmu.pids();
-                for pid in pids {
-                    for (vpage, loc) in self.mmu.mappings(pid) {
-                        let target = self.tom.as_ref().unwrap().target_cube(pid, vpage);
-                        if target != loc.cube {
-                            self.mmu.force_remap(pid, vpage, target);
-                            for mc in &mut self.mcs {
-                                mc.tlb.invalidate(pid, vpage);
-                            }
-                        }
-                    }
-                }
-            }
-        }
+        // 9. Mapping-policy decision step: TOM's phase machine, the
+        // AIMM agent's invocation, CODA's window evaluation — whatever
+        // the configured policy does, its decisions come back as
+        // `MappingAction`s, applied in emission order right here.
+        let actions = {
+            let mut ctx = PolicyCtx {
+                mcs: &mut self.mcs,
+                cubes: &self.cubes,
+                mmu: &mut self.mmu,
+                remap_table: &mut self.remap_table,
+                mesh: &self.mesh,
+                completed: self.completed,
+                total_ops: self.ops.len() as u64,
+            };
+            self.policy.tick(now, &mut ctx)?
+        };
+        self.apply_actions(actions);
 
-        // 10. AIMM agent invocation (while work remains — the agent has
-        // nothing to steer once the trace has drained).
-        if self.agent.is_some()
-            && now >= self.next_agent_at
-            && self.completed < self.ops.len() as u64
-        {
-            self.invoke_agent()?;
-        }
-
-        // 11. OPC timeline sampling.
+        // 10. OPC timeline sampling.
         if now >= self.next_sample_at {
             let delta = self.completed - self.ops_at_last_sample;
             self.opc_timeline.push(delta as f32 / self.cfg.opc_sample_period as f32);
@@ -317,134 +321,35 @@ impl System {
         Ok(())
     }
 
-    /// Assemble the state, invoke the agent and apply its action (§5.3).
-    fn invoke_agent(&mut self) -> anyhow::Result<()> {
-        // Pick the page: MCs take turns providing their hottest entry.
-        let num_mcs = self.mcs.len();
-        let mut chosen: Option<(usize, (Pid, VPage))> = None;
-        for i in 0..num_mcs {
-            let mc = (self.page_mc_rr + i) % num_mcs;
-            if let Some(key) = self.mcs[mc].page_cache.select_candidate() {
-                chosen = Some((mc, key));
-                break;
-            }
-        }
-        self.page_mc_rr = (self.page_mc_rr + 1) % num_mcs;
-
-        let interval = self.agent.as_ref().unwrap().current_interval();
-        let elapsed_ops = self.completed - self.ops_at_last_invoke;
-        let opc = elapsed_ops as f64 / interval.max(1) as f64;
-        self.ops_at_last_invoke = self.completed;
-
-        let state = self.assemble_state(chosen.map(|(m, k)| (m, k)), opc as f32);
-        let decision = {
-            let agent = self.agent.as_mut().unwrap();
-            agent.invoke(state, opc, self.now)?
-        };
-        self.next_agent_at = self.now + decision.next_interval;
-
-        let Some((mc_idx, key)) = chosen else { return Ok(()) };
-        let (pid, vpage) = key;
-        // Current compute location of the page's ops: the remap table's
-        // suggestion, else where its most recent op actually computed.
-        let page_cube = self.mmu.translate(pid, vpage).map(|l| l.cube).unwrap_or(0);
-        let info_cubes = self.mcs[mc_idx]
-            .page_cache
-            .get(&key)
-            .map(|e| (e.last_src1_cube, e.last_compute_cube));
-        let (src1_cube, last_cc) = info_cubes.unwrap_or((page_cube, page_cube));
-        let compute_cube = self.remap_table.lookup(pid, vpage).unwrap_or(last_cc);
-
-        match decision.action {
-            Action::Default | Action::IncreaseInterval | Action::DecreaseInterval => {}
-            Action::NearData | Action::FarData => {
-                if let Some(target) =
-                    decision.action.target_cube(&self.mesh, compute_cube, src1_cube, &mut self.rng)
-                {
-                    if target != page_cube {
-                        let blocking = self.rw_pages.contains(&key);
-                        self.migration.request(MigRequest {
-                            pid,
-                            vpage,
-                            to_cube: target,
-                            blocking,
-                        });
+    /// Apply the policy's decisions, in emission order. This is the
+    /// single place mapping decisions become simulator state:
+    ///
+    /// * data migrations go through the MDMA engine, blocking iff the
+    ///   page was ever written (§5.3 — derived from `rw_pages`, so the
+    ///   policy never tracks writability itself);
+    /// * compute remaps land in the [`ComputeRemapTable`] the MCs
+    ///   consult at dispatch;
+    /// * force-remaps (TOM's traffic-free epoch re-layout) update the
+    ///   MMU and shoot down every MC TLB, page by page, exactly as the
+    ///   pre-trait relayout loop interleaved them.
+    fn apply_actions(&mut self, actions: Vec<MappingAction>) {
+        for action in actions {
+            match action {
+                MappingAction::MigratePage { pid, vpage, to_cube } => {
+                    let blocking = self.rw_pages.contains(&(pid, vpage));
+                    self.migration.request(MigRequest { pid, vpage, to_cube, blocking });
+                }
+                MappingAction::RemapCompute { pid, vpage, cube } => {
+                    self.remap_table.insert(pid, vpage, cube);
+                }
+                MappingAction::ForceRemap { pid, vpage, to_cube } => {
+                    self.mmu.force_remap(pid, vpage, to_cube);
+                    for mc in &mut self.mcs {
+                        mc.tlb.invalidate(pid, vpage);
                     }
                 }
-                self.mcs[mc_idx].page_cache.on_action(key, decision.action.index() as u8);
-            }
-            Action::NearCompute | Action::FarCompute | Action::SourceCompute => {
-                if let Some(target) =
-                    decision.action.target_cube(&self.mesh, compute_cube, src1_cube, &mut self.rng)
-                {
-                    self.remap_table.insert(pid, vpage, target);
-                }
-                self.mcs[mc_idx].page_cache.on_action(key, decision.action.index() as u8);
             }
         }
-        Ok(())
-    }
-
-    fn assemble_state(&mut self, page: Option<(usize, (Pid, VPage))>, opc: f32) -> [f32; 64] {
-        let per_mc: Vec<PerMcSignals> = self
-            .mcs
-            .iter()
-            .map(|mc| PerMcSignals {
-                occ_mean: mc.counters.occ_mean(),
-                occ_max: mc.counters.occ_max(),
-                row_hit_mean: mc.counters.row_hit_mean(),
-                row_hit_min: mc.counters.row_hit_min(),
-                queue_occ: mc.queue.occupancy(),
-            })
-            .collect();
-        let n = self.cubes.len() as f32;
-        let cube_occ_mean = self.cubes.iter().map(|c| c.table.occupancy()).sum::<f32>() / n;
-        let cube_occ_max =
-            self.cubes.iter().map(|c| c.table.occupancy()).fold(0.0f32, f32::max);
-        let cube_rh_mean =
-            (self.cubes.iter().map(|c| c.row_hit_rate()).sum::<f64>() / n as f64) as f32;
-        let agent = self.agent.as_ref().unwrap();
-        let sys = SysSignals {
-            per_mc,
-            action_histogram: agent.action_histogram(),
-            interval_norm: agent.interval_norm(),
-            recent_opc: opc,
-            cube_occ_mean,
-            cube_occ_max,
-            cube_row_hit_mean: cube_rh_mean,
-        };
-        let page_sig = match page {
-            Some((mc_idx, key)) => {
-                let mc = &self.mcs[mc_idx];
-                let info = mc.page_cache.get(&key);
-                let page_cube = self.mmu.translate(key.0, key.1).map(|l| l.cube).unwrap_or(0);
-                let compute_cube = self
-                    .remap_table
-                    .lookup(key.0, key.1)
-                    .unwrap_or_else(|| {
-                        self.mcs[mc_idx]
-                            .page_cache
-                            .get(&key)
-                            .map(|e| e.last_compute_cube)
-                            .unwrap_or(page_cube)
-                    });
-                match info {
-                    Some(e) => PageSignals {
-                        access_rate: mc.page_cache.access_rate(&key),
-                        migrations_per_access: e.migrations_per_access(),
-                        hop_hist: hist4(&e.hop_hist.padded()),
-                        lat_hist: hist4(&e.lat_hist.padded()),
-                        mig_lat_hist: hist4(&e.mig_lat_hist.padded()),
-                        action_hist: hist4(&e.action_hist.padded()),
-                        page_cube_norm: page_cube as f32 / n,
-                        compute_cube_norm: compute_cube as f32 / n,
-                    },
-                    None => PageSignals::default(),
-                }
-            }
-            None => PageSignals::default(),
-        };
-        build_state(&sys, &page_sig, hop_scale(self.mesh.diameter()))
     }
 
     /// Everything drained?
@@ -469,14 +374,18 @@ impl System {
             Engine::Polled => self.drive_polled(max_cycles)?,
             Engine::Event => self.drive_event(max_cycles)?,
         }
-        // Terminal agent transition.
-        if self.agent.is_some() {
-            let interval = self.agent.as_ref().unwrap().current_interval();
-            let elapsed_ops = self.completed - self.ops_at_last_invoke;
-            let opc = elapsed_ops as f64 / interval.max(1) as f64;
-            let state = self.assemble_state(None, opc as f32);
-            self.agent.as_mut().unwrap().finish_episode(state, opc);
-        }
+        // Episode end: the policy closes out (AIMM files its terminal
+        // transition; everything else is a no-op).
+        let mut ctx = PolicyCtx {
+            mcs: &mut self.mcs,
+            cubes: &self.cubes,
+            mmu: &mut self.mmu,
+            remap_table: &mut self.remap_table,
+            mesh: &self.mesh,
+            completed: self.completed,
+            total_ops: self.ops.len() as u64,
+        };
+        self.policy.finish(&mut ctx);
         Ok(self.stats())
     }
 
@@ -568,11 +477,8 @@ impl System {
                 wheel.schedule(at);
             }
         }
-        if let Some(tom) = self.tom.as_ref() {
-            wheel.schedule(tom.next_boundary().max(now));
-        }
-        if self.agent.is_some() && self.completed < self.ops.len() as u64 {
-            wheel.schedule(self.next_agent_at.max(now));
+        if let Some(at) = self.policy.next_event(now, self.completed, self.ops.len() as u64) {
+            wheel.schedule(at);
         }
     }
 
@@ -658,7 +564,7 @@ impl System {
         energy_counts.mdma_accesses = self.migration.stats.mdma_touches;
         energy_counts.bit_hops = self.mesh.stats.bit_hops;
         let (mut inv, mut trains, mut loss, mut cum_r) = (0, 0, 0.0, 0.0);
-        if let Some(a) = self.agent.as_ref() {
+        if let Some(a) = self.policy.agent() {
             energy_counts.weight_accesses = a.stats.weight_accesses;
             energy_counts.replay_accesses = a.stats.replay_accesses;
             energy_counts.state_buf_accesses = a.stats.state_buf_accesses;
@@ -701,7 +607,7 @@ impl System {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Technique;
+    use crate::config::{MappingScheme, Technique};
     use crate::nmp::OpKind;
     use crate::runtime::LinearQ;
     use crate::workloads::{generate, Benchmark};
@@ -752,6 +658,64 @@ mod tests {
         let mut sys = System::new(cfg, simple_ops(300), None);
         let stats = sys.run().unwrap();
         assert_eq!(stats.ops_completed, 300);
+    }
+
+    #[test]
+    fn coda_and_oracle_runs_complete() {
+        for mapping in [MappingScheme::Coda, MappingScheme::Oracle] {
+            let mut cfg = small_cfg();
+            cfg.mapping = mapping;
+            let trace = generate(Benchmark::Spmv, 1, 0.08, 3);
+            let n = trace.ops.len() as u64;
+            let mut sys = System::new(cfg, trace.ops, None);
+            let stats = sys.run().unwrap();
+            assert_eq!(stats.ops_completed, n, "{mapping}");
+            assert!(sys.take_agent().is_none(), "{mapping} carries no agent");
+        }
+    }
+
+    /// CodaGreedy is live hardware, not dead code: a hot source page
+    /// whose consumers all compute on one cube gets migrated there.
+    #[test]
+    fn coda_migrates_a_hot_source_page() {
+        let mut cfg = small_cfg();
+        cfg.mapping = MappingScheme::Coda;
+        // Every op writes page 8 (one compute cube under BNMP) and
+        // reads page 100 — page 100's counters concentrate on page 8's
+        // cube, far past the hysteresis margin.
+        let ops: Vec<NmpOp> = (0..6000)
+            .map(|i| NmpOp {
+                pid: 1,
+                kind: OpKind::Add,
+                dest: 8 << 12 | (i * 64) & 0xfff,
+                src1: 100 << 12 | (i * 64) & 0xfff,
+                src2: None,
+            })
+            .collect();
+        let n = ops.len() as u64;
+        let mut sys = System::new(cfg, ops, None);
+        let stats = sys.run().unwrap();
+        assert_eq!(stats.ops_completed, n);
+        assert!(stats.migrations >= 1, "expected at least one CODA migration");
+    }
+
+    /// The oracle's replay is deterministic and its dry run is
+    /// side-effect-free: two fresh systems over the same trace produce
+    /// byte-identical stats, and profiling again changes nothing.
+    #[test]
+    fn oracle_replay_is_deterministic() {
+        let mut cfg = small_cfg();
+        cfg.mapping = MappingScheme::Oracle;
+        let trace = generate(Benchmark::Km, 1, 0.08, 5);
+        let a = System::new(cfg.clone(), trace.ops.clone(), None).run().unwrap();
+        // A second dry run over the same stream is pure.
+        let assignment = crate::mapping::policy::profile_assignment(&trace.ops, 16);
+        assert_eq!(
+            assignment,
+            crate::mapping::policy::profile_assignment(&trace.ops, 16)
+        );
+        let b = System::new(cfg, trace.ops.clone(), None).run().unwrap();
+        assert_identical(&a, &b, "oracle replay");
     }
 
     #[test]
@@ -851,6 +815,17 @@ mod tests {
         let trace = generate(Benchmark::Spmv, 1, 0.08, 9);
         let (p, e) = run_both(&cfg, &trace.ops);
         assert_identical(&p, &e, "TOM");
+    }
+
+    #[test]
+    fn event_engine_matches_polled_for_coda_and_oracle() {
+        for mapping in [MappingScheme::Coda, MappingScheme::Oracle] {
+            let mut cfg = small_cfg();
+            cfg.mapping = mapping;
+            let trace = generate(Benchmark::Spmv, 1, 0.08, 9);
+            let (p, e) = run_both(&cfg, &trace.ops);
+            assert_identical(&p, &e, mapping.name());
+        }
     }
 
     #[test]

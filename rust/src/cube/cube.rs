@@ -458,7 +458,11 @@ impl Cube {
             let dest = e.dest;
             if dest.cube == self.id {
                 e.state = EntryState::WritingDest;
-                self.queue_access(dest.offset, MemAccessKind::Write, AccessTag::DestWrite { token });
+                self.queue_access(
+                    dest.offset,
+                    MemAccessKind::Write,
+                    AccessTag::DestWrite { token },
+                );
             } else {
                 e.state = EntryState::WaitingWriteAck;
                 self.out.push_back(Packet::new(
@@ -672,7 +676,8 @@ mod tests {
         // Same page, sequential 64B blocks: vault-strided so most are
         // misses; just assert the rate is within [0,1] and accesses count.
         for i in 0..8 {
-            cube.receive(dispatch(i, 0, PhysAddr::new(0, i * 64), PhysAddr::new(0, 4096 + i * 64)), 0);
+            let pk = dispatch(i, 0, PhysAddr::new(0, i * 64), PhysAddr::new(0, 4096 + i * 64));
+            cube.receive(pk, 0);
         }
         run(&mut cube, 2000);
         assert!(cube.stats.mem_accesses >= 16);

@@ -5,8 +5,9 @@
 //!
 //! The crate hosts the full three-layer stack's Layer 3: a cycle-level
 //! memory-cube-network NMP simulator (the paper's evaluation substrate), the
-//! NMP offloading techniques (BNMP / LDB / PEI), the mapping schemes
-//! (default / TOM / AIMM), and the AIMM reinforcement-learning coordinator.
+//! NMP offloading techniques (BNMP / LDB / PEI), the mapping policies
+//! (default / TOM / AIMM / CODA-greedy / oracle-profile behind one
+//! `MappingPolicy` trait), and the AIMM reinforcement-learning coordinator.
 //! When built with the `pjrt` cargo feature, the agent's dueling Q-network
 //! executes AOT-compiled JAX/Pallas HLO through the PJRT C API
 //! ([`runtime`]); the default build has no native dependency and uses the
@@ -23,7 +24,8 @@
 //! * [`alloc`] — NMP-aware HOARD page-frame allocator
 //! * [`migration`] — migration queue + MDMA engine (blocking/non-blocking)
 //! * [`nmp`] — NMP-op format and the BNMP/LDB/PEI offloading techniques
-//! * [`mapping`] — physical→DRAM hashing, TOM epoch remapping, remap tables
+//! * [`mapping`] — the `MappingPolicy` trait and its five policies (B /
+//!   TOM / AIMM / CODA-greedy / oracle-profile), plus the remap table
 //! * [`agent`] — AIMM RL agent: state, actions, reward, replay, ε-greedy,
 //!   and the versioned continual-learning checkpoint format
 //! * [`runtime`] — `QFunction` backends: linear mock + manifest plumbing

@@ -44,11 +44,14 @@ fn usage() -> String {
         "aimm — AIMM NMP mapping reproduction\n\
          \n\
          subcommands:\n\
-           run      --bench <NAME> [--technique BNMP|LDB|PEI] [--mapping B|TOM|AIMM]\n\
+           run      --bench <NAME> [--technique BNMP|LDB|PEI]\n\
+                    [--mapping B|TOM|AIMM|CODA|ORACLE]\n\
                     [--scale F] [--runs N] [--mesh CxR] [--topology mesh|torus|ring]\n\
                     [--hoard] [--seed N] [--config FILE] [--engine polled|event]\n\
                     [--checkpoint OUT.json] save the agent at the episode boundary\n\
                     [--resume IN.json] warm-start from a saved checkpoint\n\
+                    (checkpoints demand --mapping AIMM: the only policy with\n\
+                    learned state)\n\
            multi    --benches A,B,C (same options as run)\n\
            curriculum --stages A,B+C,D (ordered; + joins a multi-program stage)\n\
                     [--runs N (0 = paper default per stage)] [--scale F]\n\
@@ -57,7 +60,9 @@ fn usage() -> String {
                     runs the stages carrying ONE agent end-to-end and prints the\n\
                     cold-vs-warm first-run transfer table (defaults to --mapping AIMM)\n\
            sweep    [--benches all|A,B,A+B (use + for a multi-program combo)]\n\
-                    [--techniques BNMP,LDB,PEI|all] [--mappings B,TOM,AIMM|all]\n\
+                    [--techniques BNMP,LDB,PEI|all]\n\
+                    [--mappings B,TOM,AIMM,CODA,ORACLE|all (default: the paper's\n\
+                    B,TOM,AIMM trio)]\n\
                     [--meshes 4x4,8x8] [--topologies mesh,torus,ring|all]\n\
                     [--topology X (single-topology shorthand)]\n\
                     [--seeds N,M] [--scale F] [--runs N]\n\
@@ -73,21 +78,29 @@ fn usage() -> String {
     )
 }
 
+// The parse errors list every valid name, derived from the same `ALL`
+// registries `from_name` reads — a policy/technique/topology added to
+// its registry shows up in the error text automatically.
+
 fn parse_technique(t: &str) -> Result<Technique, String> {
-    Technique::from_name(t).ok_or_else(|| format!("unknown technique {t}"))
+    Technique::from_name(t)
+        .ok_or_else(|| format!("unknown technique {t} (expected {})", Technique::name_list()))
 }
 
 fn parse_mapping(m: &str) -> Result<MappingScheme, String> {
-    MappingScheme::from_name(m).ok_or_else(|| format!("unknown mapping {m}"))
+    MappingScheme::from_name(m).ok_or_else(|| {
+        format!("unknown mapping {m} (expected {}, or BASELINE)", MappingScheme::name_list())
+    })
 }
 
 fn parse_engine(e: &str) -> Result<Engine, String> {
-    Engine::from_name(e).ok_or_else(|| format!("unknown engine {e} (expected polled|event)"))
+    Engine::from_name(e)
+        .ok_or_else(|| format!("unknown engine {e} (expected {})", Engine::name_list()))
 }
 
 fn parse_topology(t: &str) -> Result<TopologyKind, String> {
     TopologyKind::from_name(t)
-        .ok_or_else(|| format!("unknown topology {t} (expected mesh|torus|ring)"))
+        .ok_or_else(|| format!("unknown topology {t} (expected {})", TopologyKind::name_list()))
 }
 
 /// Seeds parse as decimal or `0x`-hex — the hex form is what
@@ -132,13 +145,17 @@ fn parse_combos(list: &str) -> Result<Vec<Vec<Benchmark>>, String> {
 
 /// The agent an episode-running subcommand starts with: a checkpoint
 /// when `--resume` was given, a fresh one for AIMM, none otherwise.
-/// `--checkpoint`/`--resume` demand the AIMM mapping — there is no agent
-/// to persist under B/TOM, and silently ignoring the flag would be the
-/// exact bug class this PR removes.
+/// `--checkpoint`/`--resume` demand a checkpointable policy — only AIMM
+/// has learned state to persist, and silently ignoring the flag under
+/// B/TOM/CODA/ORACLE would be the exact bug class this plumbing exists
+/// to remove. The error names the offending policy.
 fn initial_agent(args: &Args, cfg: &SystemConfig) -> Result<Option<AimmAgent>, String> {
     let wants_ckpt = args.get("checkpoint").is_some() || args.get("resume").is_some();
-    if wants_ckpt && cfg.mapping != MappingScheme::Aimm {
-        return Err("--checkpoint/--resume require --mapping AIMM".to_string());
+    if wants_ckpt && !cfg.mapping.checkpointable() {
+        return Err(format!(
+            "--checkpoint/--resume require --mapping AIMM: the {} policy is not checkpointable",
+            cfg.mapping
+        ));
     }
     match args.get("resume") {
         Some(path) => {
@@ -156,7 +173,7 @@ fn initial_agent(args: &Args, cfg: &SystemConfig) -> Result<Option<AimmAgent>, S
             );
             Ok(Some(agent))
         }
-        None if cfg.mapping == MappingScheme::Aimm => {
+        None if cfg.mapping.uses_agent() => {
             Ok(Some(fresh_agent(cfg).map_err(|e| e.to_string())?))
         }
         None => Ok(None),
@@ -297,7 +314,8 @@ fn print_summary(s: &aimm::coordinator::EpisodeSummary, cfg: &SystemConfig) {
     let last = s.last();
     if first.cycles > 0 {
         println!(
-            "  exec-time change across runs: {:+.1}%  (energy: aimm {:.0} nJ, net {:.0} nJ, mem {:.0} nJ)",
+            "  exec-time change across runs: {:+.1}%  \
+             (energy: aimm {:.0} nJ, net {:.0} nJ, mem {:.0} nJ)",
             (last.cycles as f64 / first.cycles as f64 - 1.0) * 100.0,
             last.energy.aimm_hardware_nj,
             last.energy.network_nj,
@@ -394,7 +412,15 @@ fn real_main() -> Result<(), String> {
             );
             let mut t = Table::new(
                 "Curriculum transfer (first-run OPC: cold start vs inherited model)",
-                &["stage", "runs", "cold first", "warm first", "transfer", "cold last", "warm last"],
+                &[
+                    "stage",
+                    "runs",
+                    "cold first",
+                    "warm first",
+                    "transfer",
+                    "cold last",
+                    "warm last",
+                ],
             );
             for s in &report.stages {
                 t.row(vec![
@@ -464,12 +490,16 @@ fn real_main() -> Result<(), String> {
                 };
             }
             if let Some(list) = args.get("mappings") {
-                if !list.eq_ignore_ascii_case("all") {
-                    grid.mappings = list
-                        .split(',')
+                // `all` = every registered policy (B, TOM, AIMM, CODA,
+                // ORACLE); the default without the flag stays the
+                // paper's trio so existing reports don't grow cells.
+                grid.mappings = if list.eq_ignore_ascii_case("all") {
+                    MappingScheme::ALL.to_vec()
+                } else {
+                    list.split(',')
                         .map(|m| parse_mapping(m.trim()))
-                        .collect::<Result<_, _>>()?;
-                }
+                        .collect::<Result<_, _>>()?
+                };
             }
             if let Some(list) = args.get("meshes") {
                 grid.meshes = list.split(',').map(parse_mesh).collect::<Result<_, _>>()?;
@@ -584,5 +614,62 @@ fn main() -> ExitCode {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(argv: &[&str]) -> Args {
+        let owned: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        Args::parse(&owned).expect("test flags parse")
+    }
+
+    /// The CLI guard the checkpoint plumbing hangs off: every
+    /// non-checkpointable policy is rejected loudly, naming itself,
+    /// for `--checkpoint` and `--resume` alike.
+    #[test]
+    fn checkpoint_flags_reject_non_checkpointable_policies_by_name() {
+        for scheme in MappingScheme::ALL {
+            let mut cfg = SystemConfig::default();
+            cfg.mapping = scheme;
+            for flag in ["--checkpoint", "--resume"] {
+                let a = args(&[flag, "ck.json"]);
+                match initial_agent(&a, &cfg) {
+                    // AIMM proceeds past the guard (--checkpoint with a
+                    // fresh agent; --resume then fails later on the
+                    // missing file, not on the policy).
+                    Ok(agent) => {
+                        assert!(scheme.checkpointable(), "{scheme}: guard must fire");
+                        assert!(agent.is_some(), "{scheme}: AIMM starts with an agent");
+                    }
+                    Err(err) if scheme.checkpointable() => {
+                        assert!(err.contains("ck.json"), "{scheme} {flag}: {err}");
+                    }
+                    Err(err) => {
+                        assert!(err.contains(scheme.name()), "{scheme}: {err}");
+                        assert!(err.contains("not checkpointable"), "{scheme}: {err}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// CLI parse errors list the valid names, derived from the same
+    /// registries `from_name` reads — coda/oracle show up automatically.
+    #[test]
+    fn flag_parse_errors_list_valid_names() {
+        let err = parse_mapping("bogus").unwrap_err();
+        assert!(err.contains("B|TOM|AIMM|CODA|ORACLE"), "{err}");
+        let err = parse_technique("bogus").unwrap_err();
+        assert!(err.contains("BNMP|LDB|PEI"), "{err}");
+        let err = parse_engine("bogus").unwrap_err();
+        assert!(err.contains("polled|event"), "{err}");
+        let err = parse_topology("bogus").unwrap_err();
+        assert!(err.contains("mesh|torus|ring"), "{err}");
+        // And the new policies parse as first-class CLI values.
+        assert_eq!(parse_mapping("coda"), Ok(MappingScheme::Coda));
+        assert_eq!(parse_mapping("oracle"), Ok(MappingScheme::Oracle));
     }
 }

@@ -1,31 +1,48 @@
-//! Mapping schemes — who decides where a page's data lives and where its
-//! computation runs. Together with the placement policies in
-//! [`crate::alloc`], these implement the "B / TOM / AIMM" columns of the
-//! paper's evaluation (§6.3):
+//! Mapping policies — who decides where a page's data lives and where
+//! its computation runs. The decision layer is pluggable (the paper
+//! frames AIMM as "a plugin module for various NMP systems", §5):
+//! every scheme implements the [`policy::MappingPolicy`] trait and the
+//! simulator applies whatever [`policy::MappingAction`]s it emits,
+//! never asking *which* scheme is configured.
 //!
-//! * **B** (baseline) is the *absence* of a scheme: pages stay where the
-//!   frame allocator put them, computation follows the offloading
-//!   technique's static rule.
-//! * **TOM** ([`tom::TomMapper`]) profiles each epoch's NMP-op stream,
-//!   scores a fixed candidate set of page→cube hashes on the co-location
-//!   they *would* have achieved, and bulk-adopts the winner at the epoch
-//!   boundary. It is a pure function of page numbers — cube ids come out
-//!   of a hash mod `num_cubes` — so it is topology-agnostic by
-//!   construction: it optimizes co-location (zero-hop operand fetches),
-//!   not hop distance, on mesh, torus and ring alike.
-//! * **AIMM** writes the [`remap_table::ComputeRemapTable`]: the RL
-//!   agent's per-page *computation* placement overrides, resolved at MC
-//!   dispatch time. Its data-side counterpart is page migration
+//! The five policies, selectable via `--mapping` / the `mapping` TOML
+//! key ([`crate::config::MappingScheme`]):
+//!
+//! * **B** ([`policy::BaselinePolicy`]) is the *absence* of a scheme:
+//!   pages stay where the frame allocator put them, computation follows
+//!   the offloading technique's static rule.
+//! * **TOM** ([`policy::TomPolicy`] over [`tom::TomMapper`]) profiles
+//!   each epoch's NMP-op stream, scores a fixed candidate set of
+//!   page→cube hashes on the co-location they *would* have achieved,
+//!   and bulk-adopts the winner at the epoch boundary. Pure function of
+//!   page numbers — topology-agnostic by construction.
+//! * **AIMM** ([`policy::AimmPolicy`]) writes the
+//!   [`remap_table::ComputeRemapTable`]: the RL agent's per-page
+//!   *computation* placement overrides, resolved at MC dispatch time.
+//!   Its data-side counterpart is page migration
 //!   ([`crate::migration`]), and its far targets are topology-aware
 //!   through [`crate::noc::topology::Topology::distant_cube`].
+//! * **CODA** ([`policy::CodaGreedy`]) is the learning-free co-location
+//!   competitor (Kim et al.): windowed per-page compute counters and
+//!   hysteresis-gated migration toward the dominant compute cube.
+//! * **ORACLE** ([`policy::OracleProfile`]) is the perfect-knowledge
+//!   upper bound: a side-effect-free dry run over the op stream derives
+//!   the best static page→cube assignment, replayed via first-touch
+//!   placement.
 //!
-//! What is deliberately *not* here: V→P translation ([`crate::mmu`]) and
-//! frame allocation ([`crate::alloc`]). A mapping scheme only redirects —
-//! the MMU stays the single source of truth for where a page physically
-//! is.
+//! What is deliberately *not* here: V→P translation ([`crate::mmu`])
+//! and frame allocation ([`crate::alloc`]). A mapping policy only
+//! redirects — the MMU stays the single source of truth for where a
+//! page physically is, and the `System` owns every actuator the
+//! policy's actions drive.
 
+pub mod policy;
 pub mod remap_table;
 pub mod tom;
 
+pub use policy::{
+    AimmPolicy, AnyPolicy, BaselinePolicy, CodaGreedy, MappingAction, MappingPolicy,
+    OracleProfile, PolicyCtx, TomPolicy,
+};
 pub use remap_table::ComputeRemapTable;
 pub use tom::{TomEvent, TomMapper, TOM_CANDIDATES};

@@ -8,7 +8,7 @@ use std::collections::{HashMap, VecDeque};
 use crate::alloc::Placement;
 use crate::config::{McId, SystemConfig, Technique, VPage};
 use crate::cube::PhysAddr;
-use crate::mapping::{ComputeRemapTable, TomMapper};
+use crate::mapping::{AnyPolicy, ComputeRemapTable, MappingPolicy};
 use crate::migration::MigrationSystem;
 use crate::mmu::{Mmu, Tlb, WALK_LEVELS};
 use crate::nmp::{schedule, CpuCache, NmpOp};
@@ -28,7 +28,9 @@ const DISPATCH_WIDTH: usize = 2;
 pub struct IssueDeps<'a> {
     pub mmu: &'a mut Mmu,
     pub placement: &'a mut dyn Placement,
-    pub tom: Option<&'a mut TomMapper>,
+    /// The configured mapping policy: consulted for first-touch
+    /// placement overrides and notified of every dispatched op.
+    pub policy: &'a mut AnyPolicy,
     pub cpu_cache: &'a mut CpuCache,
     pub remap: &'a mut ComputeRemapTable,
     pub migration: &'a MigrationSystem,
@@ -160,9 +162,11 @@ impl Mc {
         let loc = match deps.mmu.translate(pid, vpage) {
             Some(loc) => loc,
             None => {
-                // First touch: OS default placement (or TOM's hash).
-                let cube = match deps.tom.as_deref() {
-                    Some(tom) => tom.target_cube(pid, vpage),
+                // First touch: the policy's placement override (TOM's
+                // hash, the oracle's profiled assignment), else the OS
+                // default allocator.
+                let cube = match deps.policy.first_touch_cube(pid, vpage) {
+                    Some(cube) => cube,
                     None => {
                         let n = deps.mesh.num_cubes();
                         let free: Vec<usize> =
@@ -255,14 +259,22 @@ impl Mc {
             decision.compute_cube = cube;
         }
 
-        // TOM profiles co-location from dispatched ops.
-        if let Some(tom) = deps.tom.as_deref_mut() {
-            let mut sources = vec![(op.pid, op.src1_vpage())];
-            if let Some(v) = op.src2_vpage() {
-                sources.push((op.pid, v));
+        // The policy observes every dispatched op (TOM's co-location
+        // profiling, CODA's per-page compute counters; a no-op for the
+        // rest). `compute_cube` is the final decision, remap included.
+        let mut sources = [(op.pid, op.src1_vpage()); 2];
+        let n_sources = match op.src2_vpage() {
+            Some(v) => {
+                sources[1] = (op.pid, v);
+                2
             }
-            tom.record_op((op.pid, op.dest_vpage()), &sources);
-        }
+            None => 1,
+        };
+        deps.policy.observe_dispatch(
+            (op.pid, op.dest_vpage()),
+            &sources[..n_sources],
+            decision.compute_cube,
+        );
 
         let token = self.next_token;
         self.next_token += self.token_stride;
@@ -346,6 +358,7 @@ mod tests {
     struct Ctx {
         mmu: Mmu,
         placement: StripePlacement,
+        policy: AnyPolicy,
         cpu_cache: CpuCache,
         remap: ComputeRemapTable,
         migration: MigrationSystem,
@@ -361,6 +374,7 @@ mod tests {
             Ctx {
                 mmu,
                 placement: StripePlacement::default(),
+                policy: AnyPolicy::baseline(),
                 cpu_cache: CpuCache::new(cfg.cpu_cache_lines),
                 remap: ComputeRemapTable::new(1024),
                 migration: MigrationSystem::new(&cfg),
@@ -373,7 +387,7 @@ mod tests {
         IssueDeps {
             mmu: &mut c.mmu,
             placement: &mut c.placement,
-            tom: None,
+            policy: &mut c.policy,
             cpu_cache: &mut c.cpu_cache,
             remap: &mut c.remap,
             migration: &c.migration,

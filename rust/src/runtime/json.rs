@@ -153,7 +153,13 @@ impl<'a> Parser<'a> {
 
     fn expect(&mut self, b: u8) -> anyhow::Result<()> {
         let got = self.bump()?;
-        anyhow::ensure!(got == b, "expected {:?} at {}, got {:?}", b as char, self.pos, got as char);
+        anyhow::ensure!(
+            got == b,
+            "expected {:?} at {}, got {:?}",
+            b as char,
+            self.pos,
+            got as char
+        );
         Ok(())
     }
 
@@ -261,8 +267,9 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
+        let is_num_byte =
+            |c: u8| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-');
+        while matches!(self.peek(), Some(c) if is_num_byte(c)) {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;

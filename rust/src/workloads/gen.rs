@@ -175,17 +175,41 @@ fn gen_lud(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
     let mut ops = Vec::new();
     for k in 0..n_blocks {
         // Diagonal factor.
-        ops.push(op(pid, OpKind::Mul, blk(k, k) + rng.below(64) * 64, blk(k, k) + rng.below(64) * 64, None));
+        ops.push(op(
+            pid,
+            OpKind::Mul,
+            blk(k, k) + rng.below(64) * 64,
+            blk(k, k) + rng.below(64) * 64,
+            None,
+        ));
         // Row/column panels.
         for i in k + 1..n_blocks {
-            ops.push(op(pid, OpKind::Mul, blk(i, k) + rng.below(64) * 64, blk(k, k) + rng.below(64) * 64, Some(blk(i, k) + rng.below(64) * 64)));
-            ops.push(op(pid, OpKind::Mul, blk(k, i) + rng.below(64) * 64, blk(k, k) + rng.below(64) * 64, Some(blk(k, i) + rng.below(64) * 64)));
+            ops.push(op(
+                pid,
+                OpKind::Mul,
+                blk(i, k) + rng.below(64) * 64,
+                blk(k, k) + rng.below(64) * 64,
+                Some(blk(i, k) + rng.below(64) * 64),
+            ));
+            ops.push(op(
+                pid,
+                OpKind::Mul,
+                blk(k, i) + rng.below(64) * 64,
+                blk(k, k) + rng.below(64) * 64,
+                Some(blk(k, i) + rng.below(64) * 64),
+            ));
         }
         // Trailing update: high-affinity triples.
         for i in k + 1..n_blocks {
             for j in k + 1..n_blocks {
                 let d = blk(i, j) + rng.below(64) * 64;
-                ops.push(op(pid, OpKind::Mac, d, blk(i, k) + rng.below(64) * 64, Some(blk(k, j) + rng.below(64) * 64)));
+                ops.push(op(
+                    pid,
+                    OpKind::Mac,
+                    d,
+                    blk(i, k) + rng.below(64) * 64,
+                    Some(blk(k, j) + rng.below(64) * 64),
+                ));
             }
         }
     }
@@ -219,7 +243,13 @@ fn gen_km(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
         }
         // Centroid update.
         for c in 0..k_pages {
-            ops.push(op(pid, OpKind::Add, centroids.page_addr(c), accum.page_addr(c) + (c % 64) * 64, None));
+            ops.push(op(
+                pid,
+                OpKind::Add,
+                centroids.page_addr(c),
+                accum.page_addr(c) + (c % 64) * 64,
+                None,
+            ));
         }
     }
     ops

@@ -35,7 +35,9 @@ pub mod gen;
 pub mod multi;
 pub mod trace;
 
-pub use analysis::{affinity_quadrants, classify_pages, mean_active_pages, AffinityQuadrants, PageClasses};
+pub use analysis::{
+    affinity_quadrants, classify_pages, mean_active_pages, AffinityQuadrants, PageClasses,
+};
 pub use gen::{generate, Benchmark};
 pub use multi::interleave;
 pub use trace::Trace;

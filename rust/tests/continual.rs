@@ -158,6 +158,39 @@ fn resume_is_bit_identical_under_both_engines() {
     }
 }
 
+/// The policy trait's checkpoint hooks: every non-checkpointable
+/// policy (baseline/TOM/CODA/oracle) refuses `snapshot` and `restore`
+/// loudly, naming itself — the same contract the CLI's
+/// `--checkpoint`/`--resume` guard surfaces as
+/// "the {policy} policy is not checkpointable".
+#[test]
+fn non_checkpointable_policies_refuse_snapshot_by_name() {
+    use aimm::mapping::{AnyPolicy, MappingPolicy};
+    let donor_ck = {
+        let cfg = aimm_cfg(Engine::Event);
+        mk_agent(&cfg).checkpoint().expect("fresh agent is at a boundary")
+    };
+    for scheme in MappingScheme::ALL {
+        if scheme.checkpointable() {
+            continue;
+        }
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = scheme;
+        let mut policy = AnyPolicy::new(&cfg, &[], None);
+        let err = policy.snapshot().unwrap_err().to_string();
+        assert!(err.contains(scheme.name()), "{}: {err}", scheme.name());
+        assert!(err.contains("not checkpointable"), "{}: {err}", scheme.name());
+        let err = policy.restore(&donor_ck).unwrap_err().to_string();
+        assert!(err.contains(scheme.name()), "{}: {err}", scheme.name());
+    }
+    // And the checkpointable one round-trips through the same hooks.
+    let cfg = aimm_cfg(Engine::Event);
+    let mut policy = AnyPolicy::new(&cfg, &[], Some(mk_agent(&cfg)));
+    let ck = policy.snapshot().expect("AIMM snapshots at the boundary");
+    policy.restore(&ck).expect("AIMM restores its own checkpoint");
+    assert_eq!(policy.snapshot().unwrap().to_json(), ck.to_json());
+}
+
 /// Cross-engine: a checkpoint written under one engine resumes
 /// bit-identically under the other (the engine is a clock strategy, not
 /// simulation state — DESIGN.md §8).

@@ -52,7 +52,8 @@ fn cell_cfg(technique: Technique, mapping: MappingScheme, seed: u64) -> SystemCo
 fn engines_are_bit_identical_across_the_grid() {
     // Single-program cells plus one multi-program combo; every offload
     // technique; two seeds. Mapping schemes cycle with the cell index so
-    // all three are covered without cubing the grid.
+    // all five policies (B, TOM, AIMM, CODA, ORACLE) are covered without
+    // quintupling the grid.
     let combos: [&[Benchmark]; 3] = [
         &[Benchmark::Mac],
         &[Benchmark::Spmv],
@@ -86,6 +87,36 @@ fn engines_are_bit_identical_across_the_grid() {
                 }
             }
         }
+    }
+}
+
+/// The two new policies keep the polled/event contract on dedicated
+/// cells (the cycling grid above covers them too, but these pin the
+/// interesting mechanisms by name): CODA's window evaluations fire at
+/// identical cycles under both engines, and the oracle's profiled
+/// first-touch placement is clock-independent by construction.
+#[test]
+fn engines_are_bit_identical_for_coda_and_oracle() {
+    for (mapping, bench) in [
+        (MappingScheme::Coda, Benchmark::Spmv),
+        (MappingScheme::Coda, Benchmark::Rd),
+        (MappingScheme::Oracle, Benchmark::Km),
+        (MappingScheme::Oracle, Benchmark::Mac),
+    ] {
+        let mut polled_cfg = cell_cfg(Technique::Bnmp, mapping, 23);
+        polled_cfg.engine = Engine::Polled;
+        let mut event_cfg = cell_cfg(Technique::Bnmp, mapping, 23);
+        event_cfg.engine = Engine::Event;
+        let ctx = format!("{}/{}", mapping, bench.name());
+        let p = run_cell(&polled_cfg, &[bench], 0.03, 2)
+            .unwrap_or_else(|e| panic!("polled {ctx}: {e}"));
+        let e = run_cell(&event_cfg, &[bench], 0.03, 2)
+            .unwrap_or_else(|e| panic!("event {ctx}: {e}"));
+        assert_eq!(p.runs.len(), e.runs.len(), "{ctx}");
+        for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+            assert_identical(rp, re, &format!("{ctx} run {i}"));
+        }
+        assert!(p.last().ops_completed > 0, "{ctx}: cell must actually run");
     }
 }
 

@@ -19,6 +19,7 @@ fn small_trace(bench: Benchmark) -> Vec<NmpOp> {
 
 #[test]
 fn every_technique_times_every_mapping_completes() {
+    // All five registered policies — B, TOM, AIMM, CODA, ORACLE.
     for technique in Technique::ALL {
         for mapping in MappingScheme::ALL {
             let mut c = cfg();
@@ -27,7 +28,7 @@ fn every_technique_times_every_mapping_completes() {
             let ops = small_trace(Benchmark::Spmv);
             let n = ops.len() as u64;
             // AIMM path uses the linear mock for test determinism/speed.
-            let agent = (mapping == MappingScheme::Aimm).then(|| {
+            let agent = mapping.uses_agent().then(|| {
                 AimmAgent::new(Box::new(LinearQ::new(1e-2, 0.95, 3)), c.agent.clone(), 5)
             });
             let mut sys = System::new(c, ops, agent);

@@ -68,6 +68,38 @@ fn topology_cells_identical_at_any_worker_count() {
     }
 }
 
+/// The new policies obey the same contract: CODA's windowed counters
+/// sort deterministically (never by map-iteration order) and the
+/// oracle's dry-run assignment is a pure function of the trace, so
+/// their cells are byte-identical at any worker count too.
+#[test]
+fn coda_and_oracle_cells_identical_at_any_worker_count() {
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd, Benchmark::Spmv]];
+    g.mappings = vec![MappingScheme::Coda, MappingScheme::Oracle];
+    let cells = g.cells();
+    assert_eq!(cells.len(), 4);
+    let serial = run_grid(&cells, 1).expect("serial policy sweep");
+    let parallel = run_grid(&cells, 4).expect("parallel policy sweep");
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            cell_json(s),
+            cell_json(p),
+            "cell {} diverged between 1 and 4 workers",
+            s.cell.name()
+        );
+    }
+    assert_eq!(report_json(&serial), report_json(&parallel));
+    // The new policies are first-class cells: named and serialized like
+    // the paper's trio.
+    assert!(serial.iter().any(|r| r.cell.name().contains("/CODA/")));
+    assert!(serial.iter().any(|r| r.cell.name().contains("/ORACLE/")));
+    for r in &serial {
+        assert!(r.summary.last().ops_completed > 0, "{}", r.cell.name());
+        assert!(cell_json(r).contains(&format!("\"mapping\":\"{}\"", r.cell.mapping.name())));
+    }
+}
+
 #[test]
 fn report_is_valid_json_with_expected_shape() {
     let mut g = grid();
