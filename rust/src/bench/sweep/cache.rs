@@ -1,0 +1,320 @@
+//! Content-hashed cell identity (DESIGN.md §12).
+//!
+//! [`cell_key`] is the identity a journaled sweep caches against: a
+//! splitmix64 fold over a canonical serialization of *every*
+//! [`SweepCell`] field — each benchmark in order, technique, mapping,
+//! mesh dims, topology, HOARD, seed, scale bits, run count, and the
+//! engine (which is deliberately absent from the display name and the
+//! JSON report). Two cells share a key only if they would run the exact
+//! same experiment, so a journal entry whose key matches the current
+//! grid can be reused without re-simulating — and one whose key doesn't
+//! is recomputed, never silently trusted.
+//!
+//! The key is a pure function of the cell: worker count, shard
+//! assignment and grid position never feed it (property-tested below).
+
+use crate::runtime::json::{self, Json};
+use crate::sim::Rng;
+
+use super::cell_json;
+use super::grid::{CellResult, SweepCell};
+
+/// Version tag folded into every key: bump when the canonical
+/// serialization changes so stale journals from an older layout can
+/// never alias a current cell.
+const KEY_DOMAIN: &[u8] = b"aimm-cell-key-v1";
+
+/// One splitmix64 fold step — the same golden-ratio-spread mix as
+/// [`super::derive_seed`], chained so field order matters.
+fn fold(acc: u64, v: u64) -> u64 {
+    Rng::new(acc ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// Fold a byte string: its length first (so `"ab","c"` and `"a","bc"`
+/// cannot collide), then its little-endian 8-byte chunks, zero-padded.
+fn fold_bytes(acc: u64, bytes: &[u8]) -> u64 {
+    let mut acc = fold(acc, bytes.len() as u64);
+    for chunk in bytes.chunks(8) {
+        let mut le = [0u8; 8];
+        le[..chunk.len()].copy_from_slice(chunk);
+        acc = fold(acc, u64::from_le_bytes(le));
+    }
+    acc
+}
+
+/// The cell's content hash: stable across processes, machines, worker
+/// counts and shard assignments; different for any single-field change.
+pub fn cell_key(cell: &SweepCell) -> u64 {
+    let mut acc = fold_bytes(0, KEY_DOMAIN);
+    acc = fold(acc, cell.benches.len() as u64);
+    for b in &cell.benches {
+        acc = fold_bytes(acc, b.name().as_bytes());
+    }
+    acc = fold_bytes(acc, cell.technique.name().as_bytes());
+    acc = fold_bytes(acc, cell.mapping.name().as_bytes());
+    acc = fold(acc, cell.mesh.0 as u64);
+    acc = fold(acc, cell.mesh.1 as u64);
+    acc = fold_bytes(acc, cell.topology.name().as_bytes());
+    acc = fold(acc, cell.hoard as u64);
+    acc = fold(acc, cell.seed);
+    acc = fold(acc, cell.scale.to_bits());
+    acc = fold(acc, cell.runs as u64);
+    fold_bytes(acc, cell.engine.name().as_bytes())
+}
+
+/// One cell of a (possibly resumed) sweep: computed fresh this process,
+/// or replayed verbatim from a journal. The cached variant carries the
+/// journal's serialized cell *bytes*, so a resumed or merged report is
+/// byte-identical to an uninterrupted run by construction — no float
+/// ever takes a parse/re-format round trip.
+#[derive(Debug, Clone)]
+pub enum CellOutcome {
+    Fresh(CellResult),
+    Cached { key: u64, json: String },
+}
+
+impl CellOutcome {
+    /// The serialized cell, exactly as the aggregated report embeds it.
+    pub fn json(&self) -> String {
+        match self {
+            CellOutcome::Fresh(res) => cell_json(res),
+            CellOutcome::Cached { json, .. } => json.clone(),
+        }
+    }
+
+    /// The summary-table row (parsed back out of the serialized cell
+    /// for cached entries).
+    pub fn row(&self) -> anyhow::Result<CellRow> {
+        match self {
+            CellOutcome::Fresh(res) => {
+                let last = res.summary.last();
+                Ok(CellRow {
+                    name: res.cell.name(),
+                    cycles: last.cycles,
+                    opc: last.opc(),
+                    avg_hops: last.avg_hops,
+                    compute_utilization: last.compute_utilization,
+                    fraction_pages_migrated: last.fraction_pages_migrated,
+                    cached: false,
+                })
+            }
+            CellOutcome::Cached { json, .. } => CellRow::from_cell_json(json),
+        }
+    }
+}
+
+/// The fields the `aimm sweep` summary table prints for one cell.
+#[derive(Debug, Clone)]
+pub struct CellRow {
+    pub name: String,
+    pub cycles: u64,
+    pub opc: f64,
+    pub avg_hops: f64,
+    pub compute_utilization: f64,
+    pub fraction_pages_migrated: f64,
+    /// Whether this row was replayed from a journal instead of run.
+    pub cached: bool,
+}
+
+fn str_field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("cell JSON missing string field {key:?}"))
+}
+
+/// Numeric field, tolerant of the writer's NaN/∞ → `null` convention.
+fn num_field(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+impl CellRow {
+    /// Rebuild the display row from one serialized cell ([`cell_json`]
+    /// output): the cell name is re-derived from the recorded axes —
+    /// [`super::stats_json`] keys the per-run numbers the table shows.
+    pub fn from_cell_json(text: &str) -> anyhow::Result<CellRow> {
+        let j = json::parse(text)?;
+        let benches = j
+            .get("benches")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("cell JSON missing benches"))?;
+        let combo = benches
+            .iter()
+            .map(|b| b.as_str().unwrap_or("?"))
+            .collect::<Vec<_>>()
+            .join("-");
+        // The topology segment exists only off-default, mirroring
+        // SweepCell::name / cell_json.
+        let topology = match j.get("topology").and_then(Json::as_str) {
+            Some(t) => format!("/{t}"),
+            None => String::new(),
+        };
+        let hoard = matches!(j.get("hoard"), Some(Json::Bool(true)));
+        let seed = json::parse_hex_u64(str_field(&j, "seed")?)?;
+        let name = format!(
+            "{}/{}/{}/{}{}{}/s{:x}",
+            combo,
+            str_field(&j, "technique")?,
+            str_field(&j, "mapping")?,
+            str_field(&j, "mesh")?,
+            topology,
+            if hoard { "/HOARD" } else { "" },
+            seed,
+        );
+        let runs = j
+            .get("runs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("cell JSON missing runs"))?;
+        let last = runs.last().ok_or_else(|| anyhow::anyhow!("cell JSON has zero runs"))?;
+        Ok(CellRow {
+            name,
+            cycles: num_field(last, "cycles") as u64,
+            opc: num_field(last, "opc"),
+            avg_hops: num_field(last, "avg_hops"),
+            compute_utilization: num_field(last, "compute_utilization"),
+            fraction_pages_migrated: num_field(last, "fraction_pages_migrated"),
+            cached: true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    use crate::config::{Engine, MappingScheme, Technique, TopologyKind};
+    use crate::workloads::Benchmark;
+
+    use super::super::grid::SweepGrid;
+    use super::*;
+
+    fn base() -> SweepCell {
+        SweepCell {
+            benches: vec![Benchmark::Mac],
+            technique: Technique::Bnmp,
+            mapping: MappingScheme::Aimm,
+            mesh: (4, 4),
+            topology: TopologyKind::Mesh,
+            hoard: false,
+            seed: 7,
+            scale: 0.1,
+            runs: 2,
+            engine: Engine::Event,
+        }
+    }
+
+    /// The single-field-sensitivity property: changing any one field —
+    /// every axis, the seed, the engine — changes the key, and no two
+    /// mutants collide with each other either.
+    #[test]
+    fn every_field_feeds_the_key() {
+        let k0 = cell_key(&base());
+        assert_eq!(k0, cell_key(&base()), "key is a pure function");
+        let mut seen = HashSet::new();
+        seen.insert(k0);
+        let mut check = |cell: SweepCell, what: &str| {
+            let k = cell_key(&cell);
+            assert_ne!(k, k0, "{what} did not change the key");
+            assert!(seen.insert(k), "{what} collided with another mutant");
+        };
+        for b in Benchmark::ALL {
+            if b != Benchmark::Mac {
+                let mut c = base();
+                c.benches = vec![b];
+                check(c, b.name());
+            }
+        }
+        let mut c = base();
+        c.benches = vec![Benchmark::Mac, Benchmark::Rd];
+        check(c, "combo grows");
+        let mut c = base();
+        c.benches = vec![Benchmark::Rd, Benchmark::Mac];
+        check(c, "combo order");
+        for t in Technique::ALL {
+            if t != Technique::Bnmp {
+                let mut c = base();
+                c.technique = t;
+                check(c, t.name());
+            }
+        }
+        for m in MappingScheme::ALL {
+            if m != MappingScheme::Aimm {
+                let mut c = base();
+                c.mapping = m;
+                check(c, m.name());
+            }
+        }
+        let mut c = base();
+        c.mesh = (8, 4);
+        check(c, "mesh cols");
+        let mut c = base();
+        c.mesh = (4, 8);
+        check(c, "mesh rows (transpose must differ from cols)");
+        for t in TopologyKind::ALL {
+            if t != TopologyKind::Mesh {
+                let mut c = base();
+                c.topology = t;
+                check(c, t.name());
+            }
+        }
+        let mut c = base();
+        c.hoard = true;
+        check(c, "hoard");
+        let mut c = base();
+        c.seed = 8;
+        check(c, "seed");
+        let mut c = base();
+        c.scale = 0.2;
+        check(c, "scale");
+        let mut c = base();
+        c.runs = 3;
+        check(c, "runs");
+        let mut c = base();
+        c.engine = Engine::Polled;
+        check(c, "engine");
+    }
+
+    /// Keys depend only on cell content: identical for clones, and the
+    /// same whether a cell is looked at from the full grid or from any
+    /// shard partition of it.
+    #[test]
+    fn key_is_position_and_shard_independent() {
+        let mut g = SweepGrid::new(0.05, 1);
+        g.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd], vec![Benchmark::Spmv]];
+        let cells = g.cells();
+        let direct: Vec<u64> = cells.iter().map(cell_key).collect();
+        assert_eq!(direct.len(), HashSet::<u64>::from_iter(direct.clone()).len());
+        for n in [2usize, 4] {
+            for s in 0..n {
+                let shard: Vec<(usize, SweepCell)> = cells
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % n == s)
+                    .map(|(i, c)| (i, c.clone()))
+                    .collect();
+                for (i, c) in shard {
+                    assert_eq!(cell_key(&c), direct[i], "shard {s}/{n} cell {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_from_cell_json_rebuilds_the_cell_name() {
+        // Serialize a real (tiny) result both ways and compare rows.
+        let mut g = SweepGrid::new(0.03, 1);
+        g.benches = vec![vec![Benchmark::Mac]];
+        g.mappings = vec![MappingScheme::Baseline];
+        g.topologies = vec![TopologyKind::Ring];
+        g.hoard = vec![true];
+        let results = super::super::run_grid(&g.cells(), 1).unwrap();
+        let fresh = CellOutcome::Fresh(results[0].clone()).row().unwrap();
+        let cached = CellRow::from_cell_json(&cell_json(&results[0])).unwrap();
+        assert_eq!(fresh.name, cached.name);
+        assert_eq!(fresh.name, results[0].cell.name());
+        assert_eq!(fresh.cycles, cached.cycles);
+        assert_eq!(fresh.opc, cached.opc);
+        assert_eq!(fresh.avg_hops, cached.avg_hops);
+        assert!(!fresh.cached);
+        assert!(cached.cached);
+    }
+}

@@ -1,0 +1,488 @@
+//! Crash-safe incremental journal, resume, sharding and merge — the
+//! batch discipline that makes `aimm sweep` restartable and fan-out-able
+//! (DESIGN.md §12).
+//!
+//! Every finished cell is appended to a JSON-Lines journal as one
+//! self-describing line `{"schema":…,"idx":…,"cell_key":…,"cell":{…}}`
+//! the moment it completes, under a mutex, with an explicit flush — a
+//! killed sweep loses at most the cells that were in flight. The `cell`
+//! payload is the exact [`super::cell_json`] byte string the aggregated
+//! report embeds, so resuming from a journal or merging shard journals
+//! reassembles `BENCH_sweep.json` *byte-identically* to an uninterrupted
+//! single-process run: cached cells are spliced back in verbatim, never
+//! re-serialized.
+//!
+//! `idx` is the cell's position in the canonically ordered full grid
+//! ([`super::SweepGrid::cells`]), which is a pure function of the axis
+//! lists — so a shard partition (`idx % shard_count == shard_index`) and
+//! the merged cell order are worker- and machine-invariant.
+//!
+//! On resume every line is verified before reuse: unparseable lines (a
+//! torn tail from a kill mid-append) are dropped loudly, and lines whose
+//! `cell_key` matches no cell of the current grid are dropped as stale —
+//! the cell is recomputed, never silently reused.
+
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::runtime::json::{self, write as jw, Json};
+
+use super::cache::{cell_key, CellOutcome};
+use super::grid::{parallel_map, CellResult, SweepCell};
+use super::report_json_from_cells;
+
+/// Per-line schema tag; bump alongside any layout change so old
+/// journals read as stale instead of misparsing.
+pub const LINE_SCHEMA: &str = "aimm-sweep-cell-v1";
+
+/// The journal sitting next to a report `out` path: `.json` (or any
+/// extension) becomes `.jsonl`, an extension-less path gains one —
+/// `BENCH_sweep.json` journals to `BENCH_sweep.jsonl`.
+pub fn journal_path_for(out: &Path) -> PathBuf {
+    out.with_extension("jsonl")
+}
+
+/// Serialize one journal line (no trailing newline). `cell` must be the
+/// [`super::cell_json`] string of the finished cell; it is embedded
+/// verbatim as the last field so [`parse_line`] can recover the exact
+/// bytes.
+pub fn line(idx: usize, key: u64, cell: &str) -> String {
+    jw::obj(&[
+        ("schema", jw::string(LINE_SCHEMA)),
+        ("idx", idx.to_string()),
+        ("cell_key", jw::hex_u64(key)),
+        ("cell", cell.to_string()),
+    ])
+}
+
+/// One parsed journal line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    /// Position in the canonically ordered full grid.
+    pub idx: usize,
+    /// [`cell_key`] of the cell that produced this entry.
+    pub key: u64,
+    /// The serialized cell, byte-for-byte as the report embeds it.
+    pub cell: String,
+}
+
+impl JournalEntry {
+    /// Re-serialize; `parse_line(entry.line())` round-trips exactly.
+    pub fn line(&self) -> String {
+        line(self.idx, self.key, &self.cell)
+    }
+}
+
+/// Parse one journal line, recovering the embedded cell *verbatim*.
+///
+/// The line must parse as JSON, carry the [`LINE_SCHEMA`] tag, and its
+/// trailing `cell` field is sliced back out of the raw text (the writer
+/// always emits it last) — then re-parsed standalone as a final guard
+/// against hand-edited lines with reordered fields.
+pub fn parse_line(raw: &str) -> anyhow::Result<JournalEntry> {
+    let j = json::parse(raw.trim_end())?;
+    entry_from(raw, &j)
+}
+
+/// The [`parse_line`] body after the JSON parse, split out so the bulk
+/// readers ([`read`], [`merge_files`]) can reuse the parse that
+/// [`json::parse_lines`] already did.
+fn entry_from(raw: &str, j: &Json) -> anyhow::Result<JournalEntry> {
+    let schema = j.get("schema").and_then(Json::as_str);
+    anyhow::ensure!(
+        schema == Some(LINE_SCHEMA),
+        "journal line schema {schema:?}, expected {LINE_SCHEMA:?}"
+    );
+    let idx = j
+        .get("idx")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("journal line missing idx"))?;
+    anyhow::ensure!(
+        idx >= 0.0 && idx.fract() == 0.0 && idx < 9e15,
+        "journal line idx {idx} is not a cell index"
+    );
+    let key = json::parse_hex_u64(
+        j.get("cell_key")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("journal line missing cell_key"))?,
+    )?;
+    let marker = "\"cell\":";
+    let start = raw
+        .find(marker)
+        .ok_or_else(|| anyhow::anyhow!("journal line missing cell field"))?
+        + marker.len();
+    let trimmed = raw.trim_end();
+    anyhow::ensure!(trimmed.ends_with('}'), "journal line does not end the object");
+    let cell = &trimmed[start..trimmed.len() - 1];
+    anyhow::ensure!(
+        cell.starts_with('{') && json::parse(cell).is_ok(),
+        "journal line cell field is not the trailing object"
+    );
+    Ok(JournalEntry { idx: idx as usize, key, cell: cell.to_string() })
+}
+
+/// Read a journal: parsed entries plus `(line_number, error)` for every
+/// corrupt line (1-based). A missing file is an empty journal, not an
+/// error — that is the cold-start case.
+pub fn read(path: &Path) -> anyhow::Result<(Vec<JournalEntry>, Vec<(usize, String)>)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((Vec::new(), Vec::new()))
+        }
+        Err(e) => anyhow::bail!("reading journal {}: {e}", path.display()),
+    };
+    let mut entries = Vec::new();
+    let mut corrupt = Vec::new();
+    for (lineno, raw, parsed) in json::parse_lines(&text) {
+        match parsed.and_then(|j| entry_from(raw, &j)) {
+            Ok(entry) => entries.push(entry),
+            Err(e) => corrupt.push((lineno, e.to_string())),
+        }
+    }
+    Ok((entries, corrupt))
+}
+
+/// Write `text` to `path` atomically: write `<path>.tmp`, then rename
+/// over the target. An interrupt can leave a stale `.tmp` behind but
+/// never a torn report; the next write simply overwrites the leftover.
+pub fn atomic_write_text(path: &Path, text: &str) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+        }
+    }
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    std::fs::write(&tmp, text).map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display()))
+}
+
+/// A deterministic stride partition of the grid: shard `index` owns the
+/// cells whose canonical grid index `i` satisfies `i % count == index`.
+/// Partition membership depends only on the grid definition — never on
+/// worker count, machine, or which shards run first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// 0-based shard index, `< count`.
+    pub index: usize,
+    /// Total shard count, `>= 1`.
+    pub count: usize,
+}
+
+impl ShardSpec {
+    pub fn selects(&self, idx: usize) -> bool {
+        idx % self.count == self.index
+    }
+}
+
+/// What a journaled sweep did: the outcomes for the selected cells in
+/// canonical grid order, plus resume accounting.
+#[derive(Debug)]
+pub struct SweepRunReport {
+    pub outcomes: Vec<CellOutcome>,
+    /// Selected cells replayed from the journal.
+    pub cached: usize,
+    /// Selected cells simulated this process.
+    pub computed: usize,
+    /// Journal lines whose `cell_key` matched no cell of the current
+    /// grid — dropped and recomputed (if still selected), never reused.
+    pub stale: usize,
+    /// Unparseable journal lines (torn appends, garbage) — dropped.
+    pub corrupt: usize,
+}
+
+/// Run the shard-selected subset of `cells` with journaling and resume.
+///
+/// Completed cells found in the journal (verified by [`cell_key`]) are
+/// replayed verbatim; the rest run on up to `threads` workers, each
+/// appended to the journal the moment it finishes. The journal is
+/// compacted (atomically) first whenever corrupt, stale or re-indexed
+/// lines would otherwise linger. Entries for grid cells *outside* the
+/// shard are preserved, so sequential shard runs may share one journal.
+pub fn run_journaled(
+    cells: &[SweepCell],
+    shard: Option<ShardSpec>,
+    threads: usize,
+    journal: &Path,
+) -> anyhow::Result<SweepRunReport> {
+    if let Some(s) = shard {
+        anyhow::ensure!(s.count >= 1 && s.index < s.count, "bad shard {}/{}", s.index, s.count);
+    }
+    let keys: Vec<u64> = cells.iter().map(cell_key).collect();
+    let selected: Vec<usize> = (0..cells.len())
+        .filter(|&i| shard.map_or(true, |s| s.selects(i)))
+        .collect();
+    for &i in &selected {
+        let cell = &cells[i];
+        cell.config()
+            .map_err(|e| anyhow::anyhow!("sweep cell {i} ({}): {e}", cell.name()))?;
+    }
+
+    // Load and verify the journal. `cache` maps cell_key -> (journal
+    // idx, serialized cell); last write wins so a compaction that raced
+    // an append converges on the newest entry.
+    let (entries, corrupt) = read(journal)?;
+    for (lineno, err) in &corrupt {
+        eprintln!(
+            "journal {}: line {lineno} unreadable ({err}) — dropping (torn append?)",
+            journal.display()
+        );
+    }
+    let grid_keys: HashMap<u64, usize> = keys.iter().enumerate().map(|(i, &k)| (k, i)).collect();
+    let mut cache: HashMap<u64, (usize, String)> = HashMap::new();
+    let mut stale = 0usize;
+    let mut duplicates = 0usize;
+    for e in entries {
+        if grid_keys.contains_key(&e.key) {
+            if cache.insert(e.key, (e.idx, e.cell)).is_some() {
+                duplicates += 1;
+            }
+        } else {
+            stale += 1;
+            eprintln!(
+                "journal {}: cell_key {:#x} matches no cell of the current grid — \
+                 dropping stale entry (will recompute, not reuse)",
+                journal.display(),
+                e.key
+            );
+        }
+    }
+
+    // Compact when anything was dropped or an entry's recorded index
+    // drifted from the current canonical order (grid axes reordered):
+    // rewrite only verified entries, re-indexed, atomically.
+    let drifted = cache.iter().any(|(k, (idx, _))| grid_keys[k] != *idx);
+    if stale > 0 || duplicates > 0 || !corrupt.is_empty() || drifted {
+        let mut text = String::new();
+        for (i, &k) in keys.iter().enumerate() {
+            if let Some((_, cell)) = cache.get(&k) {
+                text.push_str(&line(i, k, cell));
+                text.push('\n');
+            }
+        }
+        atomic_write_text(journal, &text)?;
+    }
+
+    // Run the misses, appending each result as it completes. A crash
+    // here loses only in-flight cells; everything journaled survives.
+    let miss: Vec<usize> =
+        selected.iter().copied().filter(|&i| !cache.contains_key(&keys[i])).collect();
+    let mut fresh: HashMap<usize, CellResult> = HashMap::new();
+    if !miss.is_empty() {
+        if let Some(parent) = journal.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+            }
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(journal)
+            .map_err(|e| anyhow::anyhow!("opening journal {}: {e}", journal.display()))?;
+        let sink = Mutex::new(file);
+        let results = parallel_map(&miss, threads, |&i| -> anyhow::Result<CellResult> {
+            let summary = cells[i].run()?;
+            let res = CellResult { cell: cells[i].clone(), summary };
+            let mut text = line(i, keys[i], &super::cell_json(&res));
+            text.push('\n');
+            let mut f = sink.lock().expect("journal sink poisoned");
+            f.write_all(text.as_bytes())?;
+            f.flush()?;
+            Ok(res)
+        });
+        for (&i, res) in miss.iter().zip(results) {
+            let r = res
+                .map_err(|e| anyhow::anyhow!("sweep cell {i} ({}) failed: {e}", cells[i].name()))?;
+            fresh.insert(i, r);
+        }
+    }
+
+    // Assemble outcomes in canonical grid order: journal hits verbatim,
+    // fresh results via the same cell_json the hits were written with.
+    let computed = miss.len();
+    let outcomes: Vec<CellOutcome> = selected
+        .iter()
+        .map(|&i| match fresh.remove(&i) {
+            Some(res) => CellOutcome::Fresh(res),
+            None => {
+                let (_, json) = &cache[&keys[i]];
+                CellOutcome::Cached { key: keys[i], json: json.clone() }
+            }
+        })
+        .collect();
+    Ok(SweepRunReport {
+        cached: selected.len() - computed,
+        computed,
+        stale,
+        corrupt: corrupt.len(),
+        outcomes,
+    })
+}
+
+/// Fold journal entries into one aggregated report, byte-identical to an
+/// unsharded run of the same grid. Strict by design: a merge that
+/// silently tolerated a gap or a conflict would masquerade as a complete
+/// study. Duplicate indices are allowed only when byte-identical (two
+/// shards, or a shard plus a resumed re-run, legitimately overlap).
+pub fn merge_entries(mut entries: Vec<JournalEntry>) -> anyhow::Result<String> {
+    anyhow::ensure!(!entries.is_empty(), "no journal entries to merge");
+    entries.sort_by_key(|e| e.idx);
+    let mut cells: Vec<String> = Vec::new();
+    for e in entries {
+        if e.idx == cells.len() {
+            // Next expected index.
+            cells.push(e.cell);
+        } else if e.idx + 1 == cells.len() {
+            // Duplicate of the previous index: must agree byte-for-byte.
+            anyhow::ensure!(
+                cells[e.idx] == e.cell,
+                "conflicting journal entries for cell index {} — shards from \
+                 different grids or engine versions?",
+                e.idx
+            );
+        } else {
+            anyhow::bail!(
+                "journal gap: expected cell index {}, found {} — is a shard \
+                 journal missing or incomplete?",
+                cells.len(),
+                e.idx
+            );
+        }
+    }
+    Ok(report_json_from_cells(&cells))
+}
+
+/// [`merge_entries`] over journal files (`aimm sweep --merge a,b,…`).
+/// Unlike resume, merge refuses corrupt lines outright: a merged report
+/// must account for every byte of its inputs.
+pub fn merge_files(paths: &[PathBuf]) -> anyhow::Result<String> {
+    let mut entries = Vec::new();
+    let mut seen = HashSet::new();
+    for p in paths {
+        anyhow::ensure!(seen.insert(p.clone()), "duplicate merge input {}", p.display());
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", p.display()))?;
+        for (lineno, raw, parsed) in json::parse_lines(&text) {
+            let entry = parsed
+                .and_then(|j| entry_from(raw, &j))
+                .map_err(|e| anyhow::anyhow!("{}:{lineno}: {e}", p.display()))?;
+            entries.push(entry);
+        }
+    }
+    merge_entries(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(idx: usize, key: u64, cell: &str) -> JournalEntry {
+        JournalEntry { idx, key, cell: cell.to_string() }
+    }
+
+    #[test]
+    fn line_round_trips_key_idx_and_cell_bytes() {
+        let cell = r#"{"name":"MAC/BNMP/B/4x4/s7","runs":[{"opc":0.25}]}"#;
+        let l = line(3, 0xDEAD_BEEF_1234_5678, cell);
+        let e = parse_line(&l).unwrap();
+        assert_eq!(e.idx, 3);
+        assert_eq!(e.key, 0xDEAD_BEEF_1234_5678);
+        assert_eq!(e.cell, cell);
+        // Round-tripping the entry reproduces the identical line — the
+        // serialization never perturbs the key or the cell bytes.
+        assert_eq!(e.line(), l);
+        assert_eq!(parse_line(&e.line()).unwrap(), e);
+    }
+
+    #[test]
+    fn parse_line_rejects_torn_and_foreign_lines() {
+        let good = line(0, 7, "{\"name\":\"x\"}");
+        assert!(parse_line(&good).is_ok());
+        // Torn tail: every strict prefix fails (JSON must close).
+        for cut in 1..good.len() {
+            assert!(parse_line(&good[..cut]).is_err(), "prefix {cut} parsed");
+        }
+        assert!(parse_line("").is_err());
+        assert!(parse_line("garbage").is_err());
+        // Valid JSON, wrong schema.
+        assert!(parse_line("{\"schema\":\"other\",\"idx\":0}").is_err());
+        // Missing fields.
+        assert!(parse_line(&format!("{{\"schema\":\"{LINE_SCHEMA}\",\"idx\":1}}")).is_err());
+    }
+
+    #[test]
+    fn journal_path_for_swaps_extension() {
+        assert_eq!(
+            journal_path_for(Path::new("BENCH_sweep.json")),
+            PathBuf::from("BENCH_sweep.jsonl")
+        );
+        assert_eq!(
+            journal_path_for(Path::new("out/report.json")),
+            PathBuf::from("out/report.jsonl")
+        );
+        assert_eq!(journal_path_for(Path::new("report")), PathBuf::from("report.jsonl"));
+    }
+
+    #[test]
+    fn shard_spec_partitions_exactly() {
+        for n in 1..=5usize {
+            for idx in 0..23usize {
+                let owners: Vec<usize> = (0..n)
+                    .filter(|&s| ShardSpec { index: s, count: n }.selects(idx))
+                    .collect();
+                assert_eq!(owners.len(), 1, "idx {idx} owned by {owners:?} of {n}");
+                assert_eq!(owners[0], idx % n);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_orders_dedups_and_rejects_gaps_and_conflicts() {
+        let a = entry(0, 10, "{\"name\":\"a\"}");
+        let b = entry(1, 11, "{\"name\":\"b\"}");
+        let c = entry(2, 12, "{\"name\":\"c\"}");
+        // Out-of-order input merges in index order.
+        let merged = merge_entries(vec![c.clone(), a.clone(), b.clone()]).unwrap();
+        assert_eq!(
+            merged,
+            "{\"schema\":\"aimm-sweep-v1\",\"cell_count\":3,\
+             \"cells\":[{\"name\":\"a\"},{\"name\":\"b\"},{\"name\":\"c\"}]}"
+        );
+        // Byte-identical duplicates collapse.
+        let dup = merge_entries(vec![a.clone(), b.clone(), b.clone(), c.clone()]).unwrap();
+        assert_eq!(dup, merged);
+        // A gap is an incomplete shard set.
+        let err = merge_entries(vec![a.clone(), c.clone()]).unwrap_err().to_string();
+        assert!(err.contains("journal gap"), "{err}");
+        assert!(err.contains("expected cell index 1"), "{err}");
+        // A conflicting duplicate is a grid mismatch.
+        let b2 = entry(1, 11, "{\"name\":\"B2\"}");
+        let err = merge_entries(vec![a, b, b2]).unwrap_err().to_string();
+        assert!(err.contains("conflicting journal entries"), "{err}");
+        // Nothing to merge is an error, not an empty report.
+        assert!(merge_entries(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_stale_tmp() {
+        let dir = std::env::temp_dir().join(format!("aimm_atomic_write_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("report.json");
+        let tmp = dir.join("report.json.tmp");
+        // A stale tmp from an interrupted earlier write must not leak
+        // into (or block) the next write.
+        std::fs::write(&tmp, "torn garbage").unwrap();
+        atomic_write_text(&out, "{\"ok\":true}").unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap(), "{\"ok\":true}");
+        assert!(!tmp.exists(), "tmp must be renamed away");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,353 @@
+//! Resumable, shardable design-space sweep batch system (DESIGN.md §6.3
+//! and §12).
+//!
+//! A sweep is a grid of [`SweepCell`]s — benchmark (or multi-program
+//! combination) × offloading technique × mapping scheme × mesh dims ×
+//! cube-network topology × HOARD × seed — fanned across OS worker
+//! threads. Each cell builds its own [`SystemConfig`] from its own seed
+//! and runs the §6.1 episode protocol through
+//! [`crate::coordinator::run_cell`], so per-cell results are
+//! **byte-identical for any worker count**: the simulator holds no
+//! global state, and every map reduction on the simulation path breaks
+//! ties deterministically (never by hash-iteration order, which differs
+//! between threads).
+//!
+//! The module splits along the batch-system seams:
+//!
+//! * [`grid`] — cell/grid descriptors, the canonical cell ordering, and
+//!   the order-preserving [`parallel_map`] fan-out ([`run_grid`]).
+//! * [`cache`] — [`cell_key`], the content hash a journaled sweep caches
+//!   completed cells under.
+//! * [`journal`] — the crash-safe JSONL journal, resume verification,
+//!   `--shard i/n` partitioning and `--merge` ([`run_journaled`]).
+//!
+//! Results render either as a table (`aimm sweep`) or as a
+//! machine-readable `BENCH_sweep.json` report with a fixed key order
+//! ([`report_json`]), written atomically (temp file + rename) so an
+//! interrupt can never leave a torn report. The figure harnesses for
+//! Figs 6, 11 and 12 are grids over this module; Fig 5's per-bench
+//! trace analysis fans out through [`parallel_map`].
+//!
+//! [`SystemConfig`]: crate::config::SystemConfig
+
+pub mod cache;
+pub mod grid;
+pub mod journal;
+
+pub use cache::{cell_key, CellOutcome, CellRow};
+pub use grid::{
+    default_threads, derive_seed, parallel_map, run_grid, workload_seed, CellResult, SweepCell,
+    SweepGrid,
+};
+pub use journal::{
+    atomic_write_text, journal_path_for, merge_entries, merge_files, run_journaled, JournalEntry,
+    ShardSpec, SweepRunReport,
+};
+
+use std::path::Path;
+
+use crate::config::{MappingScheme, Technique, TopologyKind};
+use crate::metrics::RunStats;
+
+// ---------------------------------------------------------------------
+// JSON report (fixed key order — runtime/json.rs can parse it back, and
+// the determinism test compares these strings byte-for-byte). The
+// writer primitives live in runtime/json.rs (`json::write`) and are
+// shared with the agent-checkpoint format; these thin aliases keep the
+// report code readable and the emitted bytes unchanged.
+// ---------------------------------------------------------------------
+
+use crate::runtime::json::write as jw;
+
+fn jnum(x: f64) -> String {
+    jw::num(x)
+}
+
+fn jstr(s: &str) -> String {
+    jw::string(s)
+}
+
+fn jobj(fields: &[(&str, String)]) -> String {
+    jw::obj(fields)
+}
+
+/// Serialize one run's statistics.
+pub fn stats_json(r: &RunStats) -> String {
+    jobj(&[
+        ("cycles", r.cycles.to_string()),
+        ("ops_completed", r.ops_completed.to_string()),
+        ("opc", jnum(r.opc())),
+        ("avg_hops", jnum(r.avg_hops)),
+        ("avg_packet_latency", jnum(r.avg_packet_latency)),
+        ("compute_utilization", jnum(r.compute_utilization)),
+        ("compute_balance", jnum(r.compute_balance)),
+        ("fraction_pages_migrated", jnum(r.fraction_pages_migrated)),
+        ("fraction_accesses_on_migrated", jnum(r.fraction_accesses_on_migrated)),
+        ("pages_migrated", r.pages_migrated.to_string()),
+        ("migrations", r.migrations.to_string()),
+        ("row_hit_rate", jnum(r.row_hit_rate)),
+        ("agent_invocations", r.agent_invocations.to_string()),
+        ("agent_train_steps", r.agent_train_steps.to_string()),
+        ("agent_avg_loss", jnum(r.agent_avg_loss)),
+        ("agent_cumulative_reward", jnum(r.agent_cumulative_reward)),
+        ("energy_aimm_nj", jnum(r.energy.aimm_hardware_nj)),
+        ("energy_network_nj", jnum(r.energy.network_nj)),
+        ("energy_memory_nj", jnum(r.energy.memory_nj)),
+        ("timeline_samples", r.opc_timeline.len().to_string()),
+    ])
+}
+
+/// Serialize one executed cell: descriptor + per-run stats. These exact
+/// bytes are also what the journal records per cell, so cached and
+/// fresh cells are indistinguishable in the aggregated report.
+pub fn cell_json(res: &CellResult) -> String {
+    let c = &res.cell;
+    let benches: Vec<String> = c.benches.iter().map(|b| jstr(b.name())).collect();
+    let runs: Vec<String> = res.summary.runs.iter().map(stats_json).collect();
+    let mut fields: Vec<(&str, String)> = vec![
+        ("name", jstr(&res.summary.name)),
+        ("benches", format!("[{}]", benches.join(","))),
+        ("technique", jstr(c.technique.name())),
+        ("mapping", jstr(c.mapping.name())),
+        ("mesh", jstr(&format!("{}x{}", c.mesh.0, c.mesh.1))),
+    ];
+    // Like the cell name's topology segment: emitted only off-default,
+    // so pre-topology reports — and the committed golden fixture — stay
+    // byte-identical for mesh grids.
+    if c.topology != TopologyKind::Mesh {
+        fields.push(("topology", jstr(c.topology.name())));
+    }
+    fields.push(("hoard", c.hoard.to_string()));
+    // 0x-hex string, not a bare number: full 64-bit seeds exceed 2^53
+    // and would lose bits through any double-based JSON parser
+    // (including runtime/json.rs). `aimm run --seed` accepts this 0x
+    // form as-is — that is the reproduce-from-report path. Feeding it
+    // to `aimm sweep --seeds` would NOT reproduce the cell: grid
+    // seeds are base seeds that get re-folded per combo.
+    fields.push(("seed", jstr(&format!("{:#x}", c.seed))));
+    fields.push(("scale", jnum(c.scale)));
+    fields.push(("runs", format!("[{}]", runs.join(","))));
+    jobj(&fields)
+}
+
+/// The aggregated report around already-serialized cell strings — the
+/// one assembly point shared by fresh runs ([`report_json`]), resumed
+/// runs ([`report_json_outcomes`]) and shard merges
+/// ([`journal::merge_entries`]), so all three emit identical bytes for
+/// identical cells.
+pub fn report_json_from_cells(cells: &[String]) -> String {
+    jobj(&[
+        ("schema", jstr("aimm-sweep-v1")),
+        ("cell_count", cells.len().to_string()),
+        ("cells", format!("[{}]", cells.join(","))),
+    ])
+}
+
+/// The whole report. Deliberately excludes worker count and wall-clock so
+/// the file is reproducible byte-for-byte for a given grid.
+pub fn report_json(results: &[CellResult]) -> String {
+    report_json_from_cells(&results.iter().map(cell_json).collect::<Vec<_>>())
+}
+
+/// [`report_json`] over journaled outcomes: fresh cells serialize, cached
+/// cells splice their journal bytes back in verbatim.
+pub fn report_json_outcomes(outcomes: &[CellOutcome]) -> String {
+    report_json_from_cells(&outcomes.iter().map(CellOutcome::json).collect::<Vec<_>>())
+}
+
+/// Write the report to `path` (the `BENCH_sweep.json` artifact)
+/// atomically: an interrupt can never leave a torn report, only a stale
+/// `<path>.tmp` that the next write overwrites.
+pub fn write_report(path: &Path, results: &[CellResult]) -> anyhow::Result<()> {
+    atomic_write_text(path, &report_json(results))
+}
+
+// ---------------------------------------------------------------------
+// Continual-learning report (`BENCH_continual.json`): warm-start cells.
+// Same fixed-key-order discipline as the sweep report — the file is
+// byte-reproducible for a given grid and parses back through
+// runtime/json.rs.
+// ---------------------------------------------------------------------
+
+/// One executed curriculum sequence plus the context needed to
+/// reproduce it (`aimm curriculum --stages … --seed 0x…`).
+#[derive(Debug, Clone)]
+pub struct ContinualSequence {
+    /// Stage names joined with `>` (e.g. `SC>KM>RD`).
+    pub name: String,
+    pub technique: Technique,
+    pub mapping: MappingScheme,
+    pub scale: f64,
+    /// The config's master seed (0x-hex in the report, like sweep cells).
+    pub seed: u64,
+    pub report: crate::coordinator::CurriculumReport,
+}
+
+fn stage_json(s: &crate::coordinator::StageOutcome) -> String {
+    let warm: Vec<String> = s.warm.runs.iter().map(stats_json).collect();
+    let cold: Vec<String> = s.cold.runs.iter().map(stats_json).collect();
+    jobj(&[
+        ("name", jstr(&s.name)),
+        ("runs", s.warm.runs.len().to_string()),
+        // The headline transfer numbers, then the full per-run stats.
+        ("cold_first_opc", jnum(s.cold_first_opc())),
+        ("warm_first_opc", jnum(s.warm_first_opc())),
+        ("transfer_gain", jnum(s.transfer_gain())),
+        ("cold_last_opc", jnum(s.cold.last().opc())),
+        ("warm_last_opc", jnum(s.warm.last().opc())),
+        ("cold", format!("[{}]", cold.join(","))),
+        ("warm", format!("[{}]", warm.join(","))),
+    ])
+}
+
+/// Serialize one curriculum sequence.
+pub fn sequence_json(seq: &ContinualSequence) -> String {
+    let stages: Vec<String> = seq.report.stages.iter().map(stage_json).collect();
+    jobj(&[
+        ("name", jstr(&seq.name)),
+        ("technique", jstr(seq.technique.name())),
+        ("mapping", jstr(seq.mapping.name())),
+        ("scale", jnum(seq.scale)),
+        ("seed", jstr(&format!("{:#x}", seq.seed))),
+        ("stages", format!("[{}]", stages.join(","))),
+    ])
+}
+
+/// The whole continual-learning report.
+pub fn continual_report_json(seqs: &[ContinualSequence]) -> String {
+    let body: Vec<String> = seqs.iter().map(sequence_json).collect();
+    jobj(&[
+        ("schema", jstr("aimm-continual-v1")),
+        ("sequence_count", seqs.len().to_string()),
+        ("sequences", format!("[{}]", body.join(","))),
+    ])
+}
+
+/// Write the report to `path` (the `BENCH_continual.json` artifact),
+/// atomically like [`write_report`].
+pub fn write_continual_report(path: &Path, seqs: &[ContinualSequence]) -> anyhow::Result<()> {
+    atomic_write_text(path, &continual_report_json(seqs))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{Engine, SystemConfig};
+    use crate::workloads::Benchmark;
+
+    use super::*;
+
+    #[test]
+    fn cell_json_carries_topology_only_off_default() {
+        let mut grid = SweepGrid::new(0.03, 1);
+        grid.benches = vec![vec![Benchmark::Mac]];
+        grid.mappings = vec![MappingScheme::Baseline];
+        grid.topologies = vec![TopologyKind::Mesh, TopologyKind::Ring];
+        let results = run_grid(&grid.cells(), 2).unwrap();
+        let mesh_json = cell_json(&results[0]);
+        let ring_json = cell_json(&results[1]);
+        assert!(!mesh_json.contains("\"topology\""), "{mesh_json}");
+        assert!(ring_json.contains("\"topology\":\"ring\""), "{ring_json}");
+        // And the report still parses through the in-crate JSON parser.
+        let parsed = crate::runtime::json::parse(&report_json(&results)).unwrap();
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].get("topology").is_none());
+        assert_eq!(cells[1].get("topology").unwrap().as_str(), Some("ring"));
+    }
+
+    #[test]
+    fn json_escaping_and_shape() {
+        assert_eq!(jstr("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(jnum(0.25), "0.25");
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(f64::INFINITY), "null");
+        let o = jobj(&[("k", "1".to_string())]);
+        assert_eq!(o, "{\"k\":1}");
+    }
+
+    #[test]
+    fn report_assembly_points_agree() {
+        // report_json, report_json_outcomes(Fresh) and merge_entries all
+        // route through report_json_from_cells — identical bytes.
+        let mut grid = SweepGrid::new(0.03, 1);
+        grid.benches = vec![vec![Benchmark::Mac]];
+        grid.mappings = vec![MappingScheme::Baseline, MappingScheme::Tom];
+        let results = run_grid(&grid.cells(), 2).unwrap();
+        let direct = report_json(&results);
+        let outcomes: Vec<CellOutcome> = results.iter().cloned().map(CellOutcome::Fresh).collect();
+        assert_eq!(report_json_outcomes(&outcomes), direct);
+        let entries: Vec<JournalEntry> = results
+            .iter()
+            .enumerate()
+            .map(|(i, r)| JournalEntry { idx: i, key: cell_key(&r.cell), cell: cell_json(r) })
+            .collect();
+        assert_eq!(merge_entries(entries).unwrap(), direct);
+    }
+
+    #[test]
+    fn continual_report_is_deterministic_and_parses_back() {
+        use crate::coordinator::{run_curriculum, CurriculumStage};
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = MappingScheme::Aimm;
+        let stages = vec![
+            CurriculumStage { benches: vec![Benchmark::Mac], runs: 1 },
+            CurriculumStage { benches: vec![Benchmark::Rd], runs: 1 },
+        ];
+        let (report, _) = run_curriculum(&cfg, &stages, 0.03, None).unwrap();
+        let seq = ContinualSequence {
+            name: "MAC>RD".to_string(),
+            technique: cfg.technique,
+            mapping: cfg.mapping,
+            scale: 0.03,
+            seed: cfg.seed,
+            report,
+        };
+        let text = continual_report_json(std::slice::from_ref(&seq));
+        assert_eq!(text, continual_report_json(&[seq]), "fixed key order");
+        let parsed = crate::runtime::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("aimm-continual-v1"));
+        assert_eq!(parsed.get("sequence_count").unwrap().as_usize(), Some(1));
+        let seqs = parsed.get("sequences").unwrap().as_arr().unwrap();
+        let stages = seqs[0].get("stages").unwrap().as_arr().unwrap();
+        assert_eq!(stages.len(), 2);
+        for s in stages {
+            assert!(s.get("cold_first_opc").is_some());
+            assert!(s.get("warm_first_opc").is_some());
+            assert!(s.get("transfer_gain").is_some());
+            assert_eq!(s.get("cold").unwrap().as_arr().unwrap().len(), 1);
+            assert_eq!(s.get("warm").unwrap().as_arr().unwrap().len(), 1);
+        }
+    }
+
+    #[test]
+    fn tiny_grid_runs_in_parallel() {
+        let mut grid = SweepGrid::new(0.03, 1);
+        grid.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd]];
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 6);
+        let results = run_grid(&cells, 3).unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert!(r.summary.last().ops_completed > 0, "{}", r.cell.name());
+        }
+        // Report parses back through the in-crate JSON parser.
+        let parsed = crate::runtime::json::parse(&report_json(&results)).unwrap();
+        assert_eq!(parsed.get("cell_count").unwrap().as_usize(), Some(6));
+        assert_eq!(parsed.get("cells").unwrap().as_arr().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn engine_is_keyed_but_never_serialized() {
+        // The report deliberately omits the engine (polled and event
+        // sweeps must diff clean), but the cache key includes it — a
+        // cached polled cell must never satisfy an event sweep.
+        let mut grid = SweepGrid::new(0.1, 1);
+        grid.benches = vec![vec![Benchmark::Mac]];
+        let event = grid.cells();
+        grid.engine = Engine::Polled;
+        let polled = grid.cells();
+        for (e, p) in event.iter().zip(&polled) {
+            assert_eq!(e.name(), p.name());
+            assert_ne!(cell_key(e), cell_key(p));
+        }
+    }
+}

@@ -157,7 +157,11 @@ pub fn run_single(
 /// protocol, a combination the multi-program one. The outcome is fully
 /// determined by (`cfg`, `benches`, `scale`, `runs`) — the parallel
 /// sweep harness ([`crate::bench::sweep`]) relies on this to produce
-/// identical stats for a cell regardless of which worker thread runs it.
+/// identical stats for a cell regardless of which worker thread runs it,
+/// and the resumable batch layer ([`crate::bench::sweep::journal`])
+/// extends the same contract across processes: a cell cached in a sweep
+/// journal under its [`crate::bench::sweep::cell_key`] stands in,
+/// byte-for-byte, for re-running this function.
 pub fn run_cell(
     cfg: &SystemConfig,
     benches: &[Benchmark],

@@ -9,7 +9,8 @@
 //!               [--checkpoint out.json] [--resume in.json]
 //! aimm sweep    [--benches all] [--mappings all] [--meshes 4x4,8x8]
 //!               [--topologies mesh,torus,ring] [--threads N]
-//!               [--out BENCH_sweep.json]
+//!               [--out BENCH_sweep.json] [--journal FILE.jsonl]
+//!               [--shard I/N] [--fresh] | --merge a.jsonl,b.jsonl
 //! aimm analyze  --fig 5a|5b|5c [--scale 1.0]
 //! aimm table    --fig 6|7|8|9|10|11|12|13|14|area [--scale 0.25] [--runs 3]
 //! aimm table1 | aimm table2
@@ -68,6 +69,14 @@ fn usage() -> String {
                     [--seeds N,M] [--scale F] [--runs N]\n\
                     [--threads N] [--hoard] [--engine polled|event]\n\
                     [--out BENCH_sweep.json]\n\
+                    [--journal FILE.jsonl (default: --out with .jsonl)]\n\
+                    [--shard I/N (run only the I-th of N deterministic grid\n\
+                    slices; journal only, no aggregated report — merge after)]\n\
+                    [--fresh (delete the journal first, disabling resume)]\n\
+                    [--merge a.jsonl,b.jsonl (fold shard journals into --out\n\
+                    without running anything)]\n\
+                    every finished cell is journaled; rerunning the same grid\n\
+                    resumes from the journal for free (Ctrl-C safe)\n\
            analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
            table    --fig 6|7|8|9|10|11|12|13|14|area [--scale F] [--runs N]\n\
            table1   print the active hardware configuration (paper Table 1)\n\
@@ -114,6 +123,21 @@ fn parse_seed(s: &str) -> Result<u64, String> {
         None => s.parse::<u64>(),
     };
     parsed.map_err(|_| format!("bad seed {s:?} (expected decimal or 0x-hex)"))
+}
+
+/// `--shard I/N`: 0-based slice of the canonically ordered grid (shard
+/// `I` owns the cells whose grid index `i` has `i % N == I`).
+fn parse_shard(s: &str) -> Result<sweep::ShardSpec, String> {
+    let (i, n) = s
+        .trim()
+        .split_once('/')
+        .ok_or_else(|| format!("shard expects I/N (e.g. 0/4), got {s:?}"))?;
+    let index = i.trim().parse().map_err(|_| format!("bad shard index {i:?}"))?;
+    let count = n.trim().parse().map_err(|_| format!("bad shard count {n:?}"))?;
+    if count == 0 || index >= count {
+        return Err(format!("shard {index}/{count} out of range (0-based index < count)"));
+    }
+    Ok(sweep::ShardSpec { index, count })
 }
 
 fn parse_mesh(s: &str) -> Result<(usize, usize), String> {
@@ -209,7 +233,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let boolean = ["hoard", "help"].contains(&key);
+                let boolean = ["hoard", "help", "fresh"].contains(&key);
                 if boolean {
                     flags.insert(key.to_string(), "true".to_string());
                     i += 1;
@@ -456,6 +480,22 @@ fn real_main() -> Result<(), String> {
             save_checkpoint(&args, agent.as_ref())?;
         }
         "sweep" => {
+            // Merge mode: fold shard journals into one aggregated report
+            // and exit — nothing runs, the grid axes don't apply.
+            if let Some(list) = args.get("merge") {
+                for flag in ["shard", "fresh", "journal"] {
+                    if args.get(flag).is_some() {
+                        return Err(format!("--merge runs nothing; drop --{flag}"));
+                    }
+                }
+                let paths: Vec<std::path::PathBuf> =
+                    list.split(',').map(|p| std::path::PathBuf::from(p.trim())).collect();
+                let report = sweep::merge_files(&paths).map_err(|e| e.to_string())?;
+                let out = args.get("out").unwrap_or("BENCH_sweep.json");
+                sweep::atomic_write_text(Path::new(out), &report).map_err(|e| e.to_string())?;
+                println!("merged {} journal(s) -> {out}", paths.len());
+                return Ok(());
+            }
             // The grid takes plural axis flags; catch the singular forms
             // `run` accepts instead of silently ignoring them.
             for (singular, plural) in [
@@ -537,33 +577,86 @@ fn real_main() -> Result<(), String> {
             if cells.is_empty() {
                 return Err("sweep grid is empty".into());
             }
+            let shard = args.get("shard").map(parse_shard).transpose()?;
+            let out = args.get("out").unwrap_or("BENCH_sweep.json");
+            let journal = match args.get("journal") {
+                Some(p) => std::path::PathBuf::from(p),
+                None => sweep::journal_path_for(Path::new(out)),
+            };
+            if args.get("fresh").is_some() {
+                match std::fs::remove_file(&journal) {
+                    Ok(()) => println!("removed journal {} (--fresh)", journal.display()),
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(format!("removing {}: {e}", journal.display())),
+                }
+            }
+            let owned = match shard {
+                Some(s) => (0..cells.len()).filter(|&i| s.selects(i)).count(),
+                None => cells.len(),
+            };
+            let shard_note = match shard {
+                Some(s) => format!(" (shard {}/{} of {} total)", s.index, s.count, cells.len()),
+                None => String::new(),
+            };
             println!(
-                "sweep: {} cells ({} runs each, scale {scale}) on {threads} thread(s)",
-                cells.len(),
-                runs
+                "sweep: {owned} cells{shard_note} ({runs} runs each, scale {scale}) on \
+                 {threads} thread(s), journal {}",
+                journal.display()
             );
             let t0 = std::time::Instant::now();
-            let results = sweep::run_grid(&cells, threads).map_err(|e| e.to_string())?;
+            let report = sweep::run_journaled(&cells, shard, threads, &journal)
+                .map_err(|e| e.to_string())?;
             let mut t = Table::new(
                 "Sweep results (steady-state run per cell)",
-                &["cell", "cycles", "opc", "hops", "util", "migrated"],
+                &["cell", "cycles", "opc", "hops", "util", "migrated", "src"],
             );
-            for r in &results {
-                let last = r.summary.last();
+            for o in &report.outcomes {
+                let row = o.row().map_err(|e| e.to_string())?;
                 t.row(vec![
-                    r.cell.name(),
-                    last.cycles.to_string(),
-                    format!("{:.4}", last.opc()),
-                    format!("{:.2}", last.avg_hops),
-                    format!("{:.3}", last.compute_utilization),
-                    format!("{:.2}", last.fraction_pages_migrated),
+                    row.name,
+                    row.cycles.to_string(),
+                    format!("{:.4}", row.opc),
+                    format!("{:.2}", row.avg_hops),
+                    format!("{:.3}", row.compute_utilization),
+                    format!("{:.2}", row.fraction_pages_migrated),
+                    (if row.cached { "cache" } else { "run" }).to_string(),
                 ]);
             }
             println!("{}", t.render());
-            let out = args.get("out").unwrap_or("BENCH_sweep.json");
-            sweep::write_report(std::path::Path::new(out), &results)
-                .map_err(|e| e.to_string())?;
-            println!("wrote {out} ({} cells) in {:?}", results.len(), t0.elapsed());
+            println!(
+                "journal: {} computed, {} resumed from {}{}{}",
+                report.computed,
+                report.cached,
+                journal.display(),
+                if report.stale > 0 {
+                    format!(", {} stale dropped", report.stale)
+                } else {
+                    String::new()
+                },
+                if report.corrupt > 0 {
+                    format!(", {} corrupt line(s) dropped", report.corrupt)
+                } else {
+                    String::new()
+                },
+            );
+            match shard {
+                Some(s) => println!(
+                    "shard {}/{} done in {:?} — no aggregated report; once every shard \
+                     ran, fold the journals with `aimm sweep --merge …`",
+                    s.index,
+                    s.count,
+                    t0.elapsed()
+                ),
+                None => {
+                    let text = sweep::report_json_outcomes(&report.outcomes);
+                    sweep::atomic_write_text(Path::new(out), &text).map_err(|e| e.to_string())?;
+                    println!(
+                        "wrote {out} ({} cells) in {:?}",
+                        report.outcomes.len(),
+                        t0.elapsed()
+                    );
+                }
+            }
         }
         "analyze" => {
             let fig = args.get("fig").ok_or("analyze needs --fig 5a|5b|5c")?;
@@ -653,6 +746,19 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// `--shard I/N` parses 0-based and rejects everything out of range
+    /// loudly — a shard silently clamped to a different slice would run
+    /// the wrong cells and still merge cleanly.
+    #[test]
+    fn shard_flag_parses_strictly() {
+        assert_eq!(parse_shard("0/4"), Ok(sweep::ShardSpec { index: 0, count: 4 }));
+        assert_eq!(parse_shard(" 3/4 "), Ok(sweep::ShardSpec { index: 3, count: 4 }));
+        assert_eq!(parse_shard("0/1"), Ok(sweep::ShardSpec { index: 0, count: 1 }));
+        for bad in ["4/4", "1/0", "4", "a/4", "0/b", "-1/4", "1/4/2"] {
+            assert!(parse_shard(bad).is_err(), "{bad:?} parsed");
         }
     }
 

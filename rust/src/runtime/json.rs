@@ -10,8 +10,8 @@
 
 use std::collections::HashMap;
 
-/// Fixed-key-order JSON writer helpers, shared by the sweep report
-/// (bench/sweep.rs) and the continual-learning checkpoint format
+/// Fixed-key-order JSON writer helpers, shared by the sweep report and
+/// journal (bench/sweep/) and the continual-learning checkpoint format
 /// (agent/checkpoint.rs). No reflection, no trait magic: callers build
 /// value strings bottom-up and list object fields in emission order.
 pub mod write {
@@ -118,6 +118,22 @@ impl Json {
             _ => None,
         }
     }
+}
+
+/// Parse a JSON-Lines text: one JSON value per line. Returns a
+/// `(line_number, raw_line, parse_result)` triple per non-blank line —
+/// line numbers are 1-based for error messages, the raw line is passed
+/// through verbatim (no trailing newline) so callers can recover exact
+/// bytes, and blank/whitespace-only lines are skipped. Per-line parse
+/// failures are returned, not raised: the caller decides what a bad
+/// line means (the sweep journal drops torn appends loudly on resume;
+/// `aimm sweep --merge` refuses them).
+pub fn parse_lines(text: &str) -> Vec<(usize, &str, anyhow::Result<Json>)> {
+    text.lines()
+        .enumerate()
+        .filter(|(_, raw)| !raw.trim().is_empty())
+        .map(|(i, raw)| (i + 1, raw, parse(raw)))
+        .collect()
 }
 
 pub fn parse(text: &str) -> anyhow::Result<Json> {
@@ -345,6 +361,24 @@ mod tests {
         }
         assert!(parse_hex_u64("123").is_err());
         assert!(parse_hex_u64("0xzz").is_err());
+    }
+
+    #[test]
+    fn parse_lines_numbers_skips_blanks_and_flags_torn_tails() {
+        let text = "{\"a\":1}\n\n  \n{\"b\":2}\n{\"c\":"; // torn final line
+        let lines = parse_lines(text);
+        assert_eq!(lines.len(), 3, "blank lines skipped");
+        let (n1, raw1, ref p1) = lines[0];
+        assert_eq!((n1, raw1), (1, "{\"a\":1}"));
+        assert_eq!(p1.as_ref().unwrap().get("a").unwrap().as_usize(), Some(1));
+        let (n2, raw2, ref p2) = lines[1];
+        assert_eq!((n2, raw2), (4, "{\"b\":2}"), "line numbers are 1-based and real");
+        assert!(p2.is_ok());
+        let (n3, raw3, ref p3) = lines[2];
+        assert_eq!((n3, raw3), (5, "{\"c\":"));
+        assert!(p3.is_err(), "torn tail reported, not raised");
+        assert!(parse_lines("").is_empty());
+        assert!(parse_lines("\n\n").is_empty());
     }
 
     #[test]

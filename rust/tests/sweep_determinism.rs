@@ -4,7 +4,10 @@
 //! and the figure harnesses reproducible — the simulator must not leak
 //! thread identity (e.g. per-thread hash seeds) into any decision.
 
-use aimm::bench::sweep::{cell_json, report_json, run_grid, SweepGrid};
+use aimm::bench::sweep::{
+    cell_json, cell_key, merge_entries, merge_files, report_json, report_json_outcomes,
+    run_grid, run_journaled, JournalEntry, ShardSpec, SweepGrid,
+};
 use aimm::config::{MappingScheme, TopologyKind};
 use aimm::workloads::Benchmark;
 
@@ -98,6 +101,80 @@ fn coda_and_oracle_cells_identical_at_any_worker_count() {
         assert!(r.summary.last().ops_completed > 0, "{}", r.cell.name());
         assert!(cell_json(r).contains(&format!("\"mapping\":\"{}\"", r.cell.mapping.name())));
     }
+}
+
+/// Shard-count invariance: slicing the default test grid 2-of-2 or
+/// 4-of-4, running every slice at a *different* worker count, and
+/// merging the journal entries reproduces the unsharded report
+/// byte-for-byte. This is the contract that lets CI fan a sweep across
+/// jobs and still compare the merged artifact with `cmp`.
+#[test]
+fn sharded_merge_is_byte_identical_to_unsharded() {
+    let cells = grid().cells();
+    let unsharded = report_json(&run_grid(&cells, 2).expect("unsharded sweep"));
+    for n in [2usize, 4] {
+        let mut entries = Vec::new();
+        for s in 0..n {
+            let spec = ShardSpec { index: s, count: n };
+            let owned: Vec<usize> = (0..cells.len()).filter(|&i| spec.selects(i)).collect();
+            let slice: Vec<_> = owned.iter().map(|&i| cells[i].clone()).collect();
+            // Worker count varies per shard; the cells must not care.
+            let results = run_grid(&slice, s + 1).expect("shard sweep");
+            for (&i, r) in owned.iter().zip(&results) {
+                entries.push(JournalEntry {
+                    idx: i,
+                    key: cell_key(&r.cell),
+                    cell: cell_json(r),
+                });
+            }
+        }
+        let merged = merge_entries(entries).expect("merge");
+        assert_eq!(merged, unsharded, "{n}-way shard merge diverged");
+    }
+}
+
+/// End-to-end through the batch runner: each shard journals to its own
+/// file, `merge_files` folds them, and the result matches an unsharded
+/// journaled run — which then resumes 100% from cache, still
+/// byte-identical.
+#[test]
+fn shard_journals_merge_to_the_unsharded_report() {
+    let dir = std::env::temp_dir().join(format!("aimm_shard_merge_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd]];
+    g.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    let cells = g.cells();
+    assert_eq!(cells.len(), 4);
+
+    let full_journal = dir.join("full.jsonl");
+    let full = run_journaled(&cells, None, 2, &full_journal).expect("unsharded run");
+    assert_eq!((full.computed, full.cached), (4, 0));
+    let unsharded = report_json_outcomes(&full.outcomes);
+    // The journaled runner and the plain runner agree to the byte.
+    assert_eq!(unsharded, report_json(&run_grid(&cells, 1).expect("plain run")));
+
+    let n = 2usize;
+    let mut paths = Vec::new();
+    for s in 0..n {
+        let path = dir.join(format!("shard{s}.jsonl"));
+        let spec = ShardSpec { index: s, count: n };
+        let rep = run_journaled(&cells, Some(spec), s + 1, &path).expect("shard run");
+        assert_eq!(rep.computed, 2, "shard {s} owns half the grid");
+        paths.push(path);
+    }
+    let merged = merge_files(&paths).expect("merge");
+    assert_eq!(merged, unsharded);
+
+    // Resume: re-running the unsharded grid replays the journal without
+    // simulating a single cell and still emits identical bytes.
+    let resumed = run_journaled(&cells, None, 4, &full_journal).expect("resume");
+    assert_eq!((resumed.computed, resumed.cached), (0, 4));
+    assert_eq!(report_json_outcomes(&resumed.outcomes), unsharded);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

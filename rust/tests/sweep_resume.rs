@@ -1,0 +1,157 @@
+//! Resume-after-interrupt contract for the journaled sweep runner
+//! (EXPERIMENTS.md §Sweep, DESIGN.md §12): a killed sweep resumes from
+//! its JSONL journal and still produces a `BENCH_sweep.json`
+//! byte-identical to an uninterrupted run. Torn appends are dropped
+//! loudly and recomputed; entries whose `cell_key` no longer matches the
+//! grid are recomputed, never silently reused; and report writes are
+//! atomic, so an interrupt can leave a stale `.tmp` but never a torn
+//! report.
+
+use std::path::PathBuf;
+
+use aimm::bench::sweep::{
+    journal_path_for, report_json, report_json_outcomes, run_grid, run_journaled,
+    write_report, SweepGrid,
+};
+use aimm::config::MappingScheme;
+use aimm::workloads::Benchmark;
+
+/// Fresh per-test scratch directory (tests in this file run fine in
+/// parallel: each uses its own tag).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("aimm_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Four tiny cells: baseline + learning agent over two benchmarks.
+fn small_grid() -> SweepGrid {
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![vec![Benchmark::Mac], vec![Benchmark::Rd]];
+    g.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    g
+}
+
+#[test]
+fn resume_after_truncation_is_byte_identical() {
+    let dir = tmp_dir("resume_truncate");
+    let journal = dir.join("sweep.jsonl");
+    let cells = small_grid().cells();
+    let full = run_journaled(&cells, None, 2, &journal).expect("full run");
+    let want = report_json_outcomes(&full.outcomes);
+    // Baseline sanity: the journaled runner matches the plain runner.
+    assert_eq!(want, report_json(&run_grid(&cells, 1).expect("plain run")));
+
+    // Simulated kill mid-grid: keep two complete journal lines plus a
+    // torn third append (no trailing newline, cut mid-object).
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4, "one journal line per cell");
+    let torn = &lines[2][..lines[2].len() / 2];
+    std::fs::write(&journal, format!("{}\n{}\n{torn}", lines[0], lines[1])).unwrap();
+
+    let resumed = run_journaled(&cells, None, 3, &journal).expect("resume");
+    assert_eq!(resumed.corrupt, 1, "torn tail dropped loudly, not mis-parsed");
+    assert_eq!((resumed.computed, resumed.cached), (2, 2));
+    assert_eq!(report_json_outcomes(&resumed.outcomes), want, "resumed report diverged");
+
+    // And the journal healed: one more resume is a pure cache replay.
+    let replay = run_journaled(&cells, None, 1, &journal).expect("replay");
+    assert_eq!((replay.computed, replay.cached, replay.corrupt), (0, 4, 0));
+    assert_eq!(report_json_outcomes(&replay.outcomes), want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_garbage_lines_are_skipped_loudly_and_recomputed() {
+    let dir = tmp_dir("resume_corrupt");
+    let journal = dir.join("sweep.jsonl");
+    let cells = small_grid().cells();
+    let full = run_journaled(&cells, None, 1, &journal).expect("full run");
+    let want = report_json_outcomes(&full.outcomes);
+
+    // One recorded line overwritten by junk, plus a foreign-schema line
+    // (valid JSON, wrong tool) appended.
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+    lines[1] = "not json at all {{{".to_string();
+    lines.push("{\"schema\":\"other-tool-v9\",\"idx\":0}".to_string());
+    std::fs::write(&journal, lines.join("\n")).unwrap();
+
+    let resumed = run_journaled(&cells, None, 2, &journal).expect("resume");
+    assert_eq!(resumed.corrupt, 2, "garbage and foreign lines both flagged");
+    assert_eq!((resumed.computed, resumed.cached), (1, 3));
+    assert_eq!(report_json_outcomes(&resumed.outcomes), want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A journal line whose `cell_key` matches no cell of the current grid —
+/// here hand-tampered, the hostile version of "the code changed under
+/// the journal" — is recomputed, never reused.
+#[test]
+fn tampered_cell_key_is_recomputed_not_reused() {
+    let dir = tmp_dir("resume_tamper");
+    let journal = dir.join("sweep.jsonl");
+    let cells = small_grid().cells();
+    let full = run_journaled(&cells, None, 1, &journal).expect("full run");
+    let want = report_json_outcomes(&full.outcomes);
+
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+    let mut e = aimm::bench::sweep::journal::parse_line(&lines[0]).expect("line parses");
+    e.key ^= 1;
+    lines[0] = e.line();
+    std::fs::write(&journal, lines.join("\n")).unwrap();
+
+    let resumed = run_journaled(&cells, None, 2, &journal).expect("resume");
+    assert_eq!(resumed.stale, 1, "mismatched cell_key dropped as stale");
+    assert_eq!((resumed.computed, resumed.cached), (1, 3));
+    assert_eq!(report_json_outcomes(&resumed.outcomes), want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The organic stale case: the grid changed (here, scale — any axis or
+/// the engine behaves the same, they all feed `cell_key`), so every old
+/// journal entry is dropped and the whole grid recomputes. The old
+/// numbers never leak into the new report.
+#[test]
+fn changed_grid_drops_every_stale_entry() {
+    let dir = tmp_dir("resume_stale_grid");
+    let journal = dir.join("sweep.jsonl");
+    run_journaled(&small_grid().cells(), None, 1, &journal).expect("old-grid run");
+
+    let mut g2 = small_grid();
+    g2.scale = 0.04;
+    let cells2 = g2.cells();
+    let fresh = run_journaled(&cells2, None, 2, &dir.join("fresh.jsonl")).expect("fresh run");
+    let want = report_json_outcomes(&fresh.outcomes);
+
+    let resumed = run_journaled(&cells2, None, 2, &journal).expect("resume on old journal");
+    assert_eq!(resumed.stale, 4, "every old entry dropped");
+    assert_eq!((resumed.computed, resumed.cached), (4, 0));
+    assert_eq!(report_json_outcomes(&resumed.outcomes), want);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `write_report` is atomic: a pre-existing stale `.tmp` from an
+/// interrupted earlier write neither blocks nor pollutes the next write,
+/// and the rename leaves no `.tmp` behind.
+#[test]
+fn write_report_replaces_stale_tmp_atomically() {
+    let dir = tmp_dir("report_tmp");
+    let out = dir.join("BENCH_sweep.json");
+    let tmp = dir.join("BENCH_sweep.json.tmp");
+    std::fs::write(&tmp, "torn garbage from an interrupted write").unwrap();
+
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![vec![Benchmark::Mac]];
+    g.mappings = vec![MappingScheme::Baseline];
+    let results = run_grid(&g.cells(), 1).expect("tiny run");
+    write_report(&out, &results).expect("atomic write");
+    assert_eq!(std::fs::read_to_string(&out).unwrap(), report_json(&results));
+    assert!(!tmp.exists(), "stale tmp renamed away, not left behind");
+    // The journal naming convention the CLI pairs with this report.
+    assert_eq!(journal_path_for(&out), dir.join("BENCH_sweep.jsonl"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
