@@ -1,0 +1,77 @@
+//! Bench: multi-tenant serve churn (EXPERIMENTS.md §Serve).
+//! Runs the open-loop service once per arrival process — poisson,
+//! bursty, diurnal — with the default serve knobs (12 tenants, 4 slots,
+//! 2 rounds) under the AIMM mapping, and reports the tail of the
+//! per-tenant slowdown distribution (residency / isolated run) plus the
+//! Jain fairness index. Writes `BENCH_serve.json` at the repository
+//! root (fixed key order, so re-runs diff clean).
+//!
+//! Run with `cargo bench --bench serve_churn` (release; ignore debug
+//! numbers). CI's serial job executes this on every push.
+
+use std::time::Instant;
+
+use aimm::bench::sweep::default_threads;
+use aimm::bench::Table;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::{run_serve, serve_report_json};
+use aimm::runtime::json::write as jw;
+use aimm::workloads::ArrivalProcess;
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    cfg.mapping = MappingScheme::Aimm;
+    let threads = default_threads();
+    println!(
+        "serve churn: {} tenant(s) x {} arrival process(es), {} round(s), on {threads} thread(s)",
+        cfg.serve.tenants,
+        ArrivalProcess::ALL.len(),
+        cfg.serve.rounds
+    );
+
+    let mut t = Table::new(
+        "Serve churn tail (slowdown = residency / isolated run)",
+        &["arrivals", "tenants", "rounds", "p50", "p99", "p999", "fairness", "wall"],
+    );
+    let mut by_arrivals: Vec<(&str, String)> = Vec::new();
+    let t0 = Instant::now();
+    for p in ArrivalProcess::ALL {
+        cfg.serve.arrivals = p;
+        let start = Instant::now();
+        let (outcome, _agent) = run_serve(&cfg, threads, None).expect("serve run");
+        t.row(vec![
+            p.name().to_string(),
+            cfg.serve.tenants.to_string(),
+            outcome.rounds.len().to_string(),
+            format!("{:.3}", outcome.p50),
+            format!("{:.3}", outcome.p99),
+            format!("{:.3}", outcome.p999),
+            format!("{:.3}", outcome.fairness),
+            format!("{:?}", start.elapsed()),
+        ]);
+        by_arrivals.push((p.name(), serve_report_json(&cfg, &outcome)));
+    }
+    let wall = t0.elapsed();
+    println!("{}", t.render());
+
+    let grid = format!(
+        "{} tenants x {{poisson,bursty,diurnal}} x {} rounds, {} slots, {}-page budget, \
+         mean gap {}, scale {}, AIMM mapping",
+        cfg.serve.tenants,
+        cfg.serve.rounds,
+        cfg.serve.slots,
+        cfg.serve.page_budget,
+        cfg.serve.mean_gap,
+        cfg.serve.scale
+    );
+    let json = jw::obj(&[
+        ("schema", jw::string("aimm-serve-bench-v1")),
+        ("grid", jw::string(&grid)),
+        ("measured", "true".to_string()),
+        ("by_arrivals", jw::obj(&by_arrivals)),
+        ("regenerate", jw::string("cargo bench --bench serve_churn")),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    std::fs::write(path, &json).expect("write BENCH_serve.json");
+    println!("wrote {path} in {wall:?}");
+}

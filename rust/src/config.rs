@@ -13,6 +13,10 @@ use std::path::Path;
 // intra-crate module cycle (noc depends on config's vocabulary types) —
 // fine in Rust, and it keeps every topology fact in one place.
 use crate::noc::topology::{AnyTopology, Topology as _};
+// Same deliberate cycle for the serve-mode arrival-process selector
+// (workloads depends on config's vocabulary types): the enum lives with
+// the interarrival samplers, the config only names it.
+use crate::workloads::arrivals::ArrivalProcess;
 
 /// Index of a memory cube in the mesh (row-major: `y * cols + x`).
 pub type CubeId = usize;
@@ -335,6 +339,44 @@ impl Default for AgentConfig {
     }
 }
 
+/// Multi-tenant service mode (`aimm serve`,
+/// [`crate::coordinator::serve`]): open-loop tenant churn with one
+/// continually-learning agent surviving the whole service lifetime.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Tenants drawn from the benchmark mix over the service lifetime.
+    pub tenants: usize,
+    /// Mean interarrival gap in cycles (the arrival process shapes the
+    /// actual gaps around this mean).
+    pub mean_gap: u64,
+    /// Interarrival process ([`ArrivalProcess`]).
+    pub arrivals: ArrivalProcess,
+    /// Compute slots: resident-tenant cap (admission control).
+    pub slots: usize,
+    /// Total pages resident tenants may lease at once.
+    pub page_budget: u64,
+    /// Service rounds; the agent carries across rounds exactly like the
+    /// episode protocol, so later rounds show the learned service.
+    pub rounds: usize,
+    /// Per-tenant trace scale (passed to [`crate::workloads::generate`];
+    /// small — tenants are many and arrive continuously).
+    pub scale: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            tenants: 12,
+            mean_gap: 400,
+            arrivals: ArrivalProcess::Poisson,
+            slots: 4,
+            page_budget: 4096,
+            rounds: 2,
+            scale: 0.02,
+        }
+    }
+}
+
 /// Full system configuration (paper Table 1 defaults).
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -386,6 +428,8 @@ pub struct SystemConfig {
     pub hoard: bool,
     pub timing: TimingConfig,
     pub agent: AgentConfig,
+    /// Multi-tenant service mode (`aimm serve`) knobs.
+    pub serve: ServeConfig,
     /// Master seed; all subsystem RNG streams derive from it.
     pub seed: u64,
     /// Sample the OPC timeline every this many cycles.
@@ -416,6 +460,7 @@ impl Default for SystemConfig {
             hoard: false,
             timing: TimingConfig::default(),
             agent: AgentConfig::default(),
+            serve: ServeConfig::default(),
             seed: 0xA133,
             opc_sample_period: 512,
         }
@@ -491,6 +536,13 @@ impl SystemConfig {
         kv(&mut s, "lr", self.agent.lr.to_string());
         kv(&mut s, "batch_size", self.agent.batch_size.to_string());
         kv(&mut s, "replay_capacity", self.agent.replay_capacity.to_string());
+        kv(&mut s, "serve_tenants", self.serve.tenants.to_string());
+        kv(&mut s, "serve_mean_gap", self.serve.mean_gap.to_string());
+        kv(&mut s, "serve_arrivals", format!("\"{}\"", self.serve.arrivals.name()));
+        kv(&mut s, "serve_slots", self.serve.slots.to_string());
+        kv(&mut s, "serve_page_budget", self.serve.page_budget.to_string());
+        kv(&mut s, "serve_rounds", self.serve.rounds.to_string());
+        kv(&mut s, "serve_scale", self.serve.scale.to_string());
         s
     }
 
@@ -521,6 +573,21 @@ impl SystemConfig {
                 "lr" => cfg.agent.lr = v.as_f64()? as f32,
                 "batch_size" => cfg.agent.batch_size = v.as_usize()?,
                 "replay_capacity" => cfg.agent.replay_capacity = v.as_usize()?,
+                "serve_tenants" => cfg.serve.tenants = v.as_usize()?,
+                "serve_mean_gap" => cfg.serve.mean_gap = v.as_u64()?,
+                "serve_slots" => cfg.serve.slots = v.as_usize()?,
+                "serve_page_budget" => cfg.serve.page_budget = v.as_u64()?,
+                "serve_rounds" => cfg.serve.rounds = v.as_usize()?,
+                "serve_scale" => cfg.serve.scale = v.as_f64()?,
+                "serve_arrivals" => {
+                    let name = v.as_str()?;
+                    cfg.serve.arrivals = ArrivalProcess::from_name(name).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown serve_arrivals {name:?} (expected one of {})",
+                            ArrivalProcess::name_list()
+                        )
+                    })?;
+                }
                 "technique" => {
                     let name = v.as_str()?;
                     cfg.technique = Technique::from_name(name).ok_or_else(|| {
@@ -616,6 +683,15 @@ impl SystemConfig {
             "replay_capacity {} smaller than batch_size {}",
             self.agent.replay_capacity,
             self.agent.batch_size
+        );
+        anyhow::ensure!(self.serve.tenants >= 1, "serve needs at least one tenant");
+        anyhow::ensure!(self.serve.slots >= 1, "serve needs at least one compute slot");
+        anyhow::ensure!(self.serve.mean_gap >= 1, "serve_mean_gap must be at least 1 cycle");
+        anyhow::ensure!(self.serve.rounds >= 1, "serve needs at least one round");
+        anyhow::ensure!(
+            self.serve.scale > 0.0 && self.serve.scale.is_finite(),
+            "serve_scale must be a positive finite number, got {}",
+            self.serve.scale
         );
         Ok(())
     }
@@ -864,6 +940,36 @@ mod tests {
         assert!(err.contains("polled|event"), "{err}");
         let err = SystemConfig::parse("topology = \"bogus\"").unwrap_err().to_string();
         assert!(err.contains("mesh|torus|ring"), "{err}");
+    }
+
+    /// The serve knobs are live config, not CLI-only state: they
+    /// round-trip through TOML, bad arrival names list the valid ones,
+    /// and degenerate values are rejected by validate().
+    #[test]
+    fn serve_config_roundtrips_and_validates() {
+        let mut c = SystemConfig::default();
+        c.serve.tenants = 7;
+        c.serve.mean_gap = 123;
+        c.serve.arrivals = ArrivalProcess::Diurnal;
+        c.serve.slots = 3;
+        c.serve.page_budget = 999;
+        c.serve.rounds = 4;
+        c.serve.scale = 0.5;
+        let parsed = SystemConfig::parse(&c.to_toml()).unwrap();
+        assert_eq!(parsed.serve.tenants, 7);
+        assert_eq!(parsed.serve.mean_gap, 123);
+        assert_eq!(parsed.serve.arrivals, ArrivalProcess::Diurnal);
+        assert_eq!(parsed.serve.slots, 3);
+        assert_eq!(parsed.serve.page_budget, 999);
+        assert_eq!(parsed.serve.rounds, 4);
+        assert_eq!(parsed.serve.scale, 0.5);
+        let err = SystemConfig::parse("serve_arrivals = \"bogus\"").unwrap_err().to_string();
+        assert!(err.contains("poisson|bursty|diurnal"), "{err}");
+        assert!(SystemConfig::parse("serve_tenants = 0").is_err());
+        assert!(SystemConfig::parse("serve_slots = 0").is_err());
+        assert!(SystemConfig::parse("serve_mean_gap = 0").is_err());
+        assert!(SystemConfig::parse("serve_rounds = 0").is_err());
+        assert!(SystemConfig::parse("serve_scale = 0").is_err());
     }
 
     #[test]

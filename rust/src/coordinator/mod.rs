@@ -3,15 +3,24 @@
 //! single-program workloads, 10 for multi-program, clearing simulation
 //! state but retaining the DNN between runs), plus the cross-program
 //! [`curriculum`] driver that carries one agent through an ordered
-//! sequence of episodes and measures cold-vs-warm transfer.
+//! sequence of episodes and measures cold-vs-warm transfer. The
+//! [`serve`] module layers an open-loop multi-tenant service on top:
+//! tenants arrive on a stochastic schedule, lease pages and compute
+//! slots, run, and depart, while one agent learns across the whole
+//! service lifetime and tail slowdown/fairness are reported.
 
 pub mod curriculum;
 pub mod runner;
+pub mod serve;
 pub mod system;
 
 pub use curriculum::{run_curriculum, CurriculumReport, CurriculumStage, StageOutcome};
 pub use runner::{
     episode_ops, fresh_agent, run_cell, run_episode_with, run_multi, run_single, run_stream,
     run_stream_with, EpisodeSummary,
+};
+pub use serve::{
+    build_tenants, ensure_serve_checkpointable, isolated_baselines, run_serve, serve_report_json,
+    serve_stream_with, summarize, ServeOutcome, TenantFeed, TenantRun, TenantSpec,
 };
 pub use system::System;

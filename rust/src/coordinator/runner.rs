@@ -35,11 +35,23 @@ impl EpisodeSummary {
         self.runs.first().expect("at least one run")
     }
 
+    /// Mean cycles across the runs; 0.0 for an empty summary. Serve-mode
+    /// tenants can complete zero episodes under aggressive admission
+    /// limits, and `0/0` here used to poison downstream aggregates with
+    /// NaN (which the JSON writer then silently turned into `null`).
     pub fn mean_cycles(&self) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
         self.runs.iter().map(|r| r.cycles as f64).sum::<f64>() / self.runs.len() as f64
     }
 
+    /// Mean OPC across the runs; 0.0 for an empty summary (see
+    /// [`EpisodeSummary::mean_cycles`]).
     pub fn mean_opc(&self) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
         self.runs.iter().map(|r| r.opc()).sum::<f64>() / self.runs.len() as f64
     }
 }
@@ -193,6 +205,15 @@ mod tests {
         c.mapping = mapping;
         c.technique = Technique::Bnmp;
         c
+    }
+
+    #[test]
+    fn empty_summary_means_are_zero_not_nan() {
+        let s = EpisodeSummary { name: "empty".to_string(), runs: Vec::new() };
+        assert_eq!(s.mean_cycles(), 0.0);
+        assert_eq!(s.mean_opc(), 0.0);
+        assert!(!s.mean_cycles().is_nan());
+        assert!(!s.mean_opc().is_nan());
     }
 
     #[test]

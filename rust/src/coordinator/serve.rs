@@ -1,0 +1,630 @@
+//! Multi-tenant service mode (`aimm serve`): open-loop tenant churn.
+//!
+//! The paper's multi-program evaluation (§7.5.2) interleaves a fixed
+//! program set that starts and ends together. The ROADMAP north-star —
+//! heavy traffic from millions of users — is a different regime: tenants
+//! *arrive* (drawn from the benchmark mix on a Poisson / bursty /
+//! diurnal interarrival process, [`crate::workloads::arrivals`]),
+//! *lease* pages and a compute slot at admission, run a bounded op
+//! stream, and *depart*, releasing every page — while ONE
+//! continually-learning agent (PR 3's checkpoint machinery, threaded
+//! through the PR 5 [`MappingPolicy`](crate::mapping::MappingPolicy)
+//! seam) survives the whole service lifetime.
+//!
+//! The headline metric is not mean OPC but the **per-tenant slowdown
+//! distribution**: each tenant's service time (arrival → last op
+//! completed, queueing included) over its isolated-run baseline, reported
+//! as nearest-rank p50/p99/p999 plus a Jain fairness index
+//! ([`crate::metrics::percentiles`]). Co-location quality degrades
+//! precisely when page ownership churns, so the tail — not the mean — is
+//! where a mapping policy earns its keep.
+//!
+//! Everything is a pure function of `SystemConfig` (tenant mix, arrival
+//! schedule and per-tenant traces all derive from `cfg.seed`), baselines
+//! fan out through the order-preserving
+//! [`parallel_map`](crate::bench::sweep::parallel_map), and the serve run
+//! itself is single-threaded simulation — so results are byte-identical
+//! at any worker count and across both engines.
+
+use std::collections::VecDeque;
+
+use crate::agent::AimmAgent;
+use crate::bench::sweep::parallel_map;
+use crate::config::{Pid, SystemConfig};
+use crate::mapping::AnyPolicy;
+use crate::metrics::{jain_fairness, percentile, RunStats, TenantStats};
+use crate::nmp::NmpOp;
+use crate::runtime::json::write as jw;
+use crate::sim::{Cycle, Rng};
+use crate::workloads::{arrival_schedule, generate, Benchmark};
+
+use super::runner::fresh_agent;
+use super::system::System;
+
+/// Seed fold for the bench-mix stream (which benchmark each tenant runs
+/// and its trace seed). Distinct from every other fold in the crate.
+const MIX_SEED_FOLD: u64 = 0x5E27;
+/// Seed fold for the arrival schedule.
+const ARRIVAL_SEED_FOLD: u64 = 0xA221;
+
+/// One tenant: identity, arrival time, op stream and page footprint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Benchmark name the tenant was drawn as (e.g. `SPMV`).
+    pub name: String,
+    pub pid: Pid,
+    /// Cycle at which the tenant joins the admission queue.
+    pub arrival: Cycle,
+    pub ops: Vec<NmpOp>,
+    /// Distinct pages the tenant leases while resident.
+    pub pages: u64,
+}
+
+/// A tenant's live bookkeeping inside a serve run.
+#[derive(Debug, Clone)]
+pub struct TenantRun {
+    pub spec: TenantSpec,
+    /// Next op index to issue.
+    pub next_op: usize,
+    /// Ops completed so far.
+    pub done: u64,
+    pub admitted_at: Option<Cycle>,
+    pub finished_at: Option<Cycle>,
+}
+
+/// The open-loop admission machine [`System`] drives in serve mode:
+/// arrivals → FIFO wait queue → admission (compute slot + page lease) →
+/// round-robin issue → departure. All state is plain vectors and
+/// indices; nothing here depends on map iteration order or threads.
+#[derive(Debug, Clone)]
+pub struct TenantFeed {
+    /// All tenants, in arrival order (index = pid - 1 for built mixes).
+    pub tenants: Vec<TenantRun>,
+    /// Index of the next tenant yet to arrive.
+    next_arrival: usize,
+    /// Arrived, awaiting admission (strict FIFO).
+    wait: VecDeque<usize>,
+    /// Resident tenants (indices into `tenants`).
+    pub active: Vec<usize>,
+    /// Round-robin issue cursor over `active`.
+    pub cursor: usize,
+    leased_pages: u64,
+    slots: usize,
+    page_budget: u64,
+    total_ops: u64,
+    distinct_pages_total: u64,
+    last_arrival: Cycle,
+}
+
+impl TenantFeed {
+    /// Wrap `tenants` (must be sorted by arrival, with unique pids; each
+    /// footprint must fit the page budget alone or its admission would
+    /// stall the FIFO forever).
+    pub fn new(tenants: Vec<TenantSpec>, slots: usize, page_budget: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(slots >= 1, "serve needs at least one compute slot");
+        let mut pids: Vec<Pid> = tenants.iter().map(|t| t.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        anyhow::ensure!(pids.len() == tenants.len(), "tenant pids must be unique");
+        for w in tenants.windows(2) {
+            anyhow::ensure!(
+                w[0].arrival <= w[1].arrival,
+                "tenants must be sorted by arrival cycle"
+            );
+        }
+        for t in &tenants {
+            anyhow::ensure!(
+                t.pages <= page_budget,
+                "tenant {} (pid {}) leases {} pages, over the {page_budget}-page budget — \
+                 it could never be admitted",
+                t.name,
+                t.pid,
+                t.pages
+            );
+        }
+        let total_ops = tenants.iter().map(|t| t.ops.len() as u64).sum();
+        let distinct_pages_total = tenants.iter().map(|t| t.pages).sum();
+        let last_arrival = tenants.last().map(|t| t.arrival).unwrap_or(0);
+        Ok(Self {
+            tenants: tenants
+                .into_iter()
+                .map(|spec| TenantRun {
+                    spec,
+                    next_op: 0,
+                    done: 0,
+                    admitted_at: None,
+                    finished_at: None,
+                })
+                .collect(),
+            next_arrival: 0,
+            wait: VecDeque::new(),
+            active: Vec::new(),
+            cursor: 0,
+            leased_pages: 0,
+            slots,
+            page_budget,
+            total_ops,
+            distinct_pages_total,
+            last_arrival,
+        })
+    }
+
+    /// Move every tenant whose arrival cycle has passed into the wait
+    /// queue (in arrival order).
+    pub fn enqueue_arrivals(&mut self, now: Cycle) {
+        while self.next_arrival < self.tenants.len()
+            && self.tenants[self.next_arrival].spec.arrival <= now
+        {
+            self.wait.push_back(self.next_arrival);
+            self.next_arrival += 1;
+        }
+    }
+
+    /// The FIFO head, if a compute slot and the page budget can take it.
+    fn head_fits(&self) -> Option<usize> {
+        let &ti = self.wait.front()?;
+        let fits = self.active.len() < self.slots
+            && self.leased_pages + self.tenants[ti].spec.pages <= self.page_budget;
+        fits.then_some(ti)
+    }
+
+    /// Would [`admit_ready`](Self::admit_ready) admit someone right now?
+    /// (The event engine's admission wake-up condition.)
+    pub fn can_admit(&self) -> bool {
+        self.head_fits().is_some()
+    }
+
+    /// Admit from the FIFO head while slots and budget allow — strict
+    /// FIFO, no skipping, so admission order never depends on tenant
+    /// size. Returns the admitted pids (the system creates their
+    /// address spaces).
+    pub fn admit_ready(&mut self, now: Cycle) -> Vec<Pid> {
+        let mut admitted = Vec::new();
+        while let Some(ti) = self.head_fits() {
+            self.wait.pop_front();
+            let t = &mut self.tenants[ti];
+            t.admitted_at = Some(now);
+            if t.spec.ops.is_empty() {
+                // A degenerate zero-op tenant is served instantly;
+                // without this it would never complete an op, never set
+                // `finished_at`, and wedge its slot forever.
+                t.finished_at = Some(now);
+            }
+            self.leased_pages += t.spec.pages;
+            self.active.push(ti);
+            admitted.push(t.spec.pid);
+        }
+        admitted
+    }
+
+    /// An op of `pid` completed. Linear scan: tenant counts are dozens,
+    /// and a pid→index map would only duplicate this Vec.
+    pub fn on_complete(&mut self, pid: Pid, now: Cycle) {
+        for t in &mut self.tenants {
+            if t.spec.pid == pid {
+                t.done += 1;
+                if t.done == t.spec.ops.len() as u64 {
+                    t.finished_at = Some(now);
+                }
+                return;
+            }
+        }
+    }
+
+    /// Remove `active[k]` and return its page lease to the budget.
+    pub fn depart(&mut self, k: usize) {
+        let ti = self.active.remove(k);
+        self.leased_pages -= self.tenants[ti].spec.pages;
+    }
+
+    /// Does any resident tenant still have ops to issue?
+    pub fn has_issuable(&self) -> bool {
+        self.active.iter().any(|&ti| {
+            let t = &self.tenants[ti];
+            t.next_op < t.spec.ops.len()
+        })
+    }
+
+    /// The next not-yet-queued arrival cycle, if any.
+    pub fn next_arrival_at(&self) -> Option<Cycle> {
+        self.tenants.get(self.next_arrival).map(|t| t.spec.arrival)
+    }
+
+    /// Every tenant arrived, was admitted, and departed.
+    pub fn all_done(&self) -> bool {
+        self.next_arrival >= self.tenants.len() && self.wait.is_empty() && self.active.is_empty()
+    }
+
+    pub fn last_arrival(&self) -> Cycle {
+        self.last_arrival
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.total_ops
+    }
+
+    /// Sum of per-tenant distinct-page footprints. Pids are unique and
+    /// never reused, so the sum is exactly the distinct (pid, page)
+    /// count of the whole service trace.
+    pub fn distinct_pages_total(&self) -> u64 {
+        self.distinct_pages_total
+    }
+
+    /// Per-tenant accounting rows for [`RunStats::tenants`], in tenant
+    /// (arrival) order.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        self.tenants
+            .iter()
+            .map(|t| TenantStats {
+                name: t.spec.name.clone(),
+                pid: t.spec.pid,
+                arrival: t.spec.arrival,
+                admitted: t.admitted_at.unwrap_or(0),
+                finished: t.finished_at.unwrap_or(0),
+                ops: t.spec.ops.len() as u64,
+                pages: t.spec.pages,
+            })
+            .collect()
+    }
+}
+
+/// Build the tenant mix for `cfg`: arrival times from the configured
+/// interarrival process, one benchmark draw + trace seed per tenant from
+/// an independent Rng stream. Pure function of the config — the whole
+/// service workload is pinned by `cfg.seed`.
+pub fn build_tenants(cfg: &SystemConfig) -> Vec<TenantSpec> {
+    let serve = &cfg.serve;
+    let arrivals = arrival_schedule(
+        serve.arrivals,
+        serve.tenants,
+        serve.mean_gap,
+        cfg.seed ^ ARRIVAL_SEED_FOLD,
+    );
+    let mut rng = Rng::new(cfg.seed ^ MIX_SEED_FOLD);
+    let mut out = Vec::with_capacity(arrivals.len());
+    for (i, &arrival) in arrivals.iter().enumerate() {
+        let bench = *rng.choice(&Benchmark::ALL);
+        let trace_seed = rng.next_u64();
+        let pid = i as Pid + 1;
+        let trace = generate(bench, pid, serve.scale, trace_seed);
+        let pages = trace.distinct_pages() as u64;
+        out.push(TenantSpec {
+            name: bench.name().to_string(),
+            pid,
+            arrival,
+            ops: trace.ops,
+            pages,
+        });
+    }
+    out
+}
+
+/// Run the service `rounds` times, threading the mapping policy through
+/// every round exactly like
+/// [`run_stream_with`](crate::coordinator::run_stream_with) threads it
+/// through episode runs: per-round control state resets, carried
+/// learning state — the continual-learning premise — survives the whole
+/// service lifetime.
+/// The policy is constructed over the concatenated tenant streams so
+/// profile-based policies (ORACLE) see the full op population.
+pub fn serve_stream_with(
+    cfg: &SystemConfig,
+    tenants: &[TenantSpec],
+    rounds: usize,
+    agent: Option<AimmAgent>,
+) -> anyhow::Result<(Vec<RunStats>, Option<AimmAgent>)> {
+    anyhow::ensure!(rounds >= 1, "serve needs at least one round");
+    let all_ops: Vec<NmpOp> = tenants.iter().flat_map(|t| t.ops.iter().copied()).collect();
+    let mut policy = AnyPolicy::new(cfg, &all_ops, agent);
+    let mut stats = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let feed = TenantFeed::new(tenants.to_vec(), cfg.serve.slots, cfg.serve.page_budget)?;
+        let mut sys = System::with_tenants(cfg.clone(), feed, policy);
+        stats.push(sys.run()?);
+        policy = sys.take_policy();
+    }
+    Ok((stats, policy.take_agent()))
+}
+
+/// Each tenant's isolated-run baseline: the cycles its stream takes on
+/// an otherwise-empty system under the same config (cold agent for
+/// agent-bearing policies — the §6.1 episode start). Fanned out through
+/// the order-preserving [`parallel_map`], so the returned vector is in
+/// tenant order at any worker count.
+pub fn isolated_baselines(
+    cfg: &SystemConfig,
+    tenants: &[TenantSpec],
+    threads: usize,
+) -> anyhow::Result<Vec<u64>> {
+    let results = parallel_map(tenants, threads.max(1), |t| -> anyhow::Result<u64> {
+        let agent = if cfg.mapping.uses_agent() { Some(fresh_agent(cfg)?) } else { None };
+        let mut sys = System::new(cfg.clone(), t.ops.clone(), agent);
+        Ok(sys.run()?.cycles)
+    });
+    results.into_iter().collect()
+}
+
+/// A finished serve study: per-round stats, per-tenant baselines, and
+/// the pooled tail/fairness numbers.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Per-round stats; each round's `tenants` rows are in tenant order.
+    pub rounds: Vec<RunStats>,
+    /// Per-tenant isolated baselines (cycles), tenant order.
+    pub baselines: Vec<u64>,
+    /// Per-tenant slowdowns pooled across all rounds (round-major,
+    /// tenant order inside each round): service time (arrival → last op
+    /// complete, queueing delay included) over the isolated baseline.
+    pub slowdowns: Vec<f64>,
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub fairness: f64,
+}
+
+impl ServeOutcome {
+    /// The steady-state round (last — after learning converges).
+    pub fn last_round(&self) -> &RunStats {
+        self.rounds.last().expect("at least one round")
+    }
+}
+
+/// Compute pooled slowdowns + tail metrics from per-round stats and
+/// per-tenant baselines.
+pub fn summarize(rounds: Vec<RunStats>, baselines: Vec<u64>) -> anyhow::Result<ServeOutcome> {
+    let mut slowdowns = Vec::with_capacity(rounds.len() * baselines.len());
+    for r in &rounds {
+        anyhow::ensure!(
+            r.tenants.len() == baselines.len(),
+            "round reports {} tenants, {} baselines",
+            r.tenants.len(),
+            baselines.len()
+        );
+        for (t, &base) in r.tenants.iter().zip(&baselines) {
+            anyhow::ensure!(
+                t.finished >= t.arrival && base > 0,
+                "tenant {} (pid {}) has no finished service interval",
+                t.name,
+                t.pid
+            );
+            slowdowns.push((t.finished - t.arrival) as f64 / base as f64);
+        }
+    }
+    let p50 = percentile(&slowdowns, 50.0);
+    let p99 = percentile(&slowdowns, 99.0);
+    let p999 = percentile(&slowdowns, 99.9);
+    let fairness = jain_fairness(&slowdowns);
+    Ok(ServeOutcome { rounds, baselines, slowdowns, p50, p99, p999, fairness })
+}
+
+/// The whole serve study for `cfg`: build the mix, run the isolated
+/// baselines (`threads` workers), run `cfg.serve.rounds` service rounds
+/// carrying `agent` (or a fresh one for agent-bearing policies), and
+/// reduce to tail metrics. Returns the outcome plus the carried agent
+/// for checkpointing.
+pub fn run_serve(
+    cfg: &SystemConfig,
+    threads: usize,
+    agent: Option<AimmAgent>,
+) -> anyhow::Result<(ServeOutcome, Option<AimmAgent>)> {
+    let tenants = build_tenants(cfg);
+    anyhow::ensure!(!tenants.is_empty(), "serve needs at least one tenant");
+    let baselines = isolated_baselines(cfg, &tenants, threads)?;
+    let agent = match agent {
+        Some(a) => Some(a),
+        None if cfg.mapping.uses_agent() => Some(fresh_agent(cfg)?),
+        None => None,
+    };
+    let (rounds, agent) = serve_stream_with(cfg, &tenants, cfg.serve.rounds, agent)?;
+    Ok((summarize(rounds, baselines)?, agent))
+}
+
+/// Serve-mode checkpointing carries the agent across service rounds;
+/// only AIMM has one. Refuse loudly, by name, before any work happens.
+pub fn ensure_serve_checkpointable(cfg: &SystemConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        cfg.mapping.checkpointable(),
+        "serve-mode --checkpoint/--resume require --mapping AIMM: the {} policy is not \
+         checkpointable (only AIMM carries learned state)",
+        cfg.mapping.name()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Report (`BENCH_serve.json`): fixed key order, like every report in
+// bench/sweep — byte-reproducible for a given config and parseable by
+// runtime/json.rs. Engine is deliberately omitted (polled and event
+// serve reports must diff clean, like sweep reports).
+// ---------------------------------------------------------------------
+
+fn tenant_row_json(t: &TenantStats, slowdown: f64) -> String {
+    jw::obj(&[
+        ("name", jw::string(&t.name)),
+        ("pid", t.pid.to_string()),
+        ("arrival", t.arrival.to_string()),
+        ("admitted", t.admitted.to_string()),
+        ("finished", t.finished.to_string()),
+        ("ops", t.ops.to_string()),
+        ("pages", t.pages.to_string()),
+        ("slowdown", jw::num(slowdown)),
+    ])
+}
+
+/// Serialize a serve study. Per-tenant rows come from the **last**
+/// (steady-state) round; the tail numbers pool every round.
+pub fn serve_report_json(cfg: &SystemConfig, outcome: &ServeOutcome) -> String {
+    let last = outcome.last_round();
+    let last_slowdowns = &outcome.slowdowns[outcome.slowdowns.len() - last.tenants.len()..];
+    let rows: Vec<String> = last
+        .tenants
+        .iter()
+        .zip(last_slowdowns)
+        .map(|(t, &s)| tenant_row_json(t, s))
+        .collect();
+    jw::obj(&[
+        ("schema", jw::string("aimm-serve-v1")),
+        ("arrivals", jw::string(cfg.serve.arrivals.name())),
+        ("tenants", cfg.serve.tenants.to_string()),
+        ("mean_gap", cfg.serve.mean_gap.to_string()),
+        ("slots", cfg.serve.slots.to_string()),
+        ("page_budget", cfg.serve.page_budget.to_string()),
+        ("rounds", cfg.serve.rounds.to_string()),
+        ("scale", jw::num(cfg.serve.scale)),
+        ("seed", jw::hex_u64(cfg.seed)),
+        ("mapping", jw::string(cfg.mapping.name())),
+        ("p50_slowdown", jw::num(outcome.p50)),
+        ("p99_slowdown", jw::num(outcome.p99)),
+        ("p999_slowdown", jw::num(outcome.p999)),
+        ("fairness", jw::num(outcome.fairness)),
+        ("tenant_rows", format!("[{}]", rows.join(","))),
+        ("regenerate", jw::string("cargo bench --bench serve_churn")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MappingScheme;
+
+    fn serve_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.frames_per_cube = 4096;
+        cfg.serve.tenants = 4;
+        cfg.serve.mean_gap = 200;
+        cfg.serve.slots = 2;
+        cfg.serve.page_budget = 2048;
+        cfg.serve.rounds = 1;
+        cfg.serve.scale = 0.02;
+        cfg
+    }
+
+    #[test]
+    fn build_tenants_is_deterministic_and_pid_unique() {
+        let cfg = serve_cfg();
+        let a = build_tenants(&cfg);
+        let b = build_tenants(&cfg);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.pid, y.pid);
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.ops.len(), y.ops.len());
+        }
+        let mut pids: Vec<Pid> = a.iter().map(|t| t.pid).collect();
+        pids.dedup();
+        assert_eq!(pids, vec![1, 2, 3, 4]);
+        let mut other = cfg.clone();
+        other.seed ^= 1;
+        let c = build_tenants(&other);
+        let a_arrivals: Vec<Cycle> = a.iter().map(|t| t.arrival).collect();
+        let c_arrivals: Vec<Cycle> = c.iter().map(|t| t.arrival).collect();
+        assert_ne!(a_arrivals, c_arrivals, "different seeds must change the mix");
+    }
+
+    #[test]
+    fn feed_admission_respects_slots_and_budget_fifo() {
+        let mk = |pid: Pid, arrival: Cycle, pages: u64| TenantSpec {
+            name: format!("T{pid}"),
+            pid,
+            arrival,
+            ops: Vec::new(),
+            pages,
+        };
+        let specs = vec![mk(1, 0, 60), mk(2, 0, 50), mk(3, 0, 10)];
+        let mut feed = TenantFeed::new(specs, 2, 100).unwrap();
+        feed.enqueue_arrivals(0);
+        // Slot for 1; 2 does not fit the budget, and FIFO means 3 may
+        // NOT jump the queue even though it would fit.
+        assert_eq!(feed.admit_ready(0), vec![1]);
+        assert!(!feed.can_admit());
+        // 1 departs → budget frees → 2 then 3 admit in order.
+        feed.tenants[0].finished_at = Some(5);
+        feed.depart(0);
+        assert_eq!(feed.admit_ready(6), vec![2, 3]);
+        assert!(!feed.all_done());
+        feed.depart(0);
+        feed.depart(0);
+        assert!(feed.all_done());
+    }
+
+    #[test]
+    fn feed_rejects_oversized_and_unsorted_tenants() {
+        let mk = |pid: Pid, arrival: Cycle, pages: u64| TenantSpec {
+            name: format!("T{pid}"),
+            pid,
+            arrival,
+            ops: Vec::new(),
+            pages,
+        };
+        let err = TenantFeed::new(vec![mk(1, 0, 200)], 1, 100).unwrap_err().to_string();
+        assert!(err.contains("over the 100-page budget"), "{err}");
+        let unsorted = vec![mk(1, 9, 1), mk(2, 3, 1)];
+        let err = TenantFeed::new(unsorted, 1, 100).unwrap_err().to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
+        let dup_pids = vec![mk(7, 0, 1), mk(7, 1, 1)];
+        let err = TenantFeed::new(dup_pids, 1, 100).unwrap_err().to_string();
+        assert!(err.contains("unique"), "{err}");
+    }
+
+    #[test]
+    fn serve_run_completes_every_tenant_and_releases_pages() {
+        let cfg = serve_cfg();
+        let (outcome, agent) = run_serve(&cfg, 2, None).unwrap();
+        assert!(agent.is_none(), "baseline carries no agent");
+        assert_eq!(outcome.rounds.len(), 1);
+        let r = &outcome.rounds[0];
+        let total: u64 = r.tenants.iter().map(|t| t.ops).sum();
+        assert_eq!(r.ops_completed, total);
+        for t in &r.tenants {
+            assert!(t.admitted >= t.arrival, "{}", t.name);
+            assert!(t.finished > t.admitted, "{}", t.name);
+        }
+        assert!(outcome.p50 > 0.0);
+        assert!(outcome.p999 >= outcome.p99 && outcome.p99 >= outcome.p50);
+        assert!(outcome.fairness > 0.0 && outcome.fairness <= 1.0);
+    }
+
+    #[test]
+    fn serve_carries_the_agent_across_rounds() {
+        let mut cfg = serve_cfg();
+        cfg.mapping = MappingScheme::Aimm;
+        cfg.serve.rounds = 2;
+        let (outcome, agent) = run_serve(&cfg, 2, None).unwrap();
+        assert_eq!(outcome.rounds.len(), 2);
+        let agent = agent.expect("AIMM agent survives the service");
+        assert!(agent.stats.invocations > 0);
+        assert!(outcome.rounds.iter().all(|r| r.agent_invocations > 0));
+    }
+
+    #[test]
+    fn serve_report_has_fixed_keys_and_parses_back() {
+        let cfg = serve_cfg();
+        let (outcome, _) = run_serve(&cfg, 2, None).unwrap();
+        let text = serve_report_json(&cfg, &outcome);
+        assert_eq!(text, serve_report_json(&cfg, &outcome), "fixed key order");
+        let parsed = crate::runtime::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("aimm-serve-v1"));
+        assert_eq!(parsed.get("arrivals").unwrap().as_str(), Some("poisson"));
+        assert!(parsed.get("p999_slowdown").is_some());
+        let rows = parsed.get("tenant_rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert!(rows[0].get("slowdown").is_some());
+    }
+
+    #[test]
+    fn non_aimm_policies_refuse_serve_checkpointing_by_name() {
+        for mapping in MappingScheme::ALL {
+            let mut cfg = serve_cfg();
+            cfg.mapping = mapping;
+            let res = ensure_serve_checkpointable(&cfg);
+            if mapping.checkpointable() {
+                assert!(res.is_ok(), "{mapping}");
+            } else {
+                let err = res.unwrap_err().to_string();
+                assert!(err.contains(mapping.name()), "{err}");
+                assert!(err.contains("not checkpointable"), "{err}");
+            }
+        }
+    }
+}

@@ -26,6 +26,7 @@ use crate::nmp::{CpuCache, NmpOp};
 use crate::noc::packet::{Packet, Payload};
 use crate::noc::Mesh;
 use crate::sim::{Cycle, EventWheel};
+use super::serve::TenantFeed;
 
 /// How often cubes report occupancy / row-hit to their MC (§5.1
 /// "communicated to a cube's nearest memory controller periodically").
@@ -54,6 +55,12 @@ pub struct System {
     next_op: usize,
     issued: u64,
     completed: u64,
+
+    /// Serve mode (`aimm serve`): tenants arriving, leasing pages and
+    /// compute slots, and departing while the run is live. `None` on
+    /// every trace path — the episode/sweep runners never construct
+    /// it, so their behaviour (and the golden fixture) is untouched.
+    tenant_feed: Option<TenantFeed>,
 
     now: Cycle,
 
@@ -122,6 +129,7 @@ impl System {
             next_op: 0,
             issued: 0,
             completed: 0,
+            tenant_feed: None,
             now: 0,
             migrated_pages: HashSet::new(),
             accesses_on_migrated: 0,
@@ -134,6 +142,17 @@ impl System {
             next_sample_at: cfg.opc_sample_period,
             cfg,
         }
+    }
+
+    /// Build a serve-mode system: no upfront trace — ops arrive through
+    /// `feed`'s tenants, each getting its address space at *admission*
+    /// (not construction) and losing it at departure. The policy is
+    /// threaded exactly like [`with_policy`](Self::with_policy), so one
+    /// agent survives the whole service lifetime across rounds.
+    pub fn with_tenants(cfg: SystemConfig, feed: TenantFeed, policy: AnyPolicy) -> Self {
+        let mut sys = Self::with_policy(cfg, Vec::new(), policy);
+        sys.tenant_feed = Some(feed);
+        sys
     }
 
     pub fn now(&self) -> Cycle {
@@ -165,8 +184,22 @@ impl System {
         self.issued - self.completed
     }
 
+    /// Total ops this run carries: the trace length, or in serve mode
+    /// the sum of every tenant's stream — the policy's progress
+    /// denominator must not read zero just because ops arrive late.
+    fn total_ops(&self) -> u64 {
+        match &self.tenant_feed {
+            Some(f) => f.total_ops(),
+            None => self.ops.len() as u64,
+        }
+    }
+
     /// Feed ops from the trace into MC queues (CPU issue).
     fn feed(&mut self) {
+        if self.tenant_feed.is_some() {
+            self.feed_serve();
+            return;
+        }
         let mut budget = self.cfg.issue_width;
         while budget > 0
             && self.next_op < self.ops.len()
@@ -195,6 +228,62 @@ impl System {
                 Err(_) => break, // backpressure: stop feeding this cycle
             }
         }
+    }
+
+    /// Serve-mode CPU feed: arrivals due this cycle join the admission
+    /// queue, the FIFO head is admitted while a compute slot and page
+    /// budget are free (strict FIFO — no skipping, so admission order
+    /// never depends on tenant size), and the issue budget round-robins
+    /// across resident tenants. Everything here is driven by `self.now`
+    /// and feed state alone, so both engines and any worker count
+    /// replay it identically.
+    fn feed_serve(&mut self) {
+        let mut feed = self.tenant_feed.take().expect("serve mode");
+        let now = self.now;
+        feed.enqueue_arrivals(now);
+        for pid in feed.admit_ready(now) {
+            self.mmu.create_process(pid);
+        }
+        let mut budget = self.cfg.issue_width;
+        let mut skipped = 0usize;
+        while budget > 0
+            && self.outstanding() < self.cfg.max_outstanding as u64
+            && !feed.active.is_empty()
+            && skipped < feed.active.len()
+        {
+            let slot = feed.cursor % feed.active.len();
+            let ti = feed.active[slot];
+            let t = &mut feed.tenants[ti];
+            if t.next_op >= t.spec.ops.len() {
+                // Drained (awaiting acks or departure): rotate past it.
+                feed.cursor += 1;
+                skipped += 1;
+                continue;
+            }
+            let op = t.spec.ops[t.next_op];
+            // Same nearest-MC round-robin as the trace feed (`issued`
+            // equals `next_op` there, so the two paths agree).
+            let mc_id = self.issued as usize % self.cfg.num_mcs();
+            match self.mcs[mc_id].enqueue(op) {
+                Ok(()) => {
+                    t.next_op += 1;
+                    feed.cursor += 1;
+                    skipped = 0;
+                    self.issued += 1;
+                    budget -= 1;
+                    self.rw_pages.insert((op.pid, op.dest_vpage()));
+                    let (pages, n) = op.vpages_arr();
+                    for &p in &pages[..n] {
+                        self.page_accesses_total += 1;
+                        if self.migrated_pages.contains(&(op.pid, p)) {
+                            self.accesses_on_migrated += 1;
+                        }
+                    }
+                }
+                Err(_) => break, // backpressure: stop feeding this cycle
+            }
+        }
+        self.tenant_feed = Some(feed);
     }
 
     fn inject_or_retain(mesh: &mut Mesh, out: &mut std::collections::VecDeque<Packet>) {
@@ -254,8 +343,11 @@ impl System {
                         self.migration.receive_ack(token, now, &mut self.mmu);
                     }
                     _ => {
-                        if self.mcs[m].receive(pk, now).is_some() {
+                        if let Some((pid, _latency)) = self.mcs[m].receive(pk, now) {
                             self.completed += 1;
+                            if let Some(feed) = &mut self.tenant_feed {
+                                feed.on_complete(pid, now);
+                            }
                         }
                     }
                 }
@@ -281,6 +373,15 @@ impl System {
             }
         }
 
+        // 7b. Serve mode: departures. Runs after the migration drain
+        // (step 7) so a commit landing this very cycle already cleared
+        // `in_flight` — both engines see the departure condition flip
+        // inside the same tick, never between ticks, which keeps the
+        // event engine's skips legal.
+        if self.tenant_feed.is_some() {
+            self.tenant_maintenance();
+        }
+
         // 8. Periodic cube → MC reports.
         if now % CUBE_REPORT_PERIOD == 0 {
             for cube in &self.cubes {
@@ -303,7 +404,7 @@ impl System {
                 remap_table: &mut self.remap_table,
                 mesh: &self.mesh,
                 completed: self.completed,
-                total_ops: self.ops.len() as u64,
+                total_ops: self.total_ops(),
             };
             self.policy.tick(now, &mut ctx)?
         };
@@ -333,7 +434,24 @@ impl System {
     ///   MMU and shoot down every MC TLB, page by page, exactly as the
     ///   pre-trait relayout loop interleaved them.
     fn apply_actions(&mut self, actions: Vec<MappingAction>) {
+        let serve = self.tenant_feed.is_some();
         for action in actions {
+            // Serve mode only: drop stale advice about pages that are
+            // not mapped — a departed tenant's, or a profiled page its
+            // tenant has not touched yet. The trace path applies every
+            // action exactly as before (an unmapped target there is
+            // still routed into the same rejection accounting the
+            // golden fixture pins).
+            if serve {
+                let (pid, vpage) = match &action {
+                    MappingAction::MigratePage { pid, vpage, .. } => (*pid, *vpage),
+                    MappingAction::RemapCompute { pid, vpage, .. } => (*pid, *vpage),
+                    MappingAction::ForceRemap { pid, vpage, .. } => (*pid, *vpage),
+                };
+                if !self.mmu.is_mapped(pid, vpage) {
+                    continue;
+                }
+            }
             match action {
                 MappingAction::MigratePage { pid, vpage, to_cube } => {
                     let blocking = self.rw_pages.contains(&(pid, vpage));
@@ -352,9 +470,50 @@ impl System {
         }
     }
 
+    /// Serve-mode departures (tick step 7b): a tenant whose last op has
+    /// completed leaves once no page of its address space has a
+    /// migration queued or in flight. On departure every mapping is
+    /// scrubbed from the MC TLBs, the compute-remap table and the
+    /// placement before the MMU returns its frames — so a successor
+    /// tenant reusing those frames can never hit a stale translation or
+    /// remap entry. Gating on [`MigrationSystem::has_pid_in_flight`]
+    /// makes the frame release safe: `in_flight` covers a migration's
+    /// whole lifetime (request → commit/abort), so no MDMA job can
+    /// touch a freed frame afterwards.
+    fn tenant_maintenance(&mut self) {
+        let mut feed = self.tenant_feed.take().expect("serve mode");
+        let mut k = 0;
+        while k < feed.active.len() {
+            let ti = feed.active[k];
+            let t = &feed.tenants[ti];
+            let pid = t.spec.pid;
+            if t.finished_at.is_some() && !self.migration.has_pid_in_flight(pid) {
+                // `Mmu::mappings` walks the page table in index order —
+                // deterministic scrub order at any worker count.
+                for (vpage, loc) in self.mmu.mappings(pid) {
+                    for mc in &mut self.mcs {
+                        mc.tlb.invalidate(pid, vpage);
+                    }
+                    self.remap_table.remove(pid, vpage);
+                    self.placement.note_free(pid, loc.cube);
+                }
+                self.mmu.release_process(pid);
+                feed.depart(k);
+            } else {
+                k += 1;
+            }
+        }
+        self.tenant_feed = Some(feed);
+    }
+
     /// Everything drained?
     pub fn is_done(&self) -> bool {
-        self.next_op >= self.ops.len()
+        let source_drained = match &self.tenant_feed {
+            // Serve: every tenant arrived, was admitted, and departed.
+            Some(feed) => feed.all_done(),
+            None => self.next_op >= self.ops.len(),
+        };
+        source_drained
             && self.outstanding() == 0
             && self.mesh.is_idle()
             && self.migration.is_idle()
@@ -368,8 +527,10 @@ impl System {
     /// both engines produce bit-identical `RunStats` (DESIGN.md §8,
     /// enforced by `rust/tests/engine_equivalence.rs`).
     pub fn run(&mut self) -> anyhow::Result<RunStats> {
-        let max_cycles =
-            MAX_CYCLES_FLOOR.max(self.ops.len() as u64 * MAX_CYCLES_PER_OP);
+        // Serve runs idle until the last arrival however sparse the
+        // schedule, so the livelock guard starts counting from there.
+        let horizon = self.tenant_feed.as_ref().map(|f| f.last_arrival()).unwrap_or(0);
+        let max_cycles = horizon + MAX_CYCLES_FLOOR.max(self.total_ops() * MAX_CYCLES_PER_OP);
         match self.cfg.engine {
             Engine::Polled => self.drive_polled(max_cycles)?,
             Engine::Event => self.drive_event(max_cycles)?,
@@ -383,7 +544,7 @@ impl System {
             remap_table: &mut self.remap_table,
             mesh: &self.mesh,
             completed: self.completed,
-            total_ops: self.ops.len() as u64,
+            total_ops: self.total_ops(),
         };
         self.policy.finish(&mut ctx);
         Ok(self.stats())
@@ -397,7 +558,7 @@ impl System {
                 self.now < max_cycles,
                 "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
                 self.completed,
-                self.ops.len()
+                self.total_ops()
             );
         }
         Ok(())
@@ -427,7 +588,7 @@ impl System {
                     anyhow::bail!(
                         "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
                         self.completed,
-                        self.ops.len()
+                        self.total_ops()
                     );
                 }
             }
@@ -436,7 +597,7 @@ impl System {
                 self.now < max_cycles,
                 "simulation exceeded {max_cycles} cycles ({} / {} ops done)",
                 self.completed,
-                self.ops.len()
+                self.total_ops()
             );
         }
         Ok(())
@@ -456,10 +617,32 @@ impl System {
         // outstanding window has room. (A full MC queue also blocks the
         // feed, but that same queue then issues every cycle — covered by
         // the MC's own event below.)
-        if self.next_op < self.ops.len()
-            && self.outstanding() < self.cfg.max_outstanding as u64
-        {
-            wheel.schedule(now);
+        match &self.tenant_feed {
+            Some(feed) => {
+                // Serve mode: the next arrival wakes the admission
+                // queue; a fitting FIFO head admits now; resident
+                // tenants with remaining ops keep the feed hot while
+                // the outstanding window has room. Departures need no
+                // event of their own — the condition only flips inside
+                // ticks already driven by delivery/migration events,
+                // and step 7b runs in that same tick.
+                if let Some(at) = feed.next_arrival_at() {
+                    wheel.schedule(at.max(now));
+                }
+                if feed.can_admit() {
+                    wheel.schedule(now);
+                }
+                if feed.has_issuable() && self.outstanding() < self.cfg.max_outstanding as u64 {
+                    wheel.schedule(now);
+                }
+            }
+            None => {
+                if self.next_op < self.ops.len()
+                    && self.outstanding() < self.cfg.max_outstanding as u64
+                {
+                    wheel.schedule(now);
+                }
+            }
         }
         for mc in &self.mcs {
             if let Some(at) = mc.next_event(now, &self.migration) {
@@ -477,7 +660,7 @@ impl System {
                 wheel.schedule(at);
             }
         }
-        if let Some(at) = self.policy.next_event(now, self.completed, self.ops.len() as u64) {
+        if let Some(at) = self.policy.next_event(now, self.completed, self.total_ops()) {
             wheel.schedule(at);
         }
     }
@@ -546,11 +729,21 @@ impl System {
             let ch: u64 = c.vaults.iter().map(|v| v.row_hits()).sum();
             (a + ca, h + ch)
         });
-        let distinct_pages: HashSet<(Pid, VPage)> = self
-            .ops
-            .iter()
-            .flat_map(|o| o.vpages().into_iter().map(move |p| (o.pid, p)))
-            .collect();
+        // Fig 10's denominator: distinct (pid, page) pairs the run
+        // touches. Serve mode has no upfront trace, so the feed
+        // precomputes the sum of per-tenant footprints (pids are unique
+        // and never reused, so the sum *is* the distinct count).
+        let distinct_page_count = match &self.tenant_feed {
+            Some(feed) => feed.distinct_pages_total(),
+            None => {
+                let distinct: HashSet<(Pid, VPage)> = self
+                    .ops
+                    .iter()
+                    .flat_map(|o| o.vpages().into_iter().map(move |p| (o.pid, p)))
+                    .collect();
+                distinct.len() as u64
+            }
+        };
 
         let mut energy_counts = EnergyCounts::default();
         for mc in &self.mcs {
@@ -582,10 +775,10 @@ impl System {
             avg_packet_latency: self.mesh.stats.avg_latency(),
             compute_utilization,
             compute_balance,
-            fraction_pages_migrated: if distinct_pages.is_empty() {
+            fraction_pages_migrated: if distinct_page_count == 0 {
                 0.0
             } else {
-                self.migrated_pages.len() as f64 / distinct_pages.len() as f64
+                self.migrated_pages.len() as f64 / distinct_page_count as f64
             },
             fraction_accesses_on_migrated: if self.page_accesses_total == 0 {
                 0.0
@@ -600,6 +793,11 @@ impl System {
             agent_avg_loss: loss,
             agent_cumulative_reward: cum_r,
             energy: EnergyModel::default().breakdown(&energy_counts),
+            tenants: self
+                .tenant_feed
+                .as_ref()
+                .map(|f| f.tenant_stats())
+                .unwrap_or_default(),
         }
     }
 }

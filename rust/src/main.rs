@@ -16,6 +16,9 @@
 //! aimm table1 | aimm table2
 //! aimm multi    --benches SC,KM,RD,MAC [--hoard] [--mapping AIMM] ...
 //! aimm curriculum --stages SC,KM,RD [--out BENCH_continual.json] ...
+//! aimm serve    [--arrivals poisson|bursty|diurnal] [--tenants 12]
+//!               [--mean-gap 400] [--slots 4] [--page-budget 4096]
+//!               [--rounds 2] [--out BENCH_serve.json] ...
 //! ```
 
 use std::collections::HashMap;
@@ -27,8 +30,11 @@ use aimm::bench::figures;
 use aimm::bench::sweep::{self, ContinualSequence, SweepGrid};
 use aimm::bench::Table;
 use aimm::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
-use aimm::coordinator::{fresh_agent, run_curriculum, run_episode_with, CurriculumStage};
-use aimm::workloads::Benchmark;
+use aimm::coordinator::{
+    ensure_serve_checkpointable, fresh_agent, run_curriculum, run_episode_with, run_serve,
+    serve_report_json, CurriculumStage,
+};
+use aimm::workloads::{ArrivalProcess, Benchmark};
 
 /// Q-backend note for `--help`, matching what this binary was built with.
 #[cfg(feature = "pjrt")]
@@ -77,6 +83,18 @@ fn usage() -> String {
                     without running anything)]\n\
                     every finished cell is journaled; rerunning the same grid\n\
                     resumes from the journal for free (Ctrl-C safe)\n\
+           serve    open-loop multi-tenant service: tenants arrive on a\n\
+                    stochastic schedule, lease pages + a compute slot, run\n\
+                    their op stream, and depart; ONE agent learns across the\n\
+                    whole service lifetime (defaults to --mapping AIMM)\n\
+                    [--arrivals poisson|bursty|diurnal] [--tenants N]\n\
+                    [--mean-gap CYCLES] [--slots N] [--page-budget PAGES]\n\
+                    [--rounds N] [--scale F] [--threads N] [--seed N]\n\
+                    [--mapping ...] [--engine polled|event] [--config FILE]\n\
+                    [--out BENCH_serve.json] [--checkpoint OUT.json]\n\
+                    [--resume IN.json]\n\
+                    prints per-tenant slowdown vs an isolated run plus the\n\
+                    p50/p99/p999 tail and Jain fairness index\n\
            analyze  --fig 5a|5b|5c [--scale F] [--seed N]\n\
            table    --fig 6|7|8|9|10|11|12|13|14|area [--scale F] [--runs N]\n\
            table1   print the active hardware configuration (paper Table 1)\n\
@@ -110,6 +128,19 @@ fn parse_engine(e: &str) -> Result<Engine, String> {
 fn parse_topology(t: &str) -> Result<TopologyKind, String> {
     TopologyKind::from_name(t)
         .ok_or_else(|| format!("unknown topology {t} (expected {})", TopologyKind::name_list()))
+}
+
+fn parse_arrivals(a: &str) -> Result<ArrivalProcess, String> {
+    ArrivalProcess::from_name(a)
+        .ok_or_else(|| format!("unknown arrivals {a} (expected {})", ArrivalProcess::name_list()))
+}
+
+/// Parse a non-negative count flag (`--mean-gap`, `--page-budget`).
+fn parse_count(flag: &str, v: &str) -> Result<u64, String> {
+    match v.parse() {
+        Ok(n) => Ok(n),
+        Err(_) => Err(format!("bad --{flag} {v:?} (expected a non-negative integer)")),
+    }
 }
 
 /// Seeds parse as decimal or `0x`-hex — the hex form is what
@@ -479,6 +510,90 @@ fn real_main() -> Result<(), String> {
             }
             save_checkpoint(&args, agent.as_ref())?;
         }
+        "serve" => {
+            let mut cfg = build_cfg(&args)?;
+            // Serve is the continual-learning service story: one agent
+            // carried across the whole tenant churn. Same defaulting
+            // rule as curriculum — AIMM unless the user picked a scheme
+            // via the flag or a `mapping` key in their config file.
+            let explicit_mapping = args.get("mapping").is_some()
+                || args.get("config").is_some_and(|path| {
+                    std::fs::read_to_string(path)
+                        .ok()
+                        .and_then(|text| aimm::config::parse_kv(&text).ok())
+                        .is_some_and(|kv| kv.contains_key("mapping"))
+                });
+            if !explicit_mapping {
+                cfg.mapping = MappingScheme::Aimm;
+            }
+            if let Some(a) = args.get("arrivals") {
+                cfg.serve.arrivals = parse_arrivals(a)?;
+            }
+            cfg.serve.tenants = args.usize_or("tenants", cfg.serve.tenants)?;
+            if let Some(v) = args.get("mean-gap") {
+                cfg.serve.mean_gap = parse_count("mean-gap", v)?;
+            }
+            cfg.serve.slots = args.usize_or("slots", cfg.serve.slots)?;
+            if let Some(v) = args.get("page-budget") {
+                cfg.serve.page_budget = parse_count("page-budget", v)?;
+            }
+            cfg.serve.rounds = args.usize_or("rounds", cfg.serve.rounds)?;
+            cfg.serve.scale = args.f64_or("scale", cfg.serve.scale)?;
+            cfg.validate().map_err(|e| e.to_string())?;
+            if args.get("checkpoint").is_some() || args.get("resume").is_some() {
+                ensure_serve_checkpointable(&cfg).map_err(|e| e.to_string())?;
+            }
+            let agent = initial_agent(&args, &cfg)?;
+            let threads = args.usize_or("threads", sweep::default_threads())?.max(1);
+            println!(
+                "serve: {} tenant(s), {} arrivals (mean gap {}), {} slot(s), \
+                 {}-page budget, {} round(s), mapping {}",
+                cfg.serve.tenants,
+                cfg.serve.arrivals,
+                cfg.serve.mean_gap,
+                cfg.serve.slots,
+                cfg.serve.page_budget,
+                cfg.serve.rounds,
+                cfg.mapping
+            );
+            let t0 = std::time::Instant::now();
+            let (outcome, agent) = run_serve(&cfg, threads, agent).map_err(|e| e.to_string())?;
+            let last = outcome.last_round();
+            let mut t = Table::new(
+                "Serve churn (last round; slowdown = residency / isolated run)",
+                &["tenant", "pid", "arrival", "admitted", "finished", "ops", "pages", "slowdown"],
+            );
+            let base = outcome.slowdowns.len() - last.tenants.len();
+            for (i, ts) in last.tenants.iter().enumerate() {
+                t.row(vec![
+                    ts.name.clone(),
+                    ts.pid.to_string(),
+                    ts.arrival.to_string(),
+                    ts.admitted.to_string(),
+                    ts.finished.to_string(),
+                    ts.ops.to_string(),
+                    ts.pages.to_string(),
+                    format!("{:.3}", outcome.slowdowns[base + i]),
+                ]);
+            }
+            println!("{}", t.render());
+            println!(
+                "tail (all {} round(s) pooled): p50 {:.3}x  p99 {:.3}x  p999 {:.3}x  \
+                 Jain fairness {:.3}  ({:?})",
+                outcome.rounds.len(),
+                outcome.p50,
+                outcome.p99,
+                outcome.p999,
+                outcome.fairness,
+                t0.elapsed()
+            );
+            if let Some(out) = args.get("out") {
+                let text = serve_report_json(&cfg, &outcome);
+                sweep::atomic_write_text(Path::new(out), &text).map_err(|e| e.to_string())?;
+                println!("wrote {out}");
+            }
+            save_checkpoint(&args, agent.as_ref())?;
+        }
         "sweep" => {
             // Merge mode: fold shard journals into one aggregated report
             // and exit — nothing runs, the grid axes don't apply.
@@ -777,5 +892,30 @@ mod tests {
         // And the new policies parse as first-class CLI values.
         assert_eq!(parse_mapping("coda"), Ok(MappingScheme::Coda));
         assert_eq!(parse_mapping("oracle"), Ok(MappingScheme::Oracle));
+    }
+
+    /// `serve --arrivals` parses every registered process and lists
+    /// them all on a typo, same registry-backed contract as the other
+    /// name flags.
+    #[test]
+    fn arrivals_flag_parses_every_process_and_lists_names() {
+        for p in ArrivalProcess::ALL {
+            assert_eq!(parse_arrivals(p.name()), Ok(p), "{p} roundtrips");
+            assert_eq!(parse_arrivals(&p.name().to_uppercase()), Ok(p));
+        }
+        let err = parse_arrivals("bogus").unwrap_err();
+        assert!(err.contains("poisson|bursty|diurnal"), "{err}");
+    }
+
+    /// The count flags reject garbage by flag name instead of panicking
+    /// or silently defaulting.
+    #[test]
+    fn count_flags_parse_strictly() {
+        assert_eq!(parse_count("mean-gap", "400"), Ok(400));
+        assert_eq!(parse_count("page-budget", "0"), Ok(0));
+        for bad in ["", "-3", "4.5", "many"] {
+            let err = parse_count("mean-gap", bad).unwrap_err();
+            assert!(err.contains("--mean-gap"), "{bad:?}: {err}");
+        }
     }
 }

@@ -321,8 +321,10 @@ impl Mc {
         Ok(())
     }
 
-    /// Handle a packet delivered to this MC.
-    pub fn receive(&mut self, pk: Packet, now: Cycle) -> Option<u64> {
+    /// Handle a packet delivered to this MC. A completed op returns its
+    /// `(pid, latency)` so the coordinator can attribute the completion
+    /// to a tenant (serve mode) as well as count it.
+    pub fn receive(&mut self, pk: Packet, now: Cycle) -> Option<(u32, u64)> {
         match pk.payload {
             Payload::NmpAck { token, .. } => {
                 if let Some(o) = self.outstanding.remove(&token) {
@@ -330,7 +332,7 @@ impl Mc {
                     self.stats.ops_completed += 1;
                     self.stats.total_op_latency += latency;
                     self.page_cache.on_ack((o.pid, o.dest_vpage), latency);
-                    return Some(latency);
+                    return Some((o.pid, latency));
                 }
                 None
             }
@@ -432,7 +434,7 @@ mod tests {
             now + 90,
         );
         let lat = mc.receive(ack, now + 100);
-        assert!(lat.is_some());
+        assert_eq!(lat.map(|(pid, _)| pid), Some(1), "completion attributes its pid");
         assert_eq!(mc.stats.ops_completed, 1);
         assert!(mc.is_idle() || !mc.out.is_empty());
     }

@@ -3,9 +3,11 @@
 
 pub mod area;
 pub mod energy;
+pub mod percentiles;
 
 pub use area::{area_report, AreaItem};
 pub use energy::{EnergyBreakdown, EnergyCounts, EnergyModel};
+pub use percentiles::{jain_fairness, percentile};
 
 /// End-of-run statistics for one episode.
 #[derive(Debug, Clone, Default)]
@@ -42,6 +44,30 @@ pub struct RunStats {
     pub agent_cumulative_reward: f64,
     /// Dynamic energy breakdown (Fig 14).
     pub energy: EnergyBreakdown,
+    /// Per-tenant accounting, populated only by serve mode
+    /// (`aimm serve`). Deliberately **not** serialized by
+    /// [`crate::bench::sweep::stats_json`]: sweep/episode reports — and
+    /// the committed golden fixture pinning their bytes — must not grow
+    /// fields. Serve has its own fixed-key-order report.
+    pub tenants: Vec<TenantStats>,
+}
+
+/// One tenant's lifetime through a serve run (all times in cycles).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Benchmark name the tenant was drawn as (e.g. `SPMV`).
+    pub name: String,
+    pub pid: u32,
+    /// When the tenant arrived (joined the admission queue).
+    pub arrival: u64,
+    /// When it was admitted (pages + compute slot leased).
+    pub admitted: u64,
+    /// When its last op completed (0 if it never finished).
+    pub finished: u64,
+    /// Ops in its stream.
+    pub ops: u64,
+    /// Distinct pages it leases while resident.
+    pub pages: u64,
 }
 
 impl RunStats {

@@ -1,0 +1,129 @@
+//! Nearest-rank percentiles and the Jain fairness index — the tail
+//! metrics behind `aimm serve` (per-tenant slowdown distribution).
+//!
+//! Mean OPC hides exactly the behaviour tenant churn creates: a few
+//! tenants admitted into a congested window can be slowed 10× while the
+//! mean barely moves. The serve report therefore leads with p50/p99/p999
+//! slowdown and Jain's index, both computed here with integer ranks so
+//! the numbers in `BENCH_serve.json` are exact functions of the input
+//! vector — no interpolation, no float-accumulation order dependence
+//! beyond a single left-to-right sum.
+
+/// Nearest-rank percentile of an **unsorted** sample (the helper sorts a
+/// copy). `p` is in percent, e.g. `99.9` for p999. Empty input → 0.0.
+///
+/// Nearest-rank: rank = ⌈p/100 · n⌉ clamped to `[1, n]`, value =
+/// `sorted[rank - 1]`. This is the classic definition (every returned
+/// value is an actual sample point), which keeps the known-answer tests
+/// hand-checkable and the JSON output free of interpolation artefacts.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("percentile input must not contain NaN"));
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Jain's fairness index: `(Σx)² / (n · Σx²)`, in `(0, 1]` for non-zero
+/// inputs — 1.0 when every tenant is slowed equally, `1/n` when one
+/// tenant absorbs all the slowdown. Empty or all-zero input → 0.0.
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sumsq: f64 = xs.iter().map(|x| x * x).sum();
+    if sumsq == 0.0 {
+        return 0.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sumsq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- nearest-rank known answers (hand-computed) ---------------------
+
+    #[test]
+    fn five_element_known_answers() {
+        // Deliberately unsorted input: the helper sorts internally.
+        let xs = [30.0, 10.0, 50.0, 20.0, 40.0];
+        // n=5: p50 → rank ⌈2.5⌉=3 → 30; p99 → ⌈4.95⌉=5 → 50;
+        // p99.9 → ⌈4.995⌉=5 → 50.
+        assert_eq!(percentile(&xs, 50.0), 30.0);
+        assert_eq!(percentile(&xs, 99.0), 50.0);
+        assert_eq!(percentile(&xs, 99.9), 50.0);
+        // Extremes: p0 clamps to rank 1, p100 is rank n.
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+    }
+
+    #[test]
+    fn thousand_element_known_answers() {
+        // xs[i] = i+1 so value == rank; 0.50·1000, 0.99·1000 and
+        // 0.999·1000 are all exactly representable in f64 (500, 990,
+        // 999), so ceil introduces no off-by-one here.
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 500.0);
+        assert_eq!(percentile(&xs, 99.0), 990.0);
+        assert_eq!(percentile(&xs, 99.9), 999.0);
+        assert_eq!(percentile(&xs, 100.0), 1000.0);
+    }
+
+    #[test]
+    fn empty_and_single_element_edges() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.9), 0.0);
+        for p in [0.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0);
+        }
+    }
+
+    #[test]
+    fn percentile_does_not_mutate_input() {
+        let xs = vec![3.0, 1.0, 2.0];
+        percentile(&xs, 50.0);
+        assert_eq!(xs, vec![3.0, 1.0, 2.0]);
+    }
+
+    // -- Jain fairness known answers ------------------------------------
+
+    #[test]
+    fn jain_known_answers() {
+        // Perfect fairness.
+        assert_eq!(jain_fairness(&[1.0, 1.0, 1.0, 1.0]), 1.0);
+        // One tenant absorbs everything: 1/n.
+        assert_eq!(jain_fairness(&[1.0, 0.0, 0.0, 0.0]), 0.25);
+        // (2+4)² / (2 · (4+16)) = 36/40 = 0.9 exactly in f64.
+        assert_eq!(jain_fairness(&[2.0, 4.0]), 0.9);
+        // Scale invariance: Jain(kx) == Jain(x).
+        assert_eq!(jain_fairness(&[20.0, 40.0]), 0.9);
+    }
+
+    #[test]
+    fn jain_edges() {
+        assert_eq!(jain_fairness(&[]), 0.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 0.0);
+        assert_eq!(jain_fairness(&[7.0]), 1.0);
+    }
+
+    // -- no float round-trip surprises in the serve report --------------
+
+    #[test]
+    fn report_values_survive_the_json_writer_exactly() {
+        // The serve report writes these through jw::num; nearest-rank
+        // values are actual sample points and Jain on small integer
+        // vectors is an exact dyadic/decimal fraction, so the shortest
+        // round-trip representation parses back to the identical bits.
+        use crate::runtime::json::write as jw;
+        for v in [0.9, 0.25, 1.0, 30.0, 999.0] {
+            let text = jw::num(v);
+            let back: f64 = text.parse().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{text}");
+        }
+    }
+}

@@ -132,6 +132,18 @@ impl MigrationSystem {
         self.in_flight.contains_key(&(pid, vpage))
     }
 
+    /// Does any page of `pid` have a migration queued or in flight?
+    /// `in_flight` covers the full lifetime — inserted at `request` (so
+    /// queued-but-unstarted jobs count) and removed only at commit or
+    /// abort — so a `false` here means the MMU holds the only reference
+    /// to the process's frames. Serve mode gates tenant departure on
+    /// this before releasing the address space. The `any` over the map
+    /// is a boolean fold: iteration order cannot affect the result, so
+    /// determinism across worker counts is preserved.
+    pub fn has_pid_in_flight(&self, pid: Pid) -> bool {
+        self.in_flight.keys().any(|(p, _)| *p == pid)
+    }
+
     pub fn queue_occupancy(&self) -> f32 {
         self.queue.occupancy()
     }
@@ -330,6 +342,26 @@ mod tests {
         assert_eq!(ms.stats.rejected_queue_full, 1);
         // The page whose request overflowed must not stay marked.
         assert!(!ms.is_migrating(1, 3));
+    }
+
+    #[test]
+    fn has_pid_in_flight_tracks_the_full_lifetime() {
+        let (mut ms, mut mmu) = setup();
+        assert!(!ms.has_pid_in_flight(1));
+        // Counts from the moment of request — queued, not yet started.
+        ms.request(MigRequest { pid: 1, vpage: 10, to_cube: 5, blocking: false });
+        assert!(ms.has_pid_in_flight(1));
+        assert!(!ms.has_pid_in_flight(2), "other pids unaffected");
+        // …and clears only at commit.
+        let mut now = 0;
+        ms.tick(now, &mut mmu);
+        assert!(ms.has_pid_in_flight(1), "active job still in flight");
+        while ms.stats.completed == 0 {
+            drain_acks(&mut ms, &mut mmu, &mut now);
+            ms.tick(now, &mut mmu);
+            assert!(now < 10_000);
+        }
+        assert!(!ms.has_pid_in_flight(1));
     }
 
     #[test]

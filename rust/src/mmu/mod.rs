@@ -52,6 +52,37 @@ impl Mmu {
         self.spaces.contains_key(&pid)
     }
 
+    /// Tear down a process: drop its address space and return every
+    /// frame it held to the per-cube pools (tenant departure in serve
+    /// mode). The caller must first quiesce the process — no pending
+    /// remaps and no in-flight migrations for `pid` — or the freed
+    /// frames could be handed out while a migration still writes them;
+    /// the serve driver gates departure on exactly that condition.
+    /// No-op for an unknown pid.
+    pub fn release_process(&mut self, pid: Pid) {
+        debug_assert!(
+            !self.pending.keys().any(|(p, _)| *p == pid),
+            "release_process({pid}) with pending remaps"
+        );
+        if let Some(space) = self.spaces.remove(&pid) {
+            for (_vpage, loc) in space.mappings() {
+                self.pools[loc.cube].free(loc.frame);
+            }
+        }
+    }
+
+    /// Is `vpage` currently mapped for `pid`? Unlike
+    /// [`Mmu::translate`] this is a pure query: it counts no page walk
+    /// and triggers no first-touch. Policy actions check this before
+    /// touching a page so stale advice about a departed tenant is
+    /// dropped instead of resurrecting its mappings.
+    pub fn is_mapped(&self, pid: Pid, vpage: VPage) -> bool {
+        match self.spaces.get(&pid) {
+            Some(space) => space.translate(vpage).is_some(),
+            None => false,
+        }
+    }
+
     /// Map `vpage` into a frame of `cube`. Errors if the cube is out of
     /// frames or the page is already mapped.
     pub fn map_page(&mut self, pid: Pid, vpage: VPage, cube: CubeId) -> anyhow::Result<PhysLoc> {
@@ -244,5 +275,40 @@ mod tests {
         m.map_page(1, 5, 0).unwrap();
         m.begin_remap(1, 5, 4).unwrap();
         assert!(m.begin_remap(1, 5, 2).is_err());
+    }
+
+    #[test]
+    fn release_process_returns_every_frame() {
+        let mut m = mmu();
+        m.map_page(1, 1, 0).unwrap();
+        m.map_page(1, 2, 0).unwrap();
+        m.map_page(1, 3, 4).unwrap();
+        assert_eq!(m.free_frames(0), 6);
+        assert_eq!(m.free_frames(4), 7);
+        m.release_process(1);
+        assert!(!m.has_process(1));
+        assert_eq!(m.free_frames(0), 8);
+        assert_eq!(m.free_frames(4), 8);
+        // Idempotent: releasing an unknown pid is a no-op.
+        m.release_process(1);
+        m.release_process(99);
+        // The frames are genuinely reusable by a successor tenant.
+        m.create_process(2);
+        for v in 0..8 {
+            m.map_page(2, v, 0).unwrap();
+        }
+    }
+
+    #[test]
+    fn is_mapped_is_a_pure_query() {
+        let mut m = mmu();
+        m.map_page(1, 0x42, 3).unwrap();
+        let walks_before = m.walks;
+        assert!(m.is_mapped(1, 0x42));
+        assert!(!m.is_mapped(1, 0x43));
+        assert!(!m.is_mapped(9, 0x42));
+        assert_eq!(m.walks, walks_before, "no page walks counted");
+        m.release_process(1);
+        assert!(!m.is_mapped(1, 0x42));
     }
 }

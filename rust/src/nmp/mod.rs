@@ -24,7 +24,7 @@ pub enum OpKind {
 }
 
 /// One NMP operation from an application trace.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NmpOp {
     pub pid: Pid,
     pub kind: OpKind,

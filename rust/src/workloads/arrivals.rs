@@ -1,0 +1,190 @@
+//! Tenant interarrival processes for `aimm serve` (open-loop churn).
+//!
+//! The ROADMAP north-star is heavy traffic from millions of users:
+//! tenants arrive and depart continuously while one continually-learning
+//! agent survives the churn. This module generates the *arrival side* of
+//! that story — a deterministic schedule of admission-queue join times —
+//! from [`sim::Rng`](crate::sim::Rng) alone, so a serve run is
+//! seed-reproducible at any worker count (the schedule is computed once,
+//! up front, never on worker threads).
+//!
+//! Three processes cover the regimes the resource-management literature
+//! distinguishes:
+//!
+//! * **poisson** — memoryless exponential gaps, the open-loop default.
+//! * **bursty** — geometric bursts of near-simultaneous arrivals
+//!   separated by long quiet gaps (flash crowds; the hard case for
+//!   admission + page-lease accounting).
+//! * **diurnal** — a sinusoid-modulated rate (day/night load swing), so
+//!   the agent sees both congested and idle epochs in one run.
+
+use crate::sim::{Cycle, Rng};
+
+/// A tenant interarrival process. Follows the crate's registry-enum
+/// pattern (`ALL` / `name` / `from_name` / `name_list`) so the CLI and
+/// TOML layers print and parse it like every other axis enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArrivalProcess {
+    Poisson,
+    Bursty,
+    Diurnal,
+}
+
+impl ArrivalProcess {
+    pub const ALL: [ArrivalProcess; 3] =
+        [ArrivalProcess::Poisson, ArrivalProcess::Bursty, ArrivalProcess::Diurnal];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty => "bursty",
+            ArrivalProcess::Diurnal => "diurnal",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ArrivalProcess> {
+        let s = s.to_ascii_lowercase();
+        Self::ALL.iter().copied().find(|a| a.name() == s)
+    }
+
+    /// `poisson|bursty|diurnal` — for error messages and usage text.
+    pub fn name_list() -> String {
+        Self::ALL.iter().map(|a| a.name()).collect::<Vec<_>>().join("|")
+    }
+}
+
+impl std::fmt::Display for ArrivalProcess {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// An exponential gap with the given mean, rounded to a whole cycle and
+/// floored at 1 so the schedule is strictly advancing per draw.
+fn exp_gap(rng: &mut Rng, mean: f64) -> u64 {
+    // Inverse-CDF with 1 - f64() ∈ (0, 1], so ln never sees 0.
+    let g = (-(1.0 - rng.f64()).ln() * mean).round();
+    (g as u64).max(1)
+}
+
+/// Generate `n_tenants` arrival cycles (nondecreasing, first arrival at
+/// its own gap past cycle 0) for the given process, mean interarrival
+/// gap, and seed. Pure function of its arguments — the serve driver
+/// derives `seed` from the config's master seed, so the whole tenant
+/// schedule is pinned by `SystemConfig::seed`.
+pub fn arrival_schedule(
+    kind: ArrivalProcess,
+    n_tenants: usize,
+    mean_gap: u64,
+    seed: u64,
+) -> Vec<Cycle> {
+    let mut rng = Rng::new(seed);
+    let mean = mean_gap.max(1) as f64;
+    let mut out = Vec::with_capacity(n_tenants);
+    let mut t: u64 = 0;
+    match kind {
+        ArrivalProcess::Poisson => {
+            for _ in 0..n_tenants {
+                t += exp_gap(&mut rng, mean);
+                out.push(t);
+            }
+        }
+        ArrivalProcess::Bursty => {
+            // Geometric bursts (mean length ≈ 1/(1-0.7) ≈ 3.3, capped at
+            // 16): tight gaps ~mean/4 inside a burst, a ~3× mean quiet
+            // gap between bursts.
+            while out.len() < n_tenants {
+                let burst = rng.burst(0.7, 16).min(n_tenants - out.len());
+                t += exp_gap(&mut rng, mean * 3.0);
+                out.push(t);
+                for _ in 1..burst {
+                    t += exp_gap(&mut rng, mean / 4.0);
+                    out.push(t);
+                }
+            }
+        }
+        ArrivalProcess::Diurnal => {
+            // Sinusoid-modulated rate with period 32×mean and amplitude
+            // 0.8: the local mean gap shrinks to mean/1.8 at peak load
+            // and stretches to mean/0.2 = 5× mean in the trough.
+            let period = (32 * mean_gap.max(1)) as f64;
+            for _ in 0..n_tenants {
+                let phase = 2.0 * std::f64::consts::PI * (t as f64) / period;
+                let local_mean = mean / (1.0 + 0.8 * phase.sin());
+                t += exp_gap(&mut rng, local_mean);
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_pattern_round_trips() {
+        for a in ArrivalProcess::ALL {
+            assert_eq!(ArrivalProcess::from_name(a.name()), Some(a));
+            assert_eq!(ArrivalProcess::from_name(&a.name().to_uppercase()), Some(a));
+            assert_eq!(format!("{a}"), a.name());
+        }
+        assert_eq!(ArrivalProcess::from_name("nope"), None);
+        assert_eq!(ArrivalProcess::name_list(), "poisson|bursty|diurnal");
+    }
+
+    #[test]
+    fn schedules_are_seed_deterministic() {
+        for kind in ArrivalProcess::ALL {
+            let a = arrival_schedule(kind, 64, 400, 0xA133);
+            let b = arrival_schedule(kind, 64, 400, 0xA133);
+            assert_eq!(a, b, "{kind}");
+            let c = arrival_schedule(kind, 64, 400, 0xA134);
+            assert_ne!(a, c, "{kind}: distinct seeds must decorrelate");
+        }
+    }
+
+    #[test]
+    fn schedules_advance_monotonically() {
+        for kind in ArrivalProcess::ALL {
+            let sched = arrival_schedule(kind, 200, 50, 7);
+            assert_eq!(sched.len(), 200, "{kind}");
+            assert!(sched[0] >= 1, "{kind}: first arrival after cycle 0");
+            for w in sched.windows(2) {
+                assert!(w[0] <= w[1], "{kind}: nondecreasing");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_gap_scales_the_horizon() {
+        for kind in ArrivalProcess::ALL {
+            let short = arrival_schedule(kind, 100, 10, 3);
+            let long = arrival_schedule(kind, 100, 1000, 3);
+            assert!(
+                long.last().unwrap() > short.last().unwrap(),
+                "{kind}: a 100× mean gap must stretch the schedule"
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_is_actually_bursty() {
+        // Inside-burst gaps (~mean/4) must be visibly tighter than the
+        // between-burst gaps (~3× mean): compare min and max gap.
+        let sched = arrival_schedule(ArrivalProcess::Bursty, 200, 400, 11);
+        let gaps: Vec<u64> =
+            std::iter::once(sched[0]).chain(sched.windows(2).map(|w| w[1] - w[0])).collect();
+        let min = *gaps.iter().min().unwrap();
+        let max = *gaps.iter().max().unwrap();
+        assert!(max > 10 * min.max(1), "min gap {min}, max gap {max}");
+    }
+
+    #[test]
+    fn zero_tenants_is_empty() {
+        for kind in ArrivalProcess::ALL {
+            assert!(arrival_schedule(kind, 0, 400, 1).is_empty());
+        }
+    }
+}

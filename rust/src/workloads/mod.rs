@@ -29,8 +29,13 @@
 //!   ([`analysis::classify_pages`], [`analysis::mean_active_pages`],
 //!   [`analysis::affinity_quadrants`]) that validate the generators
 //!   against the paper's §2 characterisation table.
+//! * [`arrivals`] — tenant interarrival processes
+//!   ([`arrivals::arrival_schedule`]) for the open-loop serve mode
+//!   (`aimm serve`): Poisson, bursty and diurnal schedules generated
+//!   from [`crate::sim::Rng`] so churn runs are seed-deterministic.
 
 pub mod analysis;
+pub mod arrivals;
 pub mod gen;
 pub mod multi;
 pub mod trace;
@@ -38,6 +43,7 @@ pub mod trace;
 pub use analysis::{
     affinity_quadrants, classify_pages, mean_active_pages, AffinityQuadrants, PageClasses,
 };
+pub use arrivals::{arrival_schedule, ArrivalProcess};
 pub use gen::{generate, Benchmark};
 pub use multi::interleave;
 pub use trace::Trace;

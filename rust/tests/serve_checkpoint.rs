@@ -1,0 +1,94 @@
+//! Serve-mode checkpointing: interrupting the service at a round
+//! boundary — save the agent, rebuild it the way `--resume` does,
+//! finish the remaining rounds — must be bit-identical to the
+//! uninterrupted service. This extends the continual-learning
+//! checkpoint contract (tests/continual.rs) to the open-loop churn:
+//! the agent is the ONLY cross-round state, so a checkpoint captures
+//! everything the rest of the service needs.
+//!
+//! Agents are built on the `LinearQ` mock (not `best_qfunction`) so the
+//! battery is deterministic in every build flavor.
+
+use aimm::agent::{AgentCheckpoint, AimmAgent};
+use aimm::bench::sweep::stats_json;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::{build_tenants, ensure_serve_checkpointable, serve_stream_with};
+use aimm::metrics::RunStats;
+use aimm::runtime::{LinearQ, QFunction};
+use aimm::workloads::ArrivalProcess;
+
+fn serve_cfg(seed: u64) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.mapping = MappingScheme::Aimm;
+    c.seed = seed;
+    c.serve.arrivals = ArrivalProcess::Poisson;
+    c.serve.tenants = 4;
+    c.serve.mean_gap = 150;
+    c.serve.slots = 2;
+    c.serve.page_budget = 2048;
+    c.serve.scale = 0.02;
+    c
+}
+
+fn mk_agent(cfg: &SystemConfig) -> AimmAgent {
+    AimmAgent::new(
+        Box::new(LinearQ::new(cfg.agent.lr, cfg.agent.gamma, 7)),
+        cfg.agent.clone(),
+        cfg.seed ^ 0xA6E7,
+    )
+}
+
+/// Resume-from-checkpoint: rebuild the agent the way `--resume` does,
+/// but pinned to the LinearQ backend.
+fn rebuild(ck_text: &str, cfg: &SystemConfig) -> AimmAgent {
+    let ck = AgentCheckpoint::parse(ck_text).expect("checkpoint parses");
+    let mut qf = Box::new(LinearQ::new(0.5, 0.5, 999)); // overwritten by restore
+    qf.restore(&ck.q).expect("snapshot restores into linear-mock");
+    AimmAgent::from_checkpoint(qf, cfg.agent.clone(), &ck).expect("agent rebuilds")
+}
+
+/// Three uninterrupted service rounds vs two rounds + checkpoint +
+/// resume + one round: every per-round `RunStats`, tenant accounting
+/// included, must match byte for byte.
+#[test]
+fn mid_churn_checkpoint_resume_is_bit_identical() {
+    let cfg = serve_cfg(77);
+    let tenants = build_tenants(&cfg);
+    let (straight, _) =
+        serve_stream_with(&cfg, &tenants, 3, Some(mk_agent(&cfg))).expect("straight");
+    let (head, agent) = serve_stream_with(&cfg, &tenants, 2, Some(mk_agent(&cfg))).expect("head");
+    let mut agent = agent.expect("agent survives the head rounds");
+    assert!(agent.stats.invocations > 0, "the churn must exercise the agent");
+    let ck = agent.checkpoint().expect("mid-churn checkpoint").to_json();
+    let resumed = rebuild(&ck, &cfg);
+    let (tail, _) = serve_stream_with(&cfg, &tenants, 1, Some(resumed)).expect("tail");
+    let spliced: Vec<RunStats> = head.into_iter().chain(tail).collect();
+    assert_eq!(straight.len(), spliced.len(), "round count");
+    for (i, (a, b)) in straight.iter().zip(&spliced).enumerate() {
+        assert_eq!(stats_json(a), stats_json(b), "round {i} stats diverged after resume");
+        assert_eq!(a.tenants, b.tenants, "round {i} tenant accounting diverged");
+        for (j, (x, y)) in a.opc_timeline.iter().zip(&b.opc_timeline).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "round {i} timeline[{j}]");
+        }
+    }
+}
+
+/// Every non-AIMM policy refuses serve-mode checkpointing loudly,
+/// naming itself — learned state is the only thing worth saving, and a
+/// silent no-op checkpoint would look like a successful one.
+#[test]
+fn non_aimm_policies_refuse_serve_checkpointing_by_name() {
+    for scheme in MappingScheme::ALL {
+        let mut cfg = serve_cfg(1);
+        cfg.mapping = scheme;
+        match ensure_serve_checkpointable(&cfg) {
+            Ok(()) => assert!(scheme.checkpointable(), "{scheme}: the guard must fire"),
+            Err(err) => {
+                let msg = err.to_string();
+                assert!(!scheme.checkpointable(), "{scheme}: spurious refusal: {msg}");
+                assert!(msg.contains(scheme.name()), "{scheme}: {msg}");
+                assert!(msg.contains("not checkpointable"), "{scheme}: {msg}");
+            }
+        }
+    }
+}

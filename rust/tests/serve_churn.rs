@@ -1,0 +1,139 @@
+//! Serve-mode churn determinism battery: the tenant schedule and the
+//! whole serve outcome are pure functions of the config seed —
+//! byte-identical at any worker count, for every arrival process — and
+//! the polled and event engines agree bit-for-bit on a churn scenario,
+//! per-tenant accounting included. This extends the engine-equivalence
+//! contract (DESIGN.md §8) to the open-loop service: admission,
+//! page leasing, departure and eviction must all be clock-exact.
+//!
+//! Agents are built on the `LinearQ` mock (not `best_qfunction`) so the
+//! battery is deterministic in every build flavor.
+
+use aimm::agent::AimmAgent;
+use aimm::bench::sweep::stats_json;
+use aimm::config::{Engine, MappingScheme, SystemConfig};
+use aimm::coordinator::{build_tenants, isolated_baselines, run_serve, serve_stream_with};
+use aimm::metrics::RunStats;
+use aimm::runtime::LinearQ;
+use aimm::workloads::ArrivalProcess;
+
+/// Small but non-trivial: five tenants contending for two slots, so the
+/// admission queue, page leases and departures all actually engage.
+fn serve_cfg(arrivals: ArrivalProcess, seed: u64) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.mapping = MappingScheme::Aimm;
+    c.seed = seed;
+    c.serve.arrivals = arrivals;
+    c.serve.tenants = 5;
+    c.serve.mean_gap = 150;
+    c.serve.slots = 2;
+    c.serve.page_budget = 2048;
+    c.serve.rounds = 1;
+    c.serve.scale = 0.02;
+    c
+}
+
+fn mk_agent(cfg: &SystemConfig) -> AimmAgent {
+    AimmAgent::new(
+        Box::new(LinearQ::new(cfg.agent.lr, cfg.agent.gamma, 7)),
+        cfg.agent.clone(),
+        cfg.seed ^ 0xA6E7,
+    )
+}
+
+/// Bit-level identity, tenants included: the JSON digest covers every
+/// scalar aggregate, the tenant rows cover the serve lifecycle, and the
+/// float fields are compared through raw bits.
+fn assert_identical(a: &RunStats, b: &RunStats, ctx: &str) {
+    assert_eq!(stats_json(a), stats_json(b), "stats diverged: {ctx}");
+    assert_eq!(a.tenants, b.tenants, "tenant accounting diverged: {ctx}");
+    assert_eq!(a.opc_timeline.len(), b.opc_timeline.len(), "timeline length: {ctx}");
+    for (i, (x, y)) in a.opc_timeline.iter().zip(&b.opc_timeline).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "timeline[{i}]: {ctx}");
+    }
+    for (name, x, y) in [
+        ("avg_hops", a.avg_hops, b.avg_hops),
+        ("avg_packet_latency", a.avg_packet_latency, b.avg_packet_latency),
+        ("compute_utilization", a.compute_utilization, b.compute_utilization),
+        ("compute_balance", a.compute_balance, b.compute_balance),
+        ("row_hit_rate", a.row_hit_rate, b.row_hit_rate),
+        ("agent_avg_loss", a.agent_avg_loss, b.agent_avg_loss),
+        ("agent_cumulative_reward", a.agent_cumulative_reward, b.agent_cumulative_reward),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name}: {ctx}");
+    }
+}
+
+/// The tenant schedule (names, pids, arrival cycles, op streams, page
+/// footprints) is a pure function of the seed for every arrival
+/// process — and actually moves when the seed does.
+#[test]
+fn tenant_schedule_is_a_pure_function_of_the_seed() {
+    for p in ArrivalProcess::ALL {
+        let cfg = serve_cfg(p, 42);
+        let a = build_tenants(&cfg);
+        let b = build_tenants(&cfg);
+        assert_eq!(a, b, "{p}: same seed must give an identical tenant schedule");
+        let c = build_tenants(&serve_cfg(p, 43));
+        assert_ne!(a, c, "{p}: a different seed must move the schedule");
+    }
+}
+
+/// The whole serve outcome — isolated baselines, per-round stats,
+/// slowdown distribution, tail percentiles, fairness — is identical at
+/// 1 and 4 workers for every arrival process. Worker threads only run
+/// the embarrassingly-parallel isolated baselines; the churn itself is
+/// simulated on one clock.
+#[test]
+fn serve_outcome_is_worker_count_invariant() {
+    for p in ArrivalProcess::ALL {
+        let cfg = serve_cfg(p, 0xC0FFEE);
+        let (one, _) = run_serve(&cfg, 1, Some(mk_agent(&cfg))).expect("1 worker");
+        let (four, _) = run_serve(&cfg, 4, Some(mk_agent(&cfg))).expect("4 workers");
+        assert_eq!(one.baselines, four.baselines, "{p}: isolated baselines");
+        let sa: Vec<u64> = one.slowdowns.iter().map(|x| x.to_bits()).collect();
+        let sb: Vec<u64> = four.slowdowns.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(sa, sb, "{p}: slowdown distribution");
+        for (name, x, y) in [
+            ("p50", one.p50, four.p50),
+            ("p99", one.p99, four.p99),
+            ("p999", one.p999, four.p999),
+            ("fairness", one.fairness, four.fairness),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "{p}: {name}");
+        }
+        assert_eq!(one.rounds.len(), four.rounds.len(), "{p}: round count");
+        for (i, (ra, rb)) in one.rounds.iter().zip(&four.rounds).enumerate() {
+            assert_identical(ra, rb, &format!("{p} round {i}"));
+        }
+        assert!(one.last_round().ops_completed > 0, "{p}: the service must actually run");
+    }
+}
+
+/// Polled vs event bit-identity for a bursty churn scenario with the
+/// learning agent in the loop, across two service rounds — and the
+/// isolated per-tenant baselines agree across engines too (each is a
+/// single-tenant run, i.e. exactly the DESIGN.md §8 contract).
+#[test]
+fn polled_and_event_serve_runs_are_bit_identical() {
+    let mut polled = serve_cfg(ArrivalProcess::Bursty, 23);
+    polled.serve.rounds = 2;
+    let mut event = polled.clone();
+    polled.engine = Engine::Polled;
+    event.engine = Engine::Event;
+    let tenants = build_tenants(&polled);
+    assert_eq!(tenants, build_tenants(&event), "the schedule ignores the engine");
+    let pagent = Some(mk_agent(&polled));
+    let eagent = Some(mk_agent(&event));
+    let (p, pa) = serve_stream_with(&polled, &tenants, 2, pagent).expect("polled");
+    let (e, ea) = serve_stream_with(&event, &tenants, 2, eagent).expect("event");
+    assert_eq!(p.len(), e.len(), "round count");
+    for (i, (rp, re)) in p.iter().zip(&e).enumerate() {
+        assert_identical(rp, re, &format!("round {i}"));
+    }
+    assert!(pa.expect("polled agent survives").stats.invocations > 0);
+    assert!(ea.expect("event agent survives").stats.invocations > 0);
+    let bp = isolated_baselines(&polled, &tenants, 2).expect("polled baselines");
+    let be = isolated_baselines(&event, &tenants, 2).expect("event baselines");
+    assert_eq!(bp, be, "isolated baselines are engine-invariant");
+}
