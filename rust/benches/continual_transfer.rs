@@ -24,7 +24,7 @@ fn sequence(name: &str, stages: &[&[Benchmark]]) -> ContinualSequence {
     cfg.mapping = MappingScheme::Aimm;
     let stages: Vec<CurriculumStage> =
         stages.iter().map(|&b| CurriculumStage::new(b.to_vec())).collect();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
     let (report, agent) =
         run_curriculum(&cfg, &stages, SCALE, None).expect("curriculum sequence");
     let agent = agent.expect("AIMM curriculum carries an agent");

@@ -16,7 +16,7 @@ fn time_default_grid(engine: Engine, threads: usize) -> (f64, String) {
     let mut grid = SweepGrid::new(0.12, 2);
     grid.engine = engine;
     let cells = grid.cells();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
     let results = run_grid(&cells, threads).expect("default sweep grid");
     (t0.elapsed().as_secs_f64(), report_json(&results))
 }

@@ -2,7 +2,7 @@
 use aimm::bench::fig10;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig10(0.12, 2).expect("fig10").render());
     println!("fig10 regenerated in {:?}", t0.elapsed());
 }

@@ -2,7 +2,7 @@
 use aimm::bench::fig11;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig11(0.12, 2).expect("fig11").render());
     println!("fig11 regenerated in {:?}", t0.elapsed());
 }

@@ -2,7 +2,7 @@
 use aimm::bench::fig12;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig12(0.06, 2).expect("fig12").render());
     println!("fig12 regenerated in {:?}", t0.elapsed());
 }

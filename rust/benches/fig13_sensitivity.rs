@@ -2,7 +2,7 @@
 use aimm::bench::fig13;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig13(0.12, 2).expect("fig13").render());
     println!("fig13 regenerated in {:?}", t0.elapsed());
 }

@@ -2,7 +2,7 @@
 use aimm::bench::{area_table, fig14};
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig14(0.12, 2).expect("fig14").render());
     println!("{}", area_table().render());
     println!("fig14 regenerated in {:?}", t0.elapsed());

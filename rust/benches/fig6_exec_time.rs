@@ -3,7 +3,7 @@
 use aimm::bench::fig6;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     let table = fig6(0.12, 2).expect("fig6");
     println!("{}", table.render());
     println!("fig6 grid regenerated in {:?}", t0.elapsed());

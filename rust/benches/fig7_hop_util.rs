@@ -2,7 +2,7 @@
 use aimm::bench::fig7;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig7(0.12, 2).expect("fig7").render());
     println!("fig7 regenerated in {:?}", t0.elapsed());
 }

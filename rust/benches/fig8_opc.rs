@@ -2,7 +2,7 @@
 use aimm::bench::fig8;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig8(0.12, 2).expect("fig8").render());
     println!("fig8 regenerated in {:?}", t0.elapsed());
 }

@@ -2,7 +2,7 @@
 use aimm::bench::fig9;
 
 fn main() {
-    let t0 = std::time::Instant::now();
+    let t0 = std::time::Instant::now(); // detlint: allow(wall-clock) — report timing only
     println!("{}", fig9(0.12, 3, 16).expect("fig9").render());
     println!("fig9 regenerated in {:?}", t0.elapsed());
 }

@@ -50,7 +50,7 @@ fn main() {
         "policy face-off: {} cells ({RUNS} runs each, scale {SCALE}) on {threads} thread(s)",
         cells.len()
     );
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
     let results = run_grid(&cells, threads).expect("policy face-off grid");
     let wall = t0.elapsed();
 

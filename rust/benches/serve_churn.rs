@@ -34,10 +34,10 @@ fn main() {
         &["arrivals", "tenants", "rounds", "p50", "p99", "p999", "fairness", "wall"],
     );
     let mut by_arrivals: Vec<(&str, String)> = Vec::new();
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
     for p in ArrivalProcess::ALL {
         cfg.serve.arrivals = p;
-        let start = Instant::now();
+        let start = Instant::now(); // detlint: allow(wall-clock) — report timing only
         let (outcome, _agent) = run_serve(&cfg, threads, None).expect("serve run");
         t.row(vec![
             p.name().to_string(),

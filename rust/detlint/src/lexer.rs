@@ -1,0 +1,389 @@
+//! A small Rust source lexer: strips comments and string/char literals
+//! from code, while capturing string-literal contents (for the
+//! schema-tag rule) and line-comment text (for the allow-pragma
+//! grammar). It is deliberately *not* a full Rust lexer — it only has
+//! to classify characters as code / comment / literal, tracking line
+//! numbers exactly, so the rules can pattern-match on code tokens
+//! without being fooled by text inside strings or comments.
+//!
+//! Handled: `//` line comments (text captured), nested `/* */` block
+//! comments, `"…"` strings with escapes (including escaped newlines),
+//! raw strings `r"…"` / `r#"…"#` (any hash depth), byte strings
+//! `b"…"` / `br#"…"#`, char and byte-char literals, and the char
+//! literal vs. lifetime (`'a'` vs. `'a`) ambiguity.
+
+/// One file, split into the three streams the rules consume.
+pub struct LexedFile {
+    /// Source lines with comments and literals blanked out. Line `n` of
+    /// the input is `code_lines[n - 1]`; newlines inside literals and
+    /// block comments are preserved so numbering never drifts.
+    pub code_lines: Vec<String>,
+    /// String-literal contents, with the line each literal starts on.
+    pub strings: Vec<(usize, String)>,
+    /// Line-comment text (everything after `//`), by line.
+    pub comments: Vec<(usize, String)>,
+}
+
+/// A code token: an identifier/number or a single punctuation char.
+pub struct Tok {
+    pub line: usize,
+    pub text: String,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan a normal (escaped) string body starting just after the opening
+/// quote. Returns `(content, index_past_close, newlines_consumed)`.
+fn scan_string(chars: &[char], mut j: usize) -> (String, usize, usize) {
+    let n = chars.len();
+    let mut out = String::new();
+    let mut nl = 0;
+    while j < n {
+        let c = chars[j];
+        if c == '\\' && j + 1 < n {
+            if chars[j + 1] == '\n' {
+                nl += 1;
+            }
+            out.push(c);
+            out.push(chars[j + 1]);
+            j += 2;
+            continue;
+        }
+        if c == '"' {
+            return (out, j + 1, nl);
+        }
+        if c == '\n' {
+            nl += 1;
+        }
+        out.push(c);
+        j += 1;
+    }
+    (out, j, nl)
+}
+
+/// Scan a raw string starting at the first `#` or `"` after the `r`.
+/// Returns `None` if this is not actually a raw-string opener.
+fn scan_raw_string(chars: &[char], mut j: usize) -> Option<(String, usize, usize)> {
+    let n = chars.len();
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        return None;
+    }
+    j += 1;
+    let mut out = String::new();
+    let mut nl = 0;
+    while j < n {
+        if chars[j] == '"' {
+            let close = chars[j + 1..].iter().take_while(|&&c| c == '#').take(hashes).count();
+            if close == hashes {
+                return Some((out, j + 1 + hashes, nl));
+            }
+        }
+        if chars[j] == '\n' {
+            nl += 1;
+        }
+        out.push(chars[j]);
+        j += 1;
+    }
+    Some((out, j, nl))
+}
+
+/// Record a string literal: capture its content at the line it starts
+/// on, blank it out of the code stream, and advance the line counter
+/// past any newlines it contained.
+fn emit_literal(
+    code: &mut String,
+    strings: &mut Vec<(usize, String)>,
+    line: &mut usize,
+    s: String,
+    nl: usize,
+) {
+    strings.push((*line, s));
+    code.push(' ');
+    for _ in 0..nl {
+        code.push('\n');
+    }
+    *line += nl;
+}
+
+/// Lex one source file into code / strings / comments.
+pub fn lex(src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::new();
+    let mut strings = Vec::new();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    // The previous character emitted as code: an identifier char before
+    // `r` / `b` means those letters end an identifier (`hdr"x"` is not
+    // a raw string).
+    let mut prev_code = ' ';
+    let at = |k: usize| chars.get(k).copied().unwrap_or('\0');
+
+    while i < n {
+        let c = chars[i];
+        if c == '/' && at(i + 1) == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            comments.push((line, chars[start..j].iter().collect()));
+            i = j; // the newline (if any) is handled by the main loop
+            continue;
+        }
+        if c == '/' && at(i + 1) == '*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '/' && at(j + 1) == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && at(j + 1) == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if chars[j] == '\n' {
+                        code.push('\n');
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        if c == '"' {
+            let (s, j, nl) = scan_string(&chars, i + 1);
+            emit_literal(&mut code, &mut strings, &mut line, s, nl);
+            i = j;
+            prev_code = '"';
+            continue;
+        }
+        if c == 'r' && !is_ident_char(prev_code) && (at(i + 1) == '"' || at(i + 1) == '#') {
+            if let Some((s, j, nl)) = scan_raw_string(&chars, i + 1) {
+                emit_literal(&mut code, &mut strings, &mut line, s, nl);
+                i = j;
+                prev_code = '"';
+                continue;
+            }
+        }
+        if c == 'b' && !is_ident_char(prev_code) {
+            if at(i + 1) == '"' {
+                let (s, j, nl) = scan_string(&chars, i + 2);
+                emit_literal(&mut code, &mut strings, &mut line, s, nl);
+                i = j;
+                prev_code = '"';
+                continue;
+            }
+            if at(i + 1) == 'r' && (at(i + 2) == '"' || at(i + 2) == '#') {
+                if let Some((s, j, nl)) = scan_raw_string(&chars, i + 2) {
+                    emit_literal(&mut code, &mut strings, &mut line, s, nl);
+                    i = j;
+                    prev_code = '"';
+                    continue;
+                }
+            }
+            if at(i + 1) == '\'' {
+                let mut j = i + 2;
+                if at(j) == '\\' {
+                    j += 2;
+                    while j < n && chars[j] != '\'' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else {
+                    j += 2; // b'x' — the byte and the closing quote
+                }
+                code.push(' ');
+                i = j;
+                prev_code = '\'';
+                continue;
+            }
+        }
+        if c == '\'' {
+            // Char literal vs. lifetime: `'\…'` and `'x'` are literals;
+            // anything else (`'a`, `'static`) is a lifetime — drop the
+            // quote, keep the identifier as inert code.
+            if at(i + 1) == '\\' {
+                let mut j = i + 3; // skip the escaped char
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                code.push(' ');
+                i = j + 1;
+                prev_code = '\'';
+                continue;
+            }
+            if at(i + 2) == '\'' && at(i + 1) != '\'' && i + 2 < n {
+                code.push(' ');
+                i += 3;
+                prev_code = '\'';
+                continue;
+            }
+            i += 1;
+            prev_code = '\'';
+            continue;
+        }
+        code.push(c);
+        if c == '\n' {
+            line += 1;
+        }
+        prev_code = c;
+        i += 1;
+    }
+
+    LexedFile {
+        code_lines: code.split('\n').map(str::to_string).collect(),
+        strings,
+        comments,
+    }
+}
+
+/// Tokenize blanked code lines: identifiers/numbers stay whole, every
+/// other non-whitespace char is its own token. Lines are 1-based.
+pub fn tokens(code_lines: &[String]) -> Vec<Tok> {
+    let mut out = Vec::new();
+    for (ln, text) in code_lines.iter().enumerate() {
+        let line = ln + 1;
+        let cs: Vec<char> = text.chars().collect();
+        let mut i = 0usize;
+        while i < cs.len() {
+            let c = cs[i];
+            if c.is_whitespace() {
+                i += 1;
+                continue;
+            }
+            if is_ident_char(c) {
+                let start = i;
+                while i < cs.len() && is_ident_char(cs[i]) {
+                    i += 1;
+                }
+                out.push(Tok { line, text: cs[start..i].iter().collect() });
+                continue;
+            }
+            out.push(Tok { line, text: c.to_string() });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Is this token an identifier (or keyword — the rules don't care)?
+pub fn is_ident(t: &str) -> bool {
+    let mut cs = t.chars();
+    match cs.next() {
+        Some(c) if c.is_alphabetic() || c == '_' => cs.all(is_ident_char),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_blanked_and_captured() {
+        let l = lex("let x = \"HashMap.iter()\";\nlet y = 1;");
+        assert!(!l.code_lines[0].contains("HashMap"));
+        assert_eq!(l.strings.len(), 1);
+        assert_eq!(l.strings[0], (1, "HashMap.iter()".to_string()));
+        assert_eq!(l.code_lines[1], "let y = 1;");
+    }
+
+    #[test]
+    fn line_comments_are_captured() {
+        let l = lex("foo(); // detlint: allow(hash-iter) — reason\nbar();");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].0, 1);
+        assert!(l.comments[0].1.contains("allow(hash-iter)"));
+        assert!(!l.code_lines[0].contains("allow"));
+        assert_eq!(l.code_lines[1], "bar();");
+    }
+
+    #[test]
+    fn block_comments_preserve_line_numbers() {
+        let l = lex("a /* x\n y\n z */ b\nc");
+        assert_eq!(l.code_lines.len(), 4);
+        assert_eq!(l.code_lines[0].trim(), "a");
+        assert_eq!(l.code_lines[2].trim(), "b");
+        assert_eq!(l.code_lines[3], "c");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("a /* outer /* inner */ still */ b");
+        assert_eq!(l.code_lines[0].replace(' ', ""), "ab");
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let l = lex("let s = r#\"for x in \"map\" \"#; ok();");
+        assert!(l.code_lines[0].contains("ok()"));
+        assert!(!l.code_lines[0].contains("for x"));
+        assert_eq!(l.strings[0].1, "for x in \"map\" ");
+    }
+
+    #[test]
+    fn multiline_strings_keep_numbering() {
+        let l = lex("let s = \"a\nb\nc\";\nafter();");
+        assert_eq!(l.strings[0].0, 1);
+        assert_eq!(l.code_lines[3], "after();");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let l = lex("let c = 'x'; fn f<'a>(v: &'a str) {} let nl = '\\n';");
+        let code = &l.code_lines[0];
+        assert!(!code.contains('\''), "quotes stripped: {code}");
+        assert!(code.contains("fn f<a>"), "lifetime ident survives: {code}");
+        assert!(!code.contains('x'), "char literal blanked: {code}");
+    }
+
+    #[test]
+    fn ident_ending_in_r_is_not_raw_string() {
+        let l = lex("hdr\"text\" tail");
+        assert!(l.code_lines[0].contains("hdr"));
+        assert!(l.code_lines[0].contains("tail"));
+        assert_eq!(l.strings[0].1, "text");
+    }
+
+    #[test]
+    fn byte_string_and_byte_char() {
+        let l = lex("let a = b\"raw bytes\"; let c = b'x'; done();");
+        assert_eq!(l.strings[0].1, "raw bytes");
+        assert!(l.code_lines[0].contains("done()"));
+        assert!(!l.code_lines[0].contains('x'));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let l = lex("let s = \"a\\\"b\"; after();");
+        assert_eq!(l.strings[0].1, "a\\\"b");
+        assert!(l.code_lines[0].contains("after()"));
+    }
+
+    #[test]
+    fn tokens_split_idents_and_punct() {
+        let toks = tokens(&["self.counts.iter()".to_string()]);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["self", ".", "counts", ".", "iter", "(", ")"]);
+        assert!(toks.iter().all(|t| t.line == 1));
+    }
+
+    #[test]
+    fn ident_classifier() {
+        assert!(is_ident("foo_bar2"));
+        assert!(is_ident("_x"));
+        assert!(!is_ident("2x"));
+        assert!(!is_ident("."));
+        assert!(!is_ident(""));
+    }
+}

@@ -1,0 +1,181 @@
+//! `detlint` — a zero-dependency determinism and schema-freeze linter.
+//!
+//! Every headline claim this reproduction makes (policy comparisons,
+//! engine equivalence, shard-merge and checkpoint-splice bit-identity)
+//! rests on byte-identical determinism. The runtime differential tests
+//! prove it per run; `detlint` enforces it per commit by flagging the
+//! known hazard classes statically:
+//!
+//! | rule           | hazard                                              |
+//! |----------------|-----------------------------------------------------|
+//! | `hash-iter`    | iteration over `HashMap`/`HashSet` in hash order    |
+//! | `wall-clock`   | `Instant::now`/`SystemTime` outside CLI timing      |
+//! | `ambient-input`| `std::env` reads inside the simulation core         |
+//! | `thread-spawn` | `std::thread` outside sanctioned fan-out sites      |
+//! | `schema-tag`   | `aimm-*-vN` report tags outside the freeze manifest |
+//! | `doc-citation` | doc-cited `*.rs` paths that no longer resolve       |
+//! | `bad-pragma`   | malformed / unjustified allow pragmas               |
+//!
+//! Sanctioned exceptions are declared in-source:
+//! `// detlint: allow(<rule>) — <reason>` exonerates the pragma line
+//! and the line below it; the reason text is mandatory.
+//!
+//! Findings print as `file:line: rule: message` and the binary exits
+//! nonzero, so `cargo run -p detlint` works as a hard CI gate.
+
+#![forbid(unsafe_code)]
+
+pub mod lexer;
+pub mod rules;
+pub mod schema;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A registered rule: its pragma name and a one-line summary.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule registry. Pragmas may only name rules listed here.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "hash-iter",
+        summary: "HashMap/HashSet iteration without an adjacent sort or pragma",
+    },
+    RuleInfo {
+        name: "wall-clock",
+        summary: "Instant::now/SystemTime outside rust/src/main.rs CLI timing",
+    },
+    RuleInfo {
+        name: "ambient-input",
+        summary: "std::env reads inside the simulation core",
+    },
+    RuleInfo {
+        name: "thread-spawn",
+        summary: "std::thread outside the sanctioned fan-out sites",
+    },
+    RuleInfo {
+        name: "schema-tag",
+        summary: "aimm-*-vN schema tags outside the freeze manifest",
+    },
+    RuleInfo {
+        name: "doc-citation",
+        summary: "documentation-cited .rs paths that do not resolve",
+    },
+    RuleInfo {
+        name: "bad-pragma",
+        summary: "malformed or unjustified detlint allow pragmas",
+    },
+];
+
+/// Resolve a rule name to its registry entry's static name.
+pub fn rule_name(r: &str) -> Option<&'static str> {
+    RULES.iter().map(|ri| ri.name).find(|n| *n == r)
+}
+
+/// One lint finding, ordered for deterministic output.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: String) -> Self {
+        Finding { file: file.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Repo-relative directories scanned for Rust sources. `rust/detlint/`
+/// scans its own `src/` but not `tests/` (the fixture trees there are
+/// deliberately bad).
+pub const SCAN_ROOTS: &[&str] = &[
+    "rust/src",
+    "rust/benches",
+    "rust/examples",
+    "rust/tests",
+    "rust/xla-stub/src",
+    "rust/detlint/src",
+];
+
+/// Result of a full scan: sorted findings plus the file count (so the
+/// self-check test can assert the scan actually covered the tree).
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub rust_files: usize,
+}
+
+struct ScannedFile {
+    rel: String,
+    lexed: lexer::LexedFile,
+    toks: Vec<lexer::Tok>,
+    pragmas: rules::Pragmas,
+}
+
+/// Recursive directory walk in deterministic (sorted) order.
+fn walk_sorted(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk_sorted(&p, out)?;
+        } else {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the repository at `root` and return every finding, sorted by
+/// `(file, line, rule, message)`.
+pub fn scan_repo(root: &Path) -> io::Result<Report> {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut files: Vec<ScannedFile> = Vec::new();
+    for sr in SCAN_ROOTS {
+        let base = root.join(sr);
+        if !base.is_dir() {
+            continue;
+        }
+        let mut paths = Vec::new();
+        walk_sorted(&base, &mut paths)?;
+        for p in paths {
+            let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().into_owned();
+            if rel.starts_with("rust/detlint/tests") || !rel.ends_with(".rs") {
+                continue;
+            }
+            let src = fs::read_to_string(&p)?;
+            let lexed = lexer::lex(&src);
+            let toks = lexer::tokens(&lexed.code_lines);
+            let pragmas = rules::parse_pragmas(&lexed.comments, &rel, &mut findings);
+            files.push(ScannedFile { rel, lexed, toks, pragmas });
+        }
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+    for f in &files {
+        rules::hash_iter(&f.rel, &f.lexed.code_lines, &f.toks, &f.pragmas, &mut findings);
+        rules::wall_clock(&f.rel, &f.toks, &f.pragmas, &mut findings);
+        rules::ambient_input(&f.rel, &f.toks, &f.pragmas, &mut findings);
+        rules::thread_spawn(&f.rel, &f.toks, &f.pragmas, &mut findings);
+    }
+    let views: Vec<schema::FileStrings<'_>> = files
+        .iter()
+        .map(|f| schema::FileStrings { rel: &f.rel, strings: &f.lexed.strings })
+        .collect();
+    schema::schema_tag(root, &views, &mut findings);
+    rules::doc_citation(root, &mut findings);
+    findings.sort();
+    Ok(Report { findings, rust_files: files.len() })
+}

@@ -1,0 +1,73 @@
+//! `detlint` CLI: scan a repo tree, print findings, exit nonzero on
+//! any. With no argument it scans the workspace this binary was built
+//! from, so `cargo run -p detlint` is the whole CI recipe.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: detlint [ROOT]
+
+Scan the repository at ROOT (default: this workspace) for determinism
+hazards and schema-freeze violations. Findings print one per line as
+`file:line: rule: message`; the exit code is 1 if any were found.
+
+options:
+  --rules     list the registered rules and exit
+  -h, --help  show this help and exit";
+
+fn default_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            "--rules" => {
+                for r in detlint::RULES {
+                    println!("{:<14} {}", r.name, r.summary);
+                }
+                return ExitCode::SUCCESS;
+            }
+            _ if arg.starts_with('-') => {
+                eprintln!("detlint: unknown option `{arg}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+            _ => {
+                if root.is_some() {
+                    eprintln!("detlint: unexpected argument `{arg}`\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+                root = Some(PathBuf::from(arg));
+            }
+        }
+    }
+    let root = root.unwrap_or_else(default_root);
+    match detlint::scan_repo(&root) {
+        Err(e) => {
+            eprintln!("detlint: error scanning {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+        Ok(report) => {
+            for f in &report.findings {
+                println!("{f}");
+            }
+            eprintln!(
+                "detlint: {} finding(s) across {} Rust file(s)",
+                report.findings.len(),
+                report.rust_files
+            );
+            if report.findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+    }
+}

@@ -1,0 +1,621 @@
+//! The determinism rules and the allow-pragma grammar.
+//!
+//! Every rule reports findings as `(file, line, rule, message)`; a
+//! sanctioned exception is declared in-source with
+//! `// detlint: allow(<rule>) — <reason>` on the flagged line or the
+//! line directly above it. The reason is mandatory: a pragma without
+//! one is itself a finding (`bad-pragma`), so the tree cannot
+//! accumulate unexplained exemptions.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::lexer::{is_ident, Tok};
+use crate::Finding;
+
+/// Hash-container methods that iterate in hash order.
+pub const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// A hash-order iteration is exonerated if a `.sort*` call appears on
+/// the same line or within this many lines below it.
+pub const SORT_WINDOW: usize = 5;
+
+/// Directories that make up the deterministic simulation core: no
+/// ambient input (`std::env`) may be read here.
+pub const SIM_CORE: &[&str] = &[
+    "rust/src/sim/",
+    "rust/src/mc/",
+    "rust/src/cube/",
+    "rust/src/noc/",
+    "rust/src/mapping/",
+    "rust/src/agent/",
+    "rust/src/mmu/",
+    "rust/src/migration/",
+];
+
+/// Directory prefixes where `std::thread` fan-out is sanctioned.
+pub const THREAD_OK_PREFIX: &[&str] = &["rust/src/bench/sweep/"];
+
+/// Exact files where `std::thread` fan-out is sanctioned.
+pub const THREAD_OK_EXACT: &[&str] =
+    &["rust/src/coordinator/serve.rs", "rust/src/coordinator/runner.rs"];
+
+/// Files exempt from the wall-clock rule (CLI-level timing only).
+pub const WALL_CLOCK_EXEMPT: &[&str] = &["rust/src/main.rs"];
+
+/// Documentation files whose cited `*.rs` paths must resolve.
+pub const DOCS: &[&str] =
+    &["README.md", "rust/DESIGN.md", "rust/ARCHITECTURE.md", "rust/EXPERIMENTS.md"];
+
+/// Per-file pragma table: line number → rules allowed on that line (and
+/// on the line below, since a pragma exonerates line L and L+1).
+pub type Pragmas = BTreeMap<usize, BTreeSet<&'static str>>;
+
+/// Token at signed index `i`, or `""` out of bounds. Signed so rules
+/// can look backwards (`t(i - 2)`) without underflow checks.
+fn tok(toks: &[Tok], i: isize) -> &str {
+    if i < 0 {
+        return "";
+    }
+    toks.get(i as usize).map_or("", |t| t.text.as_str())
+}
+
+enum PragmaErr {
+    Malformed,
+    NoRules,
+    Unknown(String),
+    NoReason,
+}
+
+/// Parse one `allow(...)` clause (the text after `detlint:`), returning
+/// the allowed rule names or a grammar error.
+fn parse_allow(rest: &str) -> Result<Vec<&'static str>, PragmaErr> {
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        return Err(PragmaErr::Malformed);
+    };
+    let Some(close) = inner.find(')') else {
+        return Err(PragmaErr::Malformed);
+    };
+    let rules_str = &inner[..close];
+    let class_ok = rules_str
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | ',' | ' ' | '-'));
+    if !class_ok {
+        return Err(PragmaErr::Malformed);
+    }
+    let tail = inner[close + 1..].trim();
+    let rules: Vec<&str> = rules_str.split(',').map(str::trim).filter(|r| !r.is_empty()).collect();
+    if rules.is_empty() {
+        return Err(PragmaErr::NoRules);
+    }
+    let mut resolved = Vec::new();
+    let mut unknown = Vec::new();
+    for r in rules {
+        match crate::rule_name(r) {
+            Some(name) => resolved.push(name),
+            None => unknown.push(r.to_string()),
+        }
+    }
+    if !unknown.is_empty() {
+        return Err(PragmaErr::Unknown(unknown.join(", ")));
+    }
+    let reason = if let Some(r) = tail.strip_prefix('—') {
+        Some(r.trim())
+    } else if tail.starts_with('-') {
+        Some(tail.trim_start_matches('-').trim_start())
+    } else {
+        None
+    };
+    match reason {
+        Some(r) if !r.is_empty() => Ok(resolved),
+        _ => Err(PragmaErr::NoReason),
+    }
+}
+
+/// Build the pragma table for one file from its line comments; every
+/// malformed pragma becomes a `bad-pragma` finding. Comments that do
+/// not start with `detlint:` are ignored entirely.
+pub fn parse_pragmas(
+    comments: &[(usize, String)],
+    path: &str,
+    findings: &mut Vec<Finding>,
+) -> Pragmas {
+    let mut out: Pragmas = BTreeMap::new();
+    for (line, text) in comments {
+        let t = text.trim();
+        let Some(rest) = t.strip_prefix("detlint:") else {
+            continue;
+        };
+        match parse_allow(rest.trim_start()) {
+            Ok(rules) => {
+                out.entry(*line).or_default().extend(rules);
+            }
+            Err(PragmaErr::Malformed) => findings.push(Finding::new(
+                path,
+                *line,
+                "bad-pragma",
+                "malformed pragma: expected `detlint: allow(<rule>) — <reason>`".to_string(),
+            )),
+            Err(PragmaErr::NoRules) => findings.push(Finding::new(
+                path,
+                *line,
+                "bad-pragma",
+                "pragma allows no rules".to_string(),
+            )),
+            Err(PragmaErr::Unknown(bad)) => findings.push(Finding::new(
+                path,
+                *line,
+                "bad-pragma",
+                format!("pragma names unknown rule(s): {bad}"),
+            )),
+            Err(PragmaErr::NoReason) => findings.push(Finding::new(
+                path,
+                *line,
+                "bad-pragma",
+                "pragma is missing the `— <reason>` justification".to_string(),
+            )),
+        }
+    }
+    out
+}
+
+/// Is `rule` allowed on `line` (pragma on the line itself or the line
+/// directly above)?
+pub fn allowed(pragmas: &Pragmas, line: usize, rule: &str) -> bool {
+    let has = |l: usize| pragmas.get(&l).is_some_and(|s| s.contains(rule));
+    has(line) || (line > 1 && has(line - 1))
+}
+
+/// Rule `hash-iter`: iteration over a `HashMap`/`HashSet` in hash order
+/// with no adjacent deterministic sort and no pragma. Name capture is
+/// file-local and heuristic: names with a `HashMap`/`HashSet` type
+/// ascription, names assigned `HashMap::…`/`HashSet::…`, and `let`
+/// bindings of calls to fns returning `HashMap`/`HashSet`.
+pub fn hash_iter(
+    path: &str,
+    code_lines: &[String],
+    toks: &[Tok],
+    pragmas: &Pragmas,
+    findings: &mut Vec<Finding>,
+) {
+    let n = toks.len() as isize;
+    let t = |i: isize| tok(toks, i);
+
+    // Pass 1a: fns whose return type mentions HashMap/HashSet.
+    let mut hash_fns: BTreeSet<String> = BTreeSet::new();
+    for i in 0..n {
+        if t(i) == "fn" && is_ident(t(i + 1)) {
+            let mut seen_arrow = false;
+            let mut j = i + 2;
+            while j < n && j < i + 200 && t(j) != "{" && t(j) != ";" {
+                if t(j) == "-" && t(j + 1) == ">" {
+                    seen_arrow = true;
+                }
+                if seen_arrow && (t(j) == "HashMap" || t(j) == "HashSet") {
+                    hash_fns.insert(t(i + 1).to_string());
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+    // Pass 1b: names with a hash-container type ascription or a direct
+    // `name = HashMap::…` assignment.
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for i in 0..n {
+        if t(i) == "HashMap" || t(i) == "HashSet" {
+            let mut k = i - 1;
+            while t(k) == "&" || t(k) == "mut" {
+                k -= 1;
+            }
+            if t(k) == ":" && is_ident(t(k - 1)) {
+                names.insert(t(k - 1).to_string());
+            }
+            if t(i - 1) == "=" && is_ident(t(i - 2)) {
+                names.insert(t(i - 2).to_string());
+            }
+        }
+    }
+    // Pass 1c: `let [mut] name = hash_fn(…)`.
+    for i in 0..n {
+        if t(i) == "let" {
+            let mut j = i + 1;
+            if t(j) == "mut" {
+                j += 1;
+            }
+            if is_ident(t(j)) && t(j + 1) == "=" && hash_fns.contains(t(j + 2)) && t(j + 3) == "(" {
+                names.insert(t(j).to_string());
+            }
+        }
+    }
+
+    let mut hits: Vec<(usize, String)> = Vec::new();
+    // Pass 2a: `name.iter()` / `.keys()` / … on a captured name.
+    for i in 0..n {
+        if ITER_METHODS.contains(&t(i))
+            && t(i - 1) == "."
+            && t(i + 1) == "("
+            && is_ident(t(i - 2))
+            && names.contains(t(i - 2))
+        {
+            hits.push((toks[i as usize].line, t(i - 2).to_string()));
+        }
+    }
+    // Pass 2b: `for pat in [&|mut] receiver` — the receiver is the last
+    // segment of a field/path chain, or a call to a hash-returning fn.
+    for i in 0..n {
+        if t(i) != "for" {
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut inpos: Option<isize> = None;
+        while j < n && j < i + 60 {
+            match t(j) {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "in" if depth == 0 => {
+                    inpos = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(inpos) = inpos else {
+            continue;
+        };
+        let mut k = inpos + 1;
+        while t(k) == "&" || t(k) == "mut" {
+            k += 1;
+        }
+        if !is_ident(t(k)) {
+            continue;
+        }
+        let mut last = k;
+        while t(last + 1) == "." && is_ident(t(last + 2)) {
+            last += 2;
+        }
+        let recv = t(last);
+        if names.contains(recv) {
+            hits.push((toks[k as usize].line, recv.to_string()));
+        } else if last == k && hash_fns.contains(recv) && t(k + 1) == "(" {
+            hits.push((toks[k as usize].line, format!("{recv}()")));
+        }
+    }
+
+    let sorted_nearby = |ln: usize| {
+        let hi = (ln + SORT_WINDOW).min(code_lines.len());
+        (ln..=hi).any(|l| code_lines[l - 1].contains(".sort"))
+    };
+    for (ln, recv) in hits {
+        if allowed(pragmas, ln, "hash-iter") || sorted_nearby(ln) {
+            continue;
+        }
+        findings.push(Finding::new(
+            path,
+            ln,
+            "hash-iter",
+            format!(
+                "iteration over hash-ordered `{recv}` without an adjacent \
+                 deterministic sort or pragma"
+            ),
+        ));
+    }
+}
+
+/// Rule `wall-clock`: `Instant::now` / `SystemTime` anywhere outside
+/// the CLI timing in `rust/src/main.rs`.
+pub fn wall_clock(path: &str, toks: &[Tok], pragmas: &Pragmas, findings: &mut Vec<Finding>) {
+    if WALL_CLOCK_EXEMPT.contains(&path) {
+        return;
+    }
+    let n = toks.len() as isize;
+    let t = |i: isize| tok(toks, i);
+    for i in 0..n {
+        let hit = if t(i) == "Instant" && t(i + 1) == ":" && t(i + 2) == ":" && t(i + 3) == "now" {
+            Some("Instant::now")
+        } else if t(i) == "SystemTime" {
+            Some("SystemTime")
+        } else {
+            None
+        };
+        if let Some(h) = hit {
+            let ln = toks[i as usize].line;
+            if !allowed(pragmas, ln, "wall-clock") {
+                findings.push(Finding::new(
+                    path,
+                    ln,
+                    "wall-clock",
+                    format!("`{h}` outside rust/src/main.rs CLI timing"),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule `ambient-input`: `std::env` reads inside the simulation core.
+pub fn ambient_input(path: &str, toks: &[Tok], pragmas: &Pragmas, findings: &mut Vec<Finding>) {
+    if !SIM_CORE.iter().any(|p| path.starts_with(p)) {
+        return;
+    }
+    let n = toks.len() as isize;
+    let t = |i: isize| tok(toks, i);
+    for i in 0..n {
+        if t(i) == "env" && t(i + 1) == ":" && t(i + 2) == ":" {
+            let ln = toks[i as usize].line;
+            if !allowed(pragmas, ln, "ambient-input") {
+                findings.push(Finding::new(
+                    path,
+                    ln,
+                    "ambient-input",
+                    "`std::env` read inside the simulation core".to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule `thread-spawn`: `std::thread` outside the sanctioned fan-out
+/// sites (sweep grid, serve baselines, runner).
+pub fn thread_spawn(path: &str, toks: &[Tok], pragmas: &Pragmas, findings: &mut Vec<Finding>) {
+    if THREAD_OK_PREFIX.iter().any(|p| path.starts_with(p)) || THREAD_OK_EXACT.contains(&path) {
+        return;
+    }
+    let n = toks.len() as isize;
+    let t = |i: isize| tok(toks, i);
+    for i in 0..n {
+        if t(i) == "thread" && t(i + 1) == ":" && t(i + 2) == ":" {
+            let ln = toks[i as usize].line;
+            if !allowed(pragmas, ln, "thread-spawn") {
+                findings.push(Finding::new(
+                    path,
+                    ln,
+                    "thread-spawn",
+                    "`std::thread` outside the sanctioned fan-out sites".to_string(),
+                ));
+            }
+        }
+    }
+}
+
+fn is_doc_path_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || matches!(b, b'_' | b'-' | b'.' | b'/')
+}
+
+/// Rule `doc-citation`: every `*.rs` path cited in the documentation
+/// set must resolve to a file (tried as-is, under `rust/`, and under
+/// `rust/src/` — docs cite module paths relative to the crate root).
+pub fn doc_citation(root: &Path, findings: &mut Vec<Finding>) {
+    for doc in DOCS {
+        let Ok(text) = std::fs::read_to_string(root.join(doc)) else {
+            continue;
+        };
+        for (lno, line) in text.lines().enumerate() {
+            let ln = lno + 1;
+            let bytes = line.as_bytes();
+            let mut idx = 0usize;
+            while let Some(off) = line[idx..].find(".rs") {
+                let pos = idx + off;
+                idx = pos + 3;
+                if let Some(&a) = bytes.get(pos + 3) {
+                    if a.is_ascii_alphanumeric() || a == b'_' {
+                        continue;
+                    }
+                }
+                let mut start = pos;
+                while start > 0 && is_doc_path_byte(bytes[start - 1]) {
+                    start -= 1;
+                }
+                let cand = line[start..pos + 3].trim_start_matches(['.', '/']);
+                if !cand.contains('/') {
+                    continue;
+                }
+                let candidates =
+                    [cand.to_string(), format!("rust/{cand}"), format!("rust/src/{cand}")];
+                let resolves = candidates.iter().any(|c| root.join(c).is_file());
+                if !resolves {
+                    findings.push(Finding::new(
+                        doc,
+                        ln,
+                        "doc-citation",
+                        format!("cited path `{cand}` does not resolve to a file"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, tokens};
+
+    fn pragmas_of(src: &str) -> (Pragmas, Vec<Finding>) {
+        let lexed = lex(src);
+        let mut findings = Vec::new();
+        let p = parse_pragmas(&lexed.comments, "t.rs", &mut findings);
+        (p, findings)
+    }
+
+    #[test]
+    fn pragma_round_trip_em_dash() {
+        let (p, f) = pragmas_of("x(); // detlint: allow(hash-iter) — counts only\n");
+        assert!(f.is_empty(), "{f:?}");
+        assert!(allowed(&p, 1, "hash-iter"));
+        assert!(allowed(&p, 2, "hash-iter"), "pragma covers the next line");
+        assert!(!allowed(&p, 3, "hash-iter"));
+        assert!(!allowed(&p, 1, "wall-clock"));
+    }
+
+    #[test]
+    fn pragma_round_trip_ascii_dash() {
+        let (p, f) = pragmas_of("// detlint: allow(wall-clock) -- report timing\nx();\n");
+        assert!(f.is_empty(), "{f:?}");
+        assert!(allowed(&p, 1, "wall-clock"));
+        assert!(allowed(&p, 2, "wall-clock"));
+    }
+
+    #[test]
+    fn pragma_multiple_rules() {
+        let (p, f) = pragmas_of("// detlint: allow(hash-iter, wall-clock) — both\n");
+        assert!(f.is_empty(), "{f:?}");
+        assert!(allowed(&p, 1, "hash-iter"));
+        assert!(allowed(&p, 1, "wall-clock"));
+    }
+
+    #[test]
+    fn pragma_missing_reason_is_finding() {
+        let (_, f) = pragmas_of("// detlint: allow(hash-iter)\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "bad-pragma");
+        assert!(f[0].message.contains("reason"));
+    }
+
+    #[test]
+    fn pragma_unknown_rule_is_finding() {
+        let (_, f) = pragmas_of("// detlint: allow(flux-capacitor) — because\n");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("flux-capacitor"));
+    }
+
+    #[test]
+    fn pragma_malformed_is_finding() {
+        let (_, f) = pragmas_of("// detlint: disable hash-iter\n");
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("malformed"));
+    }
+
+    #[test]
+    fn non_pragma_comments_ignored() {
+        let (p, f) = pragmas_of("// plain note about allow(hash-iter) grammar\n");
+        assert!(f.is_empty());
+        assert!(p.is_empty());
+    }
+
+    fn run_hash_iter(src: &str) -> Vec<Finding> {
+        let lexed = lex(src);
+        let toks = tokens(&lexed.code_lines);
+        let mut findings = Vec::new();
+        let pragmas = parse_pragmas(&lexed.comments, "t.rs", &mut findings);
+        hash_iter("t.rs", &lexed.code_lines, &toks, &pragmas, &mut findings);
+        findings
+    }
+
+    #[test]
+    fn hash_iter_flags_unsorted_for_loop() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                       let mut s = 0;\n\
+                       for (k, v) in m {\n\
+                           s += k + v;\n\
+                       }\n\
+                       s\n\
+                   }\n";
+        let f = run_hash_iter(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "hash-iter");
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn hash_iter_sort_window_exonerates() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> Vec<u32> {\n\
+                       let mut v: Vec<u32> = m.keys().copied().collect();\n\
+                       v.sort_unstable();\n\
+                       v\n\
+                   }\n";
+        assert!(run_hash_iter(src).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_pragma_exonerates() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                       // detlint: allow(hash-iter) — order-insensitive sum\n\
+                       m.values().sum()\n\
+                   }\n";
+        assert!(run_hash_iter(src).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_tracks_fn_returns() {
+        let src = "use std::collections::HashMap;\n\
+                   fn build() -> HashMap<u32, u32> {\n\
+                       HashMap::new()\n\
+                   }\n\
+                   fn g() {\n\
+                       for (k, _) in build() {\n\
+                           drop(k);\n\
+                       }\n\
+                   }\n";
+        let f = run_hash_iter(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("build()"));
+    }
+
+    #[test]
+    fn hash_iter_ignores_vec_of_same_name_in_other_fn_scope() {
+        // File-local name capture is deliberately coarse: a Vec named
+        // like a captured HashSet elsewhere in the file WILL flag. The
+        // tree avoids this by not reusing hash-container names.
+        let src = "fn f(v: &Vec<u32>) -> u32 {\n\
+                       v.iter().sum()\n\
+                   }\n";
+        assert!(run_hash_iter(src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_flags_instant() {
+        let lexed = lex("fn f() { let t = Instant::now(); }\n");
+        let toks = tokens(&lexed.code_lines);
+        let mut findings = Vec::new();
+        let pragmas = Pragmas::new();
+        wall_clock("rust/src/sim/x.rs", &toks, &pragmas, &mut findings);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "wall-clock");
+        findings.clear();
+        wall_clock("rust/src/main.rs", &toks, &pragmas, &mut findings);
+        assert!(findings.is_empty(), "main.rs is exempt");
+    }
+
+    #[test]
+    fn ambient_input_scoped_to_sim_core() {
+        let lexed = lex("fn f() { let v = std::env::var(\"X\"); }\n");
+        let toks = tokens(&lexed.code_lines);
+        let mut findings = Vec::new();
+        let pragmas = Pragmas::new();
+        ambient_input("rust/src/mc/x.rs", &toks, &pragmas, &mut findings);
+        assert_eq!(findings.len(), 1);
+        findings.clear();
+        ambient_input("rust/src/bench/x.rs", &toks, &pragmas, &mut findings);
+        assert!(findings.is_empty(), "outside the sim core");
+    }
+
+    #[test]
+    fn thread_spawn_sanctioned_sites() {
+        let lexed = lex("fn f() { std::thread::spawn(|| {}); }\n");
+        let toks = tokens(&lexed.code_lines);
+        let mut findings = Vec::new();
+        let pragmas = Pragmas::new();
+        thread_spawn("rust/src/noc/x.rs", &toks, &pragmas, &mut findings);
+        assert_eq!(findings.len(), 1);
+        findings.clear();
+        thread_spawn("rust/src/bench/sweep/grid.rs", &toks, &pragmas, &mut findings);
+        thread_spawn("rust/src/coordinator/serve.rs", &toks, &pragmas, &mut findings);
+        assert!(findings.is_empty(), "sanctioned fan-out sites");
+    }
+}

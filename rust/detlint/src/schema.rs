@@ -1,0 +1,223 @@
+//! Rule `schema-tag`: the frozen-report-format manifest.
+//!
+//! Every versioned report schema in the tree carries an `aimm-*-vN`
+//! tag string. This module pins each tag to its single writer (first
+//! entry) plus the parsers allowed to mention it. A tag appearing in
+//! any other file, an unknown tag, or a writer that no longer emits
+//! its tag are all findings — so a frozen format cannot fork silently.
+//!
+//! Files under `rust/detlint/` are skipped for this rule: the manifest
+//! below necessarily contains every tag string.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::Finding;
+
+/// `(tag, [writer, parser, …])` — the first file is the writer.
+pub const SCHEMA_FREEZE: &[(&str, &[&str])] = &[
+    (
+        "aimm-sweep-v1",
+        &[
+            "rust/src/bench/sweep/mod.rs",
+            "rust/src/bench/sweep/journal.rs",
+            "rust/tests/sweep_determinism.rs",
+        ],
+    ),
+    ("aimm-sweep-cell-v1", &["rust/src/bench/sweep/journal.rs"]),
+    ("aimm-cell-key-v1", &["rust/src/bench/sweep/cache.rs"]),
+    ("aimm-continual-v1", &["rust/src/bench/sweep/mod.rs"]),
+    ("aimm-checkpoint-v1", &["rust/src/agent/checkpoint.rs"]),
+    ("aimm-checkpoint-v0", &["rust/src/agent/checkpoint.rs"]),
+    ("aimm-serve-v1", &["rust/src/coordinator/serve.rs"]),
+    ("aimm-serve-bench-v1", &["rust/benches/serve_churn.rs"]),
+    ("aimm-engine-bench-v1", &["rust/benches/engine_speedup.rs"]),
+    ("aimm-policy-v1", &["rust/benches/policy_faceoff.rs"]),
+    ("aimm-topology-v1", &["rust/benches/topology_scaling.rs"]),
+];
+
+/// Extract every `aimm-<body>-v<digits>` tag from one string-literal
+/// content. The body is lowercase alphanumeric/hyphen and must be
+/// non-empty; the tag ends after the version digits (so a tag embedded
+/// in a longer path or sentence is still found).
+pub fn find_tags(s: &str) -> Vec<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if !s[i..].starts_with("aimm-") {
+            i += 1;
+            continue;
+        }
+        // Maximal run of tag-body chars after the `aimm-` prefix.
+        let mut end = i + 5;
+        while end < bytes.len() && is_tag_byte(bytes[end]) {
+            end += 1;
+        }
+        let run = &s[i..end];
+        match tag_end(run) {
+            Some(de) => {
+                out.push(run[..de].to_string());
+                i += de;
+            }
+            None => i = end.max(i + 1),
+        }
+    }
+    out
+}
+
+fn is_tag_byte(b: u8) -> bool {
+    b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'-'
+}
+
+/// Byte length of the tag within `run` (`"aimm-" + body + "-v" +
+/// digits`), or `None` if the run has no valid version suffix. Picks
+/// the rightmost `-v<digits>` so multi-segment bodies survive.
+fn tag_end(run: &str) -> Option<usize> {
+    let rb = run.as_bytes();
+    if run.len() <= 5 || rb[5] == b'-' {
+        return None;
+    }
+    let mut search_to = run.len();
+    while let Some(vp) = run[..search_to].rfind("-v") {
+        let mut de = vp + 2;
+        while de < run.len() && rb[de].is_ascii_digit() {
+            de += 1;
+        }
+        // Need ≥1 digit and ≥1 body char between prefix and `-v`.
+        if de > vp + 2 && vp >= 6 {
+            return Some(de);
+        }
+        if vp == 0 {
+            break;
+        }
+        search_to = vp;
+    }
+    None
+}
+
+/// One scanned file's schema-relevant view: its repo-relative path and
+/// the string literals it contains (line, content).
+pub struct FileStrings<'a> {
+    pub rel: &'a str,
+    pub strings: &'a [(usize, String)],
+}
+
+/// Run the schema-tag rule over every scanned file at once (the only
+/// whole-tree rule: "exactly one writer" is a global property).
+pub fn schema_tag(root: &Path, files: &[FileStrings<'_>], findings: &mut Vec<Finding>) {
+    let mut occurrences: BTreeMap<String, Vec<(&str, usize)>> = BTreeMap::new();
+    for f in files {
+        if f.rel.starts_with("rust/detlint/") {
+            continue;
+        }
+        for (ln, s) in f.strings {
+            for tag in find_tags(s) {
+                occurrences.entry(tag).or_default().push((f.rel, *ln));
+            }
+        }
+    }
+    let frozen: BTreeMap<&str, &[&str]> = SCHEMA_FREEZE.iter().copied().collect();
+    for (tag, sites) in &occurrences {
+        match frozen.get(tag.as_str()) {
+            None => {
+                for (path, ln) in sites {
+                    findings.push(Finding::new(
+                        path,
+                        *ln,
+                        "schema-tag",
+                        format!(
+                            "unknown schema tag `{tag}` — add it to the freeze \
+                             manifest in rust/detlint/src/schema.rs"
+                        ),
+                    ));
+                }
+            }
+            Some(allowed_files) => {
+                for (path, ln) in sites {
+                    if !allowed_files.contains(path) {
+                        findings.push(Finding::new(
+                            path,
+                            *ln,
+                            "schema-tag",
+                            format!(
+                                "schema tag `{tag}` outside its frozen writer/parser set \
+                                 (writer: {})",
+                                allowed_files[0]
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    for (tag, files_list) in SCHEMA_FREEZE {
+        let writer = files_list[0];
+        let present = occurrences
+            .get(*tag)
+            .is_some_and(|sites| sites.iter().any(|(p, _)| *p == writer));
+        let exists = root.join(writer).is_file();
+        // Only demand the writer emit its tag when the writer file is
+        // part of the scanned tree (fixture trees are tiny subsets).
+        if (exists || occurrences.contains_key(*tag)) && !present {
+            findings.push(Finding::new(
+                writer,
+                1,
+                "schema-tag",
+                format!("schema tag `{tag}` missing from its declared writer"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_plain_tag() {
+        assert_eq!(find_tags("aimm-sweep-v1"), ["aimm-sweep-v1"]);
+    }
+
+    #[test]
+    fn finds_tag_in_sentence() {
+        assert_eq!(
+            find_tags("expected schema aimm-checkpoint-v1, got {}"),
+            ["aimm-checkpoint-v1"]
+        );
+    }
+
+    #[test]
+    fn finds_multi_segment_body() {
+        assert_eq!(find_tags("aimm-cell-key-v1"), ["aimm-cell-key-v1"]);
+    }
+
+    #[test]
+    fn tag_ends_after_digits() {
+        assert_eq!(find_tags("aimm-sweep-v1-beta"), ["aimm-sweep-v1"]);
+        assert_eq!(find_tags("aimm-x-v12abc"), ["aimm-x-v12"]);
+    }
+
+    #[test]
+    fn rejects_empty_body_or_missing_version() {
+        assert!(find_tags("aimm-v1").is_empty());
+        assert!(find_tags("aimm-sweep").is_empty());
+        assert!(find_tags("aimm--x-v1").is_empty());
+    }
+
+    #[test]
+    fn finds_multiple_tags() {
+        assert_eq!(
+            find_tags("aimm-sweep-v1 then aimm-serve-v1"),
+            ["aimm-sweep-v1", "aimm-serve-v1"]
+        );
+    }
+
+    #[test]
+    fn manifest_writers_are_first() {
+        for (tag, files) in SCHEMA_FREEZE {
+            assert!(!files.is_empty(), "{tag} has no writer");
+            assert!(files[0].starts_with("rust/"), "{tag} writer path");
+        }
+    }
+}

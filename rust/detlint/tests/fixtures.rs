@@ -1,0 +1,102 @@
+//! Fixture-tree tests: each `tests/fixtures/<case>/` directory is a
+//! miniature repo root (so the path-scoped rules see realistic
+//! `rust/src/...` layouts). The `good` tree exercises every exoneration
+//! path and must scan clean; each `bad_*` tree must trip exactly its
+//! named rule.
+
+use std::path::PathBuf;
+
+use detlint::{scan_repo, Finding, Report};
+
+fn fixture(name: &str) -> Report {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    assert!(root.is_dir(), "missing fixture tree {}", root.display());
+    scan_repo(&root).expect("fixture scan")
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn good_tree_is_clean() {
+    let r = fixture("good");
+    assert!(r.findings.is_empty(), "good tree should be clean: {:?}", r.findings);
+    assert_eq!(r.rust_files, 3, "good tree scan coverage");
+}
+
+#[test]
+fn bad_hash_iter_trips() {
+    let r = fixture("bad_hash_iter");
+    assert_eq!(rules_of(&r.findings), ["hash-iter"], "{:?}", r.findings);
+    assert_eq!(r.findings[0].file, "rust/src/lib.rs");
+    assert_eq!(r.findings[0].line, 5);
+}
+
+#[test]
+fn bad_wall_clock_trips() {
+    let r = fixture("bad_wall_clock");
+    assert_eq!(rules_of(&r.findings), ["wall-clock"], "{:?}", r.findings);
+    assert_eq!(r.findings[0].file, "rust/src/sim/clock.rs");
+}
+
+#[test]
+fn bad_ambient_trips() {
+    let r = fixture("bad_ambient");
+    assert_eq!(rules_of(&r.findings), ["ambient-input"], "{:?}", r.findings);
+    assert_eq!(r.findings[0].file, "rust/src/mc/cfg.rs");
+}
+
+#[test]
+fn bad_thread_trips() {
+    let r = fixture("bad_thread");
+    assert_eq!(rules_of(&r.findings), ["thread-spawn"], "{:?}", r.findings);
+    assert_eq!(r.findings[0].file, "rust/src/noc/router.rs");
+}
+
+#[test]
+fn bad_schema_fork_trips() {
+    let r = fixture("bad_schema_fork");
+    // Two findings: the tag outside its writer set, and the declared
+    // writer (absent from this tree) no longer emitting it.
+    assert_eq!(rules_of(&r.findings), ["schema-tag", "schema-tag"], "{:?}", r.findings);
+    let fork = r.findings.iter().find(|f| f.file == "rust/src/lib.rs").expect("fork finding");
+    assert!(fork.message.contains("outside its frozen writer/parser set"), "{fork}");
+}
+
+#[test]
+fn bad_schema_unknown_trips() {
+    let r = fixture("bad_schema_unknown");
+    assert_eq!(rules_of(&r.findings), ["schema-tag"], "{:?}", r.findings);
+    assert!(r.findings[0].message.contains("unknown schema tag `aimm-mystery-v1`"));
+}
+
+#[test]
+fn bad_doc_citation_trips() {
+    let r = fixture("bad_doc_citation");
+    assert_eq!(rules_of(&r.findings), ["doc-citation"], "{:?}", r.findings);
+    assert_eq!(r.findings[0].file, "README.md");
+    assert!(r.findings[0].message.contains("rust/src/ghost/module.rs"));
+}
+
+#[test]
+fn bad_pragma_trips_and_does_not_exonerate() {
+    let r = fixture("bad_pragma");
+    // A malformed pragma is a finding AND fails to exonerate the hazard
+    // below it, so each bad pragma yields a pair.
+    assert_eq!(
+        rules_of(&r.findings),
+        ["bad-pragma", "hash-iter", "bad-pragma", "hash-iter"],
+        "{:?}",
+        r.findings
+    );
+    assert!(r.findings[0].message.contains("flux-capacitor"));
+    assert!(r.findings[2].message.contains("missing the `— <reason>`"));
+}
+
+#[test]
+fn findings_render_as_file_line_rule_message() {
+    let r = fixture("bad_hash_iter");
+    let rendered = r.findings[0].to_string();
+    assert!(rendered.starts_with("rust/src/lib.rs:5: hash-iter: "), "{rendered}");
+}

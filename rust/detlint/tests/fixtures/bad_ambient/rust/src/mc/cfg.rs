@@ -1,0 +1,4 @@
+// Fixture: ambient input read inside the simulation core.
+pub fn queue_cap() -> usize {
+    std::env::var("MC_QUEUE_CAP").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}

@@ -1,0 +1,9 @@
+// Fixture: unsorted, unpragma'd iteration over a HashMap.
+use std::collections::HashMap;
+
+pub fn first_key(m: &HashMap<u64, u64>) -> Option<u64> {
+    for (k, _) in m.iter() {
+        return Some(*k);
+    }
+    None
+}

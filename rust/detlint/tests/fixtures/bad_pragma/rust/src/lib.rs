@@ -1,0 +1,13 @@
+// Fixture: malformed pragmas — an unknown rule name and a missing
+// reason — each of which is itself a finding.
+use std::collections::HashMap;
+
+pub fn a(m: &HashMap<u64, u64>) -> u64 {
+    // detlint: allow(flux-capacitor) — no such rule
+    m.values().sum()
+}
+
+pub fn b(m: &HashMap<u64, u64>) -> u64 {
+    // detlint: allow(hash-iter)
+    m.values().sum()
+}

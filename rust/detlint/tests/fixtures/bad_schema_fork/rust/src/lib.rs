@@ -1,0 +1,3 @@
+// Fixture: a frozen schema tag emitted from a file outside its
+// declared writer/parser set.
+pub const FORKED: &str = "aimm-checkpoint-v1";

@@ -1,0 +1,2 @@
+// Fixture: a schema-looking tag that is not in the freeze manifest.
+pub const MYSTERY: &str = "aimm-mystery-v1";

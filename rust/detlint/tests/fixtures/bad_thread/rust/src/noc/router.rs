@@ -1,0 +1,5 @@
+// Fixture: thread spawn outside the sanctioned fan-out sites.
+pub fn route_parallel() {
+    let h = std::thread::spawn(|| ());
+    let _ = h.join();
+}

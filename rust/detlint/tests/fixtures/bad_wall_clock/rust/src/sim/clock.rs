@@ -1,0 +1,5 @@
+// Fixture: wall-clock read outside main.rs.
+pub fn now_ms() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_millis()
+}

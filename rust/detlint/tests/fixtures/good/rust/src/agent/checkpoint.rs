@@ -1,0 +1,23 @@
+// Fixture: the declared writer for the checkpoint schema tags, plus
+// pragma round-trips (em dash and `--` separators) and the sort-window
+// exoneration for hash-ordered iteration.
+use std::collections::HashMap;
+
+pub const SCHEMA: &str = "aimm-checkpoint-v1";
+pub const SCHEMA_LEGACY: &str = "aimm-checkpoint-v0";
+
+pub fn sorted_keys(m: &HashMap<u64, u64>) -> Vec<u64> {
+    let mut keys: Vec<u64> = m.keys().copied().collect();
+    keys.sort_unstable();
+    keys
+}
+
+pub fn total(m: &HashMap<u64, u64>) -> u64 {
+    // detlint: allow(hash-iter) — order-insensitive sum
+    m.values().sum()
+}
+
+pub fn count_positive(m: &HashMap<u64, u64>) -> usize {
+    // detlint: allow(hash-iter) -- ascii separator round-trip
+    m.values().filter(|&&v| v > 0).count()
+}

@@ -1,0 +1,5 @@
+// Fixture: std::thread fan-out inside the sanctioned sweep directory.
+pub fn fan_out() {
+    let h = std::thread::spawn(|| 42);
+    let _ = h.join();
+}

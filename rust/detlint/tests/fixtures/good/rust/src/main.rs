@@ -1,0 +1,8 @@
+// Fixture: main.rs is exempt from the wall-clock rule (CLI timing).
+fn main() {
+    let t0 = std::time::Instant::now();
+    run();
+    println!("done in {:?}", t0.elapsed());
+}
+
+fn run() {}

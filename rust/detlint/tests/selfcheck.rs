@@ -1,0 +1,21 @@
+//! Self-check: detlint run over the real repository tree must report
+//! zero findings. This is the same invariant the CI lint job enforces
+//! via `cargo run -p detlint`; having it as a test too means plain
+//! `cargo test` catches a new hazard before CI does.
+
+use std::path::PathBuf;
+
+#[test]
+fn repo_tree_is_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let report = detlint::scan_repo(&root).expect("repo scan");
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.findings.is_empty(),
+        "detlint findings on the repo tree:\n{}",
+        rendered.join("\n")
+    );
+    // Coverage sanity: the scan must actually have walked the tree
+    // (an empty-roots bug would vacuously pass the assert above).
+    assert!(report.rust_files > 60, "only {} files scanned", report.rust_files);
+}

@@ -5,7 +5,7 @@ fn main() {
     let mut q = PjrtQNet::load(&dir, 1e-3, 0.95).unwrap();
     let s = vec![0.3f32; STATE_DIM];
     for _ in 0..20 { q.q_values(&s).unwrap(); }
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
     let n = 500;
     for _ in 0..n { q.q_values(&s).unwrap(); }
     println!("infer: {:?}/call", t0.elapsed() / n);
@@ -14,7 +14,7 @@ fn main() {
         s2: vec![0.2; BATCH * STATE_DIM], done: vec![0.0; BATCH],
     };
     for _ in 0..5 { q.train_batch(&batch).unwrap(); }
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
     let n = 100;
     for _ in 0..n { q.train_batch(&batch).unwrap(); }
     println!("train: {:?}/step", t0.elapsed() / n);

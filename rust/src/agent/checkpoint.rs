@@ -497,6 +497,7 @@ mod tests {
     #[test]
     fn file_roundtrip() {
         let ck = sample_checkpoint();
+        // detlint: allow(ambient-input) — unit-test scratch directory, not sim state
         let path = std::env::temp_dir().join("aimm_ckpt_unit_test.json");
         ck.save(&path).unwrap();
         let back = AgentCheckpoint::load(&path).unwrap();

@@ -94,7 +94,7 @@ impl Placement for HoardAllocator {
         // stats on any worker.
         if let Some((&cube, _)) = heap
             .hoarded
-            .iter()
+            .iter() // detlint: allow(hash-iter) — max_by_key over a total order (count, then key)
             .filter(|(_, &n)| n > 0)
             .max_by_key(|(k, n)| (**n, std::cmp::Reverse(**k)))
         {

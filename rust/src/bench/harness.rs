@@ -33,7 +33,7 @@ pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -
     }
     let mut samples: Vec<Duration> = Vec::with_capacity(iters);
     for _ in 0..iters {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
         f();
         samples.push(t0.elapsed());
     }

@@ -257,6 +257,7 @@ pub fn run_journaled(
     // Compact when anything was dropped or an entry's recorded index
     // drifted from the current canonical order (grid axes reordered):
     // rewrite only verified entries, re-indexed, atomically.
+    // detlint: allow(hash-iter) — existential any(): the boolean fold is order-independent
     let drifted = cache.iter().any(|(k, (idx, _))| grid_keys[k] != *idx);
     if stale > 0 || duplicates > 0 || !corrupt.is_empty() || drifted {
         let mut text = String::new();

@@ -5,7 +5,6 @@
 //! Shared primitive types (`CubeId`, `VAddr`, …) also live here so the
 //! substrate modules do not depend on one another for basic vocabulary.
 
-use std::collections::HashMap;
 use std::fmt;
 use std::path::Path;
 
@@ -746,8 +745,12 @@ impl TomlValue {
 
 /// Parse `key = value` lines (TOML subset: comments, strings, ints,
 /// floats, bools). Section headers are rejected — the config is flat.
-pub fn parse_kv(text: &str) -> anyhow::Result<HashMap<String, TomlValue>> {
-    let mut out = HashMap::new();
+///
+/// Pairs are returned in file order (duplicates keep every entry, so
+/// later lines win when applied in sequence). A `HashMap` here would
+/// make which-bad-key-errors-first depend on hash order.
+pub fn parse_kv(text: &str) -> anyhow::Result<Vec<(String, TomlValue)>> {
+    let mut out = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = match raw.find('#') {
             // Don't strip '#' inside quoted strings.
@@ -786,7 +789,7 @@ pub fn parse_kv(text: &str) -> anyhow::Result<HashMap<String, TomlValue>> {
         } else {
             anyhow::bail!("line {}: cannot parse value {vs:?}", lineno + 1);
         };
-        out.insert(key, value);
+        out.push((key, value));
     }
     Ok(out)
 }

@@ -38,6 +38,8 @@
 //! * [`bench`] — measurement harness, figure tables and the parallel
 //!   design-space sweep behind `cargo bench` / `aimm sweep`
 
+#![forbid(unsafe_code)]
+
 pub mod agent;
 pub mod alloc;
 pub mod bench;

@@ -21,6 +21,8 @@
 //!               [--rounds 2] [--out BENCH_serve.json] ...
 //! ```
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::Path;
 use std::process::ExitCode;
@@ -441,7 +443,7 @@ fn real_main() -> Result<(), String> {
                     std::fs::read_to_string(path)
                         .ok()
                         .and_then(|text| aimm::config::parse_kv(&text).ok())
-                        .is_some_and(|kv| kv.contains_key("mapping"))
+                        .is_some_and(|kvs| kvs.iter().any(|(k, _)| k == "mapping"))
                 });
             if !explicit_mapping {
                 cfg.mapping = MappingScheme::Aimm;
@@ -521,7 +523,7 @@ fn real_main() -> Result<(), String> {
                     std::fs::read_to_string(path)
                         .ok()
                         .and_then(|text| aimm::config::parse_kv(&text).ok())
-                        .is_some_and(|kv| kv.contains_key("mapping"))
+                        .is_some_and(|kvs| kvs.iter().any(|(k, _)| k == "mapping"))
                 });
             if !explicit_mapping {
                 cfg.mapping = MappingScheme::Aimm;

@@ -721,6 +721,9 @@ pub fn profile_assignment(ops: &[NmpOp], n_cubes: usize) -> HashMap<(Pid, VPage)
             src_votes.entry(key).or_insert_with(|| vec![0u64; n_cubes])[dest_cube] += 1;
         }
     }
+    // Each per-key argmax writes an independent slot, so the resulting
+    // map's content is invariant to visit order.
+    // detlint: allow(hash-iter) — order-invariant per-key inserts
     for (key, votes) in src_votes {
         let mut best = 0usize;
         for (c, &v) in votes.iter().enumerate().skip(1) {
@@ -1041,6 +1044,7 @@ mod tests {
         let b = profile_assignment(&ops, 16);
         assert_eq!(a, b);
         assert!(!a.is_empty());
+        // detlint: allow(hash-iter) — test-only range check; asserts are per-entry
         for (&(_, _), &cube) in &a {
             assert!(cube < 16);
         }

@@ -202,7 +202,7 @@ impl TomMapper {
     /// currently adopted one.
     fn movement(&self, idx: usize) -> u64 {
         self.seen_pages
-            .iter()
+            .iter() // detlint: allow(hash-iter) — count() of a filter is order-insensitive
             .filter(|(p, v)| {
                 self.cands[idx].cube(*p, *v, self.n_cubes)
                     != self.cands[self.current].cube(*p, *v, self.n_cubes)

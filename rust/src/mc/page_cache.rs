@@ -94,7 +94,7 @@ impl PageInfoCache {
                 // identical stats on any worker.
                 let victim = self
                     .entries
-                    .iter()
+                    .iter() // detlint: allow(hash-iter) — min_by_key over a total order
                     .min_by_key(|(k, e)| (e.accesses, **k))
                     .map(|(k, _)| *k)
                     .unwrap();
@@ -151,7 +151,7 @@ impl PageInfoCache {
     /// "highly accessed page" selected as the remapping candidate.
     pub fn hottest(&self) -> Option<((Pid, VPage), &PageInfo)> {
         self.entries
-            .iter()
+            .iter() // detlint: allow(hash-iter) — max_by_key over a total order
             .max_by_key(|(k, e)| (e.accesses, std::cmp::Reverse(*k)))
             .map(|(k, e)| (*k, e))
     }
@@ -163,7 +163,7 @@ impl PageInfoCache {
         let ring = self.capacity / 2;
         let pick = self
             .entries
-            .iter()
+            .iter() // detlint: allow(hash-iter) — max_by_key over a total order
             .filter(|(k, _)| !self.recent_selected.contains(k))
             .max_by_key(|(k, e)| (e.accesses, std::cmp::Reverse(**k)))
             .map(|(k, _)| *k)

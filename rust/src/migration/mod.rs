@@ -141,6 +141,7 @@ impl MigrationSystem {
     /// is a boolean fold: iteration order cannot affect the result, so
     /// determinism across worker counts is preserved.
     pub fn has_pid_in_flight(&self, pid: Pid) -> bool {
+        // detlint: allow(hash-iter) — existential any(): order-independent boolean fold
         self.in_flight.keys().any(|(p, _)| *p == pid)
     }
 

@@ -61,6 +61,7 @@ impl Mmu {
     /// No-op for an unknown pid.
     pub fn release_process(&mut self, pid: Pid) {
         debug_assert!(
+            // detlint: allow(hash-iter) — existential any() in a debug assert, order-free
             !self.pending.keys().any(|(p, _)| *p == pid),
             "release_process({pid}) with pending remaps"
         );

@@ -58,6 +58,7 @@ fn page_accesses(trace: &Trace) -> HashMap<u64, u64> {
 /// Fig 5a.
 pub fn classify_pages(trace: &Trace) -> PageClasses {
     let mut out = PageClasses::default();
+    // detlint: allow(hash-iter) — pure bucketing: each count lands in one class, order-free
     for (_, n) in page_accesses(trace) {
         if n <= LIGHT_MAX {
             out.light += 1;
@@ -79,11 +80,11 @@ pub fn mean_active_pages(trace: &Trace, epoch_ops: usize) -> f64 {
     let mut total = 0usize;
     let mut windows = 0usize;
     for chunk in trace.ops.chunks(epoch_ops.max(1)) {
-        let mut pages: HashSet<u64> = HashSet::new();
+        let mut window_pages: HashSet<u64> = HashSet::new();
         for op in chunk {
-            pages.extend(op.vpages());
+            window_pages.extend(op.vpages());
         }
-        total += pages.len();
+        total += window_pages.len();
         windows += 1;
     }
     total as f64 / windows as f64
@@ -144,6 +145,7 @@ pub fn affinity_quadrants(trace: &Trace) -> AffinityQuadrants {
     let med_r = radixes[radixes.len() / 2];
     let med_w = weights[weights.len() / 2];
     let mut out = AffinityQuadrants::default();
+    // detlint: allow(hash-iter) — each page increments exactly one quadrant counter, order-free
     for (page, ps) in &partners {
         let r = ps.len() as u64;
         let w = weight[page];
