@@ -136,7 +136,9 @@ pub fn lex(src: &str) -> LexedFile {
                 j += 1;
             }
             comments.push((line, chars[start..j].iter().collect()));
+            code.push(' '); // separator, mirroring emit_literal
             i = j; // the newline (if any) is handled by the main loop
+            prev_code = ' ';
             continue;
         }
         if c == '/' && at(i + 1) == '*' {
@@ -157,7 +159,9 @@ pub fn lex(src: &str) -> LexedFile {
                     j += 1;
                 }
             }
+            code.push(' '); // separator so `a/*c*/b` stays two tokens
             i = j;
+            prev_code = ' ';
             continue;
         }
         if c == '"' {
@@ -321,6 +325,19 @@ mod tests {
     fn nested_block_comments() {
         let l = lex("a /* outer /* inner */ still */ b");
         assert_eq!(l.code_lines[0].replace(' ', ""), "ab");
+    }
+
+    #[test]
+    fn elided_comments_separate_tokens() {
+        // Regression: comments were removed without a separator, so
+        // `a/*c*/b` merged into one ident `ab` and could hide token
+        // patterns like `for k in/*…*/m` from the rules.
+        let toks = tokens(&lex("a/*c*/b").code_lines);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["a", "b"]);
+        let toks = tokens(&lex("for k in/*…*/m {}").code_lines);
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["for", "k", "in", "m", "{", "}"]);
     }
 
     #[test]

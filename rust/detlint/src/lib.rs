@@ -152,7 +152,11 @@ pub fn scan_repo(root: &Path) -> io::Result<Report> {
         let mut paths = Vec::new();
         walk_sorted(&base, &mut paths)?;
         for p in paths {
-            let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().into_owned();
+            // Normalize to `/` so the path-prefix rules (sim-core,
+            // thread-spawn allowlist, wall-clock exemption, the
+            // detlint/tests skip) match on every platform.
+            let rel =
+                p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
             if rel.starts_with("rust/detlint/tests") || !rel.ends_with(".rs") {
                 continue;
             }

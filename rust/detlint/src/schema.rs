@@ -45,7 +45,12 @@ pub fn find_tags(s: &str) -> Vec<String> {
     let mut out = Vec::new();
     let mut i = 0usize;
     while i < bytes.len() {
-        if !s[i..].starts_with("aimm-") {
+        // Byte-wise match: `i` may sit mid-char while scanning, and
+        // slicing `&str` at a non-boundary panics. The needle is ASCII,
+        // so a byte comparison is equivalent — and on a match `i` (and
+        // `end`, which only advances over ASCII) are char boundaries,
+        // making the `&s[i..end]` slice below safe.
+        if !bytes[i..].starts_with(b"aimm-") {
             i += 1;
             continue;
         }
@@ -177,6 +182,15 @@ mod tests {
     #[test]
     fn finds_plain_tag() {
         assert_eq!(find_tags("aimm-sweep-v1"), ["aimm-sweep-v1"]);
+    }
+
+    #[test]
+    fn finds_tag_after_multibyte_chars() {
+        // Regression: byte-stepping used to slice `&str` mid-char and
+        // panic on literals like "ε={:.4}" or "0 → 15 wraps West".
+        assert_eq!(find_tags("ε → aimm-sweep-v1"), ["aimm-sweep-v1"]);
+        assert!(find_tags("100× speedup, ε=0.1, no tag").is_empty());
+        assert_eq!(find_tags("aimm-sweep-v1 → done ✓"), ["aimm-sweep-v1"]);
     }
 
     #[test]
