@@ -81,7 +81,7 @@ fn main() {
     println!("{}", r.report());
 
     // Workload generation (build-time path, still worth tracking).
-    let r = bench_fn("generate all 9 traces scale=0.25", 1, 5, || {
+    let r = bench_fn("generate all registered traces scale=0.25", 1, 5, || {
         for b in Benchmark::ALL {
             let _ = generate(b, 1, 0.25, 7);
         }

@@ -1,0 +1,141 @@
+//! Bench: trace capture/replay round-trip (EXPERIMENTS.md §Trace).
+//! Captures three representative episodes (MAC, SPMV, GCM) to the
+//! versioned trace format, replays each through the streaming
+//! `FileProvider`, and checks the headline guarantee end to end:
+//! replayed stats are byte-identical to the generated run's, and
+//! re-rendering the parsed file reproduces the capture byte for byte.
+//! A GCM face-off then replays the same pointer-chasing trace under
+//! every paper mapping policy. Writes `BENCH_trace.json` at the
+//! repository root (fixed key order, so re-runs diff clean — wall
+//! times are printed, never serialized).
+//!
+//! Run with `cargo bench --bench trace_replay` (release; ignore debug
+//! numbers). CI's serial job executes this on every push.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use aimm::bench::sweep::{atomic_write_text, stats_json};
+use aimm::bench::Table;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::{episode_ops, fresh_agent, run_episode_with, run_traced_with};
+use aimm::runtime::json::write as jw;
+use aimm::workloads::{render_trace, Benchmark, FileTrace};
+
+/// Big enough that the streaming reader's refill loop actually cycles,
+/// small enough that 3 capture+replay pairs stay in CI range.
+const SCALE: f64 = 0.05;
+/// Two runs per episode: the second run exercises policy carryover
+/// through the replay path too.
+const RUNS: usize = 2;
+
+const BENCHES: [Benchmark; 3] = [Benchmark::Mac, Benchmark::Spmv, Benchmark::Gcm];
+
+fn temp_trace(bench: Benchmark) -> PathBuf {
+    let name = format!("aimm_trace_bench_{}_{}.tr", std::process::id(), bench.name());
+    std::env::temp_dir().join(name)
+}
+
+fn main() {
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
+    let cfg = SystemConfig::default();
+
+    let mut t = Table::new(
+        "Trace capture/replay round-trip (baseline mapping)",
+        &["bench", "ops", "bytes", "capture ms", "replay cycles", "bit-identical"],
+    );
+    let mut roundtrip_rows: Vec<(String, String)> = Vec::new();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for &b in &BENCHES {
+        let (ops, name) = episode_ops(&cfg, &[b], SCALE).expect("episode ops");
+        let c0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
+        let text = render_trace(&name, SCALE, &ops).expect("render trace");
+        let path = temp_trace(b);
+        atomic_write_text(&path, &text).expect("write capture");
+        let capture_ms = c0.elapsed().as_secs_f64() * 1e3;
+
+        let file = FileTrace::open(&path).expect("open capture");
+        let (generated, _) = run_episode_with(&cfg, &[b], SCALE, RUNS, None).expect("generated");
+        let (replayed, _) = run_traced_with(&cfg, &file, RUNS, None).expect("replayed");
+        assert_eq!(generated.runs.len(), replayed.runs.len(), "{}", b.name());
+        for (g, r) in generated.runs.iter().zip(&replayed.runs) {
+            assert_eq!(stats_json(g), stats_json(r), "replay diverged on {}", b.name());
+        }
+        let rerendered = file.render().expect("re-render");
+        assert_eq!(rerendered, text, "write->parse->write drifted on {}", b.name());
+
+        t.row(vec![
+            b.name().into(),
+            ops.len().to_string(),
+            text.len().to_string(),
+            format!("{capture_ms:.2}"),
+            replayed.last().cycles.to_string(),
+            "yes".into(),
+        ]);
+        roundtrip_rows.push((
+            b.name().to_string(),
+            jw::obj(&[
+                ("ops", ops.len().to_string()),
+                ("bytes", text.len().to_string()),
+                ("cycles", replayed.last().cycles.to_string()),
+                ("bit_identical", "true".to_string()),
+            ]),
+        ));
+        paths.push(path);
+    }
+    println!("{}", t.render());
+
+    // GCM face-off: the SAME captured pointer-chasing trace replayed
+    // under every paper mapping policy — completion counts must agree
+    // (the trace, not the policy, fixes the op stream).
+    let gcm = FileTrace::open(&temp_trace(Benchmark::Gcm)).expect("gcm capture");
+    let mut faceoff: Vec<(&str, String)> = Vec::new();
+    let mut ft = Table::new(
+        "GCM replay face-off (same capture, steady-state run)",
+        &["mapping", "cycles", "opc", "avg hops"],
+    );
+    let mut ops_done: Vec<u64> = Vec::new();
+    for mapping in MappingScheme::PAPER {
+        let mut mcfg = cfg.clone();
+        mcfg.mapping = mapping;
+        let agent =
+            if mapping.uses_agent() { Some(fresh_agent(&mcfg).expect("agent")) } else { None };
+        let (s, _) = run_traced_with(&mcfg, &gcm, RUNS, agent).expect("gcm replay");
+        let last = s.last();
+        ops_done.push(last.ops_completed);
+        ft.row(vec![
+            mapping.name().into(),
+            last.cycles.to_string(),
+            format!("{:.4}", last.opc()),
+            format!("{:.2}", last.avg_hops),
+        ]);
+        faceoff.push((mapping.name(), jw::num(last.opc())));
+    }
+    assert!(ops_done.windows(2).all(|w| w[0] == w[1]), "trace drift across GCM mappings");
+    println!("{}", ft.render());
+
+    let wall = t0.elapsed();
+    let roundtrip_fields: Vec<(&str, String)> =
+        roundtrip_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let json = jw::obj(&[
+        ("schema", jw::string("aimm-trace-bench-v1")),
+        (
+            "grid",
+            jw::string(&format!(
+                "{{MAC,SPMV,GCM}} capture->replay x {RUNS} runs (scale {SCALE}); \
+                 GCM replay x {{B,TOM,AIMM}}"
+            )),
+        ),
+        ("measured", "true".to_string()),
+        ("replay_bit_identical", "true".to_string()),
+        ("roundtrip", jw::obj(&roundtrip_fields)),
+        ("gcm_opc_by_mapping", jw::obj(&faceoff)),
+        ("regenerate", jw::string("cargo bench --bench trace_replay")),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_trace.json");
+    std::fs::write(path, &json).expect("write BENCH_trace.json");
+    println!("wrote {path} in {wall:?}");
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -34,6 +34,11 @@ pub const SCHEMA_FREEZE: &[(&str, &[&str])] = &[
     ("aimm-engine-bench-v1", &["rust/benches/engine_speedup.rs"]),
     ("aimm-policy-v1", &["rust/benches/policy_faceoff.rs"]),
     ("aimm-topology-v1", &["rust/benches/topology_scaling.rs"]),
+    (
+        "aimm-trace-v1",
+        &["rust/src/workloads/trace_file.rs", "rust/tests/trace_roundtrip.rs"],
+    ),
+    ("aimm-trace-bench-v1", &["rust/benches/trace_replay.rs"]),
 ];
 
 /// Extract every `aimm-<body>-v<digits>` tag from one string-literal

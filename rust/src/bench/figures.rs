@@ -80,13 +80,13 @@ pub fn table2() -> Table {
 
 /// Fig 5a: page-access-volume classification per benchmark. Each
 /// benchmark's trace generation + analysis is independent, so the nine
-/// rows compute in parallel while keeping `Benchmark::ALL` order.
+/// rows compute in parallel while keeping `Benchmark::PAPER` order.
 pub fn fig5a(scale: f64, seed: u64) -> Table {
     let mut t = Table::new(
         "Fig 5a: page access classification (fraction of pages)",
         &["bench", "light(<=15)", "moderate(<=255)", "heavy(>255)", "pages"],
     );
-    let rows = parallel_map(&Benchmark::ALL, default_threads(), |&b| {
+    let rows = parallel_map(&Benchmark::PAPER, default_threads(), |&b| {
         let trace = generate(b, 1, scale, seed);
         let c = classify_pages(&trace);
         vec![
@@ -110,7 +110,7 @@ pub fn fig5b(scale: f64, seed: u64) -> Table {
         "Fig 5b: active page distribution (mean distinct pages / 512-op epoch)",
         &["bench", "active pages", "total pages"],
     );
-    let rows = parallel_map(&Benchmark::ALL, default_threads(), |&b| {
+    let rows = parallel_map(&Benchmark::PAPER, default_threads(), |&b| {
         let trace = generate(b, 1, scale, seed);
         vec![
             b.name().into(),
@@ -130,7 +130,7 @@ pub fn fig5c(scale: f64, seed: u64) -> Table {
         "Fig 5c: page affinity quadrants (fraction of pages)",
         &["bench", "loR-loW", "loR-hiW", "hiR-loW", "hiR-hiW"],
     );
-    let rows = parallel_map(&Benchmark::ALL, default_threads(), |&b| {
+    let rows = parallel_map(&Benchmark::PAPER, default_threads(), |&b| {
         let trace = generate(b, 1, scale, seed);
         let q = affinity_quadrants(&trace);
         let tot = q.total().max(1) as f64;
@@ -178,7 +178,7 @@ pub fn fig6(scale: f64, runs: usize) -> anyhow::Result<Table> {
         &["bench", "technique", "B", "TOM", "AIMM"],
     );
     let mut it = results.iter();
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         for technique in Technique::ALL {
             let base = it.next().expect("grid order");
             let tom = it.next().expect("grid order");
@@ -209,7 +209,7 @@ pub fn fig7(scale: f64, runs: usize) -> anyhow::Result<Table> {
         "Fig 7: avg hop count and computation utilization (BNMP)",
         &["bench", "hops B", "hops TOM", "hops AIMM", "util B", "util TOM", "util AIMM"],
     );
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         let base = cell(b, Technique::Bnmp, MappingScheme::Baseline, scale, runs)?;
         let tom = cell(b, Technique::Bnmp, MappingScheme::Tom, scale, runs)?;
         let aimm = cell(b, Technique::Bnmp, MappingScheme::Aimm, scale, runs)?;
@@ -232,7 +232,7 @@ pub fn fig8(scale: f64, runs: usize) -> anyhow::Result<Table> {
         "Fig 8: normalized memory operations per cycle (B = 1.00, higher is better)",
         &["bench", "technique", "B", "TOM", "AIMM"],
     );
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         for technique in Technique::ALL {
             let base = cell(b, technique, MappingScheme::Baseline, scale, runs)?;
             let tom = cell(b, technique, MappingScheme::Tom, scale, runs)?;
@@ -271,7 +271,7 @@ pub fn fig9(scale: f64, runs: usize, points: usize) -> anyhow::Result<Table> {
         "Fig 9: OPC timeline under BNMP+AIMM (fixed-size resample across runs)",
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         let aimm = cell(b, Technique::Bnmp, MappingScheme::Aimm, scale, runs)?;
         // Concatenate all runs' timelines: the learning signal spans runs.
         let series: Vec<f32> =
@@ -289,7 +289,7 @@ pub fn fig10(scale: f64, runs: usize) -> anyhow::Result<Table> {
         "Fig 10: migration stats (BNMP+AIMM)",
         &["bench", "frac pages migrated", "frac accesses on migrated", "migrations"],
     );
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         let aimm = cell(b, Technique::Bnmp, MappingScheme::Aimm, scale, runs)?;
         let last = aimm.last();
         t.row(vec![
@@ -314,7 +314,7 @@ pub fn fig11(scale: f64, runs: usize) -> anyhow::Result<Table> {
         &["bench", "B", "TOM", "AIMM"],
     );
     let mut it = results.iter();
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         let base = it.next().expect("grid order");
         let tom = it.next().expect("grid order");
         let aimm = it.next().expect("grid order");
@@ -421,7 +421,7 @@ pub fn fig14(scale: f64, runs: usize) -> anyhow::Result<Table> {
         "Fig 14: dynamic energy (nJ): baseline vs AIMM",
         &["bench", "B net", "B mem", "AIMM hw", "AIMM net", "AIMM mem", "net overhead"],
     );
-    for b in Benchmark::ALL {
+    for b in Benchmark::PAPER {
         let base = cell(b, Technique::Bnmp, MappingScheme::Baseline, scale, runs)?;
         let aimm = cell(b, Technique::Bnmp, MappingScheme::Aimm, scale, runs)?;
         let be = &base.last().energy;
@@ -470,7 +470,7 @@ mod tests {
     fn static_tables_render() {
         let cfg = SystemConfig::default();
         assert!(table1(&cfg).render().contains("4-level page table"));
-        assert!(table2().rows.len() == 9);
+        assert!(table2().rows.len() == Benchmark::ALL.len());
         assert!(area_table().render().contains("replay buffer"));
     }
 
@@ -484,11 +484,11 @@ mod tests {
     #[test]
     fn fig5_parallel_is_deterministic_and_ordered() {
         // Same inputs ⇒ identical render regardless of worker scheduling,
-        // and rows stay in Benchmark::ALL order.
+        // and rows stay in Benchmark::PAPER order.
         assert_eq!(fig5a(0.2, 7).render(), fig5a(0.2, 7).render());
         let t = fig5b(0.2, 7);
         let names: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
-        let want: Vec<&str> = Benchmark::ALL.iter().map(|b| b.name()).collect();
+        let want: Vec<&str> = Benchmark::PAPER.iter().map(|b| b.name()).collect();
         assert_eq!(names, want);
     }
 

@@ -17,7 +17,7 @@ pub mod system;
 pub use curriculum::{run_curriculum, CurriculumReport, CurriculumStage, StageOutcome};
 pub use runner::{
     episode_ops, fresh_agent, run_cell, run_episode_with, run_multi, run_single, run_stream,
-    run_stream_with, EpisodeSummary,
+    run_stream_with, run_traced_with, EpisodeSummary,
 };
 pub use serve::{
     build_tenants, ensure_serve_checkpointable, isolated_baselines, run_serve, serve_report_json,

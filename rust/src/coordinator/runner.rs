@@ -4,12 +4,12 @@
 //! memory) persists — the continual-learning premise.
 
 use crate::agent::AimmAgent;
-use crate::config::SystemConfig;
-use crate::mapping::AnyPolicy;
+use crate::config::{MappingScheme, SystemConfig};
+use crate::mapping::{AnyPolicy, OracleProfile, OracleProfiler};
 use crate::metrics::RunStats;
 use crate::nmp::NmpOp;
 use crate::runtime::best_qfunction;
-use crate::workloads::{generate, interleave, Benchmark};
+use crate::workloads::{generate, interleave, Benchmark, FileTrace, TraceProvider};
 
 use super::system::System;
 
@@ -100,6 +100,49 @@ pub fn run_stream_with(
         policy = sys.take_policy();
     }
     Ok((EpisodeSummary { name: name.to_string(), runs: stats }, policy.take_agent()))
+}
+
+/// Replay a captured trace file `runs` times — the `--trace` episode
+/// path. The streaming counterpart of [`run_stream_with`]: every run
+/// re-opens the file through a fresh bounded-lookahead
+/// [`FileProvider`](crate::workloads::FileProvider), so the op vector
+/// is never materialized. The oracle's dry run streams the file once
+/// through [`OracleProfiler`] up front (where [`AnyPolicy::new`] would
+/// have read the vector); every other policy ignores the op stream at
+/// construction.
+pub fn run_traced_with(
+    cfg: &SystemConfig,
+    file: &FileTrace,
+    runs: usize,
+    agent: Option<AimmAgent>,
+) -> anyhow::Result<(EpisodeSummary, Option<AimmAgent>)> {
+    anyhow::ensure!(
+        agent.is_none() || cfg.mapping.uses_agent(),
+        "an agent only drives the AIMM policy (mapping is {})",
+        cfg.mapping
+    );
+    let mut policy = if cfg.mapping == MappingScheme::Oracle {
+        let mut profiler = OracleProfiler::new(cfg.num_cubes());
+        let mut provider = file.provider()?;
+        while let Some(op) = provider.peek() {
+            profiler.observe(&op);
+            provider.consume()?;
+        }
+        AnyPolicy::Oracle(OracleProfile::from_assignment(profiler.finish()))
+    } else {
+        AnyPolicy::new(cfg, &[], agent)
+    };
+    let mut stats = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let provider = Box::new(file.provider()?);
+        let mut sys = System::with_provider(cfg.clone(), provider, policy);
+        stats.push(sys.run()?);
+        policy = sys.take_policy();
+    }
+    Ok((
+        EpisodeSummary { name: file.name().to_string(), runs: stats },
+        policy.take_agent(),
+    ))
 }
 
 /// Run one op stream `runs` times with the configured mapping scheme,
@@ -275,8 +318,7 @@ mod tests {
     fn run_episode_with_returns_the_carried_agent() {
         let c = cfg(MappingScheme::Aimm);
         let agent = Some(fresh_agent(&c).unwrap());
-        let (s, carried) =
-            run_episode_with(&c, &[Benchmark::Mac], 0.04, 2, agent).unwrap();
+        let (s, carried) = run_episode_with(&c, &[Benchmark::Mac], 0.04, 2, agent).unwrap();
         assert_eq!(s.runs.len(), 2);
         let carried = carried.expect("agent survives the episode");
         assert!(carried.stats.invocations > 0);

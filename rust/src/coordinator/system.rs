@@ -26,6 +26,7 @@ use crate::nmp::{CpuCache, NmpOp};
 use crate::noc::packet::{Packet, Payload};
 use crate::noc::Mesh;
 use crate::sim::{Cycle, EventWheel};
+use crate::workloads::{GeneratedProvider, TraceProvider};
 use super::serve::TenantFeed;
 
 /// How often cubes report occupancy / row-hit to their MC (§5.1
@@ -50,9 +51,11 @@ pub struct System {
     cpu_cache: CpuCache,
     pub migration: MigrationSystem,
 
-    // Trace feed.
-    ops: Vec<NmpOp>,
-    next_op: usize,
+    /// Trace feed: the op stream, behind the provider seam — generated
+    /// traces wrap their vector ([`GeneratedProvider`]), captured files
+    /// stream with bounded lookahead
+    /// ([`FileProvider`](crate::workloads::FileProvider)).
+    provider: Box<dyn TraceProvider>,
     issued: u64,
     completed: u64,
 
@@ -98,12 +101,23 @@ impl System {
     /// feeds the next run's construction). Calls the policy's
     /// episode-start hook — per-run control state resets, carried
     /// learning state survives (§6.1).
-    pub fn with_policy(cfg: SystemConfig, ops: Vec<NmpOp>, mut policy: AnyPolicy) -> Self {
+    pub fn with_policy(cfg: SystemConfig, ops: Vec<NmpOp>, policy: AnyPolicy) -> Self {
+        Self::with_provider(cfg, Box::new(GeneratedProvider::new(ops)), policy)
+    }
+
+    /// Build a system around any op-stream provider — the replay path
+    /// (`aimm run --trace`) hands in a
+    /// [`FileProvider`](crate::workloads::FileProvider) here, and the
+    /// generated path arrives via [`with_policy`](Self::with_policy)
+    /// wrapping its vector. Pids are taken from the provider (every
+    /// implementation knows them up front).
+    pub fn with_provider(
+        cfg: SystemConfig,
+        provider: Box<dyn TraceProvider>,
+        mut policy: AnyPolicy,
+    ) -> Self {
         let mut mmu = Mmu::new(&cfg);
-        let mut pids: Vec<Pid> = ops.iter().map(|o| o.pid).collect();
-        pids.sort_unstable();
-        pids.dedup();
-        for pid in &pids {
+        for pid in provider.pids() {
             mmu.create_process(*pid);
         }
         let placement: Box<dyn Placement> = if cfg.hoard {
@@ -125,8 +139,7 @@ impl System {
             mmu,
             placement,
             policy,
-            ops,
-            next_op: 0,
+            provider,
             issued: 0,
             completed: 0,
             tenant_feed: None,
@@ -190,29 +203,30 @@ impl System {
     fn total_ops(&self) -> u64 {
         match &self.tenant_feed {
             Some(f) => f.total_ops(),
-            None => self.ops.len() as u64,
+            None => self.provider.total_ops(),
         }
     }
 
-    /// Feed ops from the trace into MC queues (CPU issue).
-    fn feed(&mut self) {
+    /// Feed ops from the trace into MC queues (CPU issue). Errors are
+    /// the provider's — a streamed trace file failing mid-read — and
+    /// abort the run loudly; the generated path is infallible.
+    fn feed(&mut self) -> anyhow::Result<()> {
         if self.tenant_feed.is_some() {
             self.feed_serve();
-            return;
+            return Ok(());
         }
         let mut budget = self.cfg.issue_width;
-        while budget > 0
-            && self.next_op < self.ops.len()
-            && self.outstanding() < self.cfg.max_outstanding as u64
-        {
-            let op = self.ops[self.next_op];
+        while budget > 0 && self.outstanding() < self.cfg.max_outstanding as u64 {
+            let Some(op) = self.provider.peek() else { break };
             // Cores issue through their nearest MC; with ops spread over
             // the 16 cores this is round-robin across the 4 MCs (and keeps
-            // MC load independent of where data lives).
-            let mc_id = self.next_op % self.cfg.num_mcs();
+            // MC load independent of where data lives). `consumed()` is
+            // the op's stream index — the same round-robin key as the
+            // pre-seam `next_op` counter.
+            let mc_id = (self.provider.consumed() % self.cfg.num_mcs() as u64) as usize;
             match self.mcs[mc_id].enqueue(op) {
                 Ok(()) => {
-                    self.next_op += 1;
+                    self.provider.consume()?;
                     self.issued += 1;
                     budget -= 1;
                     // Track writability + migrated-page access stats.
@@ -228,6 +242,7 @@ impl System {
                 Err(_) => break, // backpressure: stop feeding this cycle
             }
         }
+        Ok(())
     }
 
     /// Serve-mode CPU feed: arrivals due this cycle join the admission
@@ -300,7 +315,7 @@ impl System {
         let now = self.now;
 
         // 1. CPU feed.
-        self.feed();
+        self.feed()?;
 
         // 2. MC issue + drain their outgoing packets.
         for i in 0..self.mcs.len() {
@@ -511,7 +526,7 @@ impl System {
         let source_drained = match &self.tenant_feed {
             // Serve: every tenant arrived, was admitted, and departed.
             Some(feed) => feed.all_done(),
-            None => self.next_op >= self.ops.len(),
+            None => self.provider.drained(),
         };
         source_drained
             && self.outstanding() == 0
@@ -637,7 +652,7 @@ impl System {
                 }
             }
             None => {
-                if self.next_op < self.ops.len()
+                if !self.provider.drained()
                     && self.outstanding() < self.cfg.max_outstanding as u64
                 {
                     wheel.schedule(now);
@@ -735,14 +750,7 @@ impl System {
         // and never reused, so the sum *is* the distinct count).
         let distinct_page_count = match &self.tenant_feed {
             Some(feed) => feed.distinct_pages_total(),
-            None => {
-                let distinct: HashSet<(Pid, VPage)> = self
-                    .ops
-                    .iter()
-                    .flat_map(|o| o.vpages().into_iter().map(move |p| (o.pid, p)))
-                    .collect();
-                distinct.len() as u64
-            }
+            None => self.provider.distinct_pages(),
         };
 
         let mut energy_counts = EnergyCounts::default();

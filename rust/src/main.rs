@@ -33,10 +33,10 @@ use aimm::bench::sweep::{self, ContinualSequence, SweepGrid};
 use aimm::bench::Table;
 use aimm::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
 use aimm::coordinator::{
-    ensure_serve_checkpointable, fresh_agent, run_curriculum, run_episode_with, run_serve,
-    serve_report_json, CurriculumStage,
+    ensure_serve_checkpointable, episode_ops, fresh_agent, run_curriculum, run_episode_with,
+    run_serve, run_traced_with, serve_report_json, CurriculumStage,
 };
-use aimm::workloads::{ArrivalProcess, Benchmark};
+use aimm::workloads::{render_trace, ArrivalProcess, Benchmark, FileTrace};
 
 /// Q-backend note for `--help`, matching what this binary was built with.
 #[cfg(feature = "pjrt")]
@@ -61,7 +61,12 @@ fn usage() -> String {
                     [--resume IN.json] warm-start from a saved checkpoint\n\
                     (checkpoints demand --mapping AIMM: the only policy with\n\
                     learned state)\n\
-           multi    --benches A,B,C (same options as run)\n\
+                    [--capture OUT.tr] write the episode's op stream as a\n\
+                    versioned trace file (replayable, bit-identical stats)\n\
+                    [--trace FILE.tr] replay a captured trace instead of\n\
+                    generating (--bench and --scale don't apply)\n\
+           multi    --benches A,B,C (same options as run, including --capture;\n\
+                    replay a multi-program capture with run --trace)\n\
            curriculum --stages A,B+C,D (ordered; + joins a multi-program stage)\n\
                     [--runs N (0 = paper default per stage)] [--scale F]\n\
                     [--resume IN.json] [--checkpoint OUT.json]\n\
@@ -401,18 +406,54 @@ fn real_main() -> Result<(), String> {
     match cmd.as_str() {
         "run" => {
             let cfg = build_cfg(&args)?;
-            let name = args.get("bench").ok_or("run needs --bench")?;
-            let bench = Benchmark::from_name(name)
-                .ok_or_else(|| format!("unknown benchmark {name:?}"))?;
             let runs = args.usize_or("runs", figures::SINGLE_RUNS)?;
             let agent = initial_agent(&args, &cfg)?;
-            let (s, agent) = run_episode_with(&cfg, &[bench], scale, runs, agent)
-                .map_err(|e| e.to_string())?;
+            let (s, agent) = if let Some(path) = args.get("trace") {
+                // Replay: the file is the whole workload definition.
+                if args.get("bench").is_some() {
+                    return Err("--trace replays a captured stream; drop --bench".into());
+                }
+                let file = FileTrace::open(Path::new(path)).map_err(|e| e.to_string())?;
+                println!(
+                    "replaying {path}: {} ({} ops, {} pid(s), captured at scale {})",
+                    file.name(),
+                    file.op_count(),
+                    file.pid_count(),
+                    file.scale()
+                );
+                if let Some(out) = args.get("capture") {
+                    // Re-emit the stream being replayed (canonical form).
+                    let text = file.render().map_err(|e| e.to_string())?;
+                    sweep::atomic_write_text(Path::new(out), &text)
+                        .map_err(|e| e.to_string())?;
+                    println!("captured {out} ({} ops)", file.op_count());
+                }
+                run_traced_with(&cfg, &file, runs, agent).map_err(|e| e.to_string())?
+            } else {
+                let name = args.get("bench").ok_or("run needs --bench (or --trace FILE)")?;
+                let bench = Benchmark::from_name(name)
+                    .ok_or_else(|| format!("unknown benchmark {name:?}"))?;
+                if let Some(out) = args.get("capture") {
+                    let (ops, ep_name) =
+                        episode_ops(&cfg, &[bench], scale).map_err(|e| e.to_string())?;
+                    let text = render_trace(&ep_name, scale, &ops).map_err(|e| e.to_string())?;
+                    sweep::atomic_write_text(Path::new(out), &text)
+                        .map_err(|e| e.to_string())?;
+                    println!("captured {out} ({} ops)", ops.len());
+                }
+                run_episode_with(&cfg, &[bench], scale, runs, agent)
+                    .map_err(|e| e.to_string())?
+            };
             print_summary(&s, &cfg);
             save_checkpoint(&args, agent.as_ref())?;
         }
         "multi" => {
             let cfg = build_cfg(&args)?;
+            if args.get("trace").is_some() {
+                return Err(
+                    "multi generates its stream; replay a capture with run --trace".into()
+                );
+            }
             let list = args.get("benches").ok_or("multi needs --benches A,B,C")?;
             let benches: Vec<Benchmark> = list
                 .split(',')
@@ -426,6 +467,12 @@ fn real_main() -> Result<(), String> {
             }
             let runs = args.usize_or("runs", figures::MULTI_RUNS)?;
             let agent = initial_agent(&args, &cfg)?;
+            if let Some(out) = args.get("capture") {
+                let (ops, ep_name) = episode_ops(&cfg, &benches, scale).map_err(|e| e.to_string())?;
+                let text = render_trace(&ep_name, scale, &ops).map_err(|e| e.to_string())?;
+                sweep::atomic_write_text(Path::new(out), &text).map_err(|e| e.to_string())?;
+                println!("captured {out} ({} ops)", ops.len());
+            }
             let (s, agent) = run_episode_with(&cfg, &benches, scale, runs, agent)
                 .map_err(|e| e.to_string())?;
             print_summary(&s, &cfg);

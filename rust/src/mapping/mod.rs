@@ -42,7 +42,7 @@ pub mod tom;
 
 pub use policy::{
     AimmPolicy, AnyPolicy, BaselinePolicy, CodaGreedy, MappingAction, MappingPolicy,
-    OracleProfile, PolicyCtx, TomPolicy,
+    OracleProfile, OracleProfiler, PolicyCtx, TomPolicy,
 };
 pub use remap_table::ComputeRemapTable;
 pub use tom::{TomEvent, TomMapper, TOM_CANDIDATES};

@@ -657,6 +657,14 @@ impl OracleProfile {
         Self { assignment: profile_assignment(ops, cfg.num_cubes()) }
     }
 
+    /// Build the policy from a dry run performed elsewhere — the replay
+    /// path (`aimm run --trace`) streams the trace file through an
+    /// [`OracleProfiler`] and hands the finished assignment in here,
+    /// never holding the op vector.
+    pub fn from_assignment(assignment: HashMap<(Pid, VPage), CubeId>) -> Self {
+        Self { assignment }
+    }
+
     /// Pages the dry run assigned (diagnostics/tests).
     pub fn assignment(&self) -> &HashMap<(Pid, VPage), CubeId> {
         &self.assignment
@@ -686,54 +694,104 @@ impl MappingPolicy for OracleProfile {
 ///
 /// Pages serving both roles keep their destination assignment (compute
 /// happens there). Pure function of `(ops, n_cubes)`: no RNG, no
-/// simulator state, same input → same map.
+/// simulator state, same input → same map. Thin wrapper over the
+/// streaming [`OracleProfiler`], which the replay path feeds one op at
+/// a time.
 pub fn profile_assignment(ops: &[NmpOp], n_cubes: usize) -> HashMap<(Pid, VPage), CubeId> {
-    // Pass 1: per-destination-page op counts → load-balanced greedy
-    // assignment.
-    let mut dest_ops: HashMap<(Pid, VPage), u64> = HashMap::new();
+    let mut profiler = OracleProfiler::new(n_cubes);
     for op in ops {
-        *dest_ops.entry((op.pid, op.dest_vpage())).or_insert(0) += 1;
+        profiler.observe(op);
     }
-    let mut order: Vec<((Pid, VPage), u64)> = dest_ops.into_iter().collect();
-    order.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
-    let mut load = vec![0u64; n_cubes];
-    let mut assignment: HashMap<(Pid, VPage), CubeId> = HashMap::with_capacity(order.len());
-    for (key, n) in order {
-        let mut best = 0usize;
-        for (c, &l) in load.iter().enumerate().skip(1) {
-            if l < load[best] {
-                best = c;
-            }
-        }
-        load[best] += n;
-        assignment.insert(key, best);
+    profiler.finish()
+}
+
+/// The oracle dry run as a streaming accumulator: [`observe`] each op
+/// as it goes by (memory is bounded by distinct page *pairs*, never the
+/// op count — a trace file streams through without being slurped), then
+/// [`finish`] derives the same assignment [`profile_assignment`]
+/// computes from the whole vector.
+///
+/// Equivalence argument: pass 1 consumes only per-destination-page op
+/// counts (u64 sums — order-invariant). Pass 2's vote for a source key
+/// is `count(src, dest) summed into votes[assignment[dest]]`; grouping
+/// the counts per `(src, dest)` pair first and folding at finish time
+/// sums the same u64s, so the vote vectors — and the strict-`>` argmax
+/// over them — are identical.
+///
+/// [`observe`]: OracleProfiler::observe
+/// [`finish`]: OracleProfiler::finish
+pub struct OracleProfiler {
+    n_cubes: usize,
+    /// Per-destination-page op counts (pass 1 input).
+    dest_ops: HashMap<(Pid, VPage), u64>,
+    /// Per touched page: counts keyed by the destination page of the
+    /// consuming op (pass 2 input, folded through pass 1's assignment
+    /// at finish time).
+    src_pairs: HashMap<(Pid, VPage), HashMap<(Pid, VPage), u64>>,
+}
+
+impl OracleProfiler {
+    pub fn new(n_cubes: usize) -> Self {
+        Self { n_cubes, dest_ops: HashMap::new(), src_pairs: HashMap::new() }
     }
-    // Pass 2: pure source pages follow their consumers.
-    let mut src_votes: HashMap<(Pid, VPage), Vec<u64>> = HashMap::new();
-    for op in ops {
-        let dest_cube = assignment[&(op.pid, op.dest_vpage())];
+
+    /// Accumulate one op.
+    pub fn observe(&mut self, op: &NmpOp) {
+        let dest_key = (op.pid, op.dest_vpage());
+        *self.dest_ops.entry(dest_key).or_insert(0) += 1;
         let (pages, n) = op.vpages_arr();
         for &v in &pages[..n] {
-            let key = (op.pid, v);
+            *self
+                .src_pairs
+                .entry((op.pid, v))
+                .or_default()
+                .entry(dest_key)
+                .or_insert(0) += 1;
+        }
+    }
+
+    /// Close out: the two deterministic passes of the dry run.
+    pub fn finish(self) -> HashMap<(Pid, VPage), CubeId> {
+        // Pass 1: destination pages, hottest first (ties: lowest key),
+        // to the least-loaded cube (ties: lowest cube id).
+        let mut order: Vec<((Pid, VPage), u64)> = self.dest_ops.into_iter().collect();
+        order.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut load = vec![0u64; self.n_cubes];
+        let mut assignment: HashMap<(Pid, VPage), CubeId> = HashMap::with_capacity(order.len());
+        for (key, n) in order {
+            let mut best = 0usize;
+            for (c, &l) in load.iter().enumerate().skip(1) {
+                if l < load[best] {
+                    best = c;
+                }
+            }
+            load[best] += n;
+            assignment.insert(key, best);
+        }
+        // Pass 2: pure source pages follow their consumers. Each
+        // per-key argmax writes an independent slot and the vote sums
+        // are commutative u64 adds, so the resulting map's content is
+        // invariant to visit order of either map.
+        // detlint: allow(hash-iter) — order-invariant per-key inserts
+        for (key, per_dest) in self.src_pairs {
             if assignment.contains_key(&key) {
                 continue; // destination pages stay where pass 1 put them
             }
-            src_votes.entry(key).or_insert_with(|| vec![0u64; n_cubes])[dest_cube] += 1;
-        }
-    }
-    // Each per-key argmax writes an independent slot, so the resulting
-    // map's content is invariant to visit order.
-    // detlint: allow(hash-iter) — order-invariant per-key inserts
-    for (key, votes) in src_votes {
-        let mut best = 0usize;
-        for (c, &v) in votes.iter().enumerate().skip(1) {
-            if v > votes[best] {
-                best = c; // strict >: ties break to the lowest cube
+            let mut votes = vec![0u64; self.n_cubes];
+            // detlint: allow(hash-iter) — commutative u64 vote sums
+            for (dest_key, count) in per_dest {
+                votes[assignment[&dest_key]] += count;
             }
+            let mut best = 0usize;
+            for (c, &v) in votes.iter().enumerate().skip(1) {
+                if v > votes[best] {
+                    best = c; // strict >: ties break to the lowest cube
+                }
+            }
+            assignment.insert(key, best);
         }
-        assignment.insert(key, best);
+        assignment
     }
-    assignment
 }
 
 // ---------------------------------------------------------------------

@@ -23,6 +23,26 @@ pub enum OpKind {
     Min,
 }
 
+impl OpKind {
+    /// Every op kind, in declaration order — the registry the trace-file
+    /// round trip leans on (`name` ↔ `from_name` must be total over it).
+    pub const ALL: [OpKind; 5] = [OpKind::Add, OpKind::Mul, OpKind::Mac, OpKind::Max, OpKind::Min];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Add => "ADD",
+            OpKind::Mul => "MUL",
+            OpKind::Mac => "MAC",
+            OpKind::Max => "MAX",
+            OpKind::Min => "MIN",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|k| k.name().eq_ignore_ascii_case(name))
+    }
+}
+
 /// One NMP operation from an application trace.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NmpOp {
@@ -96,5 +116,14 @@ mod tests {
         assert_eq!(op.dest_vpage(), 3);
         assert_eq!(op.src1_vpage(), 5);
         assert_eq!(op.src2_vpage(), None);
+    }
+
+    #[test]
+    fn op_kind_names_round_trip() {
+        for k in OpKind::ALL {
+            assert_eq!(OpKind::from_name(k.name()), Some(k), "{}", k.name());
+            assert_eq!(OpKind::from_name(&k.name().to_lowercase()), Some(k));
+        }
+        assert_eq!(OpKind::from_name("XOR"), None);
     }
 }

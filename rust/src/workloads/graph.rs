@@ -1,0 +1,157 @@
+//! GCM: garbage-collector mark phase over a seeded object graph.
+//!
+//! The first genuinely new scenario class beyond the paper's Table 2
+//! kernels: a pointer-chasing traversal whose *next* page depends on
+//! the *previous* load — the access pattern where static mappings
+//! collapse and the data-dependent co-location argument (CODA) was
+//! made. The generator builds a connected object graph with allocation
+//! locality (most pointers stay inside a recent allocation window, a
+//! minority jump far back, like old-to-young references), then emits
+//! the op stream of a depth-first mark phase: one load per edge, reading
+//! the child's header through the slot in the parent it was chased
+//! from. Two mark cycles run over the same heap so mapping policies see
+//! page reuse, not a single cold sweep.
+//!
+//! Everything is a pure function of `(pid, scale, rng)` with splitmix64
+//! as the only entropy source — same determinism contract as every
+//! generator in [`super::gen`].
+
+use crate::config::Pid;
+use crate::nmp::{NmpOp, OpKind};
+use crate::sim::Rng;
+
+use super::gen::sc;
+use super::trace::Layout;
+
+/// Objects per heap page: 128-byte objects on 4 KiB pages.
+const OBJS_PER_PAGE: u64 = 32;
+/// Allocation-locality window: a child's parent pointer stays within
+/// the most recent `WINDOW` allocations with probability [`NEAR_FRAC`].
+const WINDOW: usize = 64;
+const NEAR_FRAC: f64 = 0.7;
+/// Extra (sharing) edges beyond the spanning tree, as a fraction of the
+/// object count — brings the edge count to ≈1.5 per object.
+const EXTRA_EDGE_FRAC: f64 = 0.5;
+/// Mark cycles emitted over the same heap.
+const CYCLES: usize = 2;
+
+/// One edge's parent draw: near the allocation point with probability
+/// `NEAR_FRAC`, else uniform over every earlier object. Parents always
+/// precede children, so object 0 reaches the whole heap.
+fn parent_of(child: usize, rng: &mut Rng) -> usize {
+    let lo = child.saturating_sub(WINDOW);
+    if lo > 0 && rng.chance(NEAR_FRAC) {
+        lo + rng.index(child - lo)
+    } else {
+        rng.index(child)
+    }
+}
+
+/// GCM trace: seeded object graph + DFS mark-phase op stream.
+pub(crate) fn gen_gcm(pid: Pid, scale: f64, rng: &mut Rng) -> Vec<NmpOp> {
+    let heap_pages = sc(90.0, scale);
+    let n = (heap_pages * OBJS_PER_PAGE) as usize;
+    let mut l = Layout::default();
+    let heap = l.region(heap_pages);
+    // Object `o` lives at a 128-byte slot: byte 0..16 header (mark word),
+    // bytes 16.. the pointer slots the traversal chases.
+    let addr =
+        |o: usize| heap.page_addr(o as u64 / OBJS_PER_PAGE) + (o as u64 % OBJS_PER_PAGE) * 128;
+
+    // Spanning tree (one parent per object, allocation order) plus extra
+    // sharing edges: a connected graph with in-degree variance, built
+    // before any ops are emitted so graph shape and traversal order draw
+    // from the same seeded stream deterministically.
+    let mut children: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 1..n {
+        children[parent_of(i, rng)].push(i as u32);
+    }
+    for _ in 0..((n as f64 * EXTRA_EDGE_FRAC) as usize) {
+        let c = 1 + rng.index(n - 1);
+        children[parent_of(c, rng)].push(c as u32);
+    }
+
+    let mut ops = Vec::with_capacity(CYCLES * (n + n / 2));
+    for _cycle in 0..CYCLES {
+        let mut visited = vec![false; n];
+        let mut stack = vec![0u32];
+        visited[0] = true;
+        while let Some(o) = stack.pop() {
+            let o = o as usize;
+            for (slot, &c) in children[o].iter().enumerate() {
+                // The mark-test load: dest is the child's mark word,
+                // src1 the parent slot it was chased from. Emitted even
+                // for already-marked children — the mark test happens
+                // per edge, the traversal only per object.
+                ops.push(NmpOp {
+                    pid,
+                    kind: OpKind::Max,
+                    dest: addr(c as usize),
+                    src1: addr(o) + 16 + (slot as u64 % 14) * 8,
+                    src2: None,
+                });
+                if !visited[c as usize] {
+                    visited[c as usize] = true;
+                    stack.push(c);
+                }
+            }
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{analysis, generate, Benchmark};
+
+    #[test]
+    fn every_object_is_marked_each_cycle() {
+        let t = generate(Benchmark::Gcm, 1, 0.25, 7);
+        let n = t.ops.len();
+        // Connected: with every object reachable from object 0, each
+        // cycle emits one op per edge and edges ≥ objects - 1.
+        let heap_pages = sc(90.0, 1.0);
+        let objs = heap_pages * OBJS_PER_PAGE;
+        assert!(n as u64 >= CYCLES as u64 * (objs - 1), "{n} ops for {objs} objects");
+        // Both cycles traverse the same graph in the same order.
+        let half = n / 2;
+        assert_eq!(n % 2, 0);
+        assert_eq!(t.ops[..half], t.ops[half..], "mark cycles diverged");
+    }
+
+    #[test]
+    fn traversal_is_pointer_chasing_not_streaming() {
+        let t = generate(Benchmark::Gcm, 1, 0.25, 7);
+        // Consecutive destination pages mostly differ — the next load's
+        // page is data-dependent, unlike MAC's page-at-a-time stream.
+        let jumps = t
+            .ops
+            .windows(2)
+            .filter(|w| w[0].dest_vpage() != w[1].dest_vpage())
+            .count();
+        assert!(
+            jumps * 2 > t.ops.len(),
+            "GCM looks sequential: {jumps} page changes in {} ops",
+            t.ops.len()
+        );
+        // And the instantaneous working set is large: many pages active
+        // per epoch, as a heap traversal should be.
+        let active = analysis::mean_active_pages(&t, 512);
+        assert!(active > 10.0, "GCM active pages {active}");
+    }
+
+    #[test]
+    fn locality_mix_keeps_some_edges_near() {
+        let t = generate(Benchmark::Gcm, 1, 0.25, 7);
+        // An edge is "near" when parent and child pages are within the
+        // allocation window (64 objects = 2 pages).
+        let near = t
+            .ops
+            .iter()
+            .filter(|o| o.dest_vpage().abs_diff(o.src1_vpage()) <= 2)
+            .count();
+        let frac = near as f64 / t.ops.len() as f64;
+        assert!((0.2..0.95).contains(&frac), "near-edge fraction {frac}");
+    }
+}

@@ -1,6 +1,7 @@
 //! Workloads: synthetic NMP-op trace generators for the paper's nine
-//! benchmark kernels (Table 2), the workload-analysis functions behind
-//! Fig 5, and multi-program composition (§7.5.2).
+//! benchmark kernels (Table 2) plus the GCM pointer-chasing family, the
+//! workload-analysis functions behind Fig 5, multi-program composition
+//! (§7.5.2), and the trace capture/replay frontend.
 //!
 //! The authors collected traces by annotating NMP-friendly regions of
 //! Rodinia / CRONO / CortexSuite binaries; we do not have those traces
@@ -12,19 +13,31 @@
 //!
 //! Layout of the module:
 //!
-//! * [`gen`] — the nine per-kernel generators behind
+//! * [`gen`] — the per-kernel generators behind
 //!   [`gen::generate`] / [`gen::Benchmark`], each documented with the
 //!   access shape it reproduces (streaming MAC, power-law SPMV, blocked
 //!   LUD, …). Traces depend only on `(benchmark, pid, scale, seed)` —
 //!   never on topology, mapping scheme or engine — which is what lets
 //!   sweep cells hold the workload constant while varying everything
 //!   else.
+//! * [`graph`] — the GCM generator: a seeded object graph walked by a
+//!   DFS mark phase, the pointer-chasing scenario class where the next
+//!   page is data-dependent (registered as [`gen::Benchmark::Gcm`]).
 //! * [`trace`] — the [`trace::Trace`] container (one application's
 //!   episode, §6.1): the op stream, its pid, and footprint helpers like
 //!   [`trace::Trace::distinct_pages`].
 //! * [`multi`] — [`multi::interleave`]: deterministic multi-program
 //!   composition with per-pid relabeling (the §7.5.2 mixes, and the
 //!   `A+B` combos of `aimm sweep`/`curriculum`).
+//! * [`provider`] — the [`provider::TraceProvider`] seam the
+//!   coordinator consumes op streams through:
+//!   [`provider::GeneratedProvider`] wraps in-memory traces
+//!   bit-identically, [`trace_file::FileProvider`] streams captured
+//!   files with bounded lookahead.
+//! * [`trace_file`] — the versioned `aimm-trace-v1` capture/replay file
+//!   format (DESIGN.md §14): render/parse, the validated
+//!   [`trace_file::FileTrace`] handle, and the streaming reader behind
+//!   `aimm run --trace`.
 //! * [`analysis`] — the Fig 5 measurement functions
 //!   ([`analysis::classify_pages`], [`analysis::mean_active_pages`],
 //!   [`analysis::affinity_quadrants`]) that validate the generators
@@ -37,8 +50,11 @@
 pub mod analysis;
 pub mod arrivals;
 pub mod gen;
+pub mod graph;
 pub mod multi;
+pub mod provider;
 pub mod trace;
+pub mod trace_file;
 
 pub use analysis::{
     affinity_quadrants, classify_pages, mean_active_pages, AffinityQuadrants, PageClasses,
@@ -46,4 +62,6 @@ pub use analysis::{
 pub use arrivals::{arrival_schedule, ArrivalProcess};
 pub use gen::{generate, Benchmark};
 pub use multi::interleave;
+pub use provider::{GeneratedProvider, TraceProvider};
 pub use trace::Trace;
+pub use trace_file::{render_trace, FileProvider, FileTrace};

@@ -1,0 +1,176 @@
+//! The trace-provider seam: how op streams reach the coordinator.
+//!
+//! [`System`](crate::coordinator::System) consumes its workload through
+//! this trait instead of owning a `Vec<NmpOp>`, so the same simulator
+//! core runs generated traces (wrapped whole, bit-identical to the old
+//! vector path) and captured trace files (streamed through a bounded
+//! lookahead buffer, never slurped — see
+//! [`FileProvider`](super::trace_file::FileProvider)).
+//!
+//! The contract (DESIGN.md §14):
+//!
+//! - **peek-then-consume.** `peek` exposes the next op without taking
+//!   it; `consume` commits it. The coordinator's backpressure loop
+//!   needs this split: an op refused by a full memory-controller queue
+//!   must stay the next op.
+//! - **eager refill.** Implementations refill their lookahead at
+//!   construction and after every `consume`, so `peek` and `drained`
+//!   are `&self` and infallible; I/O and parse errors surface from
+//!   `consume` only, and propagate loudly out of the simulation tick.
+//! - **incremental stats.** Op counts and the distinct-page count are
+//!   maintained as ops stream through, so no implementation needs the
+//!   whole trace in memory to answer end-of-run statistics.
+
+use std::collections::HashSet;
+
+use crate::config::{Pid, VPage};
+use crate::nmp::NmpOp;
+
+/// A stream of NMP ops with bounded lookahead. `Send` because sweep
+/// cells construct and run systems inside worker threads.
+pub trait TraceProvider: Send {
+    /// The next op, if any. Does not advance the stream.
+    fn peek(&self) -> Option<NmpOp>;
+
+    /// Commit the op last returned by [`peek`](Self::peek) and advance.
+    /// Errors are I/O or parse failures on the underlying source;
+    /// calling with nothing buffered is a caller bug and panics.
+    fn consume(&mut self) -> anyhow::Result<()>;
+
+    /// Ops consumed so far — the op index the coordinator round-robins
+    /// memory controllers on.
+    fn consumed(&self) -> u64;
+
+    /// True once every op has been consumed.
+    fn drained(&self) -> bool;
+
+    /// Total ops in the stream (known up front for both implementations:
+    /// generated traces own the vector, trace files declare the count in
+    /// their header).
+    fn total_ops(&self) -> u64;
+
+    /// The process ids appearing in the stream, ascending.
+    fn pids(&self) -> &[Pid];
+
+    /// Distinct `(pid, vpage)` pairs observed — the denominator of the
+    /// migration-coverage statistics.
+    fn distinct_pages(&self) -> u64;
+}
+
+/// The generated-trace provider: wraps an in-memory op vector. This is
+/// the exact op stream, order and bookkeeping the coordinator ran on
+/// before the provider seam existed — the golden sweep fixture pins
+/// that equivalence byte-for-byte.
+pub struct GeneratedProvider {
+    ops: Vec<NmpOp>,
+    pos: usize,
+    pids: Vec<Pid>,
+    distinct_pages: u64,
+}
+
+impl GeneratedProvider {
+    pub fn new(ops: Vec<NmpOp>) -> Self {
+        let mut pids: Vec<Pid> = ops.iter().map(|o| o.pid).collect();
+        pids.sort_unstable();
+        pids.dedup();
+        // Whole-trace distinct pages up front (the vector is already in
+        // memory): keeps mid-run statistics identical to the pre-seam
+        // coordinator, which always counted over the full trace.
+        let distinct: HashSet<(Pid, VPage)> = ops
+            .iter()
+            .flat_map(|o| {
+                let (pages, n) = o.vpages_arr();
+                (0..n).map(move |i| (o.pid, pages[i]))
+            })
+            .collect();
+        let distinct_pages = distinct.len() as u64;
+        GeneratedProvider { ops, pos: 0, pids, distinct_pages }
+    }
+}
+
+impl TraceProvider for GeneratedProvider {
+    fn peek(&self) -> Option<NmpOp> {
+        self.ops.get(self.pos).copied()
+    }
+
+    fn consume(&mut self) -> anyhow::Result<()> {
+        assert!(self.pos < self.ops.len(), "consume past the end of a generated trace");
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn consumed(&self) -> u64 {
+        self.pos as u64
+    }
+
+    fn drained(&self) -> bool {
+        self.pos >= self.ops.len()
+    }
+
+    fn total_ops(&self) -> u64 {
+        self.ops.len() as u64
+    }
+
+    fn pids(&self) -> &[Pid] {
+        &self.pids
+    }
+
+    fn distinct_pages(&self) -> u64 {
+        self.distinct_pages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmp::OpKind;
+
+    fn op(pid: Pid, dest: u64, src1: u64) -> NmpOp {
+        NmpOp { pid, kind: OpKind::Add, dest, src1, src2: None }
+    }
+
+    #[test]
+    fn generated_provider_streams_the_vector_in_order() {
+        let ops = vec![op(1, 0x1000, 0x2000), op(2, 0x3000, 0x4000), op(1, 0x1008, 0x2008)];
+        let mut p = GeneratedProvider::new(ops.clone());
+        assert_eq!(p.total_ops(), 3);
+        assert_eq!(p.pids(), &[1, 2]);
+        let mut seen = Vec::new();
+        while let Some(o) = p.peek() {
+            assert_eq!(p.consumed(), seen.len() as u64);
+            seen.push(o);
+            p.consume().unwrap();
+        }
+        assert_eq!(seen, ops);
+        assert!(p.drained());
+        assert_eq!(p.consumed(), 3);
+    }
+
+    #[test]
+    fn distinct_pages_key_on_pid_and_page() {
+        // Same vpage under two pids counts twice; repeated pages once.
+        let p = GeneratedProvider::new(vec![
+            op(1, 0x1000, 0x2000),
+            op(1, 0x1010, 0x2020),
+            op(2, 0x1000, 0x2000),
+        ]);
+        assert_eq!(p.distinct_pages(), 4);
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let p = GeneratedProvider::new(vec![op(1, 0x1000, 0x2000)]);
+        assert_eq!(p.peek(), p.peek());
+        assert_eq!(p.consumed(), 0);
+        assert!(!p.drained());
+    }
+
+    #[test]
+    fn empty_trace_is_born_drained() {
+        let p = GeneratedProvider::new(Vec::new());
+        assert!(p.drained());
+        assert_eq!(p.peek(), None);
+        assert_eq!(p.distinct_pages(), 0);
+        assert!(p.pids().is_empty());
+    }
+}

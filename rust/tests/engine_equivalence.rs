@@ -148,6 +148,31 @@ fn engines_are_bit_identical_on_torus_and_ring() {
     }
 }
 
+/// The GCM pointer-chasing trace family (workloads/graph.rs) keeps the
+/// polled/event contract under every paper mapping. GCM's op stream is
+/// the adversarial case for the event engine's time skip — long
+/// dependence-free load chains touching scattered pages — so it gets
+/// dedicated cells rather than riding the cycling grid.
+#[test]
+fn engines_are_bit_identical_on_gcm() {
+    for mapping in MappingScheme::PAPER {
+        let mut polled_cfg = cell_cfg(Technique::Bnmp, mapping, 29);
+        polled_cfg.engine = Engine::Polled;
+        let mut event_cfg = cell_cfg(Technique::Bnmp, mapping, 29);
+        event_cfg.engine = Engine::Event;
+        let ctx = format!("GCM/{mapping}");
+        let p = run_cell(&polled_cfg, &[Benchmark::Gcm], 0.03, 2)
+            .unwrap_or_else(|e| panic!("polled {ctx}: {e}"));
+        let e = run_cell(&event_cfg, &[Benchmark::Gcm], 0.03, 2)
+            .unwrap_or_else(|e| panic!("event {ctx}: {e}"));
+        assert_eq!(p.runs.len(), e.runs.len(), "{ctx}");
+        for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+            assert_identical(rp, re, &format!("{ctx} run {i}"));
+        }
+        assert!(p.last().ops_completed > 0, "{ctx}: cell must actually run");
+    }
+}
+
 #[test]
 fn engines_are_bit_identical_on_the_8x8_mesh_with_hoard() {
     // The mesh-scaling + multi-program corner: 64 cubes, HOARD frame

@@ -103,6 +103,35 @@ fn coda_and_oracle_cells_identical_at_any_worker_count() {
     }
 }
 
+/// The GCM trace family (registry addition, not part of the paper's
+/// Table 2 set) obeys the worker-count contract like any other cell:
+/// its seeded graph build and mark-phase walk are pure functions of
+/// `(pid, scale, seed)`, so GCM cells — alone and interleaved with a
+/// paper benchmark — are byte-identical at any worker count.
+#[test]
+fn gcm_cells_identical_at_any_worker_count() {
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches = vec![vec![Benchmark::Gcm], vec![Benchmark::Gcm, Benchmark::Mac]];
+    g.mappings = vec![MappingScheme::Baseline, MappingScheme::Aimm];
+    let cells = g.cells();
+    assert_eq!(cells.len(), 4);
+    let serial = run_grid(&cells, 1).expect("serial gcm sweep");
+    let parallel = run_grid(&cells, 4).expect("parallel gcm sweep");
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            cell_json(s),
+            cell_json(p),
+            "cell {} diverged between 1 and 4 workers",
+            s.cell.name()
+        );
+    }
+    assert_eq!(report_json(&serial), report_json(&parallel));
+    for r in &serial {
+        assert!(r.summary.last().ops_completed > 0, "{}", r.cell.name());
+        assert!(r.cell.name().contains("GCM"), "{}", r.cell.name());
+    }
+}
+
 /// Shard-count invariance: slicing the default test grid 2-of-2 or
 /// 4-of-4, running every slice at a *different* worker count, and
 /// merging the journal entries reproduces the unsharded report

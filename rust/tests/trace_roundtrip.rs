@@ -1,0 +1,392 @@
+//! The aimm-trace-v1 capture/replay battery (EXPERIMENTS.md §Trace,
+//! DESIGN.md §14). Locks down the trace frontend's headline guarantee —
+//! a captured episode replays **bit-identically** to the generated run
+//! under both engines — plus the format's canonical-form property
+//! (write→parse→write is the identity on bytes), the parser's loud
+//! failure modes, the streaming reader's bounded lookahead, and a
+//! committed golden trace whose replay stats are byte-pinned across PRs.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use aimm::bench::sweep::{atomic_write_text, stats_json};
+use aimm::config::{Engine, MappingScheme, SystemConfig, Technique};
+use aimm::coordinator::{episode_ops, fresh_agent, run_episode_with, run_traced_with, System};
+use aimm::mapping::AnyPolicy;
+use aimm::metrics::RunStats;
+use aimm::nmp::{NmpOp, OpKind};
+use aimm::workloads::{generate, render_trace, Benchmark, FileProvider, FileTrace, TraceProvider};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("aimm_trace_rt_{}_{name}", std::process::id()))
+}
+
+fn write_tmp(name: &str, text: &str) -> PathBuf {
+    let p = tmp(name);
+    atomic_write_text(&p, text).expect("write temp trace");
+    p
+}
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Bit-level identity, same digest the engine-equivalence suite pins:
+/// the fixed-key JSON covers every scalar aggregate, the timeline and
+/// float fields are compared through their raw bits.
+fn assert_identical(g: &RunStats, r: &RunStats, ctx: &str) {
+    assert_eq!(stats_json(g), stats_json(r), "stats diverged: {ctx}");
+    assert_eq!(g.opc_timeline.len(), r.opc_timeline.len(), "timeline length: {ctx}");
+    for (i, (a, b)) in g.opc_timeline.iter().zip(&r.opc_timeline).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "timeline[{i}]: {ctx}");
+    }
+}
+
+fn capture_of(cfg: &SystemConfig, benches: &[Benchmark], scale: f64, tag: &str) -> FileTrace {
+    let (ops, name) = episode_ops(cfg, benches, scale).expect("episode ops");
+    let text = render_trace(&name, scale, &ops).expect("render capture");
+    let path = write_tmp(&format!("cap_{tag}.tr"), &text);
+    FileTrace::open(&path).expect("open capture")
+}
+
+// ---------------------------------------------------------------------
+// Tentpole: capture → replay is bit-identical
+// ---------------------------------------------------------------------
+
+/// Three benchmarks (incl. the GCM trace family) × two offload
+/// techniques × both engines, two runs each: the replayed episode's
+/// stats match the generated episode's to the bit on every run.
+#[test]
+fn capture_replay_is_bit_identical_across_benchmarks_techniques_engines() {
+    for bench in [Benchmark::Mac, Benchmark::Spmv, Benchmark::Gcm] {
+        for technique in [Technique::Bnmp, Technique::Pei] {
+            for engine in Engine::ALL {
+                let mut cfg = SystemConfig::default();
+                cfg.technique = technique;
+                cfg.engine = engine;
+                let ctx = format!("{}/{}/{}", bench.name(), technique.name(), engine.name());
+                let file = capture_of(&cfg, &[bench], 0.03, &ctx.replace('/', "_"));
+                let (gen_s, _) =
+                    run_episode_with(&cfg, &[bench], 0.03, 2, None).expect("generated");
+                let (rep_s, _) = run_traced_with(&cfg, &file, 2, None).expect("replayed");
+                assert_eq!(gen_s.runs.len(), rep_s.runs.len(), "{ctx}");
+                for (i, (g, r)) in gen_s.runs.iter().zip(&rep_s.runs).enumerate() {
+                    assert_identical(g, r, &format!("{ctx} run {i}"));
+                }
+            }
+        }
+    }
+}
+
+/// The learning policy replays too: a multi-program capture (interleaved
+/// pids) under AIMM, with identically-seeded cold agents on both sides,
+/// stays bit-identical across both runs — the agent sees the same op
+/// stream through either frontend.
+#[test]
+fn multi_program_capture_replays_bit_identically_under_aimm() {
+    let mut cfg = SystemConfig::default();
+    cfg.mapping = MappingScheme::Aimm;
+    let benches = [Benchmark::Rd, Benchmark::Km];
+    let file = capture_of(&cfg, &benches, 0.03, "multi_aimm");
+    assert_eq!(file.pid_count(), 2, "multi-program capture carries both pids");
+    let (gen_s, _) =
+        run_episode_with(&cfg, &benches, 0.03, 2, Some(fresh_agent(&cfg).unwrap()))
+            .expect("generated");
+    let (rep_s, _) = run_traced_with(&cfg, &file, 2, Some(fresh_agent(&cfg).unwrap()))
+        .expect("replayed");
+    for (i, (g, r)) in gen_s.runs.iter().zip(&rep_s.runs).enumerate() {
+        assert_identical(g, r, &format!("RD-KM/AIMM run {i}"));
+    }
+}
+
+/// The oracle's replay path profiles the trace by *streaming* it
+/// (OracleProfiler) where the generated path profiles the op vector —
+/// the two assignments, and therefore the runs, must agree to the bit.
+#[test]
+fn oracle_replay_matches_generated_oracle_bit_for_bit() {
+    let mut cfg = SystemConfig::default();
+    cfg.mapping = MappingScheme::Oracle;
+    let file = capture_of(&cfg, &[Benchmark::Spmv], 0.03, "oracle");
+    let (gen_s, _) = run_episode_with(&cfg, &[Benchmark::Spmv], 0.03, 2, None).expect("generated");
+    let (rep_s, _) = run_traced_with(&cfg, &file, 2, None).expect("replayed");
+    for (i, (g, r)) in gen_s.runs.iter().zip(&rep_s.runs).enumerate() {
+        assert_identical(g, r, &format!("SPMV/ORACLE run {i}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Canonical form: write → parse → write is the identity
+// ---------------------------------------------------------------------
+
+#[test]
+fn write_parse_write_is_byte_identical_for_every_benchmark() {
+    for b in Benchmark::ALL {
+        let trace = generate(b, 1, 0.02, 11);
+        let text = render_trace(b.name(), 0.02, &trace.ops).expect("render");
+        let path = write_tmp(&format!("wpw_{}.tr", b.name()), &text);
+        let file = FileTrace::open(&path).expect("parse");
+        assert_eq!(file.render().expect("re-render"), text, "{} drifted", b.name());
+        let _ = std::fs::remove_file(path);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden fixture: committed trace, byte-pinned replay stats
+// ---------------------------------------------------------------------
+
+/// The committed hand-written trace parses, is already in canonical
+/// form, and replays to stats pinned byte-for-byte across PRs.
+/// Bootstrapping mirrors sweep_golden.rs: on a checkout without the
+/// stats pin, both engines must agree before the pin is written.
+#[test]
+fn golden_trace_fixture_replays_to_pinned_stats() {
+    let tr = fixture("trace_golden.tr");
+    let file = FileTrace::open(&tr).expect("golden trace parses");
+    assert_eq!(file.name(), "GOLDEN");
+    assert_eq!((file.pid_count(), file.op_count()), (2, 10));
+    let committed = std::fs::read_to_string(&tr).expect("read golden trace");
+    assert_eq!(
+        file.render().expect("render"),
+        committed,
+        "committed golden trace is not in canonical writer form"
+    );
+
+    let cfg = SystemConfig::default();
+    let (s, _) = run_traced_with(&cfg, &file, 2, None).expect("replay golden");
+    let digest = |runs: &[RunStats]| {
+        format!("[{}]", runs.iter().map(stats_json).collect::<Vec<_>>().join(","))
+    };
+    let got = digest(&s.runs);
+    let pin = fixture("trace_golden_stats.json");
+    if !pin.exists() {
+        let mut polled = SystemConfig::default();
+        polled.engine = Engine::Polled;
+        let (p, _) = run_traced_with(&polled, &file, 2, None).expect("replay golden (polled)");
+        assert_eq!(
+            got,
+            digest(&p.runs),
+            "engines disagree on the golden trace — refusing to bootstrap the stats pin"
+        );
+        std::fs::write(&pin, &got).expect("bootstrap golden trace stats");
+        eprintln!("bootstrapped {} — commit it to pin cross-PR replay behaviour", pin.display());
+        return;
+    }
+    let golden = std::fs::read_to_string(&pin).expect("read golden stats");
+    assert_eq!(
+        got, golden,
+        "golden trace replay diverged from {} — if the behavioural change is \
+         intentional, delete the pin, rerun, and commit the regenerated file",
+        pin.display()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Parser failure modes: loud, with path:line
+// ---------------------------------------------------------------------
+
+/// A tiny canonical trace (header + 3 ops) the negative tests mutate.
+fn tiny_ops() -> Vec<NmpOp> {
+    vec![
+        NmpOp { pid: 1, kind: OpKind::Add, dest: 0x1000, src1: 0x2000, src2: None },
+        NmpOp { pid: 2, kind: OpKind::Mac, dest: 0x3000, src1: 0x4000, src2: Some(0x5000) },
+        NmpOp { pid: 1, kind: OpKind::Max, dest: 0x1000, src1: 0x3000, src2: None },
+    ]
+}
+
+fn tiny_text() -> String {
+    render_trace("TINY", 0.25, &tiny_ops()).expect("tiny trace")
+}
+
+fn open_err(name: &str, text: &str) -> String {
+    let path = write_tmp(name, text);
+    let err = FileTrace::open(&path).expect_err("open must fail");
+    let chain = format!("{err:#}");
+    let _ = std::fs::remove_file(&path);
+    chain
+}
+
+#[test]
+fn open_rejects_truncated_file_with_line_number() {
+    let text = tiny_text();
+    let truncated: String = text.lines().take(3).map(|l| format!("{l}\n")).collect();
+    let err = open_err("trunc.tr", &truncated);
+    assert!(err.contains("truncated trace"), "{err}");
+    assert!(err.contains("header declares 3 ops, file ends after 2"), "{err}");
+    assert!(err.contains(":4"), "missing line number: {err}");
+}
+
+#[test]
+fn open_rejects_garbage_op_line_with_line_number() {
+    let text = tiny_text().replace(
+        "{\"pid\":\"0x2\",\"kind\":\"MAC\"",
+        "this is not json {\"pid\":\"0x2\",\"kind\":\"MAC\"",
+    );
+    let err = open_err("garbage.tr", &text);
+    assert!(err.contains("op line is not valid JSON"), "{err}");
+    assert!(err.contains(":3"), "missing line number: {err}");
+}
+
+#[test]
+fn open_rejects_extra_ops_as_header_count_mismatch() {
+    let mut text = tiny_text();
+    let last = text.lines().last().unwrap().to_string();
+    text.push_str(&last);
+    text.push('\n');
+    let err = open_err("extra.tr", &text);
+    assert!(err.contains("content after the declared 3 ops"), "{err}");
+    assert!(err.contains("header op count mismatch"), "{err}");
+    assert!(err.contains(":5"), "missing line number: {err}");
+}
+
+#[test]
+fn open_rejects_duplicate_header_with_line_number() {
+    // Concatenating two captures: the second header lands mid-file.
+    let tiny = tiny_text();
+    let header = tiny.lines().next().unwrap();
+    let mut lines: Vec<&str> = tiny.lines().collect();
+    lines.insert(2, header);
+    let text: String = lines.iter().map(|l| format!("{l}\n")).collect();
+    let err = open_err("dup.tr", &text);
+    assert!(err.contains("duplicate header line"), "{err}");
+    assert!(err.contains(":3"), "missing line number: {err}");
+}
+
+#[test]
+fn open_rejects_pid_outside_declared_range() {
+    use aimm::workloads::trace_file::{header_line, op_line};
+    let op = NmpOp { pid: 2, kind: OpKind::Add, dest: 0x1000, src1: 0x2000, src2: None };
+    let text = format!("{}\n{}\n", header_line("T", 1, 0.5, 1), op_line(&op));
+    let err = open_err("pid_range.tr", &text);
+    assert!(err.contains("outside the declared range 1..=1"), "{err}");
+    assert!(err.contains(":2"), "missing line number: {err}");
+}
+
+#[test]
+fn open_rejects_missing_pid_coverage() {
+    use aimm::workloads::trace_file::{header_line, op_line};
+    let op = NmpOp { pid: 1, kind: OpKind::Add, dest: 0x1000, src1: 0x2000, src2: None };
+    let text = format!("{}\n{}\n", header_line("T", 2, 0.5, 1), op_line(&op));
+    let err = open_err("pid_cover.tr", &text);
+    assert!(err.contains("header declares 2 pid(s) but pid 2 never appears"), "{err}");
+}
+
+#[test]
+fn open_rejects_wrong_schema_and_empty_file() {
+    // The wrong tag is built at runtime — a literal would trip the
+    // detlint schema-freeze rule.
+    let wrong = "aimm-trace-v1".replace("v1", "v9");
+    let text = tiny_text().replace("aimm-trace-v1", &wrong);
+    let err = open_err("schema.tr", &text);
+    assert!(err.contains("expected schema"), "{err}");
+    assert!(err.contains(":1"), "missing line number: {err}");
+    let err = open_err("empty.tr", "");
+    assert!(err.contains("empty file (no header line)"), "{err}");
+}
+
+#[test]
+fn blank_lines_are_ignored_everywhere() {
+    let tiny = tiny_text();
+    let spaced: String = tiny.lines().map(|l| format!("\n{l}\n\n")).collect();
+    let path = write_tmp("spaced.tr", &spaced);
+    let file = FileTrace::open(&path).expect("blank lines are legal");
+    assert_eq!(file.op_count(), 3);
+    // Canonical render strips the blanks again.
+    assert_eq!(file.render().unwrap(), tiny);
+    let _ = std::fs::remove_file(path);
+}
+
+// ---------------------------------------------------------------------
+// Streaming contract: bounded lookahead, never slurps
+// ---------------------------------------------------------------------
+
+/// A counting wrapper asserting the lookahead occupancy never exceeds
+/// the configured cap while a full simulation drains the provider.
+struct CappedCheck {
+    inner: FileProvider,
+    cap: usize,
+    max_buffered: Arc<AtomicUsize>,
+}
+
+impl TraceProvider for CappedCheck {
+    fn peek(&self) -> Option<NmpOp> {
+        self.inner.peek()
+    }
+    fn consume(&mut self) -> anyhow::Result<()> {
+        self.inner.consume()?;
+        let b = self.inner.buffered();
+        assert!(b <= self.cap, "lookahead {b} exceeded cap {}", self.cap);
+        self.max_buffered.fetch_max(b, Ordering::Relaxed);
+        Ok(())
+    }
+    fn consumed(&self) -> u64 {
+        self.inner.consumed()
+    }
+    fn drained(&self) -> bool {
+        self.inner.drained()
+    }
+    fn total_ops(&self) -> u64 {
+        self.inner.total_ops()
+    }
+    fn pids(&self) -> &[aimm::config::Pid] {
+        self.inner.pids()
+    }
+    fn distinct_pages(&self) -> u64 {
+        self.inner.distinct_pages()
+    }
+}
+
+/// Replays a >100k-op capture through an 8-op lookahead: completion
+/// proves the reader streams (a slurping reader would need the whole op
+/// vector; the probe proves at most 8 ops were ever buffered).
+#[test]
+fn large_trace_replays_through_a_tiny_bounded_buffer() {
+    let trace = generate(Benchmark::Mac, 1, 2.0, 11);
+    assert!(trace.ops.len() > 100_000, "need >100k ops, got {}", trace.ops.len());
+    let text = render_trace("MAC-big", 2.0, &trace.ops).expect("render big");
+    let path = write_tmp("big.tr", &text);
+    let file = FileTrace::open(&path).expect("open big");
+    let max = Arc::new(AtomicUsize::new(0));
+    let provider = CappedCheck {
+        inner: file.provider_with_cap(8).expect("capped provider"),
+        cap: 8,
+        max_buffered: max.clone(),
+    };
+    let cfg = SystemConfig::default();
+    let policy = AnyPolicy::new(&cfg, &[], None);
+    let mut sys = System::with_provider(cfg.clone(), Box::new(provider), policy);
+    let stats = sys.run().expect("bounded replay");
+    assert_eq!(stats.ops_completed, trace.ops.len() as u64);
+    let m = max.load(Ordering::Relaxed);
+    assert!(m > 0 && m <= 8, "lookahead probe out of range: {m}");
+    let _ = std::fs::remove_file(path);
+}
+
+/// The provider trait stays object-safe: System consumes it boxed.
+#[test]
+fn provider_trait_is_object_safe_and_reports_totals() {
+    let text = tiny_text();
+    let path = write_tmp("dyn.tr", &text);
+    let file = FileTrace::open(&path).expect("open");
+    let p: Box<dyn TraceProvider> = Box::new(file.provider().expect("provider"));
+    assert_eq!(p.total_ops(), 3);
+    assert_eq!(p.pids(), &[1, 2]);
+    assert!(!p.drained());
+    let _ = std::fs::remove_file(path);
+}
+
+/// The provider seam keeps `distinct_pages` exact: at end of run the
+/// streaming count equals the eager whole-trace count.
+#[test]
+fn streaming_distinct_pages_matches_the_eager_count() {
+    let trace = generate(Benchmark::Spmv, 1, 0.03, 11);
+    let text = render_trace("SPMV", 0.03, &trace.ops).expect("render");
+    let path = write_tmp("distinct.tr", &text);
+    let file = FileTrace::open(&path).expect("open");
+    let mut p = file.provider().expect("provider");
+    while p.peek().is_some() {
+        p.consume().expect("consume");
+    }
+    assert_eq!(p.distinct_pages(), trace.distinct_pages() as u64);
+    let _ = std::fs::remove_file(path);
+}
