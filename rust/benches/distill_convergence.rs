@@ -1,0 +1,120 @@
+//! Bench: oracle-distillation convergence study (EXPERIMENTS.md
+//! §Distill). Runs the §6.1 five-run episode protocol from four
+//! starting points — cold vs oracle-warm-started, single-agent AIMM vs
+//! the per-MC AIMM-MC pool — on two trace families, and reports how
+//! many episodes each variant needs to reach 95% of its own
+//! steady-state OPC. The paper's claim for distillation is exactly this
+//! curve: imitating the oracle's first-touch placement before cycle 0
+//! buys back early-episode OPC that a cold agent spends exploring.
+//! Writes `BENCH_distill.json` at the repository root (fixed key order,
+//! so re-runs diff clean — wall times are printed, never serialized).
+//!
+//! Run with `cargo bench --bench distill_convergence` (release; ignore
+//! debug numbers). CI's serial job executes this on every push.
+
+use std::time::Instant;
+
+use aimm::agent::WarmStart;
+use aimm::bench::sweep::atomic_write_text;
+use aimm::bench::Table;
+use aimm::config::{MappingScheme, SystemConfig};
+use aimm::coordinator::{episode_ops, run_stream_policy, warm_started_policy};
+use aimm::runtime::json::write as jw;
+use aimm::workloads::Benchmark;
+
+/// Small enough for CI's serial job, big enough that the agent sees
+/// multiple invocation windows per run and the OPC curve has shape.
+const SCALE: f64 = 0.04;
+/// The paper's single-program protocol: 5 repeated runs, simulation
+/// state cleared and the learner retained between runs.
+const RUNS: usize = 5;
+
+const BENCHES: [Benchmark; 2] = [Benchmark::Spmv, Benchmark::Gcm];
+
+const VARIANTS: [(&str, MappingScheme, WarmStart); 4] = [
+    ("AIMM cold", MappingScheme::Aimm, WarmStart::None),
+    ("AIMM warm", MappingScheme::Aimm, WarmStart::Oracle),
+    ("AIMM-MC cold", MappingScheme::AimmMc, WarmStart::None),
+    ("AIMM-MC warm", MappingScheme::AimmMc, WarmStart::Oracle),
+];
+
+/// 1-based episode index where the variant first reaches 95% of its own
+/// final-run OPC — the study's headline number. Self-referential on
+/// purpose: it measures the shape of each curve, not who wins (the
+/// face-off bench ranks policies).
+fn episodes_to_95pct(opcs: &[f64]) -> usize {
+    let target = opcs.last().copied().unwrap_or(0.0) * 0.95;
+    opcs.iter().position(|&o| o >= target).map(|i| i + 1).unwrap_or(opcs.len())
+}
+
+fn main() {
+    let t0 = Instant::now(); // detlint: allow(wall-clock) — report timing only
+    let mut bench_fields: Vec<(String, String)> = Vec::new();
+
+    for &b in &BENCHES {
+        let mut t = Table::new(
+            &format!("Distillation convergence on {} ({RUNS}-run protocol)", b.name()),
+            &["variant", "distilled examples", "episodes to 95%", "run-1 opc", "final opc"],
+        );
+        let mut variant_fields: Vec<(&str, String)> = Vec::new();
+        let mut ops_done: Vec<u64> = Vec::new();
+        for &(label, mapping, warm) in &VARIANTS {
+            let mut cfg = SystemConfig::default();
+            cfg.mapping = mapping;
+            let (ops, name) = episode_ops(&cfg, &[b], SCALE).expect("episode ops");
+            let (policy, distill) =
+                warm_started_policy(&cfg, &ops, warm).expect("starting policy");
+            let examples: usize = distill.iter().map(|d| d.examples).sum();
+            let (summary, _) =
+                run_stream_policy(&cfg, &ops, RUNS, &name, policy).expect("episode");
+            let opcs: Vec<f64> = summary.runs.iter().map(|r| r.opc()).collect();
+            let episodes = episodes_to_95pct(&opcs);
+            ops_done.push(summary.last().ops_completed);
+            t.row(vec![
+                label.into(),
+                examples.to_string(),
+                episodes.to_string(),
+                format!("{:.4}", opcs[0]),
+                format!("{:.4}", opcs[RUNS - 1]),
+            ]);
+            variant_fields.push((
+                label,
+                jw::obj(&[
+                    ("distill_examples", examples.to_string()),
+                    ("episodes_to_95pct", episodes.to_string()),
+                    ("run1_opc", jw::num(opcs[0])),
+                    ("final_opc", jw::num(opcs[RUNS - 1])),
+                ]),
+            ));
+        }
+        // Warm-starting pre-trains weights; it must not perturb the op
+        // stream itself.
+        assert!(
+            ops_done.windows(2).all(|w| w[0] == w[1]),
+            "op stream drifted across {} variants",
+            b.name()
+        );
+        println!("{}", t.render());
+        bench_fields.push((b.name().to_string(), jw::obj(&variant_fields)));
+    }
+
+    let wall = t0.elapsed();
+    let fields: Vec<(&str, String)> =
+        bench_fields.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let json = jw::obj(&[
+        ("schema", jw::string("aimm-distill-bench-v1")),
+        (
+            "grid",
+            jw::string(&format!(
+                "{{SPMV,GCM}} x {{AIMM,AIMM-MC}} x {{cold,oracle-warm}} x {RUNS} runs \
+                 (scale {SCALE})"
+            )),
+        ),
+        ("measured", "true".to_string()),
+        ("benches", jw::obj(&fields)),
+        ("regenerate", jw::string("cargo bench --bench distill_convergence")),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_distill.json");
+    atomic_write_text(std::path::Path::new(path), &json).expect("write BENCH_distill.json");
+    println!("wrote {path} in {wall:?}");
+}

@@ -1,31 +1,36 @@
 //! Bench: mapping-policy face-off (EXPERIMENTS.md §Policy face-off).
 //! The head-to-head comparison the paper's Fig 11-style plots imply but
-//! never show: all five policies — {B, TOM, AIMM, CODA, ORACLE} —
-//! across three benchmarks and all three cube-network topologies on
-//! the 4×4 grid, holding the trace constant within each
+//! never show: all six policies — {B, TOM, AIMM, AIMM-MC, CODA,
+//! ORACLE} — across four benchmarks (the paper's SPMV/KM/MAC plus the
+//! GCM pointer-chasing family) and all three cube-network topologies
+//! on the 4×4 grid, holding the trace constant within each
 //! (benchmark, topology) slice so the mapping policy is the only
-//! variable. Writes `BENCH_policy.json` at the repository root (fixed
-//! key order, so re-runs diff clean).
+//! variable. A final column runs oracle-warm-started AIMM on the mesh
+//! slices — same traces, pre-trained start. Writes `BENCH_policy.json`
+//! at the repository root (fixed key order, so re-runs diff clean).
 //!
 //! Run with `cargo bench --bench policy_faceoff` (release; ignore
 //! debug numbers). CI's serial job executes this on every push.
 
 use std::time::Instant;
 
+use aimm::agent::WarmStart;
 use aimm::bench::sweep::{cell_json, default_threads, run_grid, CellResult, SweepGrid};
 use aimm::bench::Table;
 use aimm::config::{MappingScheme, TopologyKind};
+use aimm::coordinator::{episode_ops, run_stream_policy, warm_started_policy};
 use aimm::runtime::json::write as jw;
 use aimm::workloads::Benchmark;
 
 /// Big enough for migration/remap decisions to matter, small enough
-/// that 45 cells × 2 runs stay in CI range.
+/// that 72 cells × 2 runs stay in CI range.
 const SCALE: f64 = 0.04;
 /// Two runs per cell: AIMM's second run reflects a warmed network; the
 /// face-off reads the steady-state (last) run everywhere.
 const RUNS: usize = 2;
 
-const BENCHES: [Benchmark; 3] = [Benchmark::Spmv, Benchmark::Km, Benchmark::Mac];
+const BENCHES: [Benchmark; 4] =
+    [Benchmark::Spmv, Benchmark::Km, Benchmark::Mac, Benchmark::Gcm];
 
 fn slice<'a>(
     results: &'a [CellResult],
@@ -44,7 +49,7 @@ fn main() {
     grid.mappings = MappingScheme::ALL.to_vec();
     grid.topologies = TopologyKind::ALL.to_vec();
     let cells = grid.cells();
-    assert_eq!(cells.len(), 45, "3 benches x 5 policies x 3 topologies");
+    assert_eq!(cells.len(), 72, "4 benches x 6 policies x 3 topologies");
     let threads = default_threads();
     println!(
         "policy face-off: {} cells ({RUNS} runs each, scale {SCALE}) on {threads} thread(s)",
@@ -73,13 +78,13 @@ fn main() {
 
     // Structural invariant: within a (benchmark, topology) slice every
     // policy ran the SAME trace (the workload seed ignores the mapping
-    // axis), so all five cells must complete the same op count — the
+    // axis), so all six cells must complete the same op count — the
     // property that makes the OPC columns comparable at all.
     let mut opc_rows: Vec<(String, String)> = Vec::new();
     for &bench in &BENCHES {
         for topology in TopologyKind::ALL {
             let cells = slice(&results, bench, topology);
-            assert_eq!(cells.len(), 5, "{}/{topology}", bench.name());
+            assert_eq!(cells.len(), 6, "{}/{topology}", bench.name());
             let ops0 = cells[0].summary.last().ops_completed;
             for c in &cells {
                 assert_eq!(
@@ -101,6 +106,44 @@ fn main() {
         }
     }
 
+    // Warm-started AIMM column: the same mesh traces, but the agent
+    // starts from the oracle-distilled weights instead of cold. Reuses
+    // each mesh AIMM cell's exact config so the op stream is the one
+    // the grid already ran — asserted below.
+    let mut wt = Table::new(
+        "Oracle-warm-started AIMM (mesh slices, steady-state run)",
+        &["bench", "distilled examples", "opc", "cold-AIMM opc"],
+    );
+    let mut warm_rows: Vec<(&str, String)> = Vec::new();
+    for &bench in &BENCHES {
+        let mesh = slice(&results, bench, TopologyKind::Mesh);
+        let cold = mesh
+            .iter()
+            .find(|c| c.cell.mapping == MappingScheme::Aimm)
+            .expect("mesh AIMM cell");
+        let cfg = cold.cell.config().expect("cell config");
+        let (ops, name) = episode_ops(&cfg, &[bench], SCALE).expect("episode ops");
+        let (policy, distill) =
+            warm_started_policy(&cfg, &ops, WarmStart::Oracle).expect("warm start");
+        let (summary, _) =
+            run_stream_policy(&cfg, &ops, RUNS, &name, policy).expect("warm episode");
+        assert_eq!(
+            summary.last().ops_completed,
+            cold.summary.last().ops_completed,
+            "warm-started {} ran a drifted trace",
+            bench.name()
+        );
+        let examples: usize = distill.iter().map(|d| d.examples).sum();
+        wt.row(vec![
+            bench.name().into(),
+            examples.to_string(),
+            format!("{:.4}", summary.last().opc()),
+            format!("{:.4}", cold.summary.last().opc()),
+        ]);
+        warm_rows.push((bench.name(), jw::num(summary.last().opc())));
+    }
+    println!("{}", wt.render());
+
     let cells_json: Vec<String> = results.iter().map(cell_json).collect();
     let opc_fields: Vec<(&str, String)> =
         opc_rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
@@ -109,12 +152,13 @@ fn main() {
         (
             "grid",
             jw::string(&format!(
-                "{{SPMV,KM,MAC}}/BNMP x {{B,TOM,AIMM,CODA,ORACLE}} x 4x4 x \
-                 {{mesh,torus,ring}} (scale {SCALE}, {RUNS} runs)"
+                "{{SPMV,KM,MAC,GCM}}/BNMP x {{B,TOM,AIMM,AIMM-MC,CODA,ORACLE}} x 4x4 x \
+                 {{mesh,torus,ring}} (scale {SCALE}, {RUNS} runs) + oracle-warm AIMM on mesh"
             )),
         ),
         ("measured", "true".to_string()),
         ("opc_by_slice", jw::obj(&opc_fields)),
+        ("warm_aimm_opc_by_bench", jw::obj(&warm_rows)),
         ("cells", format!("[{}]", cells_json.join(","))),
         ("regenerate", jw::string("cargo bench --bench policy_faceoff")),
     ]);

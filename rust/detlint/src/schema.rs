@@ -29,6 +29,16 @@ pub const SCHEMA_FREEZE: &[(&str, &[&str])] = &[
     ("aimm-continual-v1", &["rust/src/bench/sweep/mod.rs"]),
     ("aimm-checkpoint-v1", &["rust/src/agent/checkpoint.rs"]),
     ("aimm-checkpoint-v0", &["rust/src/agent/checkpoint.rs"]),
+    (
+        "aimm-checkpoint-v2",
+        &[
+            "rust/src/agent/checkpoint.rs",
+            "rust/src/mapping/policy.rs",
+            "rust/src/main.rs",
+            "rust/tests/continual.rs",
+        ],
+    ),
+    ("aimm-distill-bench-v1", &["rust/benches/distill_convergence.rs"]),
     ("aimm-serve-v1", &["rust/src/coordinator/serve.rs"]),
     ("aimm-serve-bench-v1", &["rust/benches/serve_churn.rs"]),
     ("aimm-engine-bench-v1", &["rust/benches/engine_speedup.rs"]),

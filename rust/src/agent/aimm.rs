@@ -277,6 +277,25 @@ impl AimmAgent {
         }
     }
 
+    /// The batch size oracle-distillation pre-training must shape its
+    /// batches to, or a loud error naming the backend when it declares
+    /// no fixed batch (see [`crate::runtime::warm_start_batch`]). Probed
+    /// at configuration time so `--warm-start` on an unsupported backend
+    /// fails before any simulation runs.
+    pub fn warm_start_batch(&self) -> anyhow::Result<usize> {
+        crate::runtime::warm_start_batch(self.qf.as_ref())
+    }
+
+    /// Imitation pre-training (oracle distillation, `agent/distill.rs`):
+    /// run the labeled batches through the backend and sync the target
+    /// network once. Deliberately does NOT move [`AgentStats`] — those
+    /// counters describe the RL phase, and warm-start provenance is
+    /// recorded in the checkpoint bundle instead, so a warm-started
+    /// agent's reported train/energy stats stay comparable to a cold one.
+    pub fn pretrain(&mut self, batches: &[crate::runtime::TrainBatch]) -> anyhow::Result<f32> {
+        crate::runtime::pretrain(self.qf.as_mut(), batches)
+    }
+
     /// Capture a continual-learning checkpoint (DESIGN.md §9). Only legal
     /// at an episode boundary — after [`AimmAgent::finish_episode`] /
     /// before the next run's first invocation — because an in-flight

@@ -27,6 +27,18 @@
 //!
 //! Checkpoints are only captured at episode boundaries (no transition in
 //! flight); [`AimmAgent::checkpoint`] rejects anything else.
+//!
+//! ## v2: bundles
+//!
+//! PR 10's learning subsystem checkpoints as a [`CheckpointBundle`]
+//! (`aimm-checkpoint-v2`): a list of per-agent documents — one for the
+//! single-agent policy, one per MC for `--mapping aimm-mc` — plus the
+//! warm-start provenance (`--warm-start`). Each entry in the `agents`
+//! array is a complete v1 document, so the per-agent layout (and its
+//! bit-identity guarantee) is unchanged; v1 files still load, as a
+//! one-agent bundle with no warm-start recorded.
+//! [`CheckpointBundle::ensure_resumable`] refuses resumes whose per-MC
+//! agent count or warm-start mode drifted, naming the field.
 
 use std::path::Path;
 
@@ -35,12 +47,18 @@ use crate::runtime::json::{self, parse_hex_u64, write, Json};
 use crate::runtime::{best_qfunction, QSnapshot};
 
 use super::aimm::{AgentStats, AimmAgent};
+use super::distill::WarmStart;
 use super::replay::Transition;
 
 /// Format identifier; bump on any layout change.
 pub const SCHEMA: &str = "aimm-checkpoint-v1";
 /// Numeric format version carried alongside [`SCHEMA`].
 pub const VERSION: u64 = 1;
+
+/// Bundle format identifier (multi-agent + warm-start provenance).
+pub const SCHEMA_V2: &str = "aimm-checkpoint-v2";
+/// Numeric format version carried alongside [`SCHEMA_V2`].
+pub const VERSION_V2: u64 = 2;
 
 /// Exact physical state of the replay ring.
 #[derive(Debug, Clone, PartialEq)]
@@ -185,28 +203,36 @@ impl AgentCheckpoint {
 
     /// Parse a checkpoint document, verifying the schema version.
     pub fn parse(text: &str) -> anyhow::Result<Self> {
-        let j = json::parse(text)?;
-        let schema = str_field(&j, "schema")?;
+        Self::from_json(&json::parse(text)?)
+    }
+
+    /// Parse one v1 document from its JSON tree — shared by [`parse`]
+    /// (standalone v1 files) and [`CheckpointBundle::parse`] (each entry
+    /// of a v2 bundle's `agents` array is a complete v1 document).
+    ///
+    /// [`parse`]: AgentCheckpoint::parse
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let schema = str_field(j, "schema")?;
         anyhow::ensure!(
             schema == SCHEMA,
             "unsupported checkpoint schema {schema:?} (this build reads {SCHEMA:?})"
         );
-        let version = num_field(&j, "version")? as u64;
+        let version = num_field(j, "version")? as u64;
         anyhow::ensure!(
             version == VERSION,
             "unsupported checkpoint version {version} (this build reads {VERSION})"
         );
         Ok(Self {
-            cfg: parse_cfg(field(&j, "agent_config")?)?,
-            q: parse_q(field(&j, "q")?)?,
-            eps: f32_field(&j, "eps")?,
-            interval_idx: usize_field(&j, "interval_idx")?,
-            invocations_since_train: usize_field(&j, "invocations_since_train")? as u32,
-            trains_since_sync: usize_field(&j, "trains_since_sync")? as u32,
-            rng_state: u64_field(&j, "rng_state")?,
-            action_history: f32_vec(field(&j, "action_history")?)?,
-            replay: parse_replay(field(&j, "replay")?)?,
-            stats: parse_stats(field(&j, "stats")?)?,
+            cfg: parse_cfg(field(j, "agent_config")?)?,
+            q: parse_q(field(j, "q")?)?,
+            eps: f32_field(j, "eps")?,
+            interval_idx: usize_field(j, "interval_idx")?,
+            invocations_since_train: usize_field(j, "invocations_since_train")? as u32,
+            trains_since_sync: usize_field(j, "trains_since_sync")? as u32,
+            rng_state: u64_field(j, "rng_state")?,
+            action_history: f32_vec(field(j, "action_history")?)?,
+            replay: parse_replay(field(j, "replay")?)?,
+            stats: parse_stats(field(j, "stats")?)?,
         })
     }
 
@@ -230,9 +256,117 @@ impl AgentCheckpoint {
     /// field from the configuration the checkpoint was trained under —
     /// resume never silently mixes old and new hyperparameters.
     pub fn build_agent(&self, cfg: &AgentConfig) -> anyhow::Result<AimmAgent> {
-        let mut qf = best_qfunction(self.q.lr, self.q.gamma, 0);
+        let mut qf = best_qfunction(self.q.lr, self.q.gamma, 0, self.cfg.batch_size);
         qf.restore(&self.q)?;
         AimmAgent::from_checkpoint(qf, cfg.clone(), self)
+    }
+}
+
+/// A v2 checkpoint: every learned agent the run's policy carries — one
+/// for `--mapping aimm` (exactly the old v1 content), one per MC for
+/// `--mapping aimm-mc` — plus the warm-start mode the run was started
+/// under. The agents appear in policy order (single agent, or MC 0..n),
+/// and each serializes as a complete v1 document, so the per-agent
+/// bit-identity machinery is reused unchanged.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointBundle {
+    /// How the agents were initialized (`--warm-start`); a resume under
+    /// a different mode is refused by [`ensure_resumable`].
+    ///
+    /// [`ensure_resumable`]: CheckpointBundle::ensure_resumable
+    pub warm_start: WarmStart,
+    pub agents: Vec<AgentCheckpoint>,
+}
+
+impl CheckpointBundle {
+    /// Wrap a single-agent checkpoint (the `--mapping aimm` path).
+    pub fn single(warm_start: WarmStart, agent: AgentCheckpoint) -> Self {
+        Self { warm_start, agents: vec![agent] }
+    }
+
+    /// Serialize with fixed key order (deterministic byte-for-byte).
+    pub fn to_json(&self) -> String {
+        let agents: Vec<String> = self.agents.iter().map(|a| a.to_json()).collect();
+        write::obj(&[
+            ("schema", write::string(SCHEMA_V2)),
+            ("version", VERSION_V2.to_string()),
+            ("warm_start", write::string(self.warm_start.name())),
+            ("agents", write::arr(&agents)),
+        ])
+    }
+
+    /// Parse a v2 bundle — or, for compatibility, a standalone v1
+    /// document, which loads as a one-agent bundle with no warm-start
+    /// recorded (exactly what a v1-era run was).
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = json::parse(text)?;
+        let schema = str_field(&j, "schema")?;
+        if schema == SCHEMA {
+            return Ok(Self::single(WarmStart::None, AgentCheckpoint::from_json(&j)?));
+        }
+        anyhow::ensure!(
+            schema == SCHEMA_V2,
+            "unsupported checkpoint schema {schema:?} \
+             (this build reads {SCHEMA_V2:?} and legacy {SCHEMA:?})"
+        );
+        let version = num_field(&j, "version")? as u64;
+        anyhow::ensure!(
+            version == VERSION_V2,
+            "unsupported checkpoint version {version} (this build reads {VERSION_V2})"
+        );
+        let ws = str_field(&j, "warm_start")?;
+        let warm_start = WarmStart::from_name(ws).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown warm_start mode {ws:?} in checkpoint (this build knows {})",
+                WarmStart::name_list()
+            )
+        })?;
+        let agents = field(&j, "agents")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint agents is not an array"))?
+            .iter()
+            .map(AgentCheckpoint::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(!agents.is_empty(), "checkpoint bundle carries no agents");
+        Ok(Self { warm_start, agents })
+    }
+
+    /// Drift rejection (satellite of DESIGN.md §15): a bundle resumes
+    /// only into a run shaped exactly like the one that saved it. Both
+    /// checks name the drifted field — the whole point is a diagnosable
+    /// refusal instead of a silently perturbed resume.
+    pub fn ensure_resumable(
+        &self,
+        expected_agents: usize,
+        requested: WarmStart,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.agents.len() == expected_agents,
+            "checkpoint drift: per-MC agent count is {} but this run drives \
+             {expected_agents} agent(s) — resume refused",
+            self.agents.len()
+        );
+        anyhow::ensure!(
+            self.warm_start == requested,
+            "checkpoint drift: warm_start mode is {:?} but this run requested {:?} \
+             — resume refused",
+            self.warm_start.name(),
+            requested.name()
+        );
+        Ok(())
+    }
+
+    /// Write to `path` (creating parent directories is the caller's job).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))
+    }
+
+    /// Load from `path` (v2 bundle or legacy v1 document).
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
     }
 }
 
@@ -504,5 +638,91 @@ mod tests {
         assert_bits_eq(&ck, &back);
         std::fs::remove_file(&path).ok();
         assert!(AgentCheckpoint::load(Path::new("/nonexistent/ckpt.json")).is_err());
+    }
+
+    fn sample_bundle(n: usize, warm_start: WarmStart) -> CheckpointBundle {
+        let mut agents = Vec::new();
+        for i in 0..n {
+            let mut ck = sample_checkpoint();
+            ck.rng_state = 0x1000 + i as u64; // distinguish the entries
+            agents.push(ck);
+        }
+        CheckpointBundle { warm_start, agents }
+    }
+
+    #[test]
+    fn bundle_roundtrip_is_bit_exact() {
+        let b = sample_bundle(4, WarmStart::Oracle);
+        let text = b.to_json();
+        assert!(text.starts_with(&format!("{{\"schema\":\"{SCHEMA_V2}\"")));
+        assert!(text.contains("\"warm_start\":\"oracle\""));
+        let back = CheckpointBundle::parse(&text).unwrap();
+        assert_eq!(back.warm_start, WarmStart::Oracle);
+        assert_eq!(back.agents.len(), 4);
+        assert_eq!(text, back.to_json());
+    }
+
+    /// Compatibility: a standalone v1 document still loads — as a
+    /// one-agent bundle with no warm-start recorded.
+    #[test]
+    fn v1_document_loads_as_single_agent_bundle() {
+        let ck = sample_checkpoint();
+        let bundle = CheckpointBundle::parse(&ck.to_json()).unwrap();
+        assert_eq!(bundle.warm_start, WarmStart::None);
+        assert_eq!(bundle.agents.len(), 1);
+        assert_eq!(bundle.agents[0].to_json(), ck.to_json());
+        // And round-trips into the v2 envelope unchanged.
+        let again = CheckpointBundle::parse(&bundle.to_json()).unwrap();
+        assert_eq!(again.agents[0].to_json(), ck.to_json());
+    }
+
+    /// Satellite (b): drifted bundles refuse to resume, naming the field.
+    #[test]
+    fn drifted_agent_count_refuses_resume_by_name() {
+        let b = sample_bundle(4, WarmStart::None);
+        b.ensure_resumable(4, WarmStart::None).unwrap();
+        let err = b.ensure_resumable(1, WarmStart::None).unwrap_err().to_string();
+        assert!(err.contains("per-MC agent count"), "{err}");
+        assert!(err.contains('4') && err.contains('1'), "{err}");
+    }
+
+    #[test]
+    fn drifted_warm_start_mode_refuses_resume_by_name() {
+        let b = sample_bundle(1, WarmStart::Oracle);
+        b.ensure_resumable(1, WarmStart::Oracle).unwrap();
+        let err = b.ensure_resumable(1, WarmStart::None).unwrap_err().to_string();
+        assert!(err.contains("warm_start"), "{err}");
+        assert!(err.contains("oracle") && err.contains("none"), "{err}");
+    }
+
+    #[test]
+    fn bundle_parse_rejects_malformed_documents() {
+        let b = sample_bundle(2, WarmStart::None);
+        let text = b.to_json();
+        // Unknown schema (neither v1 nor v2).
+        let wrong = text.replace(SCHEMA_V2, "aimm-checkpoint-v9");
+        assert!(CheckpointBundle::parse(&wrong).is_err());
+        // Version drift under the v2 schema.
+        let wrong = text.replacen("\"version\":2", "\"version\":3", 1);
+        assert!(CheckpointBundle::parse(&wrong).is_err());
+        // Unknown warm-start mode names the known list.
+        let wrong = text.replace("\"warm_start\":\"none\"", "\"warm_start\":\"sgd\"");
+        let err = CheckpointBundle::parse(&wrong).unwrap_err().to_string();
+        assert!(err.contains("none|oracle"), "{err}");
+        // Empty agent list.
+        let empty = CheckpointBundle { warm_start: WarmStart::None, agents: vec![] };
+        assert!(CheckpointBundle::parse(&empty.to_json()).is_err());
+    }
+
+    #[test]
+    fn bundle_file_roundtrip() {
+        let b = sample_bundle(2, WarmStart::Oracle);
+        // detlint: allow(ambient-input) — unit-test scratch directory, not sim state
+        let path = std::env::temp_dir().join("aimm_bundle_unit_test.json");
+        b.save(&path).unwrap();
+        let back = CheckpointBundle::load(&path).unwrap();
+        assert_eq!(b.to_json(), back.to_json());
+        std::fs::remove_file(&path).ok();
+        assert!(CheckpointBundle::load(Path::new("/nonexistent/bundle.json")).is_err());
     }
 }

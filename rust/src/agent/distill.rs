@@ -1,0 +1,385 @@
+//! Oracle distillation warm-start (DESIGN.md §15): before any RL
+//! episode runs, replay the oracle's side-effect-free dry pass
+//! ([`profile_assignment`]) over the upcoming op stream, convert its
+//! placement decisions into labeled `(state, action)` pairs, and
+//! pre-train the Q-network on them through the same
+//! [`QFunction::train_batch`](crate::runtime::QFunction::train_batch)
+//! seam RL uses. The agent then starts its first episode already biased
+//! toward oracle-shaped placements instead of uniform ε-noise — the
+//! continual-learning curriculum converges in fewer episodes
+//! (benches/distill_convergence.rs measures exactly that).
+//!
+//! The whole pipeline is a pure function of `(cfg, ops)`: the oracle
+//! pass is deterministic, the labels are derived from sorted page
+//! orders, and the epoch shuffles draw from a seed folded from
+//! `cfg.seed` — so warm-starting is bit-reproducible and never touches
+//! simulator state.
+//!
+//! **What is distilled.** The oracle only ever makes *data placement*
+//! decisions, so only the data-side actions appear as labels:
+//!
+//! * a page sitting on its oracle cube, compute co-located →
+//!   [`Action::Default`] (leave it alone);
+//! * the same page displaced to the far side of the network →
+//!   [`Action::NearData`] (pull it back next to its compute);
+//! * the page on its oracle cube but that cube saturated →
+//!   [`Action::FarData`] (shed load — the balancing objective of the
+//!   oracle's least-loaded pass).
+//!
+//! Compute-remap and interval actions have no oracle counterpart and
+//! keep their cold Q-values; RL fine-tuning owns them.
+
+use std::collections::HashMap;
+
+use crate::config::{Pid, SystemConfig, VPage};
+use crate::mapping::profile_assignment;
+use crate::nmp::NmpOp;
+use crate::noc::Mesh;
+use crate::runtime::{TrainBatch, STATE_DIM};
+use crate::sim::Rng;
+
+use super::actions::Action;
+use super::aimm::AimmAgent;
+use super::state::{build_state, hop_scale, PageSignals, PerMcSignals, StateVec, SysSignals};
+
+/// Passes over the labeled dataset during pre-training. Small on
+/// purpose: distillation seeds the Q-surface, RL refines it — more
+/// epochs mostly overfit the linear mock to its three label shapes.
+pub const DISTILL_EPOCHS: usize = 4;
+
+/// Seed fold for the epoch shuffles (distinct from the agent's `^0xA6E7`
+/// and the policy's `^0x5157` folds so the streams never collide).
+pub const DISTILL_SEED_FOLD: u64 = 0xD157;
+
+/// Warm-start mode (`--warm-start <mode>`). Recorded in the v2
+/// checkpoint bundle so a resume under a different mode is refused
+/// (`CheckpointBundle::ensure_resumable`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WarmStart {
+    /// Cold start: the Q-network begins at its seeded initialization.
+    #[default]
+    None,
+    /// Oracle distillation: pre-train on the dry pass's placements.
+    Oracle,
+}
+
+impl WarmStart {
+    pub const ALL: [WarmStart; 2] = [WarmStart::None, WarmStart::Oracle];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WarmStart::None => "none",
+            WarmStart::Oracle => "oracle",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WarmStart> {
+        Self::ALL.into_iter().find(|w| w.name().eq_ignore_ascii_case(s))
+    }
+
+    /// `"none|oracle"` — for CLI usage strings.
+    pub fn name_list() -> String {
+        Self::ALL.map(|w| w.name()).join("|")
+    }
+}
+
+/// What a warm-start did — surfaced on the CLI and in the convergence
+/// bench so "pre-trained on N pages" is visible, not silent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DistillStats {
+    /// Distinct pages the oracle assigned.
+    pub pages: usize,
+    /// Labeled examples derived from them (3 per page).
+    pub examples: usize,
+    /// Training batches fed to the backend (all epochs).
+    pub batches: usize,
+    pub epochs: usize,
+    /// Rows per batch (the backend's declared fixed batch).
+    pub batch: usize,
+    /// Mean per-batch loss over the whole pre-training run.
+    pub mean_loss: f32,
+}
+
+/// Derive the labeled imitation dataset from the oracle's dry pass.
+/// Deterministic: pages are emitted hottest-first with `(pid, vpage)`
+/// tie-breaks — the same order the oracle's pass 1 assigns them in.
+pub fn distill_dataset(cfg: &SystemConfig, ops: &[NmpOp]) -> Vec<(StateVec, Action)> {
+    let n_cubes = cfg.num_cubes();
+    let mesh = Mesh::new(cfg);
+    let hops = hop_scale(mesh.diameter());
+    let assignment = profile_assignment(ops, n_cubes);
+    if assignment.is_empty() {
+        return Vec::new();
+    }
+
+    // Page heat: every touch (dest + sources) counts one access.
+    let mut touches: HashMap<(Pid, VPage), u64> = HashMap::new();
+    for op in ops {
+        let (pages, n) = op.vpages_arr();
+        for &v in &pages[..n] {
+            *touches.entry((op.pid, v)).or_insert(0) += 1;
+        }
+    }
+
+    // detlint: allow(hash-iter) — drained into a fully sorted vector
+    let mut order: Vec<((Pid, VPage), u64)> = assignment
+        .iter()
+        .map(|(k, _)| (*k, touches.get(k).copied().unwrap_or(0)))
+        .collect();
+    order.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    let max_touch = order.first().map(|&(_, w)| w).unwrap_or(0).max(1);
+
+    // Relative cube load under the oracle's placement, for the occupancy
+    // slots of the synthetic states.
+    let mut load = vec![0u64; n_cubes];
+    for (k, w) in &order {
+        load[assignment[k]] += *w;
+    }
+    let max_load = load.iter().copied().max().unwrap_or(0).max(1);
+    let mean_load_frac =
+        (load.iter().sum::<u64>() as f32 / n_cubes as f32) / max_load as f32;
+
+    let norm = |cube: usize| cube as f32 / n_cubes as f32;
+    let mut out = Vec::with_capacity(order.len() * 3);
+    for (key, w) in order {
+        let cube = assignment[&key];
+        let access = w as f32 / max_touch as f32;
+        let occ = load[cube] as f32 / max_load as f32;
+        let calm = SysSignals {
+            per_mc: vec![PerMcSignals::default(); cfg.num_mcs()],
+            recent_opc: 0.5,
+            cube_occ_mean: mean_load_frac,
+            cube_occ_max: occ,
+            ..SysSignals::default()
+        };
+        let page_home = |at: usize| PageSignals {
+            access_rate: access,
+            page_cube_norm: norm(at),
+            compute_cube_norm: norm(cube),
+            ..PageSignals::default()
+        };
+
+        // Placed where the oracle wants it: leave it alone.
+        out.push((build_state(&calm, &page_home(cube), hops), Action::Default));
+        // Displaced to the far side: pull it back next to its compute.
+        let displaced = mesh.distant_cube(cube);
+        out.push((build_state(&calm, &page_home(displaced), hops), Action::NearData));
+        // On its cube but the cube is saturated: shed load, the
+        // balancing objective of the oracle's least-loaded pass.
+        let saturated =
+            SysSignals { cube_occ_mean: 1.0, cube_occ_max: 1.0, ..calm.clone() };
+        out.push((build_state(&saturated, &page_home(cube), hops), Action::FarData));
+    }
+    out
+}
+
+/// Pack the dataset into exact-`batch`-row [`TrainBatch`]es: `epochs`
+/// seeded-shuffled passes, the final ragged chunk of each pass filled by
+/// wrapping to that pass's shuffled start (so the backend's fixed batch
+/// shape is always satisfied and every example appears at least once
+/// per epoch).
+pub fn distill_batches(
+    examples: &[(StateVec, Action)],
+    batch: usize,
+    epochs: usize,
+    seed: u64,
+) -> Vec<TrainBatch> {
+    assert!(batch > 0, "distillation batch size must be positive");
+    if examples.is_empty() {
+        return Vec::new();
+    }
+    let mut rng = Rng::new(seed);
+    let n = examples.len();
+    let per_epoch = n.div_ceil(batch);
+    let mut out = Vec::with_capacity(epochs * per_epoch);
+    let mut idx: Vec<usize> = (0..n).collect();
+    for _ in 0..epochs {
+        // Fisher–Yates on the shared stream: epoch order depends only on
+        // the seed and the example count.
+        for i in (1..n).rev() {
+            idx.swap(i, rng.index(i + 1));
+        }
+        for chunk in 0..per_epoch {
+            let mut s = Vec::with_capacity(batch * STATE_DIM);
+            let mut a = Vec::with_capacity(batch);
+            let mut r = Vec::with_capacity(batch);
+            let mut s2 = Vec::with_capacity(batch * STATE_DIM);
+            let mut done = Vec::with_capacity(batch);
+            for row in 0..batch {
+                let (state, action) = &examples[idx[(chunk * batch + row) % n]];
+                s.extend_from_slice(state);
+                a.push(action.index() as i32);
+                // Terminal transition with reward +1: the DQN target
+                // collapses to y = 1, regressing Q(s, label) toward +1 —
+                // plain imitation through the existing training rule.
+                r.push(1.0);
+                s2.extend_from_slice(state);
+                done.push(1.0);
+            }
+            out.push(TrainBatch { s, a, r, s2, done });
+        }
+    }
+    out
+}
+
+/// Warm-start one agent for the given op stream: probe the backend's
+/// fixed batch (loud config-time error when it declares none), build
+/// the dataset and batches, pre-train. Pure given `(cfg, ops)` and the
+/// agent's construction seed.
+pub fn warm_start_agent(
+    agent: &mut AimmAgent,
+    cfg: &SystemConfig,
+    ops: &[NmpOp],
+) -> anyhow::Result<DistillStats> {
+    let batch = agent.warm_start_batch()?;
+    let examples = distill_dataset(cfg, ops);
+    anyhow::ensure!(
+        !examples.is_empty(),
+        "--warm-start oracle found nothing to distill (empty op stream?)"
+    );
+    let batches =
+        distill_batches(&examples, batch, DISTILL_EPOCHS, cfg.seed ^ DISTILL_SEED_FOLD);
+    let mean_loss = agent.pretrain(&batches)?;
+    Ok(DistillStats {
+        pages: examples.len() / 3,
+        examples: examples.len(),
+        batches: batches.len(),
+        epochs: DISTILL_EPOCHS,
+        batch,
+        mean_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AgentConfig;
+    use crate::runtime::{LinearQ, NUM_ACTIONS, QFunction, QSnapshot};
+    use crate::workloads::{generate, Benchmark};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn agent_with_batch(c: &SystemConfig) -> AimmAgent {
+        AimmAgent::new(
+            Box::new(LinearQ::with_batch(0.05, 0.9, 7, c.agent.batch_size)),
+            c.agent.clone(),
+            11,
+        )
+    }
+
+    #[test]
+    fn warm_start_names_round_trip() {
+        for w in WarmStart::ALL {
+            assert_eq!(WarmStart::from_name(w.name()), Some(w));
+        }
+        assert_eq!(WarmStart::from_name("ORACLE"), Some(WarmStart::Oracle));
+        assert_eq!(WarmStart::from_name("sgd"), None);
+        assert_eq!(WarmStart::name_list(), "none|oracle");
+        assert_eq!(WarmStart::default(), WarmStart::None);
+    }
+
+    #[test]
+    fn dataset_is_deterministic_and_label_shaped() {
+        let c = cfg();
+        let trace = generate(Benchmark::Spmv, 1, 0.05, 3);
+        let a = distill_dataset(&c, &trace.ops);
+        let b = distill_dataset(&c, &trace.ops);
+        assert!(!a.is_empty());
+        assert_eq!(a.len() % 3, 0, "three examples per page");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(x.1, y.1);
+        }
+        // Each page triple carries the documented label vocabulary.
+        for triple in a.chunks(3) {
+            assert_eq!(triple[0].1, Action::Default);
+            assert_eq!(triple[1].1, Action::NearData);
+            assert_eq!(triple[2].1, Action::FarData);
+            // The displaced example really moves the page slot (s[51] is
+            // page_cube_norm) while keeping the compute slot (s[52]).
+            assert_ne!(triple[0].0[51].to_bits(), triple[1].0[51].to_bits());
+            assert_eq!(triple[0].0[52].to_bits(), triple[1].0[52].to_bits());
+        }
+        assert!(distill_dataset(&c, &[]).is_empty());
+    }
+
+    #[test]
+    fn batches_are_exact_sized_and_seeded() {
+        let c = cfg();
+        let trace = generate(Benchmark::Km, 1, 0.05, 5);
+        let examples = distill_dataset(&c, &trace.ops);
+        let batches = distill_batches(&examples, 32, DISTILL_EPOCHS, 99);
+        assert_eq!(batches.len(), DISTILL_EPOCHS * examples.len().div_ceil(32));
+        for b in &batches {
+            assert_eq!(b.batch_len(), 32, "wrap-around fill keeps every batch exact");
+            b.validate().unwrap();
+            assert!(b.done.iter().all(|&d| d == 1.0));
+            assert!(b.r.iter().all(|&r| r == 1.0));
+        }
+        // Same seed → identical batch stream; different seed → different
+        // epoch order.
+        let again = distill_batches(&examples, 32, DISTILL_EPOCHS, 99);
+        assert_eq!(batches[0].a, again[0].a);
+        let other = distill_batches(&examples, 32, DISTILL_EPOCHS, 100);
+        assert!(batches.iter().zip(&other).any(|(x, y)| x.a != y.a));
+    }
+
+    #[test]
+    fn warm_start_trains_the_labels_up() {
+        let c = cfg();
+        let trace = generate(Benchmark::Spmv, 1, 0.05, 3);
+        let mut agent = agent_with_batch(&c);
+        let stats = warm_start_agent(&mut agent, &c, &trace.ops).unwrap();
+        assert_eq!(stats.examples, stats.pages * 3);
+        assert_eq!(stats.epochs, DISTILL_EPOCHS);
+        assert_eq!(stats.batch, c.agent.batch_size);
+        // RL-phase stats stay untouched by pre-training.
+        assert_eq!(agent.stats.train_steps, 0);
+        // The co-located state now prefers Default over the other data
+        // actions — the oracle's bias took.
+        let (s, label) = distill_dataset(&c, &trace.ops).into_iter().next().unwrap();
+        assert_eq!(label, Action::Default);
+        let q = agent.probe_q(&s).unwrap();
+        assert!(
+            q[Action::Default.index()] > q[Action::NearData.index()],
+            "q = {q:?}"
+        );
+    }
+
+    /// Satellite (a): a backend that declares no fixed batch refuses
+    /// `--warm-start` at configuration time, naming itself.
+    #[test]
+    fn warm_start_refuses_batchless_backend_by_name() {
+        struct NoBatch;
+        impl QFunction for NoBatch {
+            fn q_values(&mut self, _s: &[f32]) -> anyhow::Result<[f32; NUM_ACTIONS]> {
+                Ok([0.0; NUM_ACTIONS])
+            }
+            fn train_batch(&mut self, _b: &TrainBatch) -> anyhow::Result<f32> {
+                Ok(0.0)
+            }
+            fn sync_target(&mut self) {}
+            fn backend(&self) -> &'static str {
+                "batchless-stub"
+            }
+            fn snapshot(&self) -> anyhow::Result<QSnapshot> {
+                anyhow::bail!("stub")
+            }
+        }
+        let c = cfg();
+        let mut agent = AimmAgent::new(Box::new(NoBatch), c.agent.clone(), 11);
+        let trace = generate(Benchmark::Spmv, 1, 0.05, 3);
+        let err = warm_start_agent(&mut agent, &c, &trace.ops).unwrap_err().to_string();
+        assert!(err.contains("batchless-stub"), "{err}");
+        assert!(err.contains("fixed_batch"), "{err}");
+        // An empty stream is refused even on a good backend.
+        let mut ok_agent = agent_with_batch(&c);
+        let err = warm_start_agent(&mut ok_agent, &c, &[]).unwrap_err().to_string();
+        assert!(err.contains("nothing to distill"), "{err}");
+    }
+}

@@ -4,15 +4,25 @@
 //! remapping — plus the versioned [`checkpoint`] format that carries
 //! the learned model across programs and processes (the continual-
 //! learning premise, §6.1).
+//!
+//! Learning subsystem v2 (DESIGN.md §15) adds two optional layers on
+//! top: [`distill`] — oracle-distillation warm-start that pre-trains
+//! the Q-net on the oracle dry pass's placements before any RL episode
+//! — and [`multi`] — the per-MC agent pool behind `--mapping aimm-mc`,
+//! coordinated by deterministic replay gossip.
 
 pub mod actions;
 pub mod aimm;
 pub mod checkpoint;
+pub mod distill;
+pub mod multi;
 pub mod replay;
 pub mod state;
 
 pub use actions::Action;
 pub use aimm::{AgentStats, AimmAgent, Decision};
-pub use checkpoint::{AgentCheckpoint, ReplaySnapshot};
+pub use checkpoint::{AgentCheckpoint, CheckpointBundle, ReplaySnapshot};
+pub use distill::{warm_start_agent, DistillStats, WarmStart};
+pub use multi::{fresh_mc_agents, gossip_exchange, mc_seed, GOSSIP_BURST, GOSSIP_EVERY};
 pub use replay::ReplayBuffer;
 pub use state::{build_state, hist4, hop_scale, PageSignals, PerMcSignals, StateVec, SysSignals};

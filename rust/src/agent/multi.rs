@@ -1,0 +1,182 @@
+//! Per-MC multi-agent AIMM (DESIGN.md §15): instead of one global agent
+//! observing the whole system, `--mapping aimm-mc` runs one lightweight
+//! [`AimmAgent`] per memory controller. Each agent sees only its own
+//! MC's counters and attached cubes (the masked state is assembled in
+//! `mapping/policy.rs`); coordination happens through deterministic
+//! round-robin **gossip**: every [`GOSSIP_EVERY`] invocations
+//! system-wide, one agent hands its [`GOSSIP_BURST`] freshest replay
+//! transitions to its ring neighbor. The shared replay schema
+//! ([`Transition`](super::replay::Transition)) makes the exchange a
+//! plain push — no translation layer, no weight averaging.
+//!
+//! Everything is seeded from `cfg.seed` through [`mc_seed`], so the
+//! whole pool is bit-reproducible at any worker count: agent `i`'s RNG
+//! stream depends only on the config seed and its MC index, and the
+//! gossip schedule is a pure function of the (deterministic) invocation
+//! count.
+
+use crate::config::SystemConfig;
+use crate::runtime::best_qfunction;
+
+use super::aimm::AimmAgent;
+
+/// System-wide invocations between gossip exchanges. Small enough that
+/// neighbors see each other's fresh experience within a few intervals,
+/// large enough that replay buffers stay dominated by local experience.
+pub const GOSSIP_EVERY: u64 = 8;
+
+/// Transitions handed over per exchange.
+pub const GOSSIP_BURST: usize = 4;
+
+/// The usual splitmix64 golden-ratio increment — used as a per-MC fold
+/// so sibling agents land on well-separated RNG streams.
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Derive MC `mc`'s private seed from the config seed. `mc + 1` keeps
+/// MC 0 off the raw config seed (which the single-agent path folds
+/// differently), and the golden-ratio multiply separates the streams.
+pub fn mc_seed(seed: u64, mc: usize) -> u64 {
+    seed ^ GOLDEN.wrapping_mul(mc as u64 + 1)
+}
+
+/// Build the per-MC agent pool: one agent per memory controller, each
+/// on its own [`mc_seed`]-derived Q-init and RNG stream (the `^ 0xA6E7`
+/// fold mirrors the single-agent `fresh_agent` idiom). All agents share
+/// the one [`crate::config::AgentConfig`] — they are deliberately
+/// lightweight clones of the same architecture, differing only in what
+/// they observe.
+pub fn fresh_mc_agents(cfg: &SystemConfig) -> anyhow::Result<Vec<AimmAgent>> {
+    (0..cfg.num_mcs())
+        .map(|mc| {
+            let s = mc_seed(cfg.seed, mc);
+            AimmAgent::try_new(
+                best_qfunction(cfg.agent.lr, cfg.agent.gamma, s, cfg.agent.batch_size),
+                cfg.agent.clone(),
+                s ^ 0xA6E7,
+            )
+        })
+        .collect()
+}
+
+/// One gossip exchange: agent `from` pushes its `burst` freshest
+/// transitions (oldest of those first, preserving push order) into its
+/// ring successor's replay buffer. Returns how many transitions moved.
+/// The receiver's replay-access counter moves (those are real buffer
+/// writes, and the energy model should see them); the sender only
+/// reads.
+pub fn gossip_exchange(agents: &mut [AimmAgent], from: usize, burst: usize) -> usize {
+    let n = agents.len();
+    if n < 2 {
+        return 0;
+    }
+    let to = (from + 1) % n;
+    let payload = agents[from].replay.recent(burst);
+    let moved = payload.len();
+    for t in payload {
+        agents[to].replay.push(t);
+    }
+    agents[to].stats.replay_accesses += moved as u64;
+    moved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::replay::Transition;
+    use crate::config::MappingScheme;
+    use crate::runtime::{LinearQ, STATE_DIM};
+
+    fn pool(seed: u64) -> Vec<AimmAgent> {
+        let mut cfg = SystemConfig::default();
+        cfg.seed = seed;
+        cfg.mapping = MappingScheme::AimmMc;
+        fresh_mc_agents(&cfg).unwrap()
+    }
+
+    fn t(r: f32) -> Transition {
+        Transition { s: [0.0; STATE_DIM], a: 1, r, s2: [0.0; STATE_DIM], done: false }
+    }
+
+    #[test]
+    fn mc_seeds_are_distinct_and_stable() {
+        let seeds: Vec<u64> = (0..4).map(|mc| mc_seed(42, mc)).collect();
+        for i in 0..seeds.len() {
+            assert_ne!(seeds[i], 42, "no agent rides the raw config seed");
+            for j in i + 1..seeds.len() {
+                assert_ne!(seeds[i], seeds[j]);
+            }
+        }
+        assert_eq!(seeds, (0..4).map(|mc| mc_seed(42, mc)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_is_one_agent_per_mc_with_separated_streams() {
+        let mut agents = pool(7);
+        assert_eq!(agents.len(), SystemConfig::default().num_mcs());
+        // Distinct Q-inits: the same probe state answers differently.
+        let mut qs = Vec::new();
+        for a in &mut agents {
+            let q = a.probe_q(&[0.25; STATE_DIM]).unwrap();
+            qs.push(q.map(f32::to_bits));
+        }
+        for i in 0..qs.len() {
+            for j in i + 1..qs.len() {
+                assert_ne!(qs[i], qs[j], "agents {i} and {j} share a Q-init");
+            }
+        }
+    }
+
+    /// Satellite (c): the gossip-merge known answer. With fixed seeds the
+    /// exchanged transition sequence is exact — the sender's newest
+    /// `GOSSIP_BURST` in push order land appended to the receiver's
+    /// buffer, and a re-run reproduces it byte for byte.
+    #[test]
+    fn gossip_known_answer_is_exact() {
+        let run = || {
+            let mut cfg = SystemConfig::default();
+            cfg.seed = 3;
+            let mut agents = vec![
+                AimmAgent::new(Box::new(LinearQ::new(0.05, 0.9, 1)), cfg.agent.clone(), 10),
+                AimmAgent::new(Box::new(LinearQ::new(0.05, 0.9, 2)), cfg.agent.clone(), 20),
+                AimmAgent::new(Box::new(LinearQ::new(0.05, 0.9, 3)), cfg.agent.clone(), 30),
+            ];
+            for i in 0..6 {
+                agents[0].replay.push(t(i as f32));
+            }
+            agents[1].replay.push(t(100.0));
+            let moved = gossip_exchange(&mut agents, 0, GOSSIP_BURST);
+            (moved, agents)
+        };
+        let (moved, agents) = run();
+        assert_eq!(moved, GOSSIP_BURST);
+        // Receiver = its own transition, then the sender's newest 4 in
+        // push order: rewards 2, 3, 4, 5.
+        let rewards: Vec<f32> = agents[1].replay.recent(99).iter().map(|x| x.r).collect();
+        assert_eq!(rewards, vec![100.0, 2.0, 3.0, 4.0, 5.0]);
+        // Sender and bystander untouched.
+        assert_eq!(agents[0].replay.len(), 6);
+        assert_eq!(agents[2].replay.len(), 0);
+        assert_eq!(agents[1].stats.replay_accesses, GOSSIP_BURST as u64 + 1);
+        // Bit-reproducible.
+        let (moved2, agents2) = run();
+        assert_eq!(moved2, moved);
+        let again: Vec<u32> =
+            agents2[1].replay.recent(99).iter().map(|x| x.r.to_bits()).collect();
+        assert_eq!(again, rewards.iter().map(|r| r.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gossip_ring_wraps_and_degenerates_safely() {
+        let cfg = SystemConfig::default();
+        let mk = |s| AimmAgent::new(Box::new(LinearQ::new(0.05, 0.9, s)), cfg.agent.clone(), s);
+        let mut agents = vec![mk(1), mk(2)];
+        agents[1].replay.push(t(7.0));
+        // from = last index wraps to agent 0.
+        assert_eq!(gossip_exchange(&mut agents, 1, GOSSIP_BURST), 1);
+        assert_eq!(agents[0].replay.recent(99).last().unwrap().r, 7.0);
+        // Fewer than `burst` available: sends what exists.
+        let mut single = vec![mk(3)];
+        single[0].replay.push(t(1.0));
+        assert_eq!(gossip_exchange(&mut single, 0, GOSSIP_BURST), 0, "no self-gossip");
+    }
+}

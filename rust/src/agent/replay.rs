@@ -99,6 +99,24 @@ impl ReplayBuffer {
         Some(TrainBatch { s, a, r, s2, done })
     }
 
+    /// The `n` most recently pushed transitions, oldest of those first
+    /// (fewer when the buffer holds fewer). This is the gossip payload of
+    /// the multi-agent policy (`agent/multi.rs`): each agent hands its
+    /// freshest experience to its ring neighbor. Pure read — no counter
+    /// moves, so gossip inspection never perturbs sampling.
+    pub fn recent(&self, n: usize) -> Vec<Transition> {
+        let take = n.min(self.buf.len());
+        let mut out = Vec::with_capacity(take);
+        // Newest element sits just before `head` once the ring has
+        // wrapped, at `len - 1` before that.
+        let newest =
+            if self.buf.len() < self.capacity { self.buf.len() } else { self.head + self.capacity };
+        for i in (newest - take)..newest {
+            out.push(self.buf[i % self.capacity].clone());
+        }
+        out
+    }
+
     /// Checkpoint export: the ring's *physical* layout. Sampling indexes
     /// `buf` directly and overwrites advance from `head`, so restoring
     /// the logical order alone would perturb every later RNG-indexed
@@ -237,6 +255,31 @@ mod tests {
         restored.push(t(99.0));
         assert_eq!(rb.buf, restored.buf);
         assert_eq!(rb.head, restored.head);
+    }
+
+    /// `recent` walks the logical (push) order even across the ring's
+    /// wrap point, and reads without touching the access counters.
+    #[test]
+    fn recent_returns_newest_in_push_order() {
+        let mut rb = ReplayBuffer::new(8, 4);
+        for i in 0..5 {
+            rb.push(t(i as f32));
+        }
+        // Not yet wrapped.
+        assert_eq!(rb.recent(3).iter().map(|x| x.r).collect::<Vec<_>>(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(rb.recent(99).len(), 5);
+        for i in 5..11 {
+            rb.push(t(i as f32)); // wraps: head now 3
+        }
+        let (_, head) = rb.export();
+        assert_eq!(head, 3);
+        assert_eq!(rb.recent(4).iter().map(|x| x.r).collect::<Vec<_>>(), vec![
+            7.0, 8.0, 9.0, 10.0
+        ]);
+        let pushes_before = rb.pushes;
+        let samples_before = rb.samples;
+        let _ = rb.recent(2);
+        assert_eq!((rb.pushes, rb.samples), (pushes_before, samples_before));
     }
 
     #[test]

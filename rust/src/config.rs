@@ -90,6 +90,12 @@ pub enum MappingScheme {
     Tom,
     /// The paper's contribution: RL-driven page + computation remapping.
     Aimm,
+    /// Distributed AIMM: one lightweight agent per memory controller,
+    /// each observing only its attached cubes, coordinated through a
+    /// deterministic round-robin gossip exchange of replay transitions
+    /// (`agent/multi.rs`). The paper's §hardware plugs an AIMM unit
+    /// beside *each* MC; this scheme actually trains one there.
+    AimmMc,
     /// CODA-style greedy co-location (Kim et al.): windowed per-page
     /// compute counters, hysteresis-gated migration toward the cube
     /// issuing the majority of a page's NMP ops. No learning.
@@ -103,10 +109,11 @@ pub enum MappingScheme {
 impl MappingScheme {
     /// Every selectable policy, in registry order — the source of truth
     /// for `from_name`, CLI error messages and `--mappings all`.
-    pub const ALL: [MappingScheme; 5] = [
+    pub const ALL: [MappingScheme; 6] = [
         MappingScheme::Baseline,
         MappingScheme::Tom,
         MappingScheme::Aimm,
+        MappingScheme::AimmMc,
         MappingScheme::Coda,
         MappingScheme::Oracle,
     ];
@@ -123,6 +130,7 @@ impl MappingScheme {
             MappingScheme::Baseline => "B",
             MappingScheme::Tom => "TOM",
             MappingScheme::Aimm => "AIMM",
+            MappingScheme::AimmMc => "AIMM-MC",
             MappingScheme::Coda => "CODA",
             MappingScheme::Oracle => "ORACLE",
         }
@@ -138,24 +146,27 @@ impl MappingScheme {
         Self::ALL.into_iter().find(|m| m.name().eq_ignore_ascii_case(s))
     }
 
-    /// `B|TOM|AIMM|CODA|ORACLE` — the valid-value list for parse-error
-    /// messages, derived from [`MappingScheme::ALL`] so new policies show
-    /// up in CLI errors automatically.
+    /// `B|TOM|AIMM|AIMM-MC|CODA|ORACLE` — the valid-value list for
+    /// parse-error messages, derived from [`MappingScheme::ALL`] so new
+    /// policies show up in CLI errors automatically.
     pub fn name_list() -> String {
         Self::ALL.map(Self::name).join("|")
     }
 
-    /// Does this policy carry a learning agent across runs? Only AIMM
-    /// does; the others are stateless between episodes.
+    /// Does this policy accept a caller-provided single agent carried
+    /// across runs? Only AIMM does; AIMM-MC constructs and carries its
+    /// own per-MC agents inside the policy object, and the others are
+    /// stateless between episodes.
     pub fn uses_agent(self) -> bool {
         self == MappingScheme::Aimm
     }
 
     /// Can this policy be saved/resumed through the continual-learning
-    /// checkpoint format? Only AIMM has learned state worth persisting —
+    /// checkpoint format? AIMM and AIMM-MC carry learned state worth
+    /// persisting (one agent / one bundle of per-MC agents) —
     /// `--checkpoint`/`--resume` reject every other policy loudly.
     pub fn checkpointable(self) -> bool {
-        self == MappingScheme::Aimm
+        matches!(self, MappingScheme::Aimm | MappingScheme::AimmMc)
     }
 }
 
@@ -896,6 +907,7 @@ mod tests {
         }
         assert_eq!(MappingScheme::from_name("baseline"), Some(MappingScheme::Baseline));
         assert_eq!(MappingScheme::from_name("b"), Some(MappingScheme::Baseline));
+        assert_eq!(MappingScheme::from_name("aimm-mc"), Some(MappingScheme::AimmMc));
         assert_eq!(MappingScheme::from_name("coda"), Some(MappingScheme::Coda));
         assert_eq!(MappingScheme::from_name("oracle"), Some(MappingScheme::Oracle));
         assert_eq!(Technique::from_name("ldb"), Some(Technique::Ldb));
@@ -903,11 +915,11 @@ mod tests {
         assert_eq!(MappingScheme::from_name("nope"), None);
     }
 
-    /// The registry split: ALL is the CLI-facing list (five policies),
+    /// The registry split: ALL is the CLI-facing list (six policies),
     /// PAPER the default-grid trio — and every PAPER entry is in ALL.
     #[test]
     fn mapping_registries_are_consistent() {
-        assert_eq!(MappingScheme::ALL.len(), 5);
+        assert_eq!(MappingScheme::ALL.len(), 6);
         assert_eq!(
             MappingScheme::PAPER,
             [MappingScheme::Baseline, MappingScheme::Tom, MappingScheme::Aimm]
@@ -916,6 +928,10 @@ mod tests {
             assert!(MappingScheme::ALL.contains(&m));
         }
         assert!(MappingScheme::Aimm.uses_agent() && MappingScheme::Aimm.checkpointable());
+        // AIMM-MC carries learned state (checkpointable) but constructs
+        // its own per-MC agents — it never takes a caller-provided one.
+        assert!(!MappingScheme::AimmMc.uses_agent());
+        assert!(MappingScheme::AimmMc.checkpointable());
         for m in [
             MappingScheme::Baseline,
             MappingScheme::Tom,
@@ -931,12 +947,12 @@ mod tests {
     /// registries from_name reads — new values show up automatically.
     #[test]
     fn parse_errors_list_valid_names() {
-        assert_eq!(MappingScheme::name_list(), "B|TOM|AIMM|CODA|ORACLE");
+        assert_eq!(MappingScheme::name_list(), "B|TOM|AIMM|AIMM-MC|CODA|ORACLE");
         assert_eq!(Technique::name_list(), "BNMP|LDB|PEI");
         assert_eq!(Engine::name_list(), "polled|event");
         assert_eq!(TopologyKind::name_list(), "mesh|torus|ring");
         let err = SystemConfig::parse("mapping = \"bogus\"").unwrap_err().to_string();
-        assert!(err.contains("B|TOM|AIMM|CODA|ORACLE"), "{err}");
+        assert!(err.contains("B|TOM|AIMM|AIMM-MC|CODA|ORACLE"), "{err}");
         let err = SystemConfig::parse("technique = \"bogus\"").unwrap_err().to_string();
         assert!(err.contains("BNMP|LDB|PEI"), "{err}");
         let err = SystemConfig::parse("engine = \"bogus\"").unwrap_err().to_string();

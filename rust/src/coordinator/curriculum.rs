@@ -19,12 +19,13 @@
 //! curriculum equals the standalone episode numbers, and the whole table
 //! is reproducible under either simulation engine.
 
-use crate::agent::AimmAgent;
+use crate::agent::{AimmAgent, WarmStart};
 use crate::config::SystemConfig;
+use crate::mapping::{AnyPolicy, MappingPolicy};
 use crate::workloads::Benchmark;
 
 use super::runner::{
-    episode_ops, fresh_agent, run_stream_with, EpisodeSummary, MULTI_RUNS, SINGLE_RUNS,
+    episode_ops, run_stream_policy, warm_started_policy, EpisodeSummary, MULTI_RUNS, SINGLE_RUNS,
 };
 
 /// One curriculum stage: a benchmark combination and its repeat count.
@@ -108,35 +109,81 @@ pub fn run_curriculum(
     scale: f64,
     initial: Option<AimmAgent>,
 ) -> anyhow::Result<(CurriculumReport, Option<AimmAgent>)> {
-    anyhow::ensure!(!stages.is_empty(), "curriculum needs at least one stage");
-    let aimm = cfg.mapping.uses_agent();
     anyhow::ensure!(
-        initial.is_none() || aimm,
+        initial.is_none() || cfg.mapping.uses_agent(),
         "an initial agent only makes sense with --mapping AIMM (got {})",
         cfg.mapping
     );
-    let mut agent = match initial {
-        Some(a) => Some(a),
-        None if aimm => Some(fresh_agent(cfg)?),
-        None => None,
+    let initial_policy = initial.map(|a| AnyPolicy::new(cfg, &[], Some(a)));
+    let (report, mut policy) =
+        run_curriculum_policy(cfg, stages, scale, initial_policy, WarmStart::None)?;
+    Ok((report, policy.take_agent()))
+}
+
+/// The policy-level curriculum core behind [`run_curriculum`] — the
+/// entry the `--warm-start` and AIMM-MC paths use, since both carry
+/// learned state that does not fit the single-agent seam. Per stage:
+///
+/// * the **cold** baseline is always a fresh, never-warm-started policy
+///   (it is the yardstick any distillation or transfer gain is measured
+///   against);
+/// * the **warm** lineage carries learned state stage-to-stage for the
+///   AIMM shapes (one agent, or the whole per-MC pool), while stateless
+///   policies are rebuilt per stage exactly as before — the oracle
+///   re-profiles each stage's ops, TOM re-learns its epochs.
+///
+/// `warm_start` applies once, to the warm lineage's starting policy,
+/// distilled from stage 0's op stream (resuming from `initial` skips
+/// distillation — the learning it would seed is already there).
+pub fn run_curriculum_policy(
+    cfg: &SystemConfig,
+    stages: &[CurriculumStage],
+    scale: f64,
+    initial: Option<AnyPolicy>,
+    warm_start: WarmStart,
+) -> anyhow::Result<(CurriculumReport, AnyPolicy)> {
+    anyhow::ensure!(!stages.is_empty(), "curriculum needs at least one stage");
+    if let Some(p) = &initial {
+        anyhow::ensure!(
+            p.scheme() == cfg.mapping,
+            "the initial policy is {} but the config maps with {} — refusing to mix lineages",
+            p.scheme().name(),
+            cfg.mapping
+        );
+    }
+    let mut warm_policy = match initial {
+        Some(p) => p,
+        None => {
+            let (ops0, _) = episode_ops(cfg, &stages[0].benches, scale)?;
+            warm_started_policy(cfg, &ops0, warm_start)?.0
+        }
     };
     let mut outcomes = Vec::with_capacity(stages.len());
     for stage in stages {
         let runs = stage.effective_runs();
         let (ops, name) = episode_ops(cfg, &stage.benches, scale)?;
-        let cold_agent = if aimm { Some(fresh_agent(cfg)?) } else { None };
-        let (cold, _) = run_stream_with(cfg, &ops, runs, &name, cold_agent)?;
-        let (warm, carried) = run_stream_with(cfg, &ops, runs, &name, agent.take())?;
-        agent = carried;
+        let (cold_policy, _) = warm_started_policy(cfg, &ops, WarmStart::None)?;
+        let (cold, _) = run_stream_policy(cfg, &ops, runs, &name, cold_policy)?;
+        let stage_policy = if matches!(warm_policy, AnyPolicy::Aimm(_) | AnyPolicy::AimmMc(_)) {
+            warm_policy
+        } else {
+            // Stateless schemes restart from this stage's op stream (the
+            // oracle's dry run profiles *these* ops) — identical to the
+            // pre-policy-carry behavior.
+            AnyPolicy::new(cfg, &ops, None)
+        };
+        let (warm, carried) = run_stream_policy(cfg, &ops, runs, &name, stage_policy)?;
+        warm_policy = carried;
         outcomes.push(StageOutcome { name, warm, cold });
     }
-    Ok((CurriculumReport { stages: outcomes }, agent))
+    Ok((CurriculumReport { stages: outcomes }, warm_policy))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{MappingScheme, Technique};
+    use crate::coordinator::fresh_agent;
 
     fn cfg(mapping: MappingScheme) -> SystemConfig {
         let mut c = SystemConfig::default();
@@ -209,6 +256,49 @@ mod tests {
         let agent = fresh_agent(&cfg(MappingScheme::Aimm)).unwrap();
         let st = stages(&[&[Benchmark::Mac]], 1);
         assert!(run_curriculum(&b, &st, 0.03, Some(agent)).is_err());
+    }
+
+    #[test]
+    fn curriculum_policy_carries_the_mc_pool() {
+        let c = cfg(MappingScheme::AimmMc);
+        let st = stages(&[&[Benchmark::Sc], &[Benchmark::Km]], 2);
+        let (report, policy) =
+            run_curriculum_policy(&c, &st, 0.04, None, WarmStart::None).unwrap();
+        assert_eq!(report.stages.len(), 2);
+        assert_eq!(policy.scheme(), MappingScheme::AimmMc);
+        // The carried pool saw every warm run; stage 1's cold pool saw
+        // only its own stage (invocation totals are cumulative).
+        let s1 = &report.stages[1];
+        assert!(
+            s1.warm.last().agent_invocations > s1.cold.last().agent_invocations,
+            "warm {} <= cold {}",
+            s1.warm.last().agent_invocations,
+            s1.cold.last().agent_invocations
+        );
+        // The single-agent wrapper hands no agent back for the pool —
+        // the learned state lives in the policy object.
+        let (_, none) = run_curriculum(&c, &st, 0.04, None).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn curriculum_accepts_warm_start_and_rejects_mixed_lineages() {
+        let c = cfg(MappingScheme::Aimm);
+        let st = stages(&[&[Benchmark::Mac]], 1);
+        let (report, policy) =
+            run_curriculum_policy(&c, &st, 0.03, None, WarmStart::Oracle).unwrap();
+        assert_eq!(report.stages.len(), 1);
+        assert_eq!(policy.scheme(), MappingScheme::Aimm);
+        // A lineage from one scheme cannot seed a curriculum of another.
+        let mc = cfg(MappingScheme::AimmMc);
+        let donor = AnyPolicy::new(&mc, &[], None);
+        let err = run_curriculum_policy(&c, &st, 0.03, Some(donor), WarmStart::None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("AIMM-MC"), "{err}");
+        // Warm-starting a stateless scheme fails loudly at construction.
+        let b = cfg(MappingScheme::Baseline);
+        assert!(run_curriculum_policy(&b, &st, 0.03, None, WarmStart::Oracle).is_err());
     }
 
     #[test]

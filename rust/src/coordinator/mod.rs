@@ -14,13 +14,17 @@ pub mod runner;
 pub mod serve;
 pub mod system;
 
-pub use curriculum::{run_curriculum, CurriculumReport, CurriculumStage, StageOutcome};
+pub use curriculum::{
+    run_curriculum, run_curriculum_policy, CurriculumReport, CurriculumStage, StageOutcome,
+};
 pub use runner::{
     episode_ops, fresh_agent, run_cell, run_episode_with, run_multi, run_single, run_stream,
-    run_stream_with, run_traced_with, EpisodeSummary,
+    run_stream_policy, run_stream_with, run_traced_policy, run_traced_with, warm_started_policy,
+    EpisodeSummary,
 };
 pub use serve::{
-    build_tenants, ensure_serve_checkpointable, isolated_baselines, run_serve, serve_report_json,
-    serve_stream_with, summarize, ServeOutcome, TenantFeed, TenantRun, TenantSpec,
+    build_tenants, ensure_serve_checkpointable, isolated_baselines, run_serve, run_serve_policy,
+    serve_report_json, serve_stream_policy, serve_stream_with, summarize, ServeOutcome,
+    TenantFeed, TenantRun, TenantSpec,
 };
 pub use system::System;

@@ -3,9 +3,9 @@
 //! rebuilds the simulator from scratch but the agent's DNN (and replay
 //! memory) persists — the continual-learning premise.
 
-use crate::agent::AimmAgent;
+use crate::agent::{fresh_mc_agents, warm_start_agent, AimmAgent, DistillStats, WarmStart};
 use crate::config::{MappingScheme, SystemConfig};
-use crate::mapping::{AnyPolicy, OracleProfile, OracleProfiler};
+use crate::mapping::{AimmMultiPolicy, AnyPolicy, OracleProfile, OracleProfiler};
 use crate::metrics::RunStats;
 use crate::nmp::NmpOp;
 use crate::runtime::best_qfunction;
@@ -61,7 +61,7 @@ impl EpisodeSummary {
 /// through the exact same path the plain episode runner uses.
 pub fn fresh_agent(cfg: &SystemConfig) -> anyhow::Result<AimmAgent> {
     AimmAgent::try_new(
-        best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed),
+        best_qfunction(cfg.agent.lr, cfg.agent.gamma, cfg.seed, cfg.agent.batch_size),
         cfg.agent.clone(),
         cfg.seed ^ 0xA6E7,
     )
@@ -92,14 +92,73 @@ pub fn run_stream_with(
     name: &str,
     agent: Option<AimmAgent>,
 ) -> anyhow::Result<(EpisodeSummary, Option<AimmAgent>)> {
-    let mut policy = AnyPolicy::new(cfg, ops, agent);
+    let policy = AnyPolicy::new(cfg, ops, agent);
+    let (summary, mut policy) = run_stream_policy(cfg, ops, runs, name, policy)?;
+    Ok((summary, policy.take_agent()))
+}
+
+/// The policy-carrying core of [`run_stream_with`]: thread an existing
+/// policy through `runs` constructions of the system and hand the whole
+/// policy back. The single-agent paths wrap this and extract the agent;
+/// AIMM-MC callers (curriculum stages, the checkpoint CLI) must use this
+/// directly — the per-MC pool lives *inside* the policy object and
+/// `take_agent` deliberately leaves it intact.
+pub fn run_stream_policy(
+    cfg: &SystemConfig,
+    ops: &[NmpOp],
+    runs: usize,
+    name: &str,
+    mut policy: AnyPolicy,
+) -> anyhow::Result<(EpisodeSummary, AnyPolicy)> {
     let mut stats = Vec::with_capacity(runs);
     for _ in 0..runs {
         let mut sys = System::with_policy(cfg.clone(), ops.to_vec(), policy);
         stats.push(sys.run()?);
         policy = sys.take_policy();
     }
-    Ok((EpisodeSummary { name: name.to_string(), runs: stats }, policy.take_agent()))
+    Ok((EpisodeSummary { name: name.to_string(), runs: stats }, policy))
+}
+
+/// Build the policy an episode starts from under `warm_start` — the one
+/// constructor behind `--warm-start` on every mode (run, curriculum,
+/// serve). `WarmStart::None` is exactly [`AnyPolicy::new`] over
+/// [`fresh_agent`]; `WarmStart::Oracle` first distills the oracle's dry
+/// pass over `ops` into each learning agent
+/// ([`crate::agent::warm_start_agent`]) — one agent for AIMM, the whole
+/// per-MC pool for AIMM-MC (same labeled dataset, per-agent Q-inits keep
+/// the pool diverse). Requesting a warm start for a policy that carries
+/// no learnable state is refused loudly, as is a Q-backend that declares
+/// no fixed training batch.
+pub fn warm_started_policy(
+    cfg: &SystemConfig,
+    ops: &[NmpOp],
+    warm_start: WarmStart,
+) -> anyhow::Result<(AnyPolicy, Vec<DistillStats>)> {
+    if warm_start == WarmStart::None {
+        return Ok((AnyPolicy::new(cfg, ops, default_agent(cfg)?), Vec::new()));
+    }
+    match cfg.mapping {
+        MappingScheme::Aimm => {
+            let mut agent = fresh_agent(cfg)?;
+            let stats = warm_start_agent(&mut agent, cfg, ops)?;
+            Ok((AnyPolicy::new(cfg, ops, Some(agent)), vec![stats]))
+        }
+        MappingScheme::AimmMc => {
+            let mut agents = fresh_mc_agents(cfg)?;
+            let mut stats = Vec::with_capacity(agents.len());
+            for agent in &mut agents {
+                stats.push(warm_start_agent(agent, cfg, ops)?);
+            }
+            let policy = AnyPolicy::AimmMc(Box::new(AimmMultiPolicy::with_agents(cfg, agents)));
+            Ok((policy, stats))
+        }
+        other => anyhow::bail!(
+            "--warm-start {} needs a learning policy to pre-train, but the mapping is {} \
+             (use AIMM or AIMM-MC)",
+            warm_start.name(),
+            other
+        ),
+    }
 }
 
 /// Replay a captured trace file `runs` times — the `--trace` episode
@@ -121,16 +180,37 @@ pub fn run_traced_with(
         "an agent only drives the AIMM policy (mapping is {})",
         cfg.mapping
     );
-    let mut policy = if cfg.mapping == MappingScheme::Oracle {
-        let mut profiler = OracleProfiler::new(cfg.num_cubes());
-        let mut provider = file.provider()?;
-        while let Some(op) = provider.peek() {
-            profiler.observe(&op);
-            provider.consume()?;
+    let initial =
+        (cfg.mapping != MappingScheme::Oracle).then(|| AnyPolicy::new(cfg, &[], agent));
+    let (summary, mut policy) = run_traced_policy(cfg, file, runs, initial)?;
+    Ok((summary, policy.take_agent()))
+}
+
+/// The policy-carrying core of [`run_traced_with`]: replay the trace
+/// `runs` times through an existing policy, or — when `initial` is
+/// `None` — through the default policy for `cfg` (for the oracle, that
+/// is the up-front streaming profile pass; for AIMM/AIMM-MC, cold
+/// agents). The checkpoint CLI resumes AIMM-MC replays through this
+/// seam: the restored per-MC pool lives inside the policy object and
+/// comes back intact for the next save.
+pub fn run_traced_policy(
+    cfg: &SystemConfig,
+    file: &FileTrace,
+    runs: usize,
+    initial: Option<AnyPolicy>,
+) -> anyhow::Result<(EpisodeSummary, AnyPolicy)> {
+    let mut policy = match initial {
+        Some(p) => p,
+        None if cfg.mapping == MappingScheme::Oracle => {
+            let mut profiler = OracleProfiler::new(cfg.num_cubes());
+            let mut provider = file.provider()?;
+            while let Some(op) = provider.peek() {
+                profiler.observe(&op);
+                provider.consume()?;
+            }
+            AnyPolicy::Oracle(OracleProfile::from_assignment(profiler.finish()))
         }
-        AnyPolicy::Oracle(OracleProfile::from_assignment(profiler.finish()))
-    } else {
-        AnyPolicy::new(cfg, &[], agent)
+        None => AnyPolicy::new(cfg, &[], default_agent(cfg)?),
     };
     let mut stats = Vec::with_capacity(runs);
     for _ in 0..runs {
@@ -139,10 +219,7 @@ pub fn run_traced_with(
         stats.push(sys.run()?);
         policy = sys.take_policy();
     }
-    Ok((
-        EpisodeSummary { name: file.name().to_string(), runs: stats },
-        policy.take_agent(),
-    ))
+    Ok((EpisodeSummary { name: file.name().to_string(), runs: stats }, policy))
 }
 
 /// Run one op stream `runs` times with the configured mapping scheme,
@@ -242,6 +319,7 @@ pub fn run_multi(
 mod tests {
     use super::*;
     use crate::config::{MappingScheme, Technique};
+    use crate::mapping::MappingPolicy;
 
     fn cfg(mapping: MappingScheme) -> SystemConfig {
         let mut c = SystemConfig::default();
@@ -341,6 +419,49 @@ mod tests {
         // (previously it silently built a different stream than
         // run_single for the same benchmark).
         assert!(run_multi(&c, &[Benchmark::Mac], 0.03, 1).is_err());
+    }
+
+    #[test]
+    fn aimm_mc_pool_persists_across_runs_via_the_policy_seam() {
+        let c = cfg(MappingScheme::AimmMc);
+        let (ops, name) = episode_ops(&c, &[Benchmark::Spmv], 0.05).unwrap();
+        let policy = AnyPolicy::new(&c, &ops, None);
+        let (s, policy) = run_stream_policy(&c, &ops, 2, &name, policy).unwrap();
+        assert_eq!(s.runs.len(), 2);
+        assert!(s.runs[0].agent_invocations > 0);
+        assert!(s.runs[1].agent_invocations > 0);
+        // The pool came back intact, with cumulative experience: the
+        // stats keep counting across runs (continual learning), so the
+        // pool total equals what the last run reported.
+        let pool = policy.agents();
+        assert_eq!(pool.len(), c.num_mcs());
+        assert!(s.runs[1].agent_invocations >= s.runs[0].agent_invocations);
+        let total: u64 = pool.iter().map(|a| a.stats.invocations).sum();
+        assert_eq!(total, s.runs[1].agent_invocations);
+    }
+
+    #[test]
+    fn warm_started_policy_covers_every_learning_shape() {
+        let c = cfg(MappingScheme::Aimm);
+        let (ops, _) = episode_ops(&c, &[Benchmark::Mac], 0.04).unwrap();
+        // None = the plain constructor, no distillation.
+        let (_, stats) = warm_started_policy(&c, &ops, WarmStart::None).unwrap();
+        assert!(stats.is_empty());
+        // AIMM distills one agent.
+        let (p, stats) = warm_started_policy(&c, &ops, WarmStart::Oracle).unwrap();
+        assert_eq!(p.scheme(), MappingScheme::Aimm);
+        assert_eq!(stats.len(), 1);
+        assert!(stats[0].examples > 0);
+        // AIMM-MC distills the whole pool.
+        let mc = cfg(MappingScheme::AimmMc);
+        let (p, stats) = warm_started_policy(&mc, &ops, WarmStart::Oracle).unwrap();
+        assert_eq!(p.scheme(), MappingScheme::AimmMc);
+        assert_eq!(stats.len(), mc.num_mcs());
+        // Stateless policies refuse by name.
+        let b = cfg(MappingScheme::Baseline);
+        let err = warm_started_policy(&b, &ops, WarmStart::Oracle).unwrap_err().to_string();
+        assert!(err.contains("B"), "{err}");
+        assert!(err.contains("oracle"), "{err}");
     }
 
     #[test]

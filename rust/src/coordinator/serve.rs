@@ -28,17 +28,17 @@
 
 use std::collections::VecDeque;
 
-use crate::agent::AimmAgent;
+use crate::agent::{AimmAgent, WarmStart};
 use crate::bench::sweep::parallel_map;
 use crate::config::{Pid, SystemConfig};
-use crate::mapping::AnyPolicy;
+use crate::mapping::{AnyPolicy, MappingPolicy};
 use crate::metrics::{jain_fairness, percentile, RunStats, TenantStats};
 use crate::nmp::NmpOp;
 use crate::runtime::json::write as jw;
 use crate::sim::{Cycle, Rng};
 use crate::workloads::{arrival_schedule, generate, Benchmark};
 
-use super::runner::fresh_agent;
+use super::runner::{fresh_agent, warm_started_policy};
 use super::system::System;
 
 /// Seed fold for the bench-mix stream (which benchmark each tenant runs
@@ -313,9 +313,23 @@ pub fn serve_stream_with(
     rounds: usize,
     agent: Option<AimmAgent>,
 ) -> anyhow::Result<(Vec<RunStats>, Option<AimmAgent>)> {
-    anyhow::ensure!(rounds >= 1, "serve needs at least one round");
     let all_ops: Vec<NmpOp> = tenants.iter().flat_map(|t| t.ops.iter().copied()).collect();
-    let mut policy = AnyPolicy::new(cfg, &all_ops, agent);
+    let policy = AnyPolicy::new(cfg, &all_ops, agent);
+    let (stats, mut policy) = serve_stream_policy(cfg, tenants, rounds, policy)?;
+    Ok((stats, policy.take_agent()))
+}
+
+/// The policy-carrying core of [`serve_stream_with`]: thread an existing
+/// policy through `rounds` service rounds and hand the whole policy
+/// back. AIMM-MC and warm-started lineages come through here — their
+/// learned state lives in the policy object, not the single-agent seam.
+pub fn serve_stream_policy(
+    cfg: &SystemConfig,
+    tenants: &[TenantSpec],
+    rounds: usize,
+    mut policy: AnyPolicy,
+) -> anyhow::Result<(Vec<RunStats>, AnyPolicy)> {
+    anyhow::ensure!(rounds >= 1, "serve needs at least one round");
     let mut stats = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let feed = TenantFeed::new(tenants.to_vec(), cfg.serve.slots, cfg.serve.page_budget)?;
@@ -323,7 +337,7 @@ pub fn serve_stream_with(
         stats.push(sys.run()?);
         policy = sys.take_policy();
     }
-    Ok((stats, policy.take_agent()))
+    Ok((stats, policy))
 }
 
 /// Each tenant's isolated-run baseline: the cycles its stream takes on
@@ -407,25 +421,55 @@ pub fn run_serve(
     threads: usize,
     agent: Option<AimmAgent>,
 ) -> anyhow::Result<(ServeOutcome, Option<AimmAgent>)> {
+    let initial = agent.map(|a| AnyPolicy::new(cfg, &[], Some(a)));
+    let (outcome, mut policy) = run_serve_policy(cfg, threads, initial, WarmStart::None)?;
+    Ok((outcome, policy.take_agent()))
+}
+
+/// The policy-level serve study behind [`run_serve`] — the entry the
+/// `--warm-start` and AIMM-MC paths use. `warm_start` distills the
+/// concatenated tenant streams (the same op population the oracle's dry
+/// run profiles) into the serving policy before round 1; resuming from
+/// `initial` skips distillation — the learning it would seed is already
+/// there. Isolated baselines always run cold: they are the yardstick.
+pub fn run_serve_policy(
+    cfg: &SystemConfig,
+    threads: usize,
+    initial: Option<AnyPolicy>,
+    warm_start: WarmStart,
+) -> anyhow::Result<(ServeOutcome, AnyPolicy)> {
     let tenants = build_tenants(cfg);
     anyhow::ensure!(!tenants.is_empty(), "serve needs at least one tenant");
     let baselines = isolated_baselines(cfg, &tenants, threads)?;
-    let agent = match agent {
-        Some(a) => Some(a),
-        None if cfg.mapping.uses_agent() => Some(fresh_agent(cfg)?),
-        None => None,
+    let policy = match initial {
+        Some(p) => {
+            anyhow::ensure!(
+                p.scheme() == cfg.mapping,
+                "the initial policy is {} but the config maps with {} — refusing to mix \
+                 lineages",
+                p.scheme().name(),
+                cfg.mapping
+            );
+            p
+        }
+        None => {
+            let all_ops: Vec<NmpOp> =
+                tenants.iter().flat_map(|t| t.ops.iter().copied()).collect();
+            warm_started_policy(cfg, &all_ops, warm_start)?.0
+        }
     };
-    let (rounds, agent) = serve_stream_with(cfg, &tenants, cfg.serve.rounds, agent)?;
-    Ok((summarize(rounds, baselines)?, agent))
+    let (rounds, policy) = serve_stream_policy(cfg, &tenants, cfg.serve.rounds, policy)?;
+    Ok((summarize(rounds, baselines)?, policy))
 }
 
-/// Serve-mode checkpointing carries the agent across service rounds;
-/// only AIMM has one. Refuse loudly, by name, before any work happens.
+/// Serve-mode checkpointing carries learned state across service rounds;
+/// only the AIMM shapes have any. Refuse loudly, by name, before any
+/// work happens.
 pub fn ensure_serve_checkpointable(cfg: &SystemConfig) -> anyhow::Result<()> {
     anyhow::ensure!(
         cfg.mapping.checkpointable(),
-        "serve-mode --checkpoint/--resume require --mapping AIMM: the {} policy is not \
-         checkpointable (only AIMM carries learned state)",
+        "serve-mode --checkpoint/--resume require --mapping AIMM or AIMM-MC: the {} policy \
+         is not checkpointable (only AIMM carries learned state)",
         cfg.mapping.name()
     );
     Ok(())

@@ -764,16 +764,22 @@ impl System {
         energy_counts.mig_queue_accesses = self.migration.stats.queue_touches;
         energy_counts.mdma_accesses = self.migration.stats.mdma_touches;
         energy_counts.bit_hops = self.mesh.stats.bit_hops;
-        let (mut inv, mut trains, mut loss, mut cum_r) = (0, 0, 0.0, 0.0);
-        if let Some(a) = self.policy.agent() {
-            energy_counts.weight_accesses = a.stats.weight_accesses;
-            energy_counts.replay_accesses = a.stats.replay_accesses;
-            energy_counts.state_buf_accesses = a.stats.state_buf_accesses;
-            inv = a.stats.invocations;
-            trains = a.stats.train_steps;
-            loss = a.avg_loss();
-            cum_r = a.stats.cumulative_reward;
+        // Sum over every agent the policy carries — one for AIMM, one
+        // per MC for AIMM-MC, none for the rest — so single- and
+        // multi-agent runs report through the same code path (and the
+        // single-agent numbers are bit-identical to the pre-pool code).
+        let (mut inv, mut trains, mut cum_r) = (0u64, 0u64, 0.0f64);
+        let mut loss_sum = 0.0f64;
+        for a in self.policy.agents() {
+            energy_counts.weight_accesses += a.stats.weight_accesses;
+            energy_counts.replay_accesses += a.stats.replay_accesses;
+            energy_counts.state_buf_accesses += a.stats.state_buf_accesses;
+            inv += a.stats.invocations;
+            trains += a.stats.train_steps;
+            loss_sum += a.stats.loss_sum;
+            cum_r += a.stats.cumulative_reward;
         }
+        let loss = if trains == 0 { 0.0 } else { loss_sum / trains as f64 };
 
         RunStats {
             cycles,

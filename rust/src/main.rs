@@ -3,9 +3,10 @@
 //! configurations.
 //!
 //! ```text
-//! aimm run      --bench SPMV [--technique BNMP] [--mapping AIMM]
+//! aimm run      --bench SPMV [--technique BNMP] [--mapping AIMM|AIMM-MC]
 //!               [--scale 0.5] [--runs 5] [--mesh 4x4] [--topology torus]
 //!               [--hoard] [--config file.toml] [--seed N]
+//!               [--warm-start none|oracle]
 //!               [--checkpoint out.json] [--resume in.json]
 //! aimm sweep    [--benches all] [--mappings all] [--meshes 4x4,8x8]
 //!               [--topologies mesh,torus,ring] [--threads N]
@@ -27,15 +28,18 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::process::ExitCode;
 
-use aimm::agent::{AgentCheckpoint, AimmAgent};
+use aimm::agent::{CheckpointBundle, DistillStats, WarmStart};
 use aimm::bench::figures;
 use aimm::bench::sweep::{self, ContinualSequence, SweepGrid};
 use aimm::bench::Table;
 use aimm::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
 use aimm::coordinator::{
-    ensure_serve_checkpointable, episode_ops, fresh_agent, run_curriculum, run_episode_with,
-    run_serve, run_traced_with, serve_report_json, CurriculumStage,
+    ensure_serve_checkpointable, episode_ops, fresh_agent, run_curriculum_policy,
+    run_serve_policy, run_stream_policy, run_traced_policy, serve_report_json,
+    warm_started_policy, CurriculumStage,
 };
+use aimm::mapping::AnyPolicy;
+use aimm::nmp::NmpOp;
 use aimm::workloads::{render_trace, ArrivalProcess, Benchmark, FileTrace};
 
 /// Q-backend note for `--help`, matching what this binary was built with.
@@ -54,13 +58,21 @@ fn usage() -> String {
          \n\
          subcommands:\n\
            run      --bench <NAME> [--technique BNMP|LDB|PEI]\n\
-                    [--mapping B|TOM|AIMM|CODA|ORACLE]\n\
+                    [--mapping B|TOM|AIMM|AIMM-MC|CODA|ORACLE]\n\
+                    (AIMM-MC drives one agent per memory controller, with\n\
+                    deterministic round-robin experience gossip)\n\
                     [--scale F] [--runs N] [--mesh CxR] [--topology mesh|torus|ring]\n\
                     [--hoard] [--seed N] [--config FILE] [--engine polled|event]\n\
-                    [--checkpoint OUT.json] save the agent at the episode boundary\n\
-                    [--resume IN.json] warm-start from a saved checkpoint\n\
-                    (checkpoints demand --mapping AIMM: the only policy with\n\
-                    learned state)\n\
+                    [--warm-start none|oracle] pre-train the learning agents on\n\
+                    the oracle's dry pass before episode 1 (AIMM/AIMM-MC only;\n\
+                    not with --trace — distillation needs the generated stream)\n\
+                    [--checkpoint OUT.json] save every learned agent at the\n\
+                    episode boundary (aimm-checkpoint-v2 bundle)\n\
+                    [--resume IN.json] resume from a saved bundle (or a legacy\n\
+                    v1 single-agent file); refused if the per-MC agent count or\n\
+                    warm-start mode drifted\n\
+                    (checkpoints demand --mapping AIMM or AIMM-MC: the policies\n\
+                    with learned state)\n\
                     [--capture OUT.tr] write the episode's op stream as a\n\
                     versioned trace file (replayable, bit-identical stats)\n\
                     [--trace FILE.tr] replay a captured trace instead of\n\
@@ -69,10 +81,13 @@ fn usage() -> String {
                     replay a multi-program capture with run --trace)\n\
            curriculum --stages A,B+C,D (ordered; + joins a multi-program stage)\n\
                     [--runs N (0 = paper default per stage)] [--scale F]\n\
+                    [--warm-start none|oracle] distill stage 1's oracle pass\n\
+                    into the agents before the curriculum starts\n\
                     [--resume IN.json] [--checkpoint OUT.json]\n\
                     [--out BENCH_continual.json]\n\
-                    runs the stages carrying ONE agent end-to-end and prints the\n\
-                    cold-vs-warm first-run transfer table (defaults to --mapping AIMM)\n\
+                    runs the stages carrying ONE learned policy end-to-end (one\n\
+                    agent, or AIMM-MC's per-MC pool) and prints the cold-vs-warm\n\
+                    first-run transfer table (defaults to --mapping AIMM)\n\
            sweep    [--benches all|A,B,A+B (use + for a multi-program combo)]\n\
                     [--techniques BNMP,LDB,PEI|all]\n\
                     [--mappings B,TOM,AIMM,CODA,ORACLE|all (default: the paper's\n\
@@ -98,6 +113,8 @@ fn usage() -> String {
                     [--mean-gap CYCLES] [--slots N] [--page-budget PAGES]\n\
                     [--rounds N] [--scale F] [--threads N] [--seed N]\n\
                     [--mapping ...] [--engine polled|event] [--config FILE]\n\
+                    [--warm-start none|oracle] (pre-train on the tenants'\n\
+                    pooled op streams before round 1)\n\
                     [--out BENCH_serve.json] [--checkpoint OUT.json]\n\
                     [--resume IN.json]\n\
                     prints per-tenant slowdown vs an isolated run plus the\n\
@@ -205,56 +222,124 @@ fn parse_combos(list: &str) -> Result<Vec<Vec<Benchmark>>, String> {
         .collect()
 }
 
-/// The agent an episode-running subcommand starts with: a checkpoint
-/// when `--resume` was given, a fresh one for AIMM, none otherwise.
-/// `--checkpoint`/`--resume` demand a checkpointable policy — only AIMM
-/// has learned state to persist, and silently ignoring the flag under
-/// B/TOM/CODA/ORACLE would be the exact bug class this plumbing exists
-/// to remove. The error names the offending policy.
-fn initial_agent(args: &Args, cfg: &SystemConfig) -> Result<Option<AimmAgent>, String> {
-    let wants_ckpt = args.get("checkpoint").is_some() || args.get("resume").is_some();
-    if wants_ckpt && !cfg.mapping.checkpointable() {
-        return Err(format!(
-            "--checkpoint/--resume require --mapping AIMM: the {} policy is not checkpointable",
-            cfg.mapping
-        ));
-    }
-    match args.get("resume") {
-        Some(path) => {
-            let ck = AgentCheckpoint::load(Path::new(path)).map_err(|e| e.to_string())?;
-            let agent = ck
-                .build_agent(&cfg.agent)
-                .map_err(|e| format!("resume {path}: {e}"))?;
-            println!(
-                "resumed agent from {path} ({} backend, ε={:.4}, {} replay transitions, \
-                 {} train steps)",
-                ck.q.backend,
-                ck.eps,
-                ck.replay.transitions.len(),
-                ck.q.train_steps
-            );
-            Ok(Some(agent))
-        }
-        None if cfg.mapping.uses_agent() => {
-            Ok(Some(fresh_agent(cfg).map_err(|e| e.to_string())?))
-        }
-        None => Ok(None),
+/// `--warm-start <mode>`: how the learning policy is initialized before
+/// its first episode — `none` (cold, the default) or `oracle`
+/// (distillation pre-training on the oracle's dry pass, DESIGN.md §15).
+fn warm_start_flag(args: &Args) -> Result<WarmStart, String> {
+    match args.get("warm-start") {
+        Some(w) => WarmStart::from_name(w).ok_or_else(|| {
+            format!("unknown warm-start {w} (expected {})", WarmStart::name_list())
+        }),
+        None => Ok(WarmStart::None),
     }
 }
 
-/// Honor `--checkpoint PATH`: save the carried agent at the episode
-/// boundary the run just reached.
-fn save_checkpoint(args: &Args, agent: Option<&AimmAgent>) -> Result<(), String> {
-    let Some(path) = args.get("checkpoint") else { return Ok(()) };
-    let agent = agent.ok_or("no agent to checkpoint (is --mapping AIMM?)")?;
-    let ck = agent.checkpoint().map_err(|e| e.to_string())?;
-    ck.save(Path::new(path)).map_err(|e| e.to_string())?;
+/// The CLI guard the checkpoint plumbing hangs off: `--checkpoint` and
+/// `--resume` demand a policy with learned state to persist — AIMM's
+/// single agent or AIMM-MC's per-MC pool — and every other scheme is
+/// rejected loudly, naming itself. Silently ignoring the flag under
+/// B/TOM/CODA/ORACLE would be the exact bug class this plumbing exists
+/// to remove.
+fn ensure_cli_checkpointable(args: &Args, cfg: &SystemConfig) -> Result<(), String> {
+    let wants_ckpt = args.get("checkpoint").is_some() || args.get("resume").is_some();
+    if wants_ckpt && !cfg.mapping.checkpointable() {
+        return Err(format!(
+            "--checkpoint/--resume require --mapping AIMM or AIMM-MC: \
+             the {} policy is not checkpointable",
+            cfg.mapping
+        ));
+    }
+    Ok(())
+}
+
+/// Learned agents the configured mapping carries — the expected bundle
+/// shape for drift rejection: 1 for AIMM, one per MC for AIMM-MC.
+fn expected_agents(cfg: &SystemConfig) -> usize {
+    if cfg.mapping == MappingScheme::AimmMc {
+        cfg.num_mcs()
+    } else {
+        1
+    }
+}
+
+/// `--resume PATH`: load the v2 bundle (or a legacy v1 single-agent
+/// document), refuse shape/provenance drift by field name, and rebuild
+/// the run's starting policy from it. A resumed policy is never
+/// re-distilled — the bundle records the warm-start mode it was trained
+/// under and `ensure_resumable` holds the requested mode to it.
+fn resume_policy(cfg: &SystemConfig, path: &str, warm: WarmStart) -> Result<AnyPolicy, String> {
+    let bundle = CheckpointBundle::load(Path::new(path)).map_err(|e| e.to_string())?;
+    bundle
+        .ensure_resumable(expected_agents(cfg), warm)
+        .map_err(|e| format!("resume {path}: {e}"))?;
+    let seed_agent = if cfg.mapping.uses_agent() {
+        Some(fresh_agent(cfg).map_err(|e| e.to_string())?)
+    } else {
+        None
+    };
+    let mut policy = AnyPolicy::new(cfg, &[], seed_agent);
+    policy
+        .restore_from_bundle(&bundle)
+        .map_err(|e| format!("resume {path}: {e}"))?;
     println!(
-        "wrote checkpoint {path} ({} backend, ε={:.4}, {} replay transitions, {} train steps)",
-        ck.q.backend,
-        ck.eps,
-        ck.replay.transitions.len(),
-        ck.q.train_steps
+        "resumed {} agent(s) from {path} ({} backend, warm-start {})",
+        bundle.agents.len(),
+        bundle.agents[0].q.backend,
+        bundle.warm_start.name()
+    );
+    Ok(policy)
+}
+
+/// The policy an episode-running subcommand starts with: resumed from a
+/// bundle when `--resume` was given, otherwise built cold or distilled
+/// per `--warm-start` over the episode's op stream.
+fn initial_policy(
+    args: &Args,
+    cfg: &SystemConfig,
+    ops: &[NmpOp],
+    warm: WarmStart,
+) -> Result<AnyPolicy, String> {
+    match args.get("resume") {
+        Some(path) => resume_policy(cfg, path, warm),
+        None => {
+            let (policy, stats) =
+                warm_started_policy(cfg, ops, warm).map_err(|e| e.to_string())?;
+            print_distill(warm, &stats);
+            Ok(policy)
+        }
+    }
+}
+
+/// Surface what a warm-start did — "pre-trained on N pages" belongs on
+/// the console, not silently inside the policy.
+fn print_distill(warm: WarmStart, stats: &[DistillStats]) {
+    let Some(first) = stats.first() else { return };
+    let batches: usize = stats.iter().map(|s| s.batches).sum();
+    println!(
+        "warm-start {}: {} agent(s) distilled from {} oracle pages \
+         ({} examples x {} epochs, {} batches of {})",
+        warm.name(),
+        stats.len(),
+        first.pages,
+        first.examples,
+        first.epochs,
+        batches,
+        first.batch
+    );
+}
+
+/// Honor `--checkpoint PATH`: bundle every learned agent the policy
+/// carries at the episode boundary the run just reached, stamped with
+/// the run's warm-start provenance (aimm-checkpoint-v2).
+fn save_bundle(args: &Args, policy: &AnyPolicy, warm: WarmStart) -> Result<(), String> {
+    let Some(path) = args.get("checkpoint") else { return Ok(()) };
+    let bundle = policy.checkpoint_bundle(warm).map_err(|e| e.to_string())?;
+    bundle.save(Path::new(path)).map_err(|e| e.to_string())?;
+    println!(
+        "wrote checkpoint {path} ({} agent(s), {} backend, warm-start {})",
+        bundle.agents.len(),
+        bundle.agents[0].q.backend,
+        bundle.warm_start.name()
     );
     Ok(())
 }
@@ -407,11 +492,20 @@ fn real_main() -> Result<(), String> {
         "run" => {
             let cfg = build_cfg(&args)?;
             let runs = args.usize_or("runs", figures::SINGLE_RUNS)?;
-            let agent = initial_agent(&args, &cfg)?;
-            let (s, agent) = if let Some(path) = args.get("trace") {
+            let warm = warm_start_flag(&args)?;
+            ensure_cli_checkpointable(&args, &cfg)?;
+            let (s, policy) = if let Some(path) = args.get("trace") {
                 // Replay: the file is the whole workload definition.
                 if args.get("bench").is_some() {
                     return Err("--trace replays a captured stream; drop --bench".into());
+                }
+                if warm != WarmStart::None {
+                    return Err(
+                        "--warm-start distills from a generated op stream and cannot \
+                         profile a --trace replay; generate with --bench to warm-start \
+                         (a resumed bundle already carries its warm-start)"
+                            .into(),
+                    );
                 }
                 let file = FileTrace::open(Path::new(path)).map_err(|e| e.to_string())?;
                 println!(
@@ -428,24 +522,29 @@ fn real_main() -> Result<(), String> {
                         .map_err(|e| e.to_string())?;
                     println!("captured {out} ({} ops)", file.op_count());
                 }
-                run_traced_with(&cfg, &file, runs, agent).map_err(|e| e.to_string())?
+                let initial = match args.get("resume") {
+                    Some(ck) => Some(resume_policy(&cfg, ck, warm)?),
+                    None => None,
+                };
+                run_traced_policy(&cfg, &file, runs, initial).map_err(|e| e.to_string())?
             } else {
                 let name = args.get("bench").ok_or("run needs --bench (or --trace FILE)")?;
                 let bench = Benchmark::from_name(name)
                     .ok_or_else(|| format!("unknown benchmark {name:?}"))?;
+                let (ops, ep_name) =
+                    episode_ops(&cfg, &[bench], scale).map_err(|e| e.to_string())?;
                 if let Some(out) = args.get("capture") {
-                    let (ops, ep_name) =
-                        episode_ops(&cfg, &[bench], scale).map_err(|e| e.to_string())?;
                     let text = render_trace(&ep_name, scale, &ops).map_err(|e| e.to_string())?;
                     sweep::atomic_write_text(Path::new(out), &text)
                         .map_err(|e| e.to_string())?;
                     println!("captured {out} ({} ops)", ops.len());
                 }
-                run_episode_with(&cfg, &[bench], scale, runs, agent)
+                let policy = initial_policy(&args, &cfg, &ops, warm)?;
+                run_stream_policy(&cfg, &ops, runs, &ep_name, policy)
                     .map_err(|e| e.to_string())?
             };
             print_summary(&s, &cfg);
-            save_checkpoint(&args, agent.as_ref())?;
+            save_bundle(&args, &policy, warm)?;
         }
         "multi" => {
             let cfg = build_cfg(&args)?;
@@ -466,17 +565,19 @@ fn real_main() -> Result<(), String> {
                 return Err("multi needs at least two benchmarks (use run for one)".into());
             }
             let runs = args.usize_or("runs", figures::MULTI_RUNS)?;
-            let agent = initial_agent(&args, &cfg)?;
+            let warm = warm_start_flag(&args)?;
+            ensure_cli_checkpointable(&args, &cfg)?;
+            let (ops, ep_name) = episode_ops(&cfg, &benches, scale).map_err(|e| e.to_string())?;
             if let Some(out) = args.get("capture") {
-                let (ops, ep_name) = episode_ops(&cfg, &benches, scale).map_err(|e| e.to_string())?;
                 let text = render_trace(&ep_name, scale, &ops).map_err(|e| e.to_string())?;
                 sweep::atomic_write_text(Path::new(out), &text).map_err(|e| e.to_string())?;
                 println!("captured {out} ({} ops)", ops.len());
             }
-            let (s, agent) = run_episode_with(&cfg, &benches, scale, runs, agent)
+            let policy = initial_policy(&args, &cfg, &ops, warm)?;
+            let (s, policy) = run_stream_policy(&cfg, &ops, runs, &ep_name, policy)
                 .map_err(|e| e.to_string())?;
             print_summary(&s, &cfg);
-            save_checkpoint(&args, agent.as_ref())?;
+            save_bundle(&args, &policy, warm)?;
         }
         "curriculum" => {
             let mut cfg = build_cfg(&args)?;
@@ -505,10 +606,23 @@ fn real_main() -> Result<(), String> {
                 .into_iter()
                 .map(|benches| CurriculumStage { benches, runs })
                 .collect();
-            let initial = initial_agent(&args, &cfg)?;
+            let warm = warm_start_flag(&args)?;
+            ensure_cli_checkpointable(&args, &cfg)?;
+            let initial = match args.get("resume") {
+                Some(path) => Some(resume_policy(&cfg, path, warm)?),
+                None => None,
+            };
+            if initial.is_none() && warm != WarmStart::None {
+                println!(
+                    "warm-start {}: distilling stage 1's oracle pass into the {} policy \
+                     before the curriculum starts",
+                    warm.name(),
+                    cfg.mapping
+                );
+            }
             let t0 = std::time::Instant::now();
-            let (report, agent) =
-                run_curriculum(&cfg, &stages, scale, initial).map_err(|e| e.to_string())?;
+            let (report, policy) = run_curriculum_policy(&cfg, &stages, scale, initial, warm)
+                .map_err(|e| e.to_string())?;
             println!(
                 "curriculum: {} stage(s) × cold+warm in {:?}",
                 report.stages.len(),
@@ -557,7 +671,7 @@ fn real_main() -> Result<(), String> {
                     .map_err(|e| e.to_string())?;
                 println!("wrote {out}");
             }
-            save_checkpoint(&args, agent.as_ref())?;
+            save_bundle(&args, &policy, warm)?;
         }
         "serve" => {
             let mut cfg = build_cfg(&args)?;
@@ -589,10 +703,22 @@ fn real_main() -> Result<(), String> {
             cfg.serve.rounds = args.usize_or("rounds", cfg.serve.rounds)?;
             cfg.serve.scale = args.f64_or("scale", cfg.serve.scale)?;
             cfg.validate().map_err(|e| e.to_string())?;
+            let warm = warm_start_flag(&args)?;
             if args.get("checkpoint").is_some() || args.get("resume").is_some() {
                 ensure_serve_checkpointable(&cfg).map_err(|e| e.to_string())?;
             }
-            let agent = initial_agent(&args, &cfg)?;
+            let initial = match args.get("resume") {
+                Some(path) => Some(resume_policy(&cfg, path, warm)?),
+                None => None,
+            };
+            if initial.is_none() && warm != WarmStart::None {
+                println!(
+                    "warm-start {}: distilling the tenants' pooled op streams into the \
+                     {} policy before round 1",
+                    warm.name(),
+                    cfg.mapping
+                );
+            }
             let threads = args.usize_or("threads", sweep::default_threads())?.max(1);
             println!(
                 "serve: {} tenant(s), {} arrivals (mean gap {}), {} slot(s), \
@@ -606,7 +732,8 @@ fn real_main() -> Result<(), String> {
                 cfg.mapping
             );
             let t0 = std::time::Instant::now();
-            let (outcome, agent) = run_serve(&cfg, threads, agent).map_err(|e| e.to_string())?;
+            let (outcome, policy) =
+                run_serve_policy(&cfg, threads, initial, warm).map_err(|e| e.to_string())?;
             let last = outcome.last_round();
             let mut t = Table::new(
                 "Serve churn (last round; slowdown = residency / isolated run)",
@@ -641,7 +768,7 @@ fn real_main() -> Result<(), String> {
                 sweep::atomic_write_text(Path::new(out), &text).map_err(|e| e.to_string())?;
                 println!("wrote {out}");
             }
-            save_checkpoint(&args, agent.as_ref())?;
+            save_bundle(&args, &policy, warm)?;
         }
         "sweep" => {
             // Merge mode: fold shard journals into one aggregated report
@@ -885,32 +1012,62 @@ mod tests {
 
     /// The CLI guard the checkpoint plumbing hangs off: every
     /// non-checkpointable policy is rejected loudly, naming itself,
-    /// for `--checkpoint` and `--resume` alike.
+    /// for `--checkpoint` and `--resume` alike — and both learning
+    /// shapes (AIMM, AIMM-MC) pass through.
     #[test]
     fn checkpoint_flags_reject_non_checkpointable_policies_by_name() {
         for scheme in MappingScheme::ALL {
             let mut cfg = SystemConfig::default();
             cfg.mapping = scheme;
+            // No checkpoint flags: the guard never fires.
+            assert!(ensure_cli_checkpointable(&args(&[]), &cfg).is_ok(), "{scheme}");
             for flag in ["--checkpoint", "--resume"] {
                 let a = args(&[flag, "ck.json"]);
-                match initial_agent(&a, &cfg) {
-                    // AIMM proceeds past the guard (--checkpoint with a
-                    // fresh agent; --resume then fails later on the
-                    // missing file, not on the policy).
-                    Ok(agent) => {
+                match ensure_cli_checkpointable(&a, &cfg) {
+                    Ok(()) => {
                         assert!(scheme.checkpointable(), "{scheme}: guard must fire");
-                        assert!(agent.is_some(), "{scheme}: AIMM starts with an agent");
-                    }
-                    Err(err) if scheme.checkpointable() => {
-                        assert!(err.contains("ck.json"), "{scheme} {flag}: {err}");
                     }
                     Err(err) => {
+                        assert!(!scheme.checkpointable(), "{scheme}: guard must not fire");
                         assert!(err.contains(scheme.name()), "{scheme}: {err}");
                         assert!(err.contains("not checkpointable"), "{scheme}: {err}");
                     }
                 }
             }
         }
+    }
+
+    /// `--resume` goes through the v2 bundle loader and its drift
+    /// rejection: the expected bundle shape follows the mapping (one
+    /// agent for AIMM, one per MC for AIMM-MC), so a bundle saved under
+    /// the other shape is refused naming the drifted field.
+    #[test]
+    fn resume_checks_bundle_shape_against_the_mapping() {
+        let mut aimm = SystemConfig::default();
+        aimm.mapping = MappingScheme::Aimm;
+        assert_eq!(expected_agents(&aimm), 1);
+        let mut mc = SystemConfig::default();
+        mc.mapping = MappingScheme::AimmMc;
+        assert_eq!(expected_agents(&mc), mc.num_mcs());
+        assert!(mc.num_mcs() > 1, "drift between the shapes must be observable");
+        // A missing file fails on IO, naming the path — not on a panic.
+        let err = resume_policy(&aimm, "/nonexistent/bundle.json", WarmStart::None)
+            .unwrap_err();
+        assert!(err.contains("/nonexistent/bundle.json"), "{err}");
+    }
+
+    /// `--warm-start` parses through the registry and lists the valid
+    /// modes on a typo; the absent flag is a cold start.
+    #[test]
+    fn warm_start_flag_parses_and_lists_names() {
+        assert_eq!(warm_start_flag(&args(&[])), Ok(WarmStart::None));
+        assert_eq!(warm_start_flag(&args(&["--warm-start", "none"])), Ok(WarmStart::None));
+        assert_eq!(
+            warm_start_flag(&args(&["--warm-start", "ORACLE"])),
+            Ok(WarmStart::Oracle)
+        );
+        let err = warm_start_flag(&args(&["--warm-start", "sgd"])).unwrap_err();
+        assert!(err.contains("none|oracle"), "{err}");
     }
 
     /// `--shard I/N` parses 0-based and rejects everything out of range
@@ -931,7 +1088,7 @@ mod tests {
     #[test]
     fn flag_parse_errors_list_valid_names() {
         let err = parse_mapping("bogus").unwrap_err();
-        assert!(err.contains("B|TOM|AIMM|CODA|ORACLE"), "{err}");
+        assert!(err.contains("B|TOM|AIMM|AIMM-MC|CODA|ORACLE"), "{err}");
         let err = parse_technique("bogus").unwrap_err();
         assert!(err.contains("BNMP|LDB|PEI"), "{err}");
         let err = parse_engine("bogus").unwrap_err();
@@ -941,6 +1098,7 @@ mod tests {
         // And the new policies parse as first-class CLI values.
         assert_eq!(parse_mapping("coda"), Ok(MappingScheme::Coda));
         assert_eq!(parse_mapping("oracle"), Ok(MappingScheme::Oracle));
+        assert_eq!(parse_mapping("aimm-mc"), Ok(MappingScheme::AimmMc));
     }
 
     /// `serve --arrivals` parses every registered process and lists

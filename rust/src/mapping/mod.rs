@@ -5,7 +5,7 @@
 //! simulator applies whatever [`policy::MappingAction`]s it emits,
 //! never asking *which* scheme is configured.
 //!
-//! The five policies, selectable via `--mapping` / the `mapping` TOML
+//! The six policies, selectable via `--mapping` / the `mapping` TOML
 //! key ([`crate::config::MappingScheme`]):
 //!
 //! * **B** ([`policy::BaselinePolicy`]) is the *absence* of a scheme:
@@ -22,6 +22,10 @@
 //!   Its data-side counterpart is page migration
 //!   ([`crate::migration`]), and its far targets are topology-aware
 //!   through [`crate::noc::topology::Topology::distant_cube`].
+//! * **AIMM-MC** ([`policy::AimmMultiPolicy`]) is the multi-agent
+//!   variant: one lightweight per-MC agent observing only its attached
+//!   cubes, coordinated through deterministic round-robin gossip over
+//!   the shared replay schema (`crate::agent::multi`).
 //! * **CODA** ([`policy::CodaGreedy`]) is the learning-free co-location
 //!   competitor (Kim et al.): windowed per-page compute counters and
 //!   hysteresis-gated migration toward the dominant compute cube.
@@ -41,8 +45,8 @@ pub mod remap_table;
 pub mod tom;
 
 pub use policy::{
-    AimmPolicy, AnyPolicy, BaselinePolicy, CodaGreedy, MappingAction, MappingPolicy,
-    OracleProfile, OracleProfiler, PolicyCtx, TomPolicy,
+    profile_assignment, AimmMultiPolicy, AimmPolicy, AnyPolicy, BaselinePolicy, CodaGreedy,
+    MappingAction, MappingPolicy, OracleProfile, OracleProfiler, PolicyCtx, TomPolicy,
 };
 pub use remap_table::ComputeRemapTable;
 pub use tom::{TomEvent, TomMapper, TOM_CANDIDATES};

@@ -9,7 +9,7 @@
 //! (dispatched ops, clock ticks); the policy owns the whole decision
 //! lifecycle and answers with [`MappingAction`]s the system applies.
 //!
-//! Five policies implement the trait:
+//! Six policies implement the trait:
 //!
 //! * [`BaselinePolicy`] — the figures' "B" column: no decisions at all.
 //! * [`TomPolicy`] — wraps [`TomMapper`]: epoch-profiled page→cube
@@ -17,6 +17,11 @@
 //! * [`AimmPolicy`] — wraps [`AimmAgent`]: the RL control loop (state
 //!   assembly from the MCs, ε-greedy actions, migration + compute-remap
 //!   actuation, invocation-interval scheduling).
+//! * [`AimmMultiPolicy`] — the per-MC multi-agent variant
+//!   (`--mapping aimm-mc`, DESIGN.md §15): one lightweight agent per
+//!   memory controller, each observing only its own MC and attached
+//!   cubes, coordinated by the deterministic replay gossip of
+//!   [`crate::agent::multi`].
 //! * [`CodaGreedy`] — CODA-style compute/data co-location (Kim et al.)
 //!   without learning: windowed per-page compute counters, migrate a
 //!   page to the cube issuing the majority of its NMP ops once the lead
@@ -52,8 +57,9 @@
 use std::collections::HashMap;
 
 use crate::agent::{
-    build_state, hist4, hop_scale, Action, AgentCheckpoint, AimmAgent, PageSignals, PerMcSignals,
-    StateVec, SysSignals,
+    build_state, fresh_mc_agents, gossip_exchange, hist4, hop_scale, Action, AgentCheckpoint,
+    AimmAgent, CheckpointBundle, PageSignals, PerMcSignals, StateVec, SysSignals, WarmStart,
+    GOSSIP_BURST, GOSSIP_EVERY,
 };
 use crate::config::{CubeId, MappingScheme, Pid, SystemConfig, VPage};
 use crate::cube::Cube;
@@ -176,9 +182,18 @@ pub trait MappingPolicy {
     fn finish(&mut self, _ctx: &mut PolicyCtx<'_>) {}
 
     /// Borrow the learning agent, if this policy carries one (stats
-    /// collection, diagnostics).
+    /// collection, diagnostics). Multi-agent policies return their
+    /// first agent here — use [`agents`](Self::agents) for the pool.
     fn agent(&self) -> Option<&AimmAgent> {
         None
+    }
+
+    /// Every learning agent this policy carries, in a stable order
+    /// (MC 0..n for the per-MC pool). The `System`'s stats collection
+    /// sums over this, so single- and multi-agent runs report through
+    /// one code path.
+    fn agents(&self) -> Vec<&AimmAgent> {
+        self.agent().into_iter().collect()
     }
 
     /// Capture a continual-learning checkpoint. Errs loudly — naming
@@ -518,6 +533,338 @@ impl MappingPolicy for AimmPolicy {
 }
 
 // ---------------------------------------------------------------------
+// AIMM-MC — the per-MC multi-agent RL control loop.
+// ---------------------------------------------------------------------
+
+/// The per-MC agent pool behind `--mapping aimm-mc` (DESIGN.md §15).
+/// One lightweight [`AimmAgent`] per memory controller, each with its
+/// own invocation schedule, OPC window and masked observation:
+///
+/// * the per-MC state slots carry only the agent's *own* MC (the other
+///   slots stay zero — the layout of [`build_state`] is shared with the
+///   single-agent policy, so the Q-architecture is identical);
+/// * cube aggregates run over the MC's attached cubes only
+///   (`SystemConfig::mc_nearest_cubes`);
+/// * the candidate page comes from the agent's own MC page-info cache —
+///   no cross-MC candidate stealing.
+///
+/// Coordination is deterministic round-robin gossip
+/// ([`gossip_exchange`]): after every [`GOSSIP_EVERY`] invocations
+/// system-wide, one agent (the ring cursor) hands its
+/// [`GOSSIP_BURST`] freshest transitions to its successor. Every
+/// control field resets per episode and the RNG streams derive from
+/// `cfg.seed`, so runs are bit-reproducible at any worker count and
+/// checkpoints at episode boundaries resume bit-identically.
+pub struct AimmMultiPolicy {
+    agents: Vec<AimmAgent>,
+    /// Shared action-target RNG (`cfg.seed ^ 0x5157`, reseeded per
+    /// episode — the same stream discipline as [`AimmPolicy`]).
+    rng: Rng,
+    seed: u64,
+    /// Per-MC observed cube sets (`SystemConfig::mc_nearest_cubes`).
+    nearest: Vec<Vec<CubeId>>,
+    /// Per-agent next invocation cycle.
+    next_at: Vec<Cycle>,
+    /// Per-agent completed-op count at its last invocation (OPC window).
+    ops_at_last_invoke: Vec<u64>,
+    /// System-wide invocation counter driving the gossip cadence.
+    invocations: u64,
+    /// Ring cursor: which agent gossips next.
+    gossip_from: usize,
+}
+
+impl AimmMultiPolicy {
+    /// Build the pool from the config alone. Panics — with the agent
+    /// layer's validation message — only on an agent configuration that
+    /// [`SystemConfig::validate`] would already have rejected (empty
+    /// interval table, zero batch, replay below batch) or on a PJRT
+    /// fixed-batch mismatch, mirroring [`AimmAgent::new`].
+    pub fn new(cfg: &SystemConfig) -> Self {
+        Self::with_agents(cfg, fresh_mc_agents(cfg).expect("invalid agent configuration"))
+    }
+
+    /// Wrap an existing pool (the warm-start path pre-trains the agents
+    /// before handing them in). Panics when the pool size does not match
+    /// the MC count — the masked states and gossip ring assume one
+    /// agent per MC.
+    pub fn with_agents(cfg: &SystemConfig, agents: Vec<AimmAgent>) -> Self {
+        assert_eq!(
+            agents.len(),
+            cfg.num_mcs(),
+            "AIMM-MC drives one agent per MC"
+        );
+        let next_at = agents.iter().map(|a| a.current_interval()).collect();
+        let n = agents.len();
+        Self {
+            rng: Rng::new(cfg.seed ^ 0x5157),
+            seed: cfg.seed,
+            nearest: (0..n).map(|mc| cfg.mc_nearest_cubes(mc)).collect(),
+            next_at,
+            ops_at_last_invoke: vec![0; n],
+            invocations: 0,
+            gossip_from: 0,
+            agents,
+        }
+    }
+
+    /// The pool, MC order.
+    pub fn agent_pool(&self) -> &[AimmAgent] {
+        &self.agents
+    }
+
+    /// Mutable pool access (the warm-start path pre-trains in place).
+    pub fn agent_pool_mut(&mut self) -> &mut [AimmAgent] {
+        &mut self.agents
+    }
+
+    /// Episode-boundary checkpoint of every agent, MC order — the
+    /// `agents` array of a v2 [`CheckpointBundle`].
+    pub fn snapshot_bundle(&self) -> anyhow::Result<Vec<AgentCheckpoint>> {
+        self.agents.iter().map(|a| a.checkpoint()).collect()
+    }
+
+    /// Restore every agent from a bundle's `agents` array. The count
+    /// must match the pool ([`CheckpointBundle::ensure_resumable`] gives
+    /// the caller the pointed per-MC-drift message first; this is the
+    /// backstop). Control state resets exactly like a fresh episode.
+    pub fn restore_bundle(&mut self, cks: &[AgentCheckpoint]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cks.len() == self.agents.len(),
+            "checkpoint drift: per-MC agent count is {} but this policy drives {} — \
+             resume refused",
+            cks.len(),
+            self.agents.len()
+        );
+        let mut restored = Vec::with_capacity(cks.len());
+        for (agent, ck) in self.agents.iter().zip(cks) {
+            restored.push(ck.build_agent(agent.config())?);
+        }
+        self.agents = restored;
+        self.start_episode();
+        Ok(())
+    }
+
+    /// Masked state for agent `mc_idx`: own MC slot populated, sibling
+    /// slots zero; cube aggregates over the attached cubes only. The
+    /// page block matches [`AimmPolicy::assemble_state`] (cube ids keep
+    /// the global normalization so actions target the shared mesh
+    /// coordinate system).
+    fn assemble_state_for(
+        &self,
+        mc_idx: usize,
+        ctx: &mut PolicyCtx<'_>,
+        page: Option<(Pid, VPage)>,
+        opc: f32,
+    ) -> StateVec {
+        let mut per_mc = vec![PerMcSignals::default(); ctx.mcs.len()];
+        let mc = &ctx.mcs[mc_idx];
+        per_mc[mc_idx] = PerMcSignals {
+            occ_mean: mc.counters.occ_mean(),
+            occ_max: mc.counters.occ_max(),
+            row_hit_mean: mc.counters.row_hit_mean(),
+            row_hit_min: mc.counters.row_hit_min(),
+            queue_occ: mc.queue.occupancy(),
+        };
+        let n = ctx.cubes.len() as f32;
+        let own = &self.nearest[mc_idx];
+        let k = own.len().max(1) as f32;
+        let cube_occ_mean =
+            own.iter().map(|&c| ctx.cubes[c].table.occupancy()).sum::<f32>() / k;
+        let cube_occ_max =
+            own.iter().map(|&c| ctx.cubes[c].table.occupancy()).fold(0.0f32, f32::max);
+        let cube_rh_mean =
+            (own.iter().map(|&c| ctx.cubes[c].row_hit_rate()).sum::<f64>() / k as f64) as f32;
+        let sys = SysSignals {
+            per_mc,
+            action_histogram: self.agents[mc_idx].action_histogram(),
+            interval_norm: self.agents[mc_idx].interval_norm(),
+            recent_opc: opc,
+            cube_occ_mean,
+            cube_occ_max,
+            cube_row_hit_mean: cube_rh_mean,
+        };
+        let page_sig = match page {
+            Some(key) => {
+                let page_cube = ctx.mmu.translate(key.0, key.1).map(|l| l.cube).unwrap_or(0);
+                let remapped = ctx.remap_table.lookup(key.0, key.1);
+                let mc = &ctx.mcs[mc_idx];
+                let info = mc.page_cache.get(&key);
+                let compute_cube = remapped.unwrap_or_else(|| {
+                    info.map(|e| e.last_compute_cube).unwrap_or(page_cube)
+                });
+                match info {
+                    Some(e) => PageSignals {
+                        access_rate: mc.page_cache.access_rate(&key),
+                        migrations_per_access: e.migrations_per_access(),
+                        hop_hist: hist4(&e.hop_hist.padded()),
+                        lat_hist: hist4(&e.lat_hist.padded()),
+                        mig_lat_hist: hist4(&e.mig_lat_hist.padded()),
+                        action_hist: hist4(&e.action_hist.padded()),
+                        page_cube_norm: page_cube as f32 / n,
+                        compute_cube_norm: compute_cube as f32 / n,
+                    },
+                    None => PageSignals::default(),
+                }
+            }
+            None => PageSignals::default(),
+        };
+        build_state(&sys, &page_sig, hop_scale(ctx.mesh.diameter()))
+    }
+
+    /// One invocation of agent `mc_idx`, mirroring
+    /// [`AimmPolicy::invoke`] with the candidate drawn from — and the
+    /// action applied through — the agent's own MC only. Also advances
+    /// the gossip ring on its system-wide cadence.
+    fn invoke_one(
+        &mut self,
+        mc_idx: usize,
+        now: Cycle,
+        ctx: &mut PolicyCtx<'_>,
+    ) -> anyhow::Result<Vec<MappingAction>> {
+        let chosen = ctx.mcs[mc_idx].page_cache.select_candidate();
+
+        let interval = self.agents[mc_idx].current_interval();
+        let elapsed_ops = ctx.completed - self.ops_at_last_invoke[mc_idx];
+        let opc = elapsed_ops as f64 / interval.max(1) as f64;
+        self.ops_at_last_invoke[mc_idx] = ctx.completed;
+
+        let state = self.assemble_state_for(mc_idx, ctx, chosen, opc as f32);
+        let decision = self.agents[mc_idx].invoke(state, opc, now)?;
+        self.next_at[mc_idx] = now + decision.next_interval;
+
+        self.invocations += 1;
+        if self.invocations % GOSSIP_EVERY == 0 {
+            gossip_exchange(&mut self.agents, self.gossip_from, GOSSIP_BURST);
+            self.gossip_from = (self.gossip_from + 1) % self.agents.len();
+        }
+
+        let Some(key) = chosen else { return Ok(Vec::new()) };
+        let (pid, vpage) = key;
+        let page_cube = ctx.mmu.translate(pid, vpage).map(|l| l.cube).unwrap_or(0);
+        let info_cubes = ctx.mcs[mc_idx]
+            .page_cache
+            .get(&key)
+            .map(|e| (e.last_src1_cube, e.last_compute_cube));
+        let (src1_cube, last_cc) = info_cubes.unwrap_or((page_cube, page_cube));
+        let compute_cube = ctx.remap_table.lookup(pid, vpage).unwrap_or(last_cc);
+
+        let mut actions = Vec::new();
+        match decision.action {
+            Action::Default | Action::IncreaseInterval | Action::DecreaseInterval => {}
+            Action::NearData | Action::FarData => {
+                if let Some(target) = decision.action.target_cube(
+                    ctx.mesh,
+                    compute_cube,
+                    src1_cube,
+                    &mut self.rng,
+                ) {
+                    if target != page_cube {
+                        actions.push(MappingAction::MigratePage { pid, vpage, to_cube: target });
+                    }
+                }
+                ctx.mcs[mc_idx].page_cache.on_action(key, decision.action.index() as u8);
+            }
+            Action::NearCompute | Action::FarCompute | Action::SourceCompute => {
+                if let Some(target) = decision.action.target_cube(
+                    ctx.mesh,
+                    compute_cube,
+                    src1_cube,
+                    &mut self.rng,
+                ) {
+                    actions.push(MappingAction::RemapCompute { pid, vpage, cube: target });
+                }
+                ctx.mcs[mc_idx].page_cache.on_action(key, decision.action.index() as u8);
+            }
+        }
+        Ok(actions)
+    }
+}
+
+impl MappingPolicy for AimmMultiPolicy {
+    fn scheme(&self) -> MappingScheme {
+        MappingScheme::AimmMc
+    }
+
+    /// Per-run control reset for the whole pool: every agent keeps its
+    /// network/replay/ε, every schedule and counter — including the
+    /// gossip cadence and ring cursor — restarts, so an episode-boundary
+    /// resume replays the next episode bit-identically.
+    fn start_episode(&mut self) {
+        for a in &mut self.agents {
+            a.start_episode();
+        }
+        self.rng = Rng::new(self.seed ^ 0x5157);
+        for (at, a) in self.next_at.iter_mut().zip(&self.agents) {
+            *at = a.current_interval();
+        }
+        self.ops_at_last_invoke.iter_mut().for_each(|o| *o = 0);
+        self.invocations = 0;
+        self.gossip_from = 0;
+    }
+
+    fn tick(&mut self, now: Cycle, ctx: &mut PolicyCtx<'_>) -> anyhow::Result<Vec<MappingAction>> {
+        if ctx.completed >= ctx.total_ops {
+            return Ok(Vec::new());
+        }
+        // Ascending MC order: deterministic emission order when several
+        // agents are due on the same cycle; agents not yet due are pure
+        // no-ops, which keeps the event engine's skips legal.
+        let mut actions = Vec::new();
+        for mc in 0..self.agents.len() {
+            if now >= self.next_at[mc] {
+                actions.extend(self.invoke_one(mc, now, ctx)?);
+            }
+        }
+        Ok(actions)
+    }
+
+    fn next_event(&self, now: Cycle, completed: u64, total_ops: u64) -> Option<Cycle> {
+        (completed < total_ops)
+            .then(|| self.next_at.iter().copied().min().unwrap_or(now).max(now))
+    }
+
+    /// Terminal transition for every agent, MC order.
+    fn finish(&mut self, ctx: &mut PolicyCtx<'_>) {
+        for mc in 0..self.agents.len() {
+            let interval = self.agents[mc].current_interval();
+            let elapsed_ops = ctx.completed - self.ops_at_last_invoke[mc];
+            let opc = elapsed_ops as f64 / interval.max(1) as f64;
+            let state = self.assemble_state_for(mc, ctx, None, opc as f32);
+            self.agents[mc].finish_episode(state, opc);
+        }
+    }
+
+    fn agent(&self) -> Option<&AimmAgent> {
+        self.agents.first()
+    }
+
+    fn agents(&self) -> Vec<&AimmAgent> {
+        self.agents.iter().collect()
+    }
+
+    /// The pool does not fit a single-agent checkpoint — point the
+    /// caller at the v2 bundle path instead of snapshotting agent 0 and
+    /// silently dropping the rest.
+    fn snapshot(&self) -> anyhow::Result<AgentCheckpoint> {
+        anyhow::bail!(
+            "the AIMM-MC policy carries {} agents — checkpoint it as an \
+             aimm-checkpoint-v2 bundle (AnyPolicy::checkpoint_bundle), not a \
+             single-agent document",
+            self.agents.len()
+        )
+    }
+
+    fn restore(&mut self, _ck: &AgentCheckpoint) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "the AIMM-MC policy carries {} agents — restore it from an \
+             aimm-checkpoint-v2 bundle (AnyPolicy::restore_from_bundle), not a \
+             single-agent document",
+            self.agents.len()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
 // CODA-greedy — co-location without learning.
 // ---------------------------------------------------------------------
 
@@ -807,17 +1154,19 @@ pub enum AnyPolicy {
     Baseline(BaselinePolicy),
     Tom(TomPolicy),
     Aimm(Box<AimmPolicy>),
+    AimmMc(Box<AimmMultiPolicy>),
     Coda(CodaGreedy),
     Oracle(OracleProfile),
 }
 
-/// One `match` over the five carriers — the whole dispatch mechanism.
+/// One `match` over the six carriers — the whole dispatch mechanism.
 macro_rules! dispatch {
     ($self:expr, $p:ident => $body:expr) => {
         match $self {
             AnyPolicy::Baseline($p) => $body,
             AnyPolicy::Tom($p) => $body,
             AnyPolicy::Aimm($p) => $body,
+            AnyPolicy::AimmMc($p) => $body,
             AnyPolicy::Coda($p) => $body,
             AnyPolicy::Oracle($p) => $body,
         }
@@ -849,6 +1198,11 @@ impl AnyPolicy {
                 Some(agent) => AnyPolicy::Aimm(Box::new(AimmPolicy::new(cfg, agent))),
                 None => AnyPolicy::baseline(),
             },
+            // The per-MC pool is self-seeding from the config — it never
+            // rides the single-agent carryover slot (`uses_agent()` is
+            // false for AIMM-MC; cross-episode carry moves the whole
+            // policy, not one agent).
+            MappingScheme::AimmMc => AnyPolicy::AimmMc(Box::new(AimmMultiPolicy::new(cfg))),
             MappingScheme::Coda => AnyPolicy::Coda(CodaGreedy::new(cfg)),
             MappingScheme::Oracle => AnyPolicy::Oracle(OracleProfile::new(cfg, ops)),
         }
@@ -871,6 +1225,46 @@ impl AnyPolicy {
                 *self = other;
                 None
             }
+        }
+    }
+
+    /// Capture a v2 [`CheckpointBundle`] — the checkpoint format that
+    /// fits both learning shapes. AIMM wraps its single agent, AIMM-MC
+    /// bundles the whole MC-ordered pool; everything else refuses by
+    /// name (the trait `snapshot` contract, lifted to bundles).
+    pub fn checkpoint_bundle(&self, warm_start: WarmStart) -> anyhow::Result<CheckpointBundle> {
+        match self {
+            AnyPolicy::Aimm(p) => Ok(CheckpointBundle::single(warm_start, p.snapshot()?)),
+            AnyPolicy::AimmMc(p) => {
+                Ok(CheckpointBundle { warm_start, agents: p.snapshot_bundle()? })
+            }
+            other => anyhow::bail!(
+                "the {} policy is not checkpointable (only AIMM carries learned state)",
+                other.scheme().name()
+            ),
+        }
+    }
+
+    /// Restore learned state from a v2 bundle. The caller has already
+    /// run [`CheckpointBundle::ensure_resumable`] against its requested
+    /// shape; this performs the actual agent rebuilds (and re-checks the
+    /// count against the live pool as a backstop).
+    pub fn restore_from_bundle(&mut self, bundle: &CheckpointBundle) -> anyhow::Result<()> {
+        match self {
+            AnyPolicy::Aimm(p) => {
+                anyhow::ensure!(
+                    bundle.agents.len() == 1,
+                    "checkpoint drift: per-MC agent count is {} but this run drives 1 \
+                     agent(s) — resume refused",
+                    bundle.agents.len()
+                );
+                p.restore(&bundle.agents[0])
+            }
+            AnyPolicy::AimmMc(p) => p.restore_bundle(&bundle.agents),
+            other => anyhow::bail!(
+                "the {} policy is not checkpointable (only AIMM carries learned state)",
+                other.scheme().name()
+            ),
         }
     }
 }
@@ -1195,5 +1589,75 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.mapping = MappingScheme::Aimm;
         assert_eq!(AnyPolicy::new(&cfg, &ops, None).scheme(), MappingScheme::Baseline);
+    }
+
+    #[test]
+    fn aimm_mc_policy_carries_one_agent_per_mc() {
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = MappingScheme::AimmMc;
+        let policy = AnyPolicy::new(&cfg, &[], None);
+        assert_eq!(policy.scheme(), MappingScheme::AimmMc);
+        assert_eq!(policy.agents().len(), cfg.num_mcs());
+        // `agent()` exposes the first of the pool for stats plumbing
+        // that predates multi-agent.
+        assert!(policy.agent().is_some());
+        // The pool never rides the single-agent carryover slot.
+        let mut policy = policy;
+        assert!(policy.take_agent().is_none());
+        assert_eq!(policy.scheme(), MappingScheme::AimmMc);
+    }
+
+    #[test]
+    fn aimm_mc_bundle_roundtrip_is_bit_exact() {
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = MappingScheme::AimmMc;
+        let mut policy = AnyPolicy::new(&cfg, &[], None);
+        let bundle = policy.checkpoint_bundle(WarmStart::Oracle).unwrap();
+        assert_eq!(bundle.agents.len(), cfg.num_mcs());
+        bundle.ensure_resumable(cfg.num_mcs(), WarmStart::Oracle).unwrap();
+        policy.restore_from_bundle(&bundle).unwrap();
+        assert_eq!(
+            policy.checkpoint_bundle(WarmStart::Oracle).unwrap().to_json(),
+            bundle.to_json()
+        );
+        // Drifted pool size refuses at the policy backstop too.
+        let mut short = CheckpointBundle {
+            warm_start: bundle.warm_start,
+            agents: bundle.agents[..1].to_vec(),
+        };
+        let err = policy.restore_from_bundle(&short).unwrap_err().to_string();
+        assert!(err.contains("per-MC agent count"), "{err}");
+        short.agents = bundle.agents.clone();
+        policy.restore_from_bundle(&short).unwrap();
+    }
+
+    #[test]
+    fn aimm_mc_refuses_single_document_checkpoints_by_format() {
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = MappingScheme::AimmMc;
+        let mut policy = AnyPolicy::new(&cfg, &[], None);
+        let err = policy.snapshot().unwrap_err().to_string();
+        assert!(err.contains("aimm-checkpoint-v2"), "{err}");
+        // And the single-agent restore hook refuses symmetrically.
+        let mut aimm_cfg = SystemConfig::default();
+        aimm_cfg.mapping = MappingScheme::Aimm;
+        let agent = crate::coordinator::fresh_agent(&aimm_cfg).unwrap();
+        let single = AnyPolicy::new(&aimm_cfg, &[], Some(agent)).snapshot().unwrap();
+        let err = policy.restore(&single).unwrap_err().to_string();
+        assert!(err.contains("aimm-checkpoint-v2"), "{err}");
+    }
+
+    #[test]
+    fn bundle_checkpointing_refuses_stateless_policies_by_name() {
+        let cfg = SystemConfig::default();
+        let mut policy = AnyPolicy::baseline();
+        let err = policy.checkpoint_bundle(WarmStart::None).unwrap_err().to_string();
+        assert!(err.contains("B"), "{err}");
+        let mut mc_cfg = cfg.clone();
+        mc_cfg.mapping = MappingScheme::AimmMc;
+        let donor = AnyPolicy::new(&mc_cfg, &[], None);
+        let bundle = donor.checkpoint_bundle(WarmStart::None).unwrap();
+        let err = policy.restore_from_bundle(&bundle).unwrap_err().to_string();
+        assert!(err.contains("not checkpointable"), "{err}");
     }
 }

@@ -21,6 +21,11 @@ pub struct LinearQ {
     lr: f32,
     gamma: f32,
     pub train_steps: u64,
+    /// Declared [`QFunction::fixed_batch`]. The linear mock can in fact
+    /// train any row count, but declaring the caller's batch size lets
+    /// batch-shape consumers (oracle distillation warm-start) work
+    /// against the same contract the AOT-compiled backend enforces.
+    fixed: Option<usize>,
 }
 
 impl LinearQ {
@@ -36,7 +41,15 @@ impl LinearQ {
             lr,
             gamma,
             train_steps: 0,
+            fixed: None,
         }
+    }
+
+    /// Like [`LinearQ::new`] but declaring `batch` as the fixed training
+    /// batch. Weights are identical to `new` with the same seed — only
+    /// the advertised [`QFunction::fixed_batch`] differs.
+    pub fn with_batch(lr: f32, gamma: f32, seed: u64, batch: usize) -> Self {
+        Self { fixed: Some(batch), ..Self::new(lr, gamma, seed) }
     }
 
     fn q_with(w: &[f32], b: &[f32; NUM_ACTIONS], s: &[f32]) -> [f32; NUM_ACTIONS] {
@@ -107,6 +120,10 @@ impl QFunction for LinearQ {
 
     fn backend(&self) -> &'static str {
         "linear-mock"
+    }
+
+    fn fixed_batch(&self) -> Option<usize> {
+        self.fixed
     }
 
     fn snapshot(&self) -> anyhow::Result<QSnapshot> {
@@ -232,6 +249,19 @@ mod tests {
         snap.theta.pop();
         let err = q.restore(&snap).unwrap_err().to_string();
         assert!(err.contains("linear-mock"), "{err}");
+    }
+
+    /// `with_batch` only changes the advertised contract: the weights (and
+    /// therefore every byte of downstream behavior) match `new` exactly.
+    #[test]
+    fn with_batch_declares_fixed_batch_without_changing_weights() {
+        let mut plain = LinearQ::new(0.05, 0.9, 11);
+        let mut sized = LinearQ::with_batch(0.05, 0.9, 11, 32);
+        assert_eq!(plain.fixed_batch(), None);
+        assert_eq!(sized.fixed_batch(), Some(32));
+        let mut s = vec![0.0; STATE_DIM];
+        s[1] = 1.0;
+        assert_eq!(plain.q_values(&s).unwrap(), sized.q_values(&s).unwrap());
     }
 
     #[test]

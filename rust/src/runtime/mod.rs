@@ -165,12 +165,48 @@ pub fn artifacts_dir() -> Option<PathBuf> {
 /// Build the best available Q-function: the PJRT backend when this build
 /// carries it (`--features pjrt`) *and* artifacts load, otherwise the
 /// pure-rust mock (tests, CI, offline builds without `make artifacts`).
-pub fn best_qfunction(lr: f32, gamma: f32, seed: u64) -> Box<dyn QFunction> {
+///
+/// `batch` is the training batch size the caller intends to drive
+/// (`AgentConfig.batch_size`): the PJRT artifacts are shape-specialized
+/// to [`BATCH`] regardless, and the mock declares `batch` through
+/// [`QFunction::fixed_batch`] so batch-shape consumers — the oracle
+/// distillation pre-trainer above all — can size their batches at
+/// construction time instead of discovering a `None` mid-episode.
+pub fn best_qfunction(lr: f32, gamma: f32, seed: u64, batch: usize) -> Box<dyn QFunction> {
     #[cfg(feature = "pjrt")]
     if let Some(q) = artifacts_dir().and_then(|d| PjrtQNet::load(&d, lr, gamma).ok()) {
         return Box::new(q);
     }
-    Box::new(LinearQ::new(lr, gamma, seed))
+    Box::new(LinearQ::with_batch(lr, gamma, seed, batch))
+}
+
+/// The batch size `--warm-start` pre-training must use, or a loud
+/// config-time error naming the backend when it declares no fixed batch
+/// — instead of the pre-trainer failing mid-episode after minutes of
+/// simulation. Callers probe this right after `best_qfunction`.
+pub fn warm_start_batch(qf: &dyn QFunction) -> anyhow::Result<usize> {
+    qf.fixed_batch().ok_or_else(|| {
+        anyhow::anyhow!(
+            "--warm-start needs a fixed training batch to shape its distillation \
+             batches, but backend {:?} declares none (fixed_batch() = None)",
+            qf.backend()
+        )
+    })
+}
+
+/// Batch pre-training entry point (oracle distillation, agent/distill.rs):
+/// run every batch through [`QFunction::train_batch`] in order, sync the
+/// target network once at the end, and return the mean loss. Plain
+/// supervised-style pre-training is just DQN steps on synthetic terminal
+/// transitions, so no new backend surface is needed.
+pub fn pretrain(qf: &mut dyn QFunction, batches: &[TrainBatch]) -> anyhow::Result<f32> {
+    anyhow::ensure!(!batches.is_empty(), "pre-training needs at least one batch");
+    let mut loss_sum = 0.0f64;
+    for b in batches {
+        loss_sum += qf.train_batch(b)? as f64;
+    }
+    qf.sync_target();
+    Ok((loss_sum / batches.len() as f64) as f32)
 }
 
 #[cfg(test)]

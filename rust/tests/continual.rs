@@ -8,10 +8,13 @@
 //! `best_qfunction`) so the tests are deterministic in every build
 //! flavor, including one with real PJRT artifacts on disk.
 
-use aimm::agent::{AgentCheckpoint, AimmAgent};
+use aimm::agent::{
+    mc_seed, warm_start_agent, AgentCheckpoint, AimmAgent, CheckpointBundle, WarmStart,
+};
 use aimm::bench::sweep::stats_json;
 use aimm::config::{Engine, MappingScheme, SystemConfig};
-use aimm::coordinator::{run_stream_with, System};
+use aimm::coordinator::{run_stream_policy, run_stream_with, System};
+use aimm::mapping::{AimmMultiPolicy, AnyPolicy};
 use aimm::metrics::RunStats;
 use aimm::nmp::NmpOp;
 use aimm::runtime::{LinearQ, QFunction, STATE_DIM};
@@ -189,6 +192,121 @@ fn non_checkpointable_policies_refuse_snapshot_by_name() {
     let ck = policy.snapshot().expect("AIMM snapshots at the boundary");
     policy.restore(&ck).expect("AIMM restores its own checkpoint");
     assert_eq!(policy.snapshot().unwrap().to_json(), ck.to_json());
+}
+
+fn mc_cfg(engine: Engine) -> SystemConfig {
+    let mut c = aimm_cfg(engine);
+    c.mapping = MappingScheme::AimmMc;
+    c
+}
+
+/// A LinearQ-pinned per-MC pool, seeded exactly like `fresh_mc_agents`
+/// (same `mc_seed` / `^ 0xA6E7` folds) but deterministic in every build
+/// flavor.
+fn mk_pool(cfg: &SystemConfig) -> AnyPolicy {
+    let agents: Vec<AimmAgent> = (0..cfg.num_mcs())
+        .map(|mc| {
+            let s = mc_seed(cfg.seed, mc);
+            AimmAgent::new(
+                Box::new(LinearQ::new(cfg.agent.lr, cfg.agent.gamma, s)),
+                cfg.agent.clone(),
+                s ^ 0xA6E7,
+            )
+        })
+        .collect();
+    AnyPolicy::AimmMc(Box::new(AimmMultiPolicy::with_agents(cfg, agents)))
+}
+
+/// Resume-from-bundle the way `--resume` does for `--mapping aimm-mc`,
+/// but pinned to the LinearQ backend.
+fn rebuild_pool(text: &str, cfg: &SystemConfig) -> AnyPolicy {
+    let bundle = CheckpointBundle::parse(text).expect("bundle parses");
+    bundle
+        .ensure_resumable(cfg.num_mcs(), WarmStart::None)
+        .expect("bundle shape matches the run");
+    let agents: Vec<AimmAgent> = bundle
+        .agents
+        .iter()
+        .map(|ck| {
+            let mut qf = Box::new(LinearQ::new(0.5, 0.5, 999)); // overwritten by restore
+            qf.restore(&ck.q).expect("snapshot restores into linear-mock");
+            AimmAgent::from_checkpoint(qf, cfg.agent.clone(), ck).expect("agent rebuilds")
+        })
+        .collect();
+    AnyPolicy::AimmMc(Box::new(AimmMultiPolicy::with_agents(cfg, agents)))
+}
+
+/// The v2 acceptance invariant: saving the whole per-MC pool as an
+/// aimm-checkpoint-v2 bundle at an episode boundary, reloading every
+/// agent from the serialized form, and finishing the protocol yields the
+/// same `RunStats` as the uninterrupted run — under both engines.
+#[test]
+fn multi_agent_resume_is_bit_identical_under_both_engines() {
+    for engine in Engine::ALL {
+        let cfg = mc_cfg(engine);
+        let ops = trace(&cfg);
+
+        let (full, _) = run_stream_policy(&cfg, &ops, 3, "SPMV", mk_pool(&cfg)).unwrap();
+
+        let (head, policy) = run_stream_policy(&cfg, &ops, 2, "SPMV", mk_pool(&cfg)).unwrap();
+        let bundle = policy.checkpoint_bundle(WarmStart::None).unwrap();
+        assert_eq!(bundle.agents.len(), cfg.num_mcs(), "one bundle entry per MC");
+        let text = bundle.to_json();
+        assert!(text.starts_with("{\"schema\":\"aimm-checkpoint-v2\""), "v2 envelope");
+        let (tail, _) =
+            run_stream_policy(&cfg, &ops, 1, "SPMV", rebuild_pool(&text, &cfg)).unwrap();
+
+        for i in 0..2 {
+            assert_runs_identical(
+                &full.runs[i],
+                &head.runs[i],
+                &format!("aimm-mc {engine} run {i}"),
+            );
+        }
+        assert_runs_identical(
+            &full.runs[2],
+            &tail.runs[0],
+            &format!("aimm-mc {engine} resumed run"),
+        );
+    }
+}
+
+/// Warm-started AIMM: distillation happens exactly once, before episode
+/// 1 — a bundle saved mid-protocol records the provenance, refuses a
+/// drifted mode by field name, and the resumed tail (which never
+/// re-distills) matches the uninterrupted run bit for bit.
+#[test]
+fn warm_started_checkpoint_records_and_enforces_provenance() {
+    let cfg = aimm_cfg(Engine::Event);
+    let ops = trace(&cfg);
+    // `with_batch` carries the same weights as `new` under the same seed
+    // but declares the fixed batch distillation needs.
+    let mk_warm = || {
+        let mut a = AimmAgent::new(
+            Box::new(LinearQ::with_batch(cfg.agent.lr, cfg.agent.gamma, 7, cfg.agent.batch_size)),
+            cfg.agent.clone(),
+            cfg.seed ^ 0xA6E7,
+        );
+        warm_start_agent(&mut a, &cfg, &ops).expect("distillation runs on the mock");
+        a
+    };
+
+    let (full, _) = run_stream_with(&cfg, &ops, 3, "SPMV", Some(mk_warm())).unwrap();
+    let (_, agent) = run_stream_with(&cfg, &ops, 2, "SPMV", Some(mk_warm())).unwrap();
+    let bundle =
+        CheckpointBundle::single(WarmStart::Oracle, agent.unwrap().checkpoint().unwrap());
+    let parsed = CheckpointBundle::parse(&bundle.to_json()).unwrap();
+    assert_eq!(parsed.warm_start, WarmStart::Oracle, "provenance survives the round trip");
+
+    // Drifted warm-start mode: refused, naming the field.
+    let err = parsed.ensure_resumable(1, WarmStart::None).unwrap_err().to_string();
+    assert!(err.contains("warm_start"), "{err}");
+    parsed.ensure_resumable(1, WarmStart::Oracle).unwrap();
+
+    // Resume finishes the protocol bit-identically — no re-distillation.
+    let resumed = rebuild(&parsed.agents[0].to_json(), &cfg);
+    let (tail, _) = run_stream_with(&cfg, &ops, 1, "SPMV", Some(resumed)).unwrap();
+    assert_runs_identical(&full.runs[2], &tail.runs[0], "warm-started resume");
 }
 
 /// Cross-engine: a checkpoint written under one engine resumes

@@ -7,9 +7,10 @@
 //! on the fast engine while the polled loop remains the semantic
 //! reference.
 
+use aimm::agent::WarmStart;
 use aimm::bench::sweep::stats_json;
 use aimm::config::{Engine, MappingScheme, SystemConfig, Technique, TopologyKind};
-use aimm::coordinator::run_cell;
+use aimm::coordinator::{episode_ops, run_cell, run_stream_policy, warm_started_policy};
 use aimm::metrics::RunStats;
 use aimm::workloads::Benchmark;
 
@@ -52,8 +53,8 @@ fn cell_cfg(technique: Technique, mapping: MappingScheme, seed: u64) -> SystemCo
 fn engines_are_bit_identical_across_the_grid() {
     // Single-program cells plus one multi-program combo; every offload
     // technique; two seeds. Mapping schemes cycle with the cell index so
-    // all five policies (B, TOM, AIMM, CODA, ORACLE) are covered without
-    // quintupling the grid.
+    // all six policies (B, TOM, AIMM, AIMM-MC, CODA, ORACLE) are covered
+    // without sextupling the grid.
     let combos: [&[Benchmark]; 3] = [
         &[Benchmark::Mac],
         &[Benchmark::Spmv],
@@ -170,6 +171,54 @@ fn engines_are_bit_identical_on_gcm() {
             assert_identical(rp, re, &format!("{ctx} run {i}"));
         }
         assert!(p.last().ops_completed > 0, "{ctx}: cell must actually run");
+    }
+}
+
+/// The v2 learning shapes keep the polled/event contract on dedicated
+/// cells. AIMM-MC's gossip schedule counts policy invocations, not
+/// cycles, so the per-MC pool (and its ring exchanges) must land on
+/// identical decisions under both engines; the GCM cell stresses that
+/// with scattered pointer-chasing pages. The warm-started cells prove
+/// distillation happens strictly before cycle 0 — the pre-trained
+/// weights are engine-independent inputs, so the runs stay bit-equal.
+#[test]
+fn engines_are_bit_identical_for_aimm_mc_and_warm_started_aimm() {
+    for bench in [Benchmark::Spmv, Benchmark::Gcm] {
+        let mut polled_cfg = cell_cfg(Technique::Bnmp, MappingScheme::AimmMc, 31);
+        polled_cfg.engine = Engine::Polled;
+        let mut event_cfg = cell_cfg(Technique::Bnmp, MappingScheme::AimmMc, 31);
+        event_cfg.engine = Engine::Event;
+        let ctx = format!("AIMM-MC/{}", bench.name());
+        let p = run_cell(&polled_cfg, &[bench], 0.03, 2)
+            .unwrap_or_else(|e| panic!("polled {ctx}: {e}"));
+        let e = run_cell(&event_cfg, &[bench], 0.03, 2)
+            .unwrap_or_else(|e| panic!("event {ctx}: {e}"));
+        assert_eq!(p.runs.len(), e.runs.len(), "{ctx}");
+        for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+            assert_identical(rp, re, &format!("{ctx} run {i}"));
+        }
+        assert!(p.last().agent_invocations > 0, "{ctx}: the pool must actually decide");
+    }
+    for mapping in [MappingScheme::Aimm, MappingScheme::AimmMc] {
+        let mut polled_cfg = cell_cfg(Technique::Bnmp, mapping, 37);
+        polled_cfg.engine = Engine::Polled;
+        let mut event_cfg = cell_cfg(Technique::Bnmp, mapping, 37);
+        event_cfg.engine = Engine::Event;
+        let (ops, name) = episode_ops(&polled_cfg, &[Benchmark::Mac], 0.03).unwrap();
+        let ctx = format!("warm-started {mapping}/{name}");
+        let (policy, stats) = warm_started_policy(&polled_cfg, &ops, WarmStart::Oracle)
+            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        assert!(!stats.is_empty() && stats.iter().all(|s| s.examples > 0), "{ctx}");
+        let (p, _) = run_stream_policy(&polled_cfg, &ops, 2, &name, policy)
+            .unwrap_or_else(|e| panic!("polled {ctx}: {e}"));
+        let (policy, _) = warm_started_policy(&event_cfg, &ops, WarmStart::Oracle)
+            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        let (e, _) = run_stream_policy(&event_cfg, &ops, 2, &name, policy)
+            .unwrap_or_else(|e| panic!("event {ctx}: {e}"));
+        assert_eq!(p.runs.len(), e.runs.len(), "{ctx}");
+        for (i, (rp, re)) in p.runs.iter().zip(&e.runs).enumerate() {
+            assert_identical(rp, re, &format!("{ctx} run {i}"));
+        }
     }
 }
 

@@ -132,6 +132,68 @@ fn gcm_cells_identical_at_any_worker_count() {
     }
 }
 
+/// The v2 learning shapes obey the same contract. AIMM-MC's per-agent
+/// seeds (`mc_seed`) and its round-robin gossip ring are pure functions
+/// of the cell config — no map-iteration order, no thread identity — so
+/// per-MC-pool cells, alone and on the GCM trace family, are
+/// byte-identical at any worker count.
+#[test]
+fn aimm_mc_cells_identical_at_any_worker_count() {
+    let mut g = SweepGrid::new(0.03, 1);
+    g.benches =
+        vec![vec![Benchmark::Mac], vec![Benchmark::Gcm], vec![Benchmark::Rd, Benchmark::Spmv]];
+    g.mappings = vec![MappingScheme::AimmMc];
+    let cells = g.cells();
+    assert_eq!(cells.len(), 3);
+    let serial = run_grid(&cells, 1).expect("serial aimm-mc sweep");
+    let parallel = run_grid(&cells, 4).expect("parallel aimm-mc sweep");
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(
+            cell_json(s),
+            cell_json(p),
+            "cell {} diverged between 1 and 4 workers",
+            s.cell.name()
+        );
+    }
+    assert_eq!(report_json(&serial), report_json(&parallel));
+    for r in &serial {
+        assert!(r.cell.name().contains("/AIMM-MC/"), "{}", r.cell.name());
+        assert!(r.summary.last().agent_invocations > 0, "{}", r.cell.name());
+        assert!(cell_json(r).contains("\"mapping\":\"AIMM-MC\""), "{}", r.cell.name());
+    }
+}
+
+/// Warm-started runs keep the contract too: the oracle dry pass, the
+/// dataset derivation, and the distillation batch shuffle are seeded
+/// entirely from the cell config, so a warm-started AIMM episode is
+/// byte-identical whichever thread builds and runs it.
+#[test]
+fn warm_started_runs_identical_across_threads() {
+    use aimm::agent::WarmStart;
+    use aimm::bench::sweep::stats_json;
+    use aimm::config::SystemConfig;
+    use aimm::coordinator::{episode_ops, run_stream_policy, warm_started_policy};
+
+    fn run_once() -> Vec<String> {
+        let mut cfg = SystemConfig::default();
+        cfg.mapping = MappingScheme::Aimm;
+        cfg.seed = 41;
+        let (ops, name) = episode_ops(&cfg, &[Benchmark::Mac], 0.03).expect("episode ops");
+        let (policy, stats) =
+            warm_started_policy(&cfg, &ops, WarmStart::Oracle).expect("warm start");
+        assert!(stats[0].examples > 0, "distillation must see the dry pass");
+        let (summary, _) = run_stream_policy(&cfg, &ops, 2, &name, policy).expect("episode");
+        summary.runs.iter().map(stats_json).collect()
+    }
+
+    let here = run_once();
+    let threads: Vec<_> = (0..2).map(|_| std::thread::spawn(run_once)).collect();
+    for t in threads {
+        let theirs = t.join().expect("worker thread");
+        assert_eq!(theirs, here, "warm-started run leaked thread identity");
+    }
+}
+
 /// Shard-count invariance: slicing the default test grid 2-of-2 or
 /// 4-of-4, running every slice at a *different* worker count, and
 /// merging the journal entries reproduces the unsharded report
